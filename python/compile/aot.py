@@ -1,0 +1,124 @@
+"""AOT lowering: JAX shard step → HLO text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's bundled XLA (xla_extension 0.5.1) rejects jax ≥ 0.5 protos
+with 64-bit instruction ids, while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a pair:
+
+    <name>.hlo.txt   — the lowered module
+    <name>.json      — manifest: shapes, tilings, LIF parameters
+
+Usage:
+    python -m compile.aot --local 256 --global 1024 --out ../artifacts
+    python -m compile.aot --suite --out ../artifacts      # default set
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import LifParams, make_shard_step
+
+# Default artifact suite: (name, n_local, n_global, block_n, block_m, block_k)
+#
+# Perf note (EXPERIMENTS.md §Perf): on the CPU-PJRT path the Pallas
+# interpret-mode grid loop dominates step time (~21x at 256x1024), so the
+# CPU artifacts use whole-shard tiles (grid 1x1). On a real TPU the tiles
+# must fit VMEM: the DESIGN.md §Hardware-Adaptation schedule is
+# block_m=256 x block_k=512 (0.5 MiB weight tiles, double-buffered), which
+# is what the hypothesis sweeps in python/tests keep verified.
+SUITE = [
+    ("shard_256x1024", 256, 1024, 256, 256, 1024),
+    ("shard_1024x4096", 1024, 4096, 1024, 1024, 4096),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shard(n_local: int, n_global: int, params: LifParams, *,
+                block_n: int, block_m: int, block_k: int) -> str:
+    """Lower one shard-step function to HLO text."""
+    step = make_shard_step(params, block_n=block_n, block_m=block_m,
+                           block_k=block_k, interpret=True)
+    state = jax.ShapeDtypeStruct((3, n_local), jnp.float32)
+    spikes = jax.ShapeDtypeStruct((n_global,), jnp.float32)
+    w = jax.ShapeDtypeStruct((n_local, n_global), jnp.float32)
+    lowered = jax.jit(step).lower(state, spikes, w)
+    return to_hlo_text(lowered)
+
+
+def build_artifact(outdir: str, name: str, n_local: int, n_global: int,
+                   params: LifParams, *, block_n: int, block_m: int,
+                   block_k: int) -> dict:
+    """Lower, write the .hlo.txt + manifest, return the manifest dict."""
+    hlo = lower_shard(n_local, n_global, params, block_n=block_n,
+                      block_m=block_m, block_k=block_k)
+    os.makedirs(outdir, exist_ok=True)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    manifest = {
+        "name": name,
+        "n_local": n_local,
+        "n_global": n_global,
+        "inputs": ["state[3,n_local]", "spikes_in[n_global]", "w[n_local,n_global]"],
+        "output": "state[3,n_local]",
+        "dtype": "f32",
+        "block_n": block_n,
+        "block_m": block_m,
+        "block_k": block_k,
+        "params": params.to_dict(),
+        "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+        "hlo_bytes": len(hlo),
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(outdir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--suite", action="store_true", help="build the default artifact suite")
+    ap.add_argument("--local", type=int, default=256, dest="n_local")
+    ap.add_argument("--global", type=int, default=1024, dest="n_global")
+    ap.add_argument("--block-n", type=int, default=256)
+    ap.add_argument("--block-m", type=int, default=256)
+    ap.add_argument("--block-k", type=int, default=512)
+    ap.add_argument("--name", default=None)
+    args = ap.parse_args()
+
+    params = LifParams()
+    if args.suite:
+        for (name, n_local, n_global, bn, bm, bk) in SUITE:
+            m = build_artifact(args.out, name, n_local, n_global, params,
+                               block_n=bn, block_m=bm, block_k=bk)
+            print(f"wrote {name}: {m['hlo_bytes']} chars, sha={m['hlo_sha256'][:12]}")
+        # stamp file lets `make` skip rebuilds when inputs are unchanged
+        with open(os.path.join(args.out, ".stamp"), "w") as f:
+            f.write("ok\n")
+    else:
+        name = args.name or f"shard_{args.n_local}x{args.n_global}"
+        m = build_artifact(args.out, name, args.n_local, args.n_global, params,
+                           block_n=args.block_n, block_m=args.block_m,
+                           block_k=args.block_k)
+        print(f"wrote {name}: {m['hlo_bytes']} chars, sha={m['hlo_sha256'][:12]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: leaky integrate-and-fire neuron update.
+
+The role HICANN plays in the BrainScaleS system — emulating neuron
+dynamics that produce the spike traffic — is filled here by a LIF model
+compiled ahead-of-time. The kernel updates a *shard* of neurons (the
+slice hosted behind one FPGA) in VMEM-sized tiles over the neuron axis.
+
+State layout (one packed f32 array, so the AOT executable has a single
+non-tuple output that the rust runtime can keep device-side):
+
+    state[0, :] = membrane potential v
+    state[1, :] = refractory countdown (timesteps, 0 = active)
+    state[2, :] = spike output of the *previous* step (0.0 / 1.0)
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the neuron axis is blocked by
+``block_n`` via ``BlockSpec`` — on a real TPU each tile lives in VMEM and
+the elementwise update vectorizes on the VPU; ``interpret=True`` keeps
+the same schedule executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STATE_ROWS = 3
+
+
+def _lif_kernel(state_ref, i_in_ref, out_ref, *, decay, v_th, v_reset, refrac_steps):
+    """One LIF update on a block of neurons."""
+    v = state_ref[0, :]
+    r = state_ref[1, :]
+    i_in = i_in_ref[...]
+    active = r <= 0.0
+    # exponential membrane integration towards the input current
+    v_new = jnp.where(active, v * decay + i_in * (1.0 - decay), v)
+    spike = jnp.logical_and(v_new >= v_th, active)
+    v_out = jnp.where(spike, v_reset, v_new)
+    r_out = jnp.where(spike, jnp.float32(refrac_steps), jnp.maximum(r - 1.0, 0.0))
+    out_ref[0, :] = v_out
+    out_ref[1, :] = r_out
+    out_ref[2, :] = spike.astype(jnp.float32)
+
+
+def lif_step(state, i_in, *, decay, v_th, v_reset, refrac_steps, block_n=512,
+             interpret=True):
+    """Apply one LIF timestep to a neuron shard.
+
+    Args:
+      state: f32[3, n] packed state (see module docstring).
+      i_in:  f32[n] total input current for this step.
+      decay: membrane decay factor exp(-dt/tau_m).
+      v_th / v_reset: threshold and reset potentials.
+      refrac_steps: refractory period in timesteps.
+      block_n: neuron-axis tile size (VMEM sizing on TPU).
+      interpret: Pallas interpret mode (required for CPU PJRT).
+
+    Returns:
+      f32[3, n] updated state; row 2 holds this step's spikes.
+    """
+    n = state.shape[1]
+    assert state.shape == (STATE_ROWS, n)
+    assert i_in.shape == (n,)
+    assert n % block_n == 0, f"n={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    kernel = functools.partial(
+        _lif_kernel,
+        decay=decay,
+        v_th=v_th,
+        v_reset=v_reset,
+        refrac_steps=refrac_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((STATE_ROWS, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((STATE_ROWS, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((STATE_ROWS, n), jnp.float32),
+        interpret=interpret,
+    )(state, i_in)

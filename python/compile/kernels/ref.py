@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the two across shape/parameter sweeps (see
+``python/tests/test_kernel.py``). The references are deliberately written
+in the most obvious jnp style — no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+STATE_ROWS = 3
+
+
+def lif_step_ref(state, i_in, *, decay, v_th, v_reset, refrac_steps):
+    """Reference LIF update (see kernels/lif_step.py for semantics)."""
+    v = state[0]
+    r = state[1]
+    active = r <= 0.0
+    v_new = jnp.where(active, v * decay + i_in * (1.0 - decay), v)
+    spike = jnp.logical_and(v_new >= v_th, active)
+    v_out = jnp.where(spike, v_reset, v_new)
+    r_out = jnp.where(spike, jnp.float32(refrac_steps), jnp.maximum(r - 1.0, 0.0))
+    return jnp.stack([v_out, r_out, spike.astype(jnp.float32)])
+
+
+def synapse_input_ref(w, s):
+    """Reference synaptic accumulation: plain matvec."""
+    return w @ s
+
+
+def shard_step_ref(state, spikes_in, w, *, i_ext, decay, v_th, v_reset, refrac_steps):
+    """Reference full shard step: synapse + external drive + LIF."""
+    i_total = synapse_input_ref(w, spikes_in) + i_ext
+    return lif_step_ref(
+        state,
+        i_total,
+        decay=decay,
+        v_th=v_th,
+        v_reset=v_reset,
+        refrac_steps=refrac_steps,
+    )

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: synaptic input accumulation.
+
+Computes the per-neuron input current of a shard from the global spike
+vector: ``i = W @ s`` with ``W: f32[n_local, n_global]`` and
+``s: f32[n_global]`` (0/1 spike indicators, or spike counts when several
+source steps are batched by the coordinator).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles ``W`` into
+``(block_m, block_k)`` VMEM blocks; the k-axis accumulation is the
+HBM→VMEM streaming schedule a GPU implementation would express with
+threadblocks, and the inner product is MXU-shaped when the coordinator
+batches spike vectors (matvec degenerates to VPU work, which is fine for
+the CPU-interpret path used here).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _synapse_kernel(w_ref, s_ref, o_ref):
+    """Accumulate one (block_m × block_k) tile of the matvec."""
+    k = pl.program_id(1)
+    partial = w_ref[...] @ s_ref[...]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+def synapse_input(w, s, *, block_m=256, block_k=512, interpret=True):
+    """Synaptic current ``w @ s`` with explicit tiling.
+
+    Args:
+      w: f32[n_local, n_global] synaptic weights (signed; inhibitory < 0).
+      s: f32[n_global] spike vector/counts.
+      block_m: output-axis tile (rows of W per grid step).
+      block_k: reduction-axis tile (columns of W per grid step).
+      interpret: Pallas interpret mode (required for CPU PJRT).
+
+    Returns:
+      f32[n_local] input currents.
+    """
+    n_local, n_global = w.shape
+    assert s.shape == (n_global,)
+    assert n_local % block_m == 0, f"n_local={n_local} % block_m={block_m} != 0"
+    assert n_global % block_k == 0, f"n_global={n_global} % block_k={block_k} != 0"
+    grid = (n_local // block_m, n_global // block_k)
+    return pl.pallas_call(
+        _synapse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_k,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_local,), jnp.float32),
+        interpret=interpret,
+    )(w, s)

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the core signal)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif_step import lif_step
+from compile.kernels.ref import lif_step_ref, synapse_input_ref
+from compile.kernels.synapse import synapse_input
+
+DEFAULTS = dict(decay=0.99, v_th=1.0, v_reset=0.0, refrac_steps=20.0)
+
+
+def rand_state(rng, n):
+    v = rng.uniform(-1.0, 1.5, size=n).astype(np.float32)
+    r = rng.integers(0, 4, size=n).astype(np.float32)
+    s = rng.integers(0, 2, size=n).astype(np.float32)
+    return jnp.stack([jnp.asarray(v), jnp.asarray(r), jnp.asarray(s)])
+
+
+# ---------------------------------------------------------------- LIF kernel
+
+@pytest.mark.parametrize("n,block_n", [(64, 64), (256, 64), (512, 512), (1024, 256)])
+def test_lif_matches_ref_shapes(n, block_n):
+    rng = np.random.default_rng(42 + n)
+    state = rand_state(rng, n)
+    i_in = jnp.asarray(rng.normal(0.5, 0.5, size=n).astype(np.float32))
+    got = lif_step(state, i_in, block_n=block_n, **DEFAULTS)
+    want = lif_step_ref(state, i_in, **DEFAULTS)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_lif_spikes_and_resets():
+    # v crosses threshold -> spike, reset, refractory set
+    state = jnp.asarray([[0.99, 0.2, -0.5, 1.4], [0.0, 0.0, 2.0, 0.0],
+                         [0.0, 0.0, 0.0, 0.0]], dtype=jnp.float32)
+    i_in = jnp.asarray([5.0, 0.0, 5.0, 0.0], dtype=jnp.float32)
+    out = lif_step(state, i_in, block_n=4, **DEFAULTS)
+    # neuron 0: 0.99*0.99 + 5*0.01 = 1.0301 >= 1.0 -> spike
+    assert out[2, 0] == 1.0
+    assert out[0, 0] == 0.0  # reset
+    assert out[1, 0] == 20.0  # refractory
+    # neuron 1: no spike
+    assert out[2, 1] == 0.0
+    # neuron 2: refractory -> frozen, no spike despite drive
+    assert out[2, 2] == 0.0
+    assert out[0, 2] == pytest.approx(-0.5)
+    assert out[1, 2] == 1.0  # counts down
+    # neuron 3: already above threshold with no drive: 1.4*0.99 = 1.386 >= 1
+    assert out[2, 3] == 1.0
+
+
+def test_lif_refractory_counts_down_to_active():
+    state = jnp.asarray([[0.0], [1.0], [0.0]], dtype=jnp.float32)
+    # decay=0.99 weights the input by 0.01: 200*0.01 = 2.0 ≥ v_th in one step
+    i_in = jnp.asarray([200.0], dtype=jnp.float32)
+    out1 = lif_step(state, i_in, block_n=1, **DEFAULTS)
+    assert out1[1, 0] == 0.0 and out1[2, 0] == 0.0
+    out2 = lif_step(out1, i_in, block_n=1, **DEFAULTS)
+    assert out2[2, 0] == 1.0  # active again and driven hard -> spikes
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    decay=st.floats(0.5, 0.999),
+    v_th=st.floats(0.5, 2.0),
+    refrac=st.integers(0, 30),
+)
+def test_lif_hypothesis_sweep(n_blocks, block, seed, decay, v_th, refrac):
+    n = n_blocks * block
+    rng = np.random.default_rng(seed)
+    state = rand_state(rng, n)
+    i_in = jnp.asarray(rng.normal(0.0, 1.0, size=n).astype(np.float32))
+    kw = dict(decay=decay, v_th=v_th, v_reset=0.0, refrac_steps=float(refrac))
+    got = lif_step(state, i_in, block_n=block, **kw)
+    want = lif_step_ref(state, i_in, **kw)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_lif_rejects_bad_block():
+    rng = np.random.default_rng(0)
+    state = rand_state(rng, 100)
+    i_in = jnp.zeros(100, dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        lif_step(state, i_in, block_n=64, **DEFAULTS)
+
+
+# ------------------------------------------------------------ synapse kernel
+
+@pytest.mark.parametrize(
+    "n_local,n_global,bm,bk",
+    [(64, 128, 64, 128), (256, 512, 64, 128), (128, 1024, 128, 512), (512, 512, 256, 512)],
+)
+def test_synapse_matches_ref_shapes(n_local, n_global, bm, bk):
+    rng = np.random.default_rng(7 + n_local)
+    w = jnp.asarray(rng.normal(0, 0.1, size=(n_local, n_global)).astype(np.float32))
+    s = jnp.asarray((rng.random(n_global) < 0.1).astype(np.float32))
+    got = synapse_input(w, s, block_m=bm, block_k=bk)
+    want = synapse_input_ref(w, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    bm=st.sampled_from([16, 64]),
+    bk=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.0, 1.0),
+)
+def test_synapse_hypothesis_sweep(mi, ki, bm, bk, seed, density):
+    n_local, n_global = mi * bm, ki * bk
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1.0, size=(n_local, n_global)).astype(np.float32))
+    s = jnp.asarray((rng.random(n_global) < density).astype(np.float32))
+    got = synapse_input(w, s, block_m=bm, block_k=bk)
+    want = synapse_input_ref(w, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_synapse_zero_spikes_zero_current():
+    w = jnp.ones((64, 128), dtype=jnp.float32)
+    s = jnp.zeros(128, dtype=jnp.float32)
+    out = synapse_input(w, s, block_m=64, block_k=128)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(64, dtype=np.float32))
+
+
+def test_synapse_counts_supported():
+    # spike *counts* > 1 (multiple source steps batched) scale linearly
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(0, 1, size=(64, 128)).astype(np.float32))
+    s1 = jnp.asarray((rng.random(128) < 0.2).astype(np.float32))
+    got1 = synapse_input(w, s1, block_m=64, block_k=128)
+    got3 = synapse_input(w, 3.0 * s1, block_m=64, block_k=128)
+    np.testing.assert_allclose(3.0 * np.asarray(got1), got3, rtol=1e-5, atol=1e-5)
+
+
+def test_kernels_jit_compatible():
+    # kernels must lower inside jit (the AOT path requires it)
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(0, 0.1, size=(64, 128)).astype(np.float32))
+    s = jnp.asarray((rng.random(128) < 0.1).astype(np.float32))
+    f = jax.jit(lambda w, s: synapse_input(w, s, block_m=64, block_k=128))
+    np.testing.assert_allclose(f(w, s), synapse_input_ref(w, s), rtol=1e-4, atol=1e-5)

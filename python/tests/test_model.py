@@ -1,0 +1,92 @@
+"""L2 model correctness: shard step composition vs oracle + dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.ref import shard_step_ref
+from compile.model import LifParams, make_shard_step
+
+
+def make_inputs(seed, n_local, n_global):
+    rng = np.random.default_rng(seed)
+    state = jnp.stack([
+        jnp.asarray(rng.uniform(-0.5, 0.9, n_local).astype(np.float32)),
+        jnp.zeros(n_local, dtype=jnp.float32),
+        jnp.zeros(n_local, dtype=jnp.float32),
+    ])
+    spikes = jnp.asarray((rng.random(n_global) < 0.05).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (n_local, n_global)).astype(np.float32))
+    return state, spikes, w
+
+
+@pytest.mark.parametrize("n_local,n_global", [(256, 1024), (512, 512)])
+def test_step_matches_ref(n_local, n_global):
+    params = LifParams()
+    step = make_shard_step(params, block_n=256, block_m=256, block_k=512)
+    state, spikes, w = make_inputs(5, n_local, n_global)
+    got = step(state, spikes, w)
+    want = shard_step_ref(state, spikes, w, **params.to_dict())
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_step_under_jit_matches_eager():
+    params = LifParams()
+    step = make_shard_step(params, block_n=256, block_m=256, block_k=512)
+    state, spikes, w = make_inputs(9, 256, 1024)
+    eager = step(state, spikes, w)
+    jitted = jax.jit(step)(state, spikes, w)
+    np.testing.assert_allclose(eager, jitted, rtol=1e-6, atol=1e-6)
+
+
+def test_multi_step_trajectory_spikes():
+    # with constant suprathreshold drive, neurons fire periodically with
+    # period ≈ time-to-threshold + refractory
+    params = LifParams(decay=0.9, v_th=1.0, v_reset=0.0, refrac_steps=5.0, i_ext=2.0)
+    n = 256
+    step = make_shard_step(params, block_n=256, block_m=256, block_k=512)
+    state = jnp.zeros((3, n), dtype=jnp.float32)
+    spikes_in = jnp.zeros(512, dtype=jnp.float32)
+    w = jnp.zeros((n, 512), dtype=jnp.float32)
+    total_spikes = 0.0
+    for _ in range(50):
+        state = step(state, spikes_in, w)
+        total_spikes += float(state[2].sum())
+    assert total_spikes > 0, "constant drive must make neurons fire"
+    # every neuron fires the same (uniform network)
+    assert total_spikes % n == 0
+
+
+def test_recurrent_inhibition_suppresses():
+    # strong self-inhibition: after the first volley, firing should drop
+    params = LifParams(decay=0.9, refrac_steps=0.0, i_ext=1.5)
+    n = 256
+    step = make_shard_step(params, block_n=256, block_m=256, block_k=256)
+    w_inhib = -50.0 * jnp.ones((n, n), dtype=jnp.float32) / n
+    state = jnp.zeros((3, n), dtype=jnp.float32)
+    rates_inhib = []
+    s_in = jnp.zeros(n, dtype=jnp.float32)
+    for _ in range(40):
+        state = step(state, s_in, w_inhib)
+        s_in = state[2]  # feed spikes back (single closed shard)
+        rates_inhib.append(float(state[2].mean()))
+    # compare against the unconnected control
+    w_zero = jnp.zeros((n, n), dtype=jnp.float32)
+    state = jnp.zeros((3, n), dtype=jnp.float32)
+    s_in = jnp.zeros(n, dtype=jnp.float32)
+    rates_free = []
+    for _ in range(40):
+        state = step(state, s_in, w_zero)
+        s_in = state[2]
+        rates_free.append(float(state[2].mean()))
+    assert sum(rates_inhib) < sum(rates_free), "inhibition must reduce firing"
+
+
+def test_params_recorded_roundtrip():
+    p = LifParams(decay=0.5, v_th=1.25, v_reset=-0.25, refrac_steps=7.0, i_ext=0.1)
+    d = p.to_dict()
+    assert d["decay"] == 0.5
+    assert d["refrac_steps"] == 7.0
+    p2 = LifParams(**d)
+    assert p2 == p

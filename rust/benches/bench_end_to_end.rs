@@ -1,0 +1,113 @@
+//! Benchmark E2E — the full stack: AOT LIF shards (PJRT) × aggregation ×
+//! torus fabric, on the down-scaled cortical microcircuit (paper §4).
+//!
+//! Reports steps/s, the PJRT vs DES wall-time split, fabric behaviour
+//! (aggregation, latency, loss), plus a PJRT step microbenchmark.
+//! Requires `make artifacts`; prints SKIPPED rows when absent.
+//!
+//! Run: `cargo bench --bench bench_end_to_end`
+
+use bss_extoll::coordinator::{run_microcircuit, ExperimentConfig};
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::runtime::{artifacts_available, artifacts_dir, Runtime};
+use bss_extoll::util::bench::{BenchSuite, Table};
+use bss_extoll::wafer::system::SystemConfig;
+
+fn main() {
+    println!("\n==== E2E: multi-wafer cortical microcircuit (paper §4) ====");
+    if !artifacts_available() {
+        println!("SKIPPED: artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let fast = std::env::var("BSS_BENCH_FAST").is_ok();
+    let steps = if fast { 50 } else { 200 };
+
+    let mut t = Table::new(
+        "end-to-end co-simulation",
+        &[
+            "artifact",
+            "neurons",
+            "steps",
+            "spikes",
+            "steps/s",
+            "pjrt s",
+            "des s",
+            "ev/packet",
+            "fabric p99 (ns)",
+            "loss",
+        ],
+    );
+    for artifact in ["shard_256x1024", "shard_1024x4096"] {
+        if fast && artifact == "shard_1024x4096" {
+            continue;
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 2,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.neuro.artifact = artifact.to_string();
+        cfg.neuro.steps = steps;
+        let wall = std::time::Instant::now();
+        let r = run_microcircuit(&cfg).expect("e2e run");
+        let secs = wall.elapsed().as_secs_f64();
+        t.row(vec![
+            artifact.to_string(),
+            r.n_neurons.to_string(),
+            r.steps.to_string(),
+            r.spikes_total.to_string(),
+            format!("{:.1}", r.steps as f64 / secs),
+            format!("{:.2}", r.pjrt_seconds),
+            format!("{:.2}", r.des_seconds),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.0}", r.latency.p99() as f64 / 1e3),
+            (r.fabric_events - r.delivered_events).to_string(),
+        ]);
+    }
+    t.print();
+
+    // ---- PJRT step microbenchmark ---------------------------------------------
+    let mut suite = BenchSuite::new("PJRT shard step (hot path)");
+    suite.header();
+    let rt = Runtime::cpu().expect("pjrt client");
+    for artifact in ["shard_256x1024", "shard_1024x4096"] {
+        if fast && artifact == "shard_1024x4096" {
+            continue;
+        }
+        let model = rt
+            .load_shard_model(&artifacts_dir(), artifact)
+            .expect("artifact");
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        let state = vec![0.1f32; 3 * n_local];
+        let spikes = vec![0.0f32; n_global];
+        let w = vec![0.001f32; n_local * n_global];
+        {
+            let model = rt
+                .load_shard_model(&artifacts_dir(), artifact)
+                .expect("artifact");
+            let state = state.clone();
+            let spikes = spikes.clone();
+            let w = w.clone();
+            suite.bench_items(
+                &format!("{artifact}.step literal-upload ({n_local} neurons)"),
+                n_local as f64,
+                move || {
+                    let _ = model.step(&state, &spikes, &w).unwrap();
+                },
+            );
+        }
+        let w_buf = model.upload_weights(&w).expect("upload");
+        suite.bench_items(
+            &format!("{artifact}.step_with cached-W ({n_local} neurons)"),
+            n_local as f64,
+            move || {
+                let _ = model.step_with(&state, &spikes, &w_buf).unwrap();
+            },
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,259 @@
+//! Experiment configuration: JSON-backed, with sensible defaults for every
+//! knob so configs only state what they change.
+
+use anyhow::{Context, Result};
+
+use crate::extoll::nic::NicConfig;
+use crate::extoll::torus::TorusSpec;
+use crate::fpga::bucket::BucketConfig;
+use crate::fpga::manager::{EvictionPolicy, ManagerConfig};
+use crate::sim::Time;
+use crate::util::json::Json;
+use crate::wafer::system::SystemConfig;
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Simulated machine.
+    pub system: SystemConfig,
+    /// Workload parameters (traffic experiments).
+    pub workload: WorkloadConfig,
+    /// Neural co-simulation parameters (microcircuit experiments).
+    pub neuro: NeuroConfig,
+    /// RNG seed for everything derived.
+    pub seed: u64,
+}
+
+/// Spike-traffic workload knobs.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Aggregate event rate per FPGA (events/s).
+    pub rate_hz: f64,
+    /// Sources per FPGA (spread over the 8 HICANN links).
+    pub sources_per_fpga: usize,
+    /// Fan-out: destination FPGAs per source.
+    pub fan_out: usize,
+    /// Zipf skew of destination popularity (0 = uniform).
+    pub zipf_s: f64,
+    /// Deadline offset in systime units (210 MHz cycles).
+    pub deadline_offset: u16,
+    /// Simulated duration.
+    pub duration: Time,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            rate_hz: 10e6,
+            sources_per_fpga: 64,
+            fan_out: 1,
+            zipf_s: 0.0,
+            deadline_offset: 2000,
+            duration: Time::from_ms(2),
+        }
+    }
+}
+
+/// Neural co-simulation knobs.
+#[derive(Clone, Debug)]
+pub struct NeuroConfig {
+    /// Artifact name (must exist under `artifacts/`).
+    pub artifact: String,
+    /// Timesteps to run.
+    pub steps: usize,
+    /// Hardware time per neural timestep.
+    pub dt: Time,
+    /// Excitatory / inhibitory synaptic efficacies.
+    pub w_exc: f32,
+    pub w_inh: f32,
+    /// Connection-probability scale (compensates down-scaled networks).
+    pub k_scale: f64,
+    /// Initial membrane potential range (uniform).
+    pub v_init: (f32, f32),
+}
+
+impl Default for NeuroConfig {
+    fn default() -> Self {
+        NeuroConfig {
+            artifact: "shard_256x1024".to_string(),
+            steps: 200,
+            dt: Time::from_us(1),
+            w_exc: 6.0,
+            w_inh: -24.0,
+            k_scale: 1.0,
+            v_init: (0.0, 1.1),
+        }
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            system: SystemConfig::default(),
+            workload: WorkloadConfig::default(),
+            neuro: NeuroConfig::default(),
+            seed: 0xB55,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document; missing fields keep their defaults.
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig {
+            seed: j.u64_or("seed", 0xB55),
+            ..ExperimentConfig::default()
+        };
+        if let Some(sys) = j.get("system") {
+            let d = SystemConfig::default();
+            let tor = sys.get("torus");
+            let dims = |i: usize, dflt: u16| -> u16 {
+                tor.and_then(|t| t.as_arr())
+                    .and_then(|a| a.get(i))
+                    .and_then(Json::as_u64)
+                    .map(|v| v as u16)
+                    .unwrap_or(dflt)
+            };
+            cfg.system = SystemConfig {
+                n_wafers: sys.usize_or("n_wafers", d.n_wafers),
+                torus: TorusSpec::new(dims(0, 4), dims(1, 2), dims(2, 2)),
+                fpgas_per_wafer: sys.usize_or("fpgas_per_wafer", d.fpgas_per_wafer),
+                concentrators_per_wafer: sys
+                    .usize_or("concentrators_per_wafer", d.concentrators_per_wafer),
+                fpga_egress_gbps: sys.f64_or("fpga_egress_gbps", d.fpga_egress_gbps),
+                nic: NicConfig {
+                    lanes: sys.u64_or("nic_lanes", 12) as u32,
+                    credits_per_vc: sys.u64_or("nic_credits", 8) as u32,
+                    ..NicConfig::default()
+                },
+                manager: ManagerConfig {
+                    n_buckets: sys.usize_or("buckets", 32),
+                    bucket: BucketConfig {
+                        capacity: sys.usize_or("bucket_capacity", 124),
+                        deadline_margin: sys.u64_or("deadline_margin", 420) as u16,
+                        concurrent: sys.bool_or("concurrent_flush", true),
+                    },
+                    eviction: match sys.str_or("eviction", "most_urgent") {
+                        "most_urgent" => EvictionPolicy::MostUrgent,
+                        "fullest" => EvictionPolicy::Fullest,
+                        "oldest" => EvictionPolicy::Oldest,
+                        "round_robin" => EvictionPolicy::RoundRobin,
+                        other => anyhow::bail!("unknown eviction policy '{other}'"),
+                    },
+                },
+                ..d
+            };
+        }
+        if let Some(w) = j.get("workload") {
+            let d = WorkloadConfig::default();
+            cfg.workload = WorkloadConfig {
+                rate_hz: w.f64_or("rate_hz", d.rate_hz),
+                sources_per_fpga: w.usize_or("sources_per_fpga", d.sources_per_fpga),
+                fan_out: w.usize_or("fan_out", d.fan_out),
+                zipf_s: w.f64_or("zipf_s", d.zipf_s),
+                deadline_offset: w.u64_or("deadline_offset", d.deadline_offset as u64) as u16,
+                duration: Time::from_secs_f64(w.f64_or("duration_s", 2e-3)),
+            };
+        }
+        if let Some(n) = j.get("neuro") {
+            let d = NeuroConfig::default();
+            cfg.neuro = NeuroConfig {
+                artifact: n.str_or("artifact", &d.artifact).to_string(),
+                steps: n.usize_or("steps", d.steps),
+                dt: Time::from_secs_f64(n.f64_or("dt_s", 1e-6)),
+                w_exc: n.f64_or("w_exc", d.w_exc as f64) as f32,
+                w_inh: n.f64_or("w_inh", d.w_inh as f64) as f32,
+                k_scale: n.f64_or("k_scale", d.k_scale),
+                v_init: (
+                    n.f64_or("v_init_lo", 0.0) as f32,
+                    n.f64_or("v_init_hi", 1.1) as f32,
+                ),
+            };
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_json() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.system.n_wafers, 2);
+        assert_eq!(cfg.workload.fan_out, 1);
+        assert_eq!(cfg.neuro.artifact, "shard_256x1024");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let j = Json::parse(
+            r#"{
+                "seed": 7,
+                "system": {"n_wafers": 1, "torus": [2,2,2], "buckets": 16,
+                           "eviction": "fullest", "concurrent_flush": false},
+                "workload": {"rate_hz": 5e6, "fan_out": 3, "duration_s": 1e-3},
+                "neuro": {"steps": 10, "w_exc": 2.5}
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.system.n_wafers, 1);
+        assert_eq!(cfg.system.torus.n_nodes(), 8);
+        assert_eq!(cfg.system.manager.n_buckets, 16);
+        assert_eq!(cfg.system.manager.eviction, EvictionPolicy::Fullest);
+        assert!(!cfg.system.manager.bucket.concurrent);
+        assert_eq!(cfg.workload.fan_out, 3);
+        assert_eq!(cfg.workload.duration, Time::from_ms(1));
+        assert_eq!(cfg.neuro.steps, 10);
+        assert_eq!(cfg.neuro.w_exc, 2.5);
+    }
+
+    #[test]
+    fn bad_eviction_rejected() {
+        let j = Json::parse(r#"{"system": {"eviction": "bogus"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+}
+
+#[cfg(test)]
+mod config_file_tests {
+    use super::*;
+
+    /// Every shipped example config must load and be internally coherent.
+    #[test]
+    fn shipped_configs_parse() {
+        for name in [
+            "configs/traffic_2wafer.json",
+            "configs/microcircuit_4shard.json",
+            "configs/eviction_ablation.json",
+        ] {
+            let cfg = ExperimentConfig::from_file(name)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(
+                cfg.system.torus.n_nodes()
+                    >= cfg.system.n_wafers * cfg.system.concentrators_per_wafer,
+                "{name}: torus too small"
+            );
+            assert!(cfg.system.fpgas_per_wafer % cfg.system.concentrators_per_wafer == 0);
+        }
+    }
+
+    #[test]
+    fn microcircuit_config_matches_artifact_layout() {
+        let cfg = ExperimentConfig::from_file("configs/microcircuit_4shard.json").unwrap();
+        assert_eq!(cfg.neuro.artifact, "shard_256x1024");
+        // 4 shards expected by the 256x1024 artifact
+        assert_eq!(cfg.system.n_wafers * cfg.system.fpgas_per_wafer, 4);
+    }
+}

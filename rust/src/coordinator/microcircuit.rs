@@ -1,0 +1,347 @@
+//! End-to-end multi-wafer cortical-microcircuit experiment (paper §4):
+//! LIF neuron dynamics run in AOT-compiled JAX/Pallas artifacts through
+//! PJRT, and every inter-shard spike crosses the simulated BrainScaleS
+//! Extoll fabric — FPGA aggregation buckets, concentrators, torus routing —
+//! with full accounting.
+//!
+//! Co-simulation scheme (one neural timestep = `dt` of hardware time):
+//!
+//! 1. every shard executes its compiled step with the spike-count vector
+//!    assembled from events the fabric delivered during the previous step,
+//! 2. the resulting spikes are injected as `HicannEvent`s into the source
+//!    FPGA actor, paced within the step window, deadline = end of the
+//!    *next* window,
+//! 3. the discrete-event simulation advances to the next step boundary,
+//! 4. delivered events are drained from each FPGA's RX buffer (GUID =
+//!    global source-neuron id) into the next spike-count vectors;
+//!    intra-shard spikes short-circuit locally (on-wafer routing).
+
+use anyhow::{Context, Result};
+
+use crate::fpga::event::{systime_of, SpikeEvent, TS_MASK};
+use crate::fpga::fpga::Fpga;
+use crate::fpga::lookup::{RxEntry, TxEntry};
+use crate::msg::Msg;
+use crate::neuro::shard::{pulse_of_neuron, ShardSim};
+use crate::neuro::weights::build_weights;
+use crate::runtime::Runtime;
+use crate::sim::{Sim, Time};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+use crate::wafer::system::System;
+use crate::workload::microcircuit::{Microcircuit, FULL_SCALE_NEURONS};
+
+use super::config::ExperimentConfig;
+
+/// Result of a microcircuit co-simulation.
+#[derive(Clone, Debug)]
+pub struct NeuroReport {
+    pub steps: usize,
+    pub n_neurons: usize,
+    pub n_shards: usize,
+    /// Total spikes emitted by the neuron models.
+    pub spikes_total: u64,
+    /// Spike events shipped over the fabric in packets (= spikes × remote
+    /// fan-out: the TX lookup replicates each spike per destination FPGA).
+    pub fabric_events: u64,
+    /// Events delivered to destination FPGAs.
+    pub delivered_events: u64,
+    /// Mean firing rate (spikes/neuron/step).
+    pub mean_rate: f64,
+    /// Per-step spike counts (the "loss curve" analogue for this system).
+    pub spikes_per_step: Vec<u32>,
+    /// Aggregation efficiency observed during the run.
+    pub mean_batch: f64,
+    /// Deadline misses at RX.
+    pub deadline_misses: u64,
+    /// End-to-end fabric latency histogram (ps).
+    pub latency: Histogram,
+    /// Wall-clock seconds spent in PJRT execute calls.
+    pub pjrt_seconds: f64,
+    /// Wall-clock seconds spent in the DES.
+    pub des_seconds: f64,
+}
+
+impl NeuroReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("steps", self.steps)
+            .set("n_neurons", self.n_neurons)
+            .set("n_shards", self.n_shards)
+            .set("spikes_total", self.spikes_total)
+            .set("fabric_events", self.fabric_events)
+            .set("delivered_events", self.delivered_events)
+            .set("mean_rate", self.mean_rate)
+            .set("mean_batch", self.mean_batch)
+            .set("deadline_misses", self.deadline_misses)
+            .set("latency_p50_ns", self.latency.p50() as f64 / 1e3)
+            .set("latency_p99_ns", self.latency.p99() as f64 / 1e3)
+            .set("pjrt_seconds", self.pjrt_seconds)
+            .set("des_seconds", self.des_seconds)
+            .set(
+                "spikes_per_step",
+                self.spikes_per_step
+                    .iter()
+                    .map(|&x| x as u64)
+                    .collect::<Vec<_>>(),
+            )
+    }
+}
+
+/// Split the microcircuit into `n_shards` equal shards of exactly
+/// `n_local` neurons (population-major layout inside each shard).
+pub fn shard_slices(n_shards: usize, n_local: u32) -> Vec<[u32; 8]> {
+    let total = n_shards as u32 * n_local;
+    let scale = total as f64 / FULL_SCALE_NEURONS as f64;
+    let mc = Microcircuit::new(scale.min(1.0));
+    // per-shard quota per population, then fix rounding on the largest pop
+    let mut slices = vec![[0u32; 8]; n_shards];
+    for (f, slice) in slices.iter_mut().enumerate() {
+        let _ = f;
+        for p in 0..8 {
+            slice[p] = mc.sizes[p] / n_shards as u32;
+        }
+        let sum: u32 = slice.iter().sum();
+        // pad/trim the largest population (L4E) to hit n_local exactly
+        let l4e = 2usize;
+        slice[l4e] = (slice[l4e] as i64 + (n_local as i64 - sum as i64))
+            .try_into()
+            .expect("shard slice underflow");
+    }
+    for s in &slices {
+        debug_assert_eq!(s.iter().sum::<u32>(), n_local);
+    }
+    slices
+}
+
+/// Run the experiment. Requires `make artifacts`.
+pub fn run_microcircuit(cfg: &ExperimentConfig) -> Result<NeuroReport> {
+    let rt = Runtime::cpu()?;
+    let dir = crate::runtime::artifacts_dir();
+
+    // probe the artifact to size the system
+    let probe = rt
+        .load_shard_model(&dir, &cfg.neuro.artifact)
+        .context("loading shard artifact")?;
+    let n_local = probe.n_local();
+    let n_global = probe.n_global();
+    anyhow::ensure!(n_global % n_local == 0, "artifact global/local mismatch");
+    let n_shards = n_global / n_local;
+
+    // the system must expose exactly n_shards FPGAs
+    let mut sys_cfg = cfg.system;
+    anyhow::ensure!(
+        sys_cfg.n_wafers * sys_cfg.fpgas_per_wafer == n_shards,
+        "system has {} FPGAs but artifact needs {n_shards}",
+        sys_cfg.n_wafers * sys_cfg.fpgas_per_wafer
+    );
+    let mut sim: Sim<Msg> = Sim::new();
+    let sys = System::build(&mut sim, sys_cfg);
+    let fpgas: Vec<_> = sys.fpgas().collect();
+
+    // --- neural substrate -------------------------------------------------
+    let slices = shard_slices(n_shards, n_local as u32);
+    let mc = Microcircuit::new(
+        (n_shards as u32 * n_local as u32) as f64 / FULL_SCALE_NEURONS as f64,
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut shards: Vec<ShardSim> = Vec::with_capacity(n_shards);
+    for f in 0..n_shards {
+        let model = rt.load_shard_model(&dir, &cfg.neuro.artifact)?;
+        let w = build_weights(
+            &mc,
+            &slices,
+            f,
+            cfg.neuro.w_exc,
+            cfg.neuro.w_inh,
+            cfg.neuro.k_scale,
+            cfg.seed,
+        );
+        let mut shard = ShardSim::new(model, w, (f * n_local) as u32);
+        shard.randomize_v(&mut rng, cfg.neuro.v_init.0, cfg.neuro.v_init.1);
+        shards.push(shard);
+    }
+
+    // --- route programming --------------------------------------------------
+    // every neuron may project anywhere: program full fan-out from every
+    // source neuron to every *other* FPGA; GUID = global neuron id (needs
+    // n_global ≤ 2^15)
+    anyhow::ensure!(n_global <= 1 << 15, "GUID space exceeded");
+    for (f, &(_, _, actor, _)) in fpgas.iter().enumerate() {
+        for local in 0..n_local as u32 {
+            let (hicann, pulse) = pulse_of_neuron(local);
+            let guid = (f * n_local) as u16 + local as u16;
+            for (g, &(_, _, _dactor, dep)) in fpgas.iter().enumerate() {
+                if g == f {
+                    continue;
+                }
+                sim.get_mut::<Fpga>(actor).tx_lut.add(
+                    hicann,
+                    pulse,
+                    TxEntry { dest: dep, guid },
+                );
+            }
+        }
+        // RX: accept every remote neuron's GUID (mask: all HICANNs — the
+        // weight matrix decides who actually listens)
+        for (g, _) in fpgas.iter().enumerate() {
+            if g == f {
+                continue;
+            }
+            for local in 0..n_local as u32 {
+                let guid = (g * n_local) as u16 + local as u16;
+                sim.get_mut::<Fpga>(actor).rx_lut.set(
+                    guid,
+                    RxEntry {
+                        hicann_mask: 0xFF,
+                        pulse_addr: pulse_of_neuron(local).1,
+                    },
+                );
+            }
+        }
+    }
+
+    // --- co-simulation loop -------------------------------------------------
+    let dt = cfg.neuro.dt;
+    let dt_cycles = (dt.ps() as u128 * 21 / 100_000) as u32; // systime units per step
+    let mut spikes_in: Vec<Vec<f32>> = vec![vec![0.0; n_global]; n_shards];
+    let mut report = NeuroReport {
+        steps: cfg.neuro.steps,
+        n_neurons: n_shards * n_local,
+        n_shards,
+        spikes_total: 0,
+        fabric_events: 0,
+        delivered_events: 0,
+        mean_rate: 0.0,
+        spikes_per_step: Vec::with_capacity(cfg.neuro.steps),
+        mean_batch: f64::NAN,
+        deadline_misses: 0,
+        latency: Histogram::new(),
+        pjrt_seconds: 0.0,
+        des_seconds: 0.0,
+    };
+
+    for k in 0..cfg.neuro.steps {
+        let t0 = dt * k as u64;
+        let t1 = dt * (k as u64 + 1);
+        // 1. neuron dynamics
+        let pjrt_t = std::time::Instant::now();
+        let mut step_spikes = 0u32;
+        for (f, shard) in shards.iter_mut().enumerate() {
+            let spiked = shard.step(&spikes_in[f])?;
+            step_spikes += spiked.len() as u32;
+        }
+        report.pjrt_seconds += pjrt_t.elapsed().as_secs_f64();
+        report.spikes_total += step_spikes as u64;
+        report.spikes_per_step.push(step_spikes);
+
+        // reset input accumulators for the next step
+        for v in spikes_in.iter_mut() {
+            for x in v.iter_mut() {
+                *x = 0.0;
+            }
+        }
+
+        // 2. inject spikes: local short-circuit + fabric events
+        let des_t = std::time::Instant::now();
+        // deadline: end of next window (in systime units), plus margin
+        let deadline = ((systime_of(t0) as u32 + 2 * dt_cycles) & TS_MASK as u32) as u16;
+        for f in 0..n_shards {
+            // pace injections within the first 60% of the window across
+            // the 8 HICANN links
+            let spikes = shards[f].last_spikes.clone();
+            let window = dt * 3 / 5;
+            let n_spikes = spikes.len().max(1) as u64;
+            for (si, &local) in spikes.iter().enumerate() {
+                let g_idx = f * n_local + local as usize;
+                // intra-shard delivery (on-wafer routing, no fabric)
+                spikes_in[f][g_idx] += 1.0;
+                let (hicann, pulse) = pulse_of_neuron(local);
+                let at = t0 + window * si as u64 / n_spikes;
+                sim.schedule(
+                    at.max(sim.now),
+                    fpgas[f].2,
+                    Msg::HicannEvent(SpikeEvent::new(hicann, pulse, deadline)),
+                );
+            }
+        }
+
+        // 3. advance the fabric to the step boundary
+        sim.run_until(t1);
+
+        // 4. drain deliveries into next-step inputs
+        for (f, &(_, _, actor, _)) in fpgas.iter().enumerate() {
+            let fpga = sim.get_mut::<Fpga>(actor);
+            for (_at, _pulse, ev) in fpga.rx_buffer.drain(..) {
+                let g_idx = ev.guid as usize;
+                debug_assert!(g_idx < n_global);
+                spikes_in[f][g_idx] += 1.0;
+                report.delivered_events += 1;
+            }
+        }
+        report.des_seconds += des_t.elapsed().as_secs_f64();
+    }
+
+    // tail: flush and account remaining in-flight events
+    sys.flush_all(&mut sim);
+    sim.run_until(dt * (cfg.neuro.steps as u64 + 4));
+    for &(_, _, actor, _) in &fpgas {
+        let fpga = sim.get_mut::<Fpga>(actor);
+        report.delivered_events += fpga.rx_buffer.len() as u64;
+        fpga.rx_buffer.clear();
+    }
+
+    report.fabric_events = sys.total_events_out(&sim);
+    report.mean_batch = sys.mean_batch_size(&sim);
+    report.deadline_misses = sys.total_deadline_misses(&sim);
+    report.latency = sys.latency_histogram(&sim);
+    report.mean_rate =
+        report.spikes_total as f64 / (cfg.neuro.steps as f64 * report.n_neurons as f64);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::TorusSpec;
+    use crate::wafer::system::SystemConfig;
+
+    #[test]
+    fn shard_slices_exact() {
+        for (n_shards, n_local) in [(4usize, 256u32), (4, 1024), (2, 512)] {
+            let slices = shard_slices(n_shards, n_local);
+            assert_eq!(slices.len(), n_shards);
+            for s in &slices {
+                assert_eq!(s.iter().sum::<u32>(), n_local);
+            }
+        }
+    }
+
+    #[test]
+    fn microcircuit_e2e_small() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 2,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.neuro.artifact = "shard_256x1024".to_string();
+        cfg.neuro.steps = 30;
+        let r = run_microcircuit(&cfg).unwrap();
+        assert_eq!(r.n_neurons, 1024);
+        assert_eq!(r.n_shards, 4);
+        assert!(r.spikes_total > 0, "network silent — tune v_init/w");
+        // every remote spike fans out to 3 other FPGAs
+        assert_eq!(r.fabric_events, 3 * r.spikes_total, "fan-out accounting");
+        // nothing may be lost in the fabric
+        assert_eq!(r.delivered_events, r.fabric_events, "event loss");
+        assert_eq!(r.spikes_per_step.len(), 30);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment coordination: configuration, orchestration of the simulated
+//! machine + PJRT neuron shards, and result reporting.
+
+pub mod config;
+pub mod microcircuit;
+pub mod traffic;
+
+pub use config::{ExperimentConfig, NeuroConfig, WorkloadConfig};
+pub use microcircuit::{run_microcircuit, shard_slices, NeuroReport};
+pub use traffic::{run_traffic, TrafficReport};

@@ -1,0 +1,250 @@
+//! Spike-traffic experiment driver: multi-wafer system under synthetic
+//! Poisson load, measuring the paper's communication-path metrics —
+//! aggregation efficiency, end-to-end latency, deadline misses, link
+//! utilization, flush-reason breakdown.
+
+use anyhow::Result;
+
+use crate::fpga::fpga::Fpga;
+use crate::fpga::lookup::TxEntry;
+use crate::fpga::lookup::{EndpointAddr, RxEntry};
+use crate::msg::Msg;
+use crate::sim::{Sim, Time};
+use crate::util::json::Json;
+use crate::util::rng::{Rng, Zipf};
+use crate::util::stats::Histogram;
+use crate::wafer::system::System;
+use crate::workload::generators::{GenConfig, PoissonGen};
+
+use super::config::ExperimentConfig;
+
+/// Aggregated result of one traffic run.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub duration: Time,
+    pub events_generated: u64,
+    pub events_in: u64,
+    pub events_out: u64,
+    pub packets_out: u64,
+    pub rx_events: u64,
+    pub dropped: u64,
+    pub unrouted: u64,
+    pub mean_batch: f64,
+    pub flush_deadline: u64,
+    pub flush_full: u64,
+    pub flush_evict: u64,
+    pub evictions: u64,
+    pub deadline_misses: u64,
+    /// End-to-end event latency (source FPGA ingress → playback), ps.
+    pub latency: Histogram,
+    /// Peak torus-link utilization (0..1) over the run.
+    pub max_link_util: f64,
+    /// Throughput in delivered events/s.
+    pub delivered_events_per_s: f64,
+}
+
+impl TrafficReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("duration_s", self.duration.secs_f64())
+            .set("events_generated", self.events_generated)
+            .set("events_in", self.events_in)
+            .set("events_out", self.events_out)
+            .set("packets_out", self.packets_out)
+            .set("rx_events", self.rx_events)
+            .set("dropped", self.dropped)
+            .set("unrouted", self.unrouted)
+            .set("mean_batch", self.mean_batch)
+            .set("flush_deadline", self.flush_deadline)
+            .set("flush_full", self.flush_full)
+            .set("flush_evict", self.flush_evict)
+            .set("evictions", self.evictions)
+            .set("deadline_misses", self.deadline_misses)
+            .set("latency_p50_ns", self.latency.p50() as f64 / 1e3)
+            .set("latency_p99_ns", self.latency.p99() as f64 / 1e3)
+            .set("max_link_util", self.max_link_util)
+            .set("delivered_events_per_s", self.delivered_events_per_s)
+    }
+}
+
+/// Program random routes and run Poisson traffic over the system.
+///
+/// Every FPGA gets `sources_per_fpga` sources spread over its 8 HICANN
+/// links; each source fans out to `fan_out` destination FPGAs drawn
+/// Zipf(`zipf_s`) over all *other* FPGAs. GUIDs encode (destination-local
+/// route id); RX entries multicast to all 8 HICANNs.
+pub fn run_traffic(cfg: &ExperimentConfig) -> Result<TrafficReport> {
+    let mut sim: Sim<Msg> = Sim::new();
+    let sys = System::build(&mut sim, cfg.system);
+    let mut rng = Rng::new(cfg.seed);
+
+    // collect endpoints+actors
+    let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
+    let n = fpgas.len();
+    let zipf = Zipf::new(n - 1, cfg.workload.zipf_s);
+
+    // program routes + spawn generators
+    let mut guid_next = vec![0u16; n]; // per-destination GUID allocator
+    for (fi, &(_, _, actor, _ep)) in fpgas.iter().enumerate() {
+        let mut sources = Vec::new();
+        for s in 0..cfg.workload.sources_per_fpga {
+            let hicann = (s % 8) as u8;
+            let pulse = (s / 8) as u16;
+            sources.push((hicann, pulse));
+            // fan-out destinations (distinct, excluding self)
+            let mut picked = std::collections::BTreeSet::new();
+            while picked.len() < cfg.workload.fan_out.min(n - 1) {
+                let mut d = zipf.sample(&mut rng);
+                if d >= fi {
+                    d += 1; // skip self
+                }
+                picked.insert(d);
+            }
+            for d in picked {
+                let dest: EndpointAddr = fpgas[d].3;
+                let guid = guid_next[d];
+                guid_next[d] = guid_next[d].wrapping_add(1) & 0x7FFF;
+                sim.get_mut::<Fpga>(actor)
+                    .tx_lut
+                    .add(hicann, pulse, TxEntry { dest, guid });
+                sim.get_mut::<Fpga>(fpgas[d].2).rx_lut.set(
+                    guid,
+                    RxEntry {
+                        hicann_mask: 0xFF,
+                        pulse_addr: pulse,
+                    },
+                );
+            }
+        }
+        let gen = PoissonGen::new(
+            GenConfig {
+                sources,
+                rate_hz: cfg.workload.rate_hz,
+                deadline_offset: cfg.workload.deadline_offset,
+                until: Some(cfg.workload.duration),
+                ..GenConfig::default()
+            },
+            actor,
+            rng.next_u64(),
+        );
+        let gen_id = sim.add(gen);
+        sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+    }
+
+    // run: workload window + drain tail
+    sim.run_until(cfg.workload.duration);
+    sys.flush_all(&mut sim);
+    sim.run_until(cfg.workload.duration + Time::from_ms(1));
+
+    // collect
+    let mut report = TrafficReport {
+        duration: cfg.workload.duration,
+        events_generated: 0,
+        events_in: sys.total_events_in(&sim),
+        events_out: sys.total_events_out(&sim),
+        packets_out: sys.total_packets_out(&sim),
+        rx_events: sys.total_rx_events(&sim),
+        dropped: 0,
+        unrouted: 0,
+        mean_batch: sys.mean_batch_size(&sim),
+        flush_deadline: 0,
+        flush_full: 0,
+        flush_evict: 0,
+        evictions: 0,
+        deadline_misses: sys.total_deadline_misses(&sim),
+        latency: sys.latency_histogram(&sim),
+        max_link_util: sys
+            .fabric
+            .max_link_utilization(&sim, cfg.workload.duration),
+        delivered_events_per_s: 0.0,
+    };
+    for (_, _, actor, _) in &fpgas {
+        let f: &Fpga = sim.get(*actor);
+        report.dropped += f.stats.dropped_events;
+        report.unrouted += f.stats.tx_unrouted;
+        report.flush_deadline += f.mgr.stats.flush_deadline;
+        report.flush_full += f.mgr.stats.flush_full;
+        report.flush_evict += f.mgr.stats.flush_eviction;
+        report.evictions += f.mgr.stats.evictions;
+    }
+    // generators were added after FPGAs; count generated events
+    for id in 0..sim.n_actors() {
+        if let Some(g) = sim.try_get::<PoissonGen>(id) {
+            report.events_generated += g.stats.generated;
+        }
+    }
+    report.delivered_events_per_s = report.rx_events as f64 / report.duration.secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::TorusSpec;
+    use crate::sim::Time;
+    use crate::wafer::system::SystemConfig;
+
+    fn small() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 16;
+        cfg.workload.duration = Time::from_us(500);
+        cfg
+    }
+
+    #[test]
+    fn traffic_run_is_loss_free() {
+        let cfg = small();
+        let r = run_traffic(&cfg).unwrap();
+        assert!(r.events_generated > 0);
+        assert_eq!(r.events_in, r.events_generated);
+        assert_eq!(r.unrouted, 0);
+        assert_eq!(r.dropped, 0);
+        // every event generated is eventually delivered (fan_out 1)
+        assert_eq!(r.rx_events, r.events_generated, "event loss in fabric");
+        assert!(r.mean_batch >= 1.0);
+        assert!(r.latency.count() > 0);
+    }
+
+    #[test]
+    fn fan_out_multiplies_delivery() {
+        let mut cfg = small();
+        cfg.workload.fan_out = 3;
+        let r = run_traffic(&cfg).unwrap();
+        assert_eq!(r.rx_events, 3 * r.events_generated, "fan-out mismatch");
+    }
+
+    #[test]
+    fn higher_rate_improves_aggregation() {
+        let mut lo = small();
+        lo.workload.rate_hz = 0.5e6;
+        let mut hi = small();
+        hi.workload.rate_hz = 20e6;
+        let r_lo = run_traffic(&lo).unwrap();
+        let r_hi = run_traffic(&hi).unwrap();
+        assert!(
+            r_hi.mean_batch > r_lo.mean_batch,
+            "aggregation should grow with rate: {} vs {}",
+            r_hi.mean_batch,
+            r_lo.mean_batch
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small();
+        let a = run_traffic(&cfg).unwrap();
+        let b = run_traffic(&cfg).unwrap();
+        assert_eq!(a.events_generated, b.events_generated);
+        assert_eq!(a.rx_events, b.rx_events);
+        assert_eq!(a.packets_out, b.packets_out);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+    }
+}

@@ -1,0 +1,208 @@
+//! Flow-level (analytic) bandwidth model of the torus fabric.
+//!
+//! Complements the packet-level simulator: given a static traffic matrix,
+//! accumulate the offered load on every directed link under dimension-order
+//! routing and report utilizations and the saturation bottleneck. This is
+//! the model behind the paper's Fig. 1 claim that the 8-concentrators-per-
+//! wafer topology is "optimal … regarding bandwidth utilisation": it
+//! exposes exactly which link saturates first as the wafer fan-in or the
+//! torus shape changes, without running a packet simulation.
+
+use std::collections::BTreeMap;
+
+use super::routing::links_on_route;
+use super::torus::{Dir, NodeAddr, TorusSpec};
+
+/// One static flow: `gbps` offered from `src` to `dst`.
+#[derive(Clone, Copy, Debug)]
+pub struct Flow {
+    pub src: NodeAddr,
+    pub dst: NodeAddr,
+    pub gbps: f64,
+}
+
+/// Load accumulated on one directed link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkLoad {
+    pub gbps: f64,
+    pub n_flows: u32,
+}
+
+/// Result of a flow-level analysis.
+#[derive(Clone, Debug)]
+pub struct FlowAnalysis {
+    /// Load per directed torus link (node, egress direction).
+    pub links: BTreeMap<(u16, u8), LinkLoad>,
+    /// Load injected/delivered through each node's local link.
+    pub local_links: BTreeMap<u16, LinkLoad>,
+    /// Link capacity used for utilization (Gbit/s).
+    pub link_capacity_gbps: f64,
+    pub total_offered_gbps: f64,
+}
+
+impl FlowAnalysis {
+    /// Run the analysis for `flows` on `torus` with `link_capacity_gbps`.
+    pub fn run(torus: &TorusSpec, flows: &[Flow], link_capacity_gbps: f64) -> FlowAnalysis {
+        let mut links: BTreeMap<(u16, u8), LinkLoad> = BTreeMap::new();
+        let mut local_links: BTreeMap<u16, LinkLoad> = BTreeMap::new();
+        let mut total = 0.0;
+        for f in flows {
+            total += f.gbps;
+            for (node, dir) in links_on_route(torus, f.src, f.dst) {
+                let e = links.entry((node.0, dir.port())).or_default();
+                e.gbps += f.gbps;
+                e.n_flows += 1;
+            }
+            // delivery over the destination's local link
+            let e = local_links.entry(f.dst.0).or_default();
+            e.gbps += f.gbps;
+            e.n_flows += 1;
+        }
+        FlowAnalysis {
+            links,
+            local_links,
+            link_capacity_gbps,
+            total_offered_gbps: total,
+        }
+    }
+
+    /// Peak torus-link utilization (1.0 = saturated).
+    pub fn max_utilization(&self) -> f64 {
+        self.links
+            .values()
+            .map(|l| l.gbps / self.link_capacity_gbps)
+            .fold(0.0, f64::max)
+    }
+
+    /// Peak local-link utilization given the local link capacity.
+    pub fn max_local_utilization(&self, local_capacity_gbps: f64) -> f64 {
+        self.local_links
+            .values()
+            .map(|l| l.gbps / local_capacity_gbps)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean utilization over links that carry traffic.
+    pub fn mean_active_utilization(&self) -> f64 {
+        let active: Vec<f64> = self
+            .links
+            .values()
+            .filter(|l| l.gbps > 0.0)
+            .map(|l| l.gbps / self.link_capacity_gbps)
+            .collect();
+        if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<f64>() / active.len() as f64
+        }
+    }
+
+    /// The most loaded torus link.
+    pub fn bottleneck(&self) -> Option<((NodeAddr, Dir), LinkLoad)> {
+        self.links
+            .iter()
+            .max_by(|a, b| a.1.gbps.partial_cmp(&b.1.gbps).unwrap())
+            .map(|(&(n, p), &l)| ((NodeAddr(n), Dir::from_port(p)), l))
+    }
+
+    /// Sustainable fraction of the offered traffic: if the hottest link is
+    /// oversubscribed by `u > 1`, throughput scales down by `1/u`
+    /// (uniform-rate fluid approximation).
+    pub fn sustainable_fraction(&self) -> f64 {
+        let u = self.max_utilization();
+        if u <= 1.0 {
+            1.0
+        } else {
+            1.0 / u
+        }
+    }
+
+    /// Number of torus links carrying any traffic.
+    pub fn active_links(&self) -> usize {
+        self.links.values().filter(|l| l.gbps > 0.0).count()
+    }
+}
+
+/// Uniform all-to-all traffic matrix helper: every ordered pair of distinct
+/// nodes exchanges `gbps_per_flow`.
+pub fn uniform_all_to_all(torus: &TorusSpec, gbps_per_flow: f64) -> Vec<Flow> {
+    let mut flows = Vec::new();
+    for s in torus.nodes() {
+        for d in torus.nodes() {
+            if s != d {
+                flows.push(Flow {
+                    src: s,
+                    dst: d,
+                    gbps: gbps_per_flow,
+                });
+            }
+        }
+    }
+    flows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_loads_route_links() {
+        let t = TorusSpec::new(4, 1, 1);
+        let flows = [Flow {
+            src: NodeAddr(0),
+            dst: NodeAddr(2),
+            gbps: 10.0,
+        }];
+        let a = FlowAnalysis::run(&t, &flows, 100.0);
+        assert_eq!(a.active_links(), 2); // 0->1, 1->2
+        assert!((a.max_utilization() - 0.1).abs() < 1e-12);
+        assert_eq!(a.local_links[&2].n_flows, 1);
+    }
+
+    #[test]
+    fn bottleneck_detection() {
+        let t = TorusSpec::new(4, 1, 1);
+        // two flows share link 0->1
+        let flows = [
+            Flow {
+                src: NodeAddr(0),
+                dst: NodeAddr(1),
+                gbps: 60.0,
+            },
+            Flow {
+                src: NodeAddr(3),
+                dst: NodeAddr(1),
+                gbps: 50.0,
+            },
+        ];
+        let a = FlowAnalysis::run(&t, &flows, 100.0);
+        let ((node, dir), load) = a.bottleneck().unwrap();
+        assert_eq!(node, NodeAddr(0));
+        assert_eq!(dir, Dir::XPlus);
+        assert!((load.gbps - 110.0).abs() < 1e-9);
+        assert!((a.sustainable_fraction() - 100.0 / 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_traffic_is_balanced_on_symmetric_torus() {
+        let t = TorusSpec::new(4, 4, 1);
+        let flows = uniform_all_to_all(&t, 1.0);
+        let a = FlowAnalysis::run(&t, &flows, 1000.0);
+        // all active links should carry similar load on a symmetric torus
+        let loads: Vec<f64> = a.links.values().map(|l| l.gbps).collect();
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        // dimension-order routing on even tori has some imbalance from the
+        // tie-breaking wrap preference, but within a small factor
+        assert!(max / min <= 3.0, "max={max} min={min}");
+        assert_eq!(a.total_offered_gbps, (16.0 * 15.0));
+    }
+
+    #[test]
+    fn sustainable_fraction_at_low_load_is_one() {
+        let t = TorusSpec::new(3, 3, 3);
+        let flows = uniform_all_to_all(&t, 0.001);
+        let a = FlowAnalysis::run(&t, &flows, 100.0);
+        assert_eq!(a.sustainable_fraction(), 1.0);
+    }
+}

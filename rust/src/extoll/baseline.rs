@@ -1,0 +1,276 @@
+//! Gigabit-Ethernet baseline (paper abstract: "currently connected to a
+//! compute cluster via Gigabit-Ethernet network technology").
+//!
+//! The comparison fabric for every Extoll experiment: a store-and-forward
+//! GbE path with standard framing overhead and a (configurable) switch +
+//! kernel-stack latency. The same `Inject`/`Deliver` actor interface as
+//! [`super::nic::Nic`] lets workloads run unchanged over either fabric.
+//! An optional per-message handshake mode models the request/acknowledge
+//! software protocol the ring-buffer design (paper §2.1) eliminates.
+
+use std::collections::VecDeque;
+
+use crate::msg::Msg;
+use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::util::stats::Histogram;
+
+use super::packet::Packet;
+
+/// Ethernet framing overhead per frame: preamble+SFD (8) + MAC (14) +
+/// FCS (4) + min IFG (12) + IPv4 (20) + UDP (8) = 66 bytes.
+pub const GBE_FRAME_OVERHEAD_BYTES: u32 = 66;
+/// Maximum UDP payload per standard (non-jumbo) frame.
+pub const GBE_MAX_PAYLOAD_BYTES: u32 = 1472;
+
+/// Configuration of the GbE baseline path.
+#[derive(Clone, Copy, Debug)]
+pub struct GbeConfig {
+    /// Line rate in Gbit/s (1.0 for the BrainScaleS cluster links).
+    pub gbps: f64,
+    /// One-way switch + NIC + kernel latency.
+    pub path_latency: Time,
+    /// If set, every message requires a software acknowledgment before the
+    /// next may be sent (the handshake baseline of Fig. 2a).
+    pub handshake: bool,
+    /// Software turnaround time to generate an acknowledgment.
+    pub ack_turnaround: Time,
+}
+
+impl Default for GbeConfig {
+    fn default() -> Self {
+        GbeConfig {
+            gbps: 1.0,
+            path_latency: Time::from_us(10),
+            handshake: false,
+            ack_turnaround: Time::from_us(5),
+        }
+    }
+}
+
+impl GbeConfig {
+    /// Serialization time of `payload` bytes including framing overhead.
+    pub fn ser_time(&self, payload: u32) -> Time {
+        let frames = payload.div_ceil(GBE_MAX_PAYLOAD_BYTES).max(1);
+        let wire = payload + frames * GBE_FRAME_OVERHEAD_BYTES;
+        crate::sim::ps_for_bits(wire as u64 * 8, self.gbps)
+    }
+}
+
+/// Statistics of the GbE path.
+#[derive(Clone, Debug, Default)]
+pub struct GbeStats {
+    pub delivered: u64,
+    pub delivered_bytes: u64,
+    pub delivered_events: u64,
+    /// inject→deliver latency (ps).
+    pub transit_ps: Histogram,
+    /// time messages spent waiting for handshake acks (ps).
+    pub handshake_wait_ps: Histogram,
+}
+
+/// A point-to-point GbE path actor: `Inject` on one side, `Deliver` to the
+/// attached sink. (The BrainScaleS GbE setup is one switch hop between an
+/// FPGA and its host; multi-hop effects fold into `path_latency`.)
+pub struct GbeLink {
+    cfg: GbeConfig,
+    /// Delivery target.
+    sink: Option<ActorId>,
+    queue: VecDeque<Packet>,
+    busy: bool,
+    /// Waiting for an ack (handshake mode).
+    awaiting_ack: bool,
+    pub stats: GbeStats,
+}
+
+impl GbeLink {
+    pub fn new(cfg: GbeConfig) -> Self {
+        GbeLink {
+            cfg,
+            sink: None,
+            queue: VecDeque::new(),
+            busy: false,
+            awaiting_ack: false,
+            stats: GbeStats::default(),
+        }
+    }
+
+    pub fn attach_sink(&mut self, id: ActorId) {
+        self.sink = Some(id);
+    }
+
+    fn try_tx(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.busy || self.awaiting_ack || self.queue.is_empty() {
+            return;
+        }
+        let p = self.queue.pop_front().unwrap();
+        let ser = self.cfg.ser_time(p.payload_bytes);
+        self.busy = true;
+        let arrival = ser + self.cfg.path_latency;
+        let sink = self.sink.expect("gbe link has no sink attached");
+        self.stats.delivered += 1;
+        self.stats.delivered_bytes += p.payload_bytes as u64;
+        self.stats.delivered_events += p.n_events() as u64;
+        self.stats
+            .transit_ps
+            .record((ctx.now() + arrival).saturating_sub(p.injected).ps());
+        ctx.send(sink, arrival, Msg::Deliver(p));
+        ctx.send_self(ser, Msg::Timer(TIMER_TX_DONE));
+        if self.cfg.handshake {
+            // ack returns after delivery + turnaround + path back
+            self.awaiting_ack = true;
+            let ack_at = arrival + self.cfg.ack_turnaround + self.cfg.path_latency;
+            ctx.send_self(ack_at, Msg::Timer(TIMER_ACK));
+        }
+    }
+}
+
+/// Timer tag: serializer free.
+pub const TIMER_TX_DONE: u32 = 1;
+/// Timer tag: handshake acknowledgment received.
+pub const TIMER_ACK: u32 = 2;
+
+impl Actor<Msg> for GbeLink {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Inject(mut p) => {
+                p.injected = ctx.now();
+                self.queue.push_back(p);
+                self.try_tx(ctx);
+            }
+            Msg::Timer(TIMER_TX_DONE) => {
+                self.busy = false;
+                self.try_tx(ctx);
+            }
+            Msg::Timer(TIMER_ACK) => {
+                self.awaiting_ack = false;
+                self.try_tx(ctx);
+            }
+            other => panic!("gbe link: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "gbe-link".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::NodeAddr;
+    use crate::sim::Sim;
+
+    struct Sink {
+        received: Vec<(Time, Packet)>,
+    }
+
+    impl Actor<Msg> for Sink {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+            if let Msg::Deliver(p) = msg {
+                self.received.push((ctx.now(), p));
+            }
+        }
+    }
+
+    fn setup(cfg: GbeConfig) -> (Sim<Msg>, ActorId, ActorId) {
+        let mut sim = Sim::new();
+        let link = sim.add(GbeLink::new(cfg));
+        let sink = sim.add(Sink { received: vec![] });
+        sim.get_mut::<GbeLink>(link).attach_sink(sink);
+        (sim, link, sink)
+    }
+
+    #[test]
+    fn delivery_latency_includes_framing_and_path() {
+        let cfg = GbeConfig::default();
+        let (mut sim, link, sink) = setup(cfg);
+        let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, 1);
+        sim.schedule(Time::ZERO, link, Msg::Inject(p));
+        sim.run_to_completion();
+        let s: &Sink = sim.get(sink);
+        assert_eq!(s.received.len(), 1);
+        // (496+66)*8 bits at 1 Gbit/s = 4.496us; + 10us path
+        let expect = Time::from_ns(4496) + Time::from_us(10);
+        assert_eq!(s.received[0].0, expect);
+    }
+
+    #[test]
+    fn throughput_serializes_back_to_back() {
+        let cfg = GbeConfig::default();
+        let (mut sim, link, sink) = setup(cfg);
+        for seq in 0..10 {
+            sim.schedule(
+                Time::ZERO,
+                link,
+                Msg::Inject(Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, seq)),
+            );
+        }
+        sim.run_to_completion();
+        let s: &Sink = sim.get(sink);
+        assert_eq!(s.received.len(), 10);
+        let dt = s.received[9].0 - s.received[8].0;
+        assert_eq!(dt, cfg.ser_time(496), "pipelined spacing = ser time");
+    }
+
+    #[test]
+    fn handshake_gates_next_message() {
+        let cfg = GbeConfig {
+            handshake: true,
+            ..GbeConfig::default()
+        };
+        let (mut sim, link, sink) = setup(cfg);
+        for seq in 0..3 {
+            sim.schedule(
+                Time::ZERO,
+                link,
+                Msg::Inject(Packet::raw(NodeAddr(0), NodeAddr(1), 64, Time::ZERO, seq)),
+            );
+        }
+        sim.run_to_completion();
+        let s: &Sink = sim.get(sink);
+        assert_eq!(s.received.len(), 3);
+        let dt = s.received[1].0 - s.received[0].0;
+        // spacing must cover ser + path (deliver) + turnaround + path (ack)
+        let min = cfg.ser_time(64) + cfg.path_latency + cfg.ack_turnaround + cfg.path_latency;
+        assert!(dt >= min, "dt={dt} < {min}");
+    }
+
+    #[test]
+    fn handshake_vs_streaming_throughput_gap() {
+        // The Fig. 2a motivation: per-message handshakes collapse
+        // throughput. 100 messages of 496B each.
+        let mk = |handshake| {
+            let cfg = GbeConfig {
+                handshake,
+                ..GbeConfig::default()
+            };
+            let (mut sim, link, sink) = setup(cfg);
+            for seq in 0..100 {
+                sim.schedule(
+                    Time::ZERO,
+                    link,
+                    Msg::Inject(Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, seq)),
+                );
+            }
+            sim.run_to_completion();
+            let s: &Sink = sim.get(sink);
+            s.received.last().unwrap().0
+        };
+        let t_stream = mk(false);
+        let t_handshake = mk(true);
+        assert!(
+            t_handshake.ps() > t_stream.ps() * 4,
+            "handshake {t_handshake} should be ≫ streaming {t_stream}"
+        );
+    }
+
+    #[test]
+    fn jumbo_payload_counts_frames() {
+        let cfg = GbeConfig::default();
+        // 1473 bytes -> 2 frames -> 2x overhead
+        let t1 = cfg.ser_time(1472);
+        let t2 = cfg.ser_time(1473);
+        let extra = t2 - t1;
+        assert!(extra >= crate::sim::ps_for_bits((GBE_FRAME_OVERHEAD_BYTES as u64) * 8, 1.0));
+    }
+}

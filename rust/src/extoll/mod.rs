@@ -1,0 +1,23 @@
+//! The Extoll network substrate (paper §1): Tourmalet NICs, links of up to
+//! 12 × 8.4 Gbit/s serial lanes, a 3D-torus topology with 16-bit node
+//! addresses, dimension-order routing, the RMA protocol helpers, a
+//! flow-level bandwidth analyzer, and the Gigabit-Ethernet baseline the
+//! paper's system replaces.
+
+pub mod analysis;
+pub mod baseline;
+pub mod network;
+pub mod nic;
+pub mod packet;
+pub mod rma;
+pub mod routing;
+pub mod torus;
+
+pub use analysis::{Flow, FlowAnalysis};
+pub use baseline::{GbeConfig, GbeLink};
+pub use network::{build_torus, Fabric};
+pub use nic::{Nic, NicConfig, NicStats};
+pub use packet::{Packet, PacketKind, HEADER_BYTES, MAX_EVENTS_PER_PACKET, MAX_PAYLOAD_BYTES};
+pub use rma::{fragment_put, Notification};
+pub use routing::{links_on_route, next_hop, route};
+pub use torus::{Dir, NodeAddr, TorusSpec, DIRS, LOCAL_PORT, TOURMALET_LINKS};

@@ -1,0 +1,132 @@
+//! Fabric construction helpers: build a torus of NIC actors and wire the
+//! neighbor links.
+//!
+//! The builder exploits the fact that [`crate::sim::Sim::add`] assigns
+//! consecutive actor ids: NICs are added in node-address order, so the id
+//! of node `a` is `base + a.0`, and neighbor wiring needs no second pass.
+
+use crate::msg::Msg;
+use crate::sim::{ActorId, Sim};
+
+use super::nic::{Nic, NicConfig};
+use super::torus::{TorusSpec, DIRS};
+
+/// Build a full torus of NICs; returns the actor ids in node-address order.
+///
+/// Local units are attached afterwards via [`Nic::attach_local`].
+pub fn build_torus(sim: &mut Sim<Msg>, spec: &TorusSpec, cfg: NicConfig) -> Vec<ActorId> {
+    let base = sim.n_actors();
+    let ids: Vec<ActorId> = spec
+        .nodes()
+        .map(|addr| sim.add(Nic::new(addr, *spec, cfg)))
+        .collect();
+    debug_assert_eq!(ids.first().copied(), Some(base));
+    for addr in spec.nodes() {
+        for dir in DIRS {
+            let n = spec.neighbor(addr, dir);
+            let id = ids[addr.0 as usize];
+            sim.get_mut::<Nic>(id).set_neighbor(dir, base + n.0 as usize);
+        }
+    }
+    ids
+}
+
+/// A handle to a built fabric (spec + NIC actor ids), with convenience
+/// accessors for post-run statistics.
+pub struct Fabric {
+    pub spec: TorusSpec,
+    pub cfg: NicConfig,
+    pub nics: Vec<ActorId>,
+}
+
+impl Fabric {
+    pub fn build(sim: &mut Sim<Msg>, spec: TorusSpec, cfg: NicConfig) -> Fabric {
+        let nics = build_torus(sim, &spec, cfg);
+        Fabric { spec, cfg, nics }
+    }
+
+    /// Total packets delivered to local units across all nodes.
+    pub fn total_delivered(&self, sim: &Sim<Msg>) -> u64 {
+        self.nics
+            .iter()
+            .map(|&id| sim.get::<Nic>(id).stats.delivered)
+            .sum()
+    }
+
+    /// Total spike events delivered across all nodes.
+    pub fn total_delivered_events(&self, sim: &Sim<Msg>) -> u64 {
+        self.nics
+            .iter()
+            .map(|&id| sim.get::<Nic>(id).stats.delivered_events)
+            .sum()
+    }
+
+    /// Merged transit-latency histogram (ps).
+    pub fn transit_histogram(&self, sim: &Sim<Msg>) -> crate::util::stats::Histogram {
+        let mut h = crate::util::stats::Histogram::new();
+        for &id in &self.nics {
+            h.merge(&sim.get::<Nic>(id).stats.transit_ps);
+        }
+        h
+    }
+
+    /// Peak utilization over all torus ports, given the observation window.
+    pub fn max_link_utilization(&self, sim: &Sim<Msg>, window: crate::sim::Time) -> f64 {
+        let mut max = 0.0f64;
+        for &id in &self.nics {
+            let nic = sim.get::<Nic>(id);
+            for port in 0..6 {
+                max = max.max(nic.port_utilization(port, window));
+            }
+        }
+        max
+    }
+
+    /// Mean utilization over all torus ports that carried any traffic.
+    pub fn mean_active_link_utilization(&self, sim: &Sim<Msg>, window: crate::sim::Time) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0u32;
+        for &id in &self.nics {
+            let nic = sim.get::<Nic>(id);
+            for port in 0..6 {
+                if nic.port_tx_packets(port) > 0 {
+                    sum += nic.port_utilization(port, window);
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_wires_all_neighbors() {
+        let mut sim = Sim::new();
+        let spec = TorusSpec::new(3, 2, 2);
+        let fabric = Fabric::build(&mut sim, spec, NicConfig::default());
+        assert_eq!(fabric.nics.len(), 12);
+        // ids must map to addresses in order
+        for (i, &id) in fabric.nics.iter().enumerate() {
+            let nic = sim.get::<Nic>(id);
+            assert_eq!(nic.addr.0 as usize, i);
+        }
+    }
+
+    #[test]
+    fn stats_start_zero() {
+        let mut sim = Sim::new();
+        let spec = TorusSpec::new(2, 2, 1);
+        let fabric = Fabric::build(&mut sim, spec, NicConfig::default());
+        assert_eq!(fabric.total_delivered(&sim), 0);
+        assert_eq!(fabric.total_delivered_events(&sim), 0);
+        assert_eq!(fabric.max_link_utilization(&sim, crate::sim::Time::from_us(1)), 0.0);
+    }
+}

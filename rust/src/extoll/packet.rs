@@ -1,0 +1,294 @@
+//! Extoll packet model (paper §1, §3.1).
+//!
+//! An Extoll packet carries up to **496 B of payload** — 31 sixteen-byte
+//! event cells, i.e. **124 events** (paper §3.1). Header/trailer overhead
+//! is modeled as 24 B (routing + command word, RMA descriptor, CRC),
+//! consistent with the published Extoll RMA packet layout and with the
+//! paper's observation that single-event messages are limited to one event
+//! per two 210 MHz clocks on the FPGA's 64-bit egress datapath.
+
+use crate::fpga::event::{payload_bytes_for_events, RoutedEvent, CELL_BYTES};
+use crate::fpga::lookup::EndpointAddr;
+use crate::sim::{ActorId, Time};
+
+use super::torus::NodeAddr;
+
+/// Maximum payload per Extoll packet (paper: 496 B = 124 events).
+pub const MAX_PAYLOAD_BYTES: u32 = 496;
+/// Maximum events per packet (paper: 124).
+pub const MAX_EVENTS_PER_PACKET: usize = 124;
+/// Modeled header+trailer overhead per packet on the wire.
+pub const HEADER_BYTES: u32 = 24;
+/// FPGA egress datapath width (64-bit words at the 210 MHz clock).
+pub const DATAPATH_BITS_PER_CYCLE: u32 = 64;
+
+/// What a packet carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PacketKind {
+    /// Aggregated spike events for one destination FPGA (paper §3.1).
+    SpikeBatch {
+        /// Which of the 6 FPGAs behind the destination concentrator.
+        dst_fpga: u8,
+        /// Events, at most [`MAX_EVENTS_PER_PACKET`].
+        events: Vec<RoutedEvent>,
+    },
+    /// RMA PUT to host memory (paper §2): ring-buffer data stream.
+    RmaPut {
+        /// Network logical address the payload is written to.
+        nla: u64,
+        /// Raise a notification at the target on completion.
+        notify: bool,
+        /// Logical payload size (bytes) written to host memory.
+        bytes: u32,
+    },
+    /// RMA notification message (completion/credit exchange, paper §2.1).
+    Notification { code: u64 },
+    /// Opaque bulk payload (baseline comparisons, fabric stress tests).
+    Raw,
+}
+
+/// A packet traversing the Extoll fabric.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub src: NodeAddr,
+    pub dst: NodeAddr,
+    pub kind: PacketKind,
+    /// Payload bytes on the wire (already cell-padded for spike batches).
+    pub payload_bytes: u32,
+    /// Global sequence number (tracking, dedup checks in tests).
+    pub seq: u64,
+    /// When the payload's oldest content was created (latency accounting).
+    pub created: Time,
+    /// When the packet was injected into the fabric.
+    pub injected: Time,
+    /// Hop count so far.
+    pub hops: u8,
+    /// Ingress bookkeeping for the current hop (actor, port, vc), used by
+    /// the NIC to return link-level credits upstream.
+    pub ingress: Option<(ActorId, u8, u8)>,
+    /// Fabric-internal: current virtual channel (dateline scheme).
+    pub vc: u8,
+    /// Fabric-internal: axis of the ring currently being traversed
+    /// (3 = none yet / local).
+    pub axis: u8,
+}
+
+impl Packet {
+    /// Build a spike-batch packet; pads payload to whole 16-byte cells.
+    pub fn spike_batch(
+        src: NodeAddr,
+        dst: EndpointAddr,
+        events: Vec<RoutedEvent>,
+        created: Time,
+        seq: u64,
+    ) -> Packet {
+        assert!(
+            events.len() <= MAX_EVENTS_PER_PACKET,
+            "spike batch of {} events exceeds the 124-event Extoll maximum",
+            events.len()
+        );
+        assert!(!events.is_empty(), "empty spike batch");
+        let payload_bytes = payload_bytes_for_events(events.len());
+        Packet {
+            src,
+            dst: dst.node,
+            kind: PacketKind::SpikeBatch {
+                dst_fpga: dst.fpga,
+                events,
+            },
+            payload_bytes,
+            seq,
+            created,
+            injected: Time::ZERO,
+            hops: 0,
+            ingress: None,
+            vc: 0,
+            axis: 3,
+        }
+    }
+
+    /// Build an RMA PUT packet (host communication path).
+    pub fn rma_put(
+        src: NodeAddr,
+        dst: NodeAddr,
+        nla: u64,
+        bytes: u32,
+        notify: bool,
+        created: Time,
+        seq: u64,
+    ) -> Packet {
+        assert!(bytes <= MAX_PAYLOAD_BYTES, "RMA PUT of {bytes} B exceeds max payload");
+        Packet {
+            src,
+            dst,
+            kind: PacketKind::RmaPut { nla, notify, bytes },
+            payload_bytes: bytes,
+            seq,
+            created,
+            injected: Time::ZERO,
+            hops: 0,
+            ingress: None,
+            vc: 0,
+            axis: 3,
+        }
+    }
+
+    /// Build a small notification packet (credit/completion, paper §2.1).
+    pub fn notification(src: NodeAddr, dst: NodeAddr, code: u64, created: Time, seq: u64) -> Packet {
+        Packet {
+            src,
+            dst,
+            kind: PacketKind::Notification { code },
+            payload_bytes: 8,
+            seq,
+            created,
+            injected: Time::ZERO,
+            hops: 0,
+            ingress: None,
+            vc: 0,
+            axis: 3,
+        }
+    }
+
+    /// Build an opaque packet of `payload_bytes` (baselines, stress).
+    pub fn raw(src: NodeAddr, dst: NodeAddr, payload_bytes: u32, created: Time, seq: u64) -> Packet {
+        assert!(
+            payload_bytes <= MAX_PAYLOAD_BYTES,
+            "Extoll payload limit is {MAX_PAYLOAD_BYTES} B; use raw_gbe for Ethernet-framed baselines"
+        );
+        Packet {
+            src,
+            dst,
+            kind: PacketKind::Raw,
+            payload_bytes,
+            seq,
+            created,
+            injected: Time::ZERO,
+            hops: 0,
+            ingress: None,
+            vc: 0,
+            axis: 3,
+        }
+    }
+
+    /// Opaque packet without the Extoll payload limit (GbE baseline frames
+    /// may carry up to 1472 B of UDP payload).
+    pub fn raw_gbe(src: NodeAddr, dst: NodeAddr, payload_bytes: u32, created: Time, seq: u64) -> Packet {
+        Packet {
+            src,
+            dst,
+            kind: PacketKind::Raw,
+            payload_bytes,
+            seq,
+            created,
+            injected: Time::ZERO,
+            hops: 0,
+            ingress: None,
+            vc: 0,
+            axis: 3,
+        }
+    }
+
+    /// Number of events carried (0 for non-spike packets).
+    pub fn n_events(&self) -> usize {
+        match &self.kind {
+            PacketKind::SpikeBatch { events, .. } => events.len(),
+            _ => 0,
+        }
+    }
+
+    /// Total bytes on the wire including header/trailer overhead.
+    pub fn wire_bytes(&self) -> u32 {
+        HEADER_BYTES + self.payload_bytes
+    }
+
+    /// 210 MHz cycles to shift this packet through the FPGA's 64-bit
+    /// egress datapath (header word(s) + payload words, rounded up).
+    pub fn egress_cycles(&self) -> u64 {
+        let bits = (self.wire_bytes() as u64) * 8;
+        bits.div_ceil(DATAPATH_BITS_PER_CYCLE as u64)
+    }
+
+    /// Header overhead as a fraction of the wire size.
+    pub fn overhead_fraction(&self) -> f64 {
+        HEADER_BYTES as f64 / self.wire_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::event::RoutedEvent;
+
+    fn ev(n: usize) -> Vec<RoutedEvent> {
+        (0..n)
+            .map(|i| RoutedEvent::new((i % 32768) as u16, (i % 32768) as u16, Time::ZERO))
+            .collect()
+    }
+
+    #[test]
+    fn max_batch_is_496_bytes() {
+        let p = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(124), Time::ZERO, 0);
+        assert_eq!(p.payload_bytes, MAX_PAYLOAD_BYTES);
+        assert_eq!(p.wire_bytes(), 520);
+        assert_eq!(p.n_events(), 124);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 124-event")]
+    fn oversize_batch_rejected() {
+        let _ = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(125), Time::ZERO, 0);
+    }
+
+    #[test]
+    fn single_event_overhead_matches_paper_rate() {
+        // One event per message: header(24B) + one cell(16B) = 40B = 5
+        // 64-bit words -> 5 cycles on the datapath. The paper's "one event
+        // every two clocks" is the *sustained header-limited* rate with the
+        // minimal-header internal format; our wire model is strictly more
+        // pessimistic per message, and the aggregation win we measure is
+        // therefore a lower bound. Check the numbers are in that regime.
+        let p = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(1), Time::ZERO, 0);
+        assert_eq!(p.wire_bytes(), 40);
+        assert!(p.egress_cycles() >= 2, "at least two clocks per single event");
+        // Aggregated: 124 events in 520B -> ~0.52 cycles/event.
+        let big = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(124), Time::ZERO, 0);
+        let per_event = big.egress_cycles() as f64 / 124.0;
+        assert!(per_event < 1.0, "aggregation must beat 1 cycle/event, got {per_event}");
+    }
+
+    #[test]
+    fn overhead_fraction_decreases_with_aggregation() {
+        let small = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(1), Time::ZERO, 0);
+        let big = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(124), Time::ZERO, 0);
+        assert!(small.overhead_fraction() > 0.5);
+        assert!(big.overhead_fraction() < 0.05);
+    }
+
+    #[test]
+    fn rma_put_fields() {
+        let p = Packet::rma_put(NodeAddr(2), NodeAddr(3), 0xDEAD_BEEF, 256, true, Time::ZERO, 7);
+        assert_eq!(p.payload_bytes, 256);
+        assert_eq!(p.wire_bytes(), 280);
+        match p.kind {
+            PacketKind::RmaPut { nla, notify, bytes } => {
+                assert_eq!(nla, 0xDEAD_BEEF);
+                assert!(notify);
+                assert_eq!(bytes, 256);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn notification_is_small() {
+        let p = Packet::notification(NodeAddr(0), NodeAddr(1), 42, Time::ZERO, 0);
+        assert!(p.wire_bytes() <= 32);
+    }
+
+    #[test]
+    fn cell_padding() {
+        let p = Packet::spike_batch(NodeAddr(0), EndpointAddr::new(NodeAddr(1), 2), ev(5), Time::ZERO, 0);
+        assert_eq!(p.payload_bytes, 2 * CELL_BYTES);
+    }
+}

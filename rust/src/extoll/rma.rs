@@ -1,0 +1,182 @@
+//! Remote Memory Access (RMA) protocol helpers (paper §2).
+//!
+//! The FPGA↔host path uses the Extoll RMA unit: one-sided PUTs into a
+//! remote memory window plus a hardware **notification** queue that tells
+//! the software how much data arrived (paper §2/§2.1). This module provides
+//! the pieces shared by the FPGA-side requester and the host-side
+//! completer: PUT fragmentation over the 496-byte packet payload limit and
+//! the 64-bit notification word codec.
+
+use crate::sim::Time;
+
+use super::packet::{Packet, MAX_PAYLOAD_BYTES};
+use super::torus::NodeAddr;
+
+/// Notification word layout: `kind(4) | channel(12) | value(48)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Notification {
+    /// FPGA → host: `value` bytes were written to ring buffer `channel`.
+    DataWritten { channel: u16, bytes: u64 },
+    /// Host → FPGA: software freed `value` bytes of ring buffer `channel`
+    /// (credit return, paper §2.1 "credit based flow control").
+    SpaceFreed { channel: u16, bytes: u64 },
+    /// Generic completion (RMA PUT with notification flag).
+    Completion { channel: u16, value: u64 },
+}
+
+const KIND_DATA: u64 = 1;
+const KIND_SPACE: u64 = 2;
+const KIND_COMPLETION: u64 = 3;
+const VALUE_MASK: u64 = (1 << 48) - 1;
+
+impl Notification {
+    /// Encode into the 64-bit notification word.
+    pub fn encode(self) -> u64 {
+        let (kind, ch, val) = match self {
+            Notification::DataWritten { channel, bytes } => (KIND_DATA, channel, bytes),
+            Notification::SpaceFreed { channel, bytes } => (KIND_SPACE, channel, bytes),
+            Notification::Completion { channel, value } => (KIND_COMPLETION, channel, value),
+        };
+        debug_assert!(ch < (1 << 12));
+        debug_assert!(val <= VALUE_MASK);
+        (kind << 60) | ((ch as u64) << 48) | (val & VALUE_MASK)
+    }
+
+    /// Decode a notification word; `None` for unknown kinds.
+    pub fn decode(w: u64) -> Option<Notification> {
+        let kind = w >> 60;
+        let channel = ((w >> 48) & 0xFFF) as u16;
+        let value = w & VALUE_MASK;
+        match kind {
+            KIND_DATA => Some(Notification::DataWritten {
+                channel,
+                bytes: value,
+            }),
+            KIND_SPACE => Some(Notification::SpaceFreed {
+                channel,
+                bytes: value,
+            }),
+            KIND_COMPLETION => Some(Notification::Completion { channel, value }),
+            _ => None,
+        }
+    }
+
+    /// Wrap into a small fabric packet.
+    pub fn packet(self, src: NodeAddr, dst: NodeAddr, now: Time, seq: u64) -> Packet {
+        Packet::notification(src, dst, self.encode(), now, seq)
+    }
+}
+
+/// Fragment a logical write of `bytes` at `nla` into RMA PUT packets that
+/// respect the Extoll payload limit. Only the **last** fragment carries the
+/// notification flag, so the receiver raises one notification per logical
+/// write — exactly the behaviour the ring-buffer protocol relies on.
+pub fn fragment_put(
+    src: NodeAddr,
+    dst: NodeAddr,
+    nla: u64,
+    bytes: u64,
+    notify: bool,
+    now: Time,
+    seq_base: u64,
+) -> Vec<Packet> {
+    assert!(bytes > 0, "empty RMA PUT");
+    let mut out = Vec::new();
+    let mut offset = 0u64;
+    while offset < bytes {
+        let chunk = (bytes - offset).min(MAX_PAYLOAD_BYTES as u64) as u32;
+        let last = offset + chunk as u64 >= bytes;
+        out.push(Packet::rma_put(
+            src,
+            dst,
+            nla + offset,
+            chunk,
+            notify && last,
+            now,
+            seq_base + out.len() as u64,
+        ));
+        offset += chunk as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::packet::PacketKind;
+
+    #[test]
+    fn notification_roundtrip() {
+        for n in [
+            Notification::DataWritten {
+                channel: 5,
+                bytes: 4096,
+            },
+            Notification::SpaceFreed {
+                channel: 4095,
+                bytes: (1 << 48) - 1,
+            },
+            Notification::Completion {
+                channel: 0,
+                value: 42,
+            },
+        ] {
+            assert_eq!(Notification::decode(n.encode()), Some(n));
+        }
+    }
+
+    #[test]
+    fn unknown_kind_decodes_none() {
+        assert_eq!(Notification::decode(0), None);
+        assert_eq!(Notification::decode(0xF << 60), None);
+    }
+
+    #[test]
+    fn fragmentation_respects_payload_limit() {
+        let ps = fragment_put(NodeAddr(0), NodeAddr(1), 0x1000, 1500, true, Time::ZERO, 0);
+        assert_eq!(ps.len(), 4); // 496+496+496+12
+        let mut total = 0u64;
+        let mut notis = 0;
+        let mut expect_nla = 0x1000u64;
+        for p in &ps {
+            match p.kind {
+                PacketKind::RmaPut { nla, notify, bytes } => {
+                    assert!(bytes <= MAX_PAYLOAD_BYTES);
+                    assert_eq!(nla, expect_nla);
+                    expect_nla += bytes as u64;
+                    total += bytes as u64;
+                    if notify {
+                        notis += 1;
+                    }
+                }
+                _ => panic!("not a put"),
+            }
+        }
+        assert_eq!(total, 1500);
+        assert_eq!(notis, 1);
+        // only the last one notifies
+        assert!(matches!(
+            ps.last().unwrap().kind,
+            PacketKind::RmaPut { notify: true, .. }
+        ));
+    }
+
+    #[test]
+    fn small_put_single_fragment() {
+        let ps = fragment_put(NodeAddr(0), NodeAddr(1), 0, 64, false, Time::ZERO, 10);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].seq, 10);
+        assert!(matches!(
+            ps[0].kind,
+            PacketKind::RmaPut { notify: false, .. }
+        ));
+    }
+
+    #[test]
+    fn exact_multiple_of_payload() {
+        let ps = fragment_put(NodeAddr(0), NodeAddr(1), 0, 992, true, Time::ZERO, 0);
+        assert_eq!(ps.len(), 2);
+        assert!(matches!(ps[1].kind, PacketKind::RmaPut { notify: true, .. }));
+        assert!(matches!(ps[0].kind, PacketKind::RmaPut { notify: false, .. }));
+    }
+}

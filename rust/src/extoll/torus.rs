@@ -1,0 +1,287 @@
+//! 3D-torus topology (paper §1).
+//!
+//! Extoll networks connect Tourmalet nodes in a 3D torus; message routing
+//! uses a **16-bit destination address** in the packet header. This module
+//! maps node addresses ⇄ (x, y, z) coordinates, enumerates the six torus
+//! ports of each node, and answers neighbor queries with wrap-around.
+
+use std::fmt;
+
+/// A 16-bit Extoll node address (paper §1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeAddr(pub u16);
+
+impl fmt::Display for NodeAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// One of the six torus directions; also the port index on a Tourmalet.
+///
+/// Tourmalet exposes 7 links: six form the torus, the seventh attaches the
+/// local unit (here: the wafer's concentrator, see [`crate::wafer`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dir {
+    XPlus = 0,
+    XMinus = 1,
+    YPlus = 2,
+    YMinus = 3,
+    ZPlus = 4,
+    ZMinus = 5,
+}
+
+/// All six torus directions.
+pub const DIRS: [Dir; 6] = [
+    Dir::XPlus,
+    Dir::XMinus,
+    Dir::YPlus,
+    Dir::YMinus,
+    Dir::ZPlus,
+    Dir::ZMinus,
+];
+
+/// Port index of the local (non-torus) link on a Tourmalet (the 7th link).
+pub const LOCAL_PORT: u8 = 6;
+
+/// Number of links on a Tourmalet NIC (paper §1: "offers 7 links").
+pub const TOURMALET_LINKS: usize = 7;
+
+impl Dir {
+    pub fn port(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_port(p: u8) -> Dir {
+        DIRS[p as usize]
+    }
+
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::XPlus => Dir::XMinus,
+            Dir::XMinus => Dir::XPlus,
+            Dir::YPlus => Dir::YMinus,
+            Dir::YMinus => Dir::YPlus,
+            Dir::ZPlus => Dir::ZMinus,
+            Dir::ZMinus => Dir::ZPlus,
+        }
+    }
+
+    /// Dimension index (0=x, 1=y, 2=z).
+    pub fn axis(self) -> usize {
+        (self as usize) / 2
+    }
+
+    /// +1 or -1 along the axis.
+    pub fn sign(self) -> i64 {
+        if (self as usize) % 2 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Torus dimensions. A `1×1×1` torus is a single node; a dimension of size
+/// 1 or 2 has degenerate wrap-around (handled explicitly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TorusSpec {
+    pub nx: u16,
+    pub ny: u16,
+    pub nz: u16,
+}
+
+impl TorusSpec {
+    pub fn new(nx: u16, ny: u16, nz: u16) -> Self {
+        assert!(nx >= 1 && ny >= 1 && nz >= 1, "degenerate torus");
+        let n = nx as u32 * ny as u32 * nz as u32;
+        assert!(n <= 1 << 16, "torus exceeds 16-bit address space");
+        TorusSpec { nx, ny, nz }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nx as usize * self.ny as usize * self.nz as usize
+    }
+
+    pub fn dims(&self, axis: usize) -> u16 {
+        match axis {
+            0 => self.nx,
+            1 => self.ny,
+            2 => self.nz,
+            _ => panic!("axis {axis}"),
+        }
+    }
+
+    /// Address of coordinates (row-major: x fastest).
+    pub fn addr_of(&self, x: u16, y: u16, z: u16) -> NodeAddr {
+        debug_assert!(x < self.nx && y < self.ny && z < self.nz);
+        NodeAddr(x + self.nx * (y + self.ny * z))
+    }
+
+    /// Coordinates of an address.
+    pub fn coords_of(&self, a: NodeAddr) -> (u16, u16, u16) {
+        let v = a.0;
+        let x = v % self.nx;
+        let y = (v / self.nx) % self.ny;
+        let z = v / (self.nx * self.ny);
+        debug_assert!(z < self.nz, "address {v} outside torus");
+        (x, y, z)
+    }
+
+    /// Neighbor of `a` in direction `d`, with wrap-around.
+    pub fn neighbor(&self, a: NodeAddr, d: Dir) -> NodeAddr {
+        let (mut x, mut y, mut z) = self.coords_of(a);
+        let step = |v: u16, n: u16, sign: i64| -> u16 {
+            if sign > 0 {
+                if v + 1 == n {
+                    0
+                } else {
+                    v + 1
+                }
+            } else if v == 0 {
+                n - 1
+            } else {
+                v - 1
+            }
+        };
+        match d.axis() {
+            0 => x = step(x, self.nx, d.sign()),
+            1 => y = step(y, self.ny, d.sign()),
+            2 => z = step(z, self.nz, d.sign()),
+            _ => unreachable!(),
+        }
+        self.addr_of(x, y, z)
+    }
+
+    /// Signed shortest displacement from `from` to `to` along `axis`
+    /// (torus wrap-aware). Positive means travel in the + direction.
+    pub fn shortest_delta(&self, from: u16, to: u16, axis: usize) -> i64 {
+        let n = self.dims(axis) as i64;
+        let mut d = to as i64 - from as i64;
+        if d > n / 2 {
+            d -= n;
+        } else if d < -(n - 1) / 2 - ((n + 1) % 2) {
+            // symmetric wrap for even sizes: prefer + direction on ties
+            d += n;
+        }
+        // normalize ties (|d| == n/2 for even n): prefer positive
+        if n % 2 == 0 && d == -(n / 2) {
+            d = n / 2;
+        }
+        d
+    }
+
+    /// Minimal hop count between two nodes (sum of per-axis distances).
+    pub fn hop_distance(&self, a: NodeAddr, b: NodeAddr) -> u32 {
+        let ca = self.coords_of(a);
+        let cb = self.coords_of(b);
+        let pairs = [(ca.0, cb.0, 0usize), (ca.1, cb.1, 1), (ca.2, cb.2, 2)];
+        pairs
+            .iter()
+            .map(|&(f, t, ax)| self.shortest_delta(f, t, ax).unsigned_abs() as u32)
+            .sum()
+    }
+
+    /// Iterate all node addresses.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeAddr> {
+        (0..self.n_nodes() as u16).map(NodeAddr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_coord_roundtrip() {
+        let t = TorusSpec::new(4, 3, 2);
+        for z in 0..2 {
+            for y in 0..3 {
+                for x in 0..4 {
+                    let a = t.addr_of(x, y, z);
+                    assert_eq!(t.coords_of(a), (x, y, z));
+                }
+            }
+        }
+        assert_eq!(t.n_nodes(), 24);
+    }
+
+    #[test]
+    fn neighbors_wrap() {
+        let t = TorusSpec::new(4, 4, 4);
+        let a = t.addr_of(3, 0, 2);
+        assert_eq!(t.coords_of(t.neighbor(a, Dir::XPlus)), (0, 0, 2));
+        assert_eq!(t.coords_of(t.neighbor(a, Dir::XMinus)), (2, 0, 2));
+        assert_eq!(t.coords_of(t.neighbor(a, Dir::YMinus)), (3, 3, 2));
+        assert_eq!(t.coords_of(t.neighbor(a, Dir::ZPlus)), (3, 0, 3));
+    }
+
+    #[test]
+    fn neighbor_opposite_is_inverse() {
+        let t = TorusSpec::new(3, 5, 2);
+        for a in t.nodes() {
+            for d in DIRS {
+                assert_eq!(t.neighbor(t.neighbor(a, d), d.opposite()), a);
+            }
+        }
+    }
+
+    #[test]
+    fn shortest_delta_wraps() {
+        let t = TorusSpec::new(8, 8, 8);
+        assert_eq!(t.shortest_delta(0, 3, 0), 3);
+        assert_eq!(t.shortest_delta(0, 7, 0), -1);
+        assert_eq!(t.shortest_delta(6, 1, 0), 3);
+        // even size tie: |d|=4 both ways; convention: positive
+        assert_eq!(t.shortest_delta(0, 4, 0), 4);
+        assert_eq!(t.shortest_delta(4, 0, 0), 4);
+    }
+
+    #[test]
+    fn hop_distance_symmetric_and_triangle_sane() {
+        let t = TorusSpec::new(4, 4, 2);
+        for a in t.nodes() {
+            for b in t.nodes() {
+                assert_eq!(t.hop_distance(a, b), t.hop_distance(b, a));
+                if a == b {
+                    assert_eq!(t.hop_distance(a, b), 0);
+                } else {
+                    assert!(t.hop_distance(a, b) >= 1);
+                }
+            }
+        }
+        // max distance in 4x4x2: 2+2+1 = 5
+        let m = t
+            .nodes()
+            .map(|b| t.hop_distance(NodeAddr(0), b))
+            .max()
+            .unwrap();
+        assert_eq!(m, 5);
+    }
+
+    #[test]
+    fn size_one_dims() {
+        let t = TorusSpec::new(1, 1, 1);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.neighbor(NodeAddr(0), Dir::XPlus), NodeAddr(0));
+        assert_eq!(t.hop_distance(NodeAddr(0), NodeAddr(0)), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "16-bit")]
+    fn too_big_rejected() {
+        let _ = TorusSpec::new(256, 256, 2);
+    }
+
+    #[test]
+    fn dir_axis_sign_port() {
+        assert_eq!(Dir::XPlus.axis(), 0);
+        assert_eq!(Dir::ZMinus.axis(), 2);
+        assert_eq!(Dir::YPlus.sign(), 1);
+        assert_eq!(Dir::YMinus.sign(), -1);
+        for (i, d) in DIRS.iter().enumerate() {
+            assert_eq!(d.port() as usize, i);
+            assert_eq!(Dir::from_port(d.port()), *d);
+        }
+    }
+}

@@ -1,0 +1,410 @@
+//! The event-accumulation buffer — "bucket" (paper §3.1, Fig. 2b).
+//!
+//! A bucket aggregates events heading to the same network destination until
+//! a flushing condition is met:
+//!
+//! 1. the most urgent timestamp deadline is about to be exceeded,
+//! 2. the buffer is full (124 events — one max-size Extoll packet), or
+//! 3. external logic (the bucket manager / arbiter) triggers a flush.
+//!
+//! "To avoid large latencies, concurrent flushing and aggregation is
+//! implemented. Two counters track the filling level of a bucket. One
+//! increments for incoming events while the other one decrements for
+//! flushed events. The counters are swapped when a flush is triggered."
+//!
+//! The model mirrors that structure: an *accumulation side* (fill counter)
+//! and a *drain side* (flush counter). Triggering a flush swaps the sides —
+//! the accumulated events become the drain set (handed to the egress
+//! serializer) while new events keep accumulating into the (now empty)
+//! fill side. A second flush cannot be triggered while the drain side is
+//! still being shifted out; callers model the egress time and call
+//! [`Bucket::drain_complete`].
+
+use crate::sim::Time;
+
+use super::event::{ts_before_eq, ts_delta, RoutedEvent, TS_MASK};
+use super::lookup::EndpointAddr;
+
+/// Why a flush fired (the three conditions of §3.1 + eviction renaming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FlushReason {
+    /// The most urgent deadline in the bucket was about to expire.
+    Deadline,
+    /// The bucket reached capacity (a full Extoll packet).
+    Full,
+    /// External logic requested the flush (end of experiment, barrier).
+    External,
+    /// The bucket was reclaimed for a new destination (no free bucket).
+    Eviction,
+}
+
+/// A batch of events handed to the egress path when a flush triggers.
+#[derive(Clone, Debug)]
+pub struct FlushBatch {
+    pub dest: EndpointAddr,
+    pub events: Vec<RoutedEvent>,
+    pub reason: FlushReason,
+    /// When the oldest event in the batch entered the bucket.
+    pub oldest_ingress: Time,
+    /// Physical bucket index (filled in by the manager; callers hand it
+    /// back via [`super::manager::BucketManager::drain_complete`]).
+    pub bucket_idx: usize,
+}
+
+/// Configuration of a single bucket.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketConfig {
+    /// Maximum events accumulated before a Full flush (≤ 124).
+    pub capacity: usize,
+    /// Deadline safety margin in systime units: flush when
+    /// `deadline - now ≤ margin` for the most urgent event. This is the
+    /// time budget left for egress serialization + network transit.
+    pub deadline_margin: u16,
+    /// Concurrent flushing & aggregation (the paper's dual-counter scheme).
+    /// `false` is the ablation: the bucket cannot accept events while its
+    /// drain side is busy.
+    pub concurrent: bool,
+}
+
+impl Default for BucketConfig {
+    fn default() -> Self {
+        BucketConfig {
+            capacity: crate::extoll::packet::MAX_EVENTS_PER_PACKET,
+            // ~2 µs of 210 MHz cycles: enough for egress + a few torus hops
+            deadline_margin: 420,
+            concurrent: true,
+        }
+    }
+}
+
+/// One event-accumulation bucket (Fig. 2b).
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    cfg: BucketConfig,
+    /// Destination currently bound to this bucket (None = on the free list).
+    dest: Option<EndpointAddr>,
+    /// Accumulation side ("fill counter" side of the paper's dual-counter
+    /// scheme): events gathered since the last flush trigger.
+    accum: Vec<RoutedEvent>,
+    /// Drain side ("flush counter" side): events currently being shifted
+    /// out by the egress serializer; None when idle.
+    draining: bool,
+    /// Most urgent (earliest) deadline among accumulated events.
+    min_deadline: u16,
+    /// Simulation time the oldest accumulated event entered the bucket.
+    oldest_ingress: Time,
+    // -- statistics ------------------------------------------------------
+    pub total_events: u64,
+    pub total_flushes: u64,
+}
+
+/// Outcome of inserting an event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InsertOutcome {
+    /// Event stored; no flush necessary.
+    Stored,
+    /// Event stored and the bucket hit capacity → caller must flush now.
+    NowFull,
+}
+
+impl Bucket {
+    pub fn new(cfg: BucketConfig) -> Self {
+        assert!(cfg.capacity >= 1 && cfg.capacity <= crate::extoll::packet::MAX_EVENTS_PER_PACKET);
+        Bucket {
+            cfg,
+            dest: None,
+            accum: Vec::with_capacity(cfg.capacity),
+            draining: false,
+            min_deadline: 0,
+            oldest_ingress: Time::ZERO,
+            total_events: 0,
+            total_flushes: 0,
+        }
+    }
+
+    /// The destination this bucket is renamed to (None = free).
+    pub fn dest(&self) -> Option<EndpointAddr> {
+        self.dest
+    }
+
+    /// Bind a free bucket to a destination (bucket renaming, Fig. 2c).
+    pub fn bind(&mut self, dest: EndpointAddr) {
+        debug_assert!(self.dest.is_none(), "binding a bound bucket");
+        debug_assert!(self.accum.is_empty());
+        self.dest = Some(dest);
+    }
+
+    /// Release the destination binding (after final drain).
+    pub fn unbind(&mut self) {
+        debug_assert!(self.accum.is_empty(), "unbinding a non-empty bucket");
+        self.dest = None;
+    }
+
+    /// Events on the accumulation side.
+    pub fn fill_level(&self) -> usize {
+        self.accum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accum.is_empty()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Most urgent deadline (only meaningful when non-empty).
+    pub fn min_deadline(&self) -> u16 {
+        self.min_deadline
+    }
+
+    /// When the oldest accumulated event arrived (latency accounting).
+    pub fn oldest_ingress(&self) -> Time {
+        self.oldest_ingress
+    }
+
+    /// Insert an event (≤ one per FPGA clock in the hardware; rate is
+    /// enforced by the caller's timing model, not here).
+    pub fn insert(&mut self, ev: RoutedEvent) -> InsertOutcome {
+        debug_assert!(self.dest.is_some(), "insert into unbound bucket");
+        debug_assert!(
+            self.accum.len() < self.cfg.capacity,
+            "insert into full bucket — caller must flush first"
+        );
+        if self.accum.is_empty() {
+            self.min_deadline = ev.timestamp;
+            self.oldest_ingress = ev.ingress;
+        } else if ts_before_eq(ev.timestamp, self.min_deadline) {
+            self.min_deadline = ev.timestamp;
+        }
+        self.accum.push(ev);
+        self.total_events += 1;
+        if self.accum.len() >= self.cfg.capacity {
+            InsertOutcome::NowFull
+        } else {
+            InsertOutcome::Stored
+        }
+    }
+
+    /// Would the deadline condition fire at systime `now`?
+    ///
+    /// True when the remaining slack of the most urgent event is within the
+    /// configured margin (or already past — the wrapped comparison treats
+    /// "past" as slack 0 within half the 15-bit window).
+    pub fn deadline_due(&self, now_systime: u16) -> bool {
+        if self.accum.is_empty() {
+            return false;
+        }
+        let slack = ts_delta(now_systime, self.min_deadline);
+        // slack is in [0, 2^15); values in the upper half mean the deadline
+        // already passed (now is ahead of the deadline) → definitely due.
+        slack <= self.cfg.deadline_margin as u16 || slack > TS_MASK / 2
+    }
+
+    /// Absolute systime at which the deadline condition will fire, given
+    /// the current contents (for event-driven scan scheduling).
+    pub fn deadline_fire_at(&self) -> Option<u16> {
+        if self.accum.is_empty() {
+            None
+        } else {
+            Some(
+                self.min_deadline
+                    .wrapping_sub(self.cfg.deadline_margin)
+                    & TS_MASK,
+            )
+        }
+    }
+
+    /// Trigger a flush: swap the dual counters — the accumulation side
+    /// becomes the drain set, accumulation restarts empty. Returns `None`
+    /// if there is nothing to flush or a drain is still in progress
+    /// (concurrent flush covers exactly one outstanding drain, as in the
+    /// two-counter hardware scheme).
+    pub fn trigger_flush(&mut self, reason: FlushReason) -> Option<FlushBatch> {
+        if self.accum.is_empty() || self.draining {
+            return None;
+        }
+        let dest = self.dest.expect("flush of unbound bucket");
+        let events = std::mem::take(&mut self.accum);
+        let oldest = self.oldest_ingress;
+        self.draining = true;
+        self.total_flushes += 1;
+        self.min_deadline = 0;
+        self.oldest_ingress = Time::ZERO;
+        Some(FlushBatch {
+            dest,
+            events,
+            reason,
+            oldest_ingress: oldest,
+            bucket_idx: usize::MAX,
+        })
+    }
+
+    /// The egress serializer finished shifting out the drain set.
+    pub fn drain_complete(&mut self) {
+        debug_assert!(self.draining, "drain_complete without drain");
+        self.draining = false;
+    }
+
+    /// Mean events per flush so far (aggregation efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.total_flushes == 0 {
+            f64::NAN
+        } else {
+            // events still accumulating are not yet flushed
+            (self.total_events - self.accum.len() as u64) as f64 / self.total_flushes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::NodeAddr;
+
+    fn dest() -> EndpointAddr {
+        EndpointAddr::new(NodeAddr(3), 1)
+    }
+
+    fn bucket(capacity: usize, margin: u16) -> Bucket {
+        let mut b = Bucket::new(BucketConfig {
+            capacity,
+            deadline_margin: margin,
+            concurrent: true,
+        });
+        b.bind(dest());
+        b
+    }
+
+    fn ev(ts: u16) -> RoutedEvent {
+        RoutedEvent::new(1, ts, Time::from_ns(10))
+    }
+
+    #[test]
+    fn fills_to_capacity_then_reports_full() {
+        let mut b = bucket(4, 100);
+        assert_eq!(b.insert(ev(50)), InsertOutcome::Stored);
+        assert_eq!(b.insert(ev(60)), InsertOutcome::Stored);
+        assert_eq!(b.insert(ev(40)), InsertOutcome::Stored);
+        assert_eq!(b.insert(ev(70)), InsertOutcome::NowFull);
+        assert_eq!(b.fill_level(), 4);
+        assert_eq!(b.min_deadline(), 40);
+    }
+
+    #[test]
+    fn flush_swaps_sides_and_allows_concurrent_accumulation() {
+        let mut b = bucket(124, 100);
+        b.insert(ev(10));
+        b.insert(ev(20));
+        let batch = b.trigger_flush(FlushReason::Full).unwrap();
+        assert_eq!(batch.events.len(), 2);
+        assert_eq!(batch.dest, dest());
+        // drain in progress, accumulation continues
+        assert!(b.is_draining());
+        assert!(b.is_empty());
+        b.insert(ev(30));
+        assert_eq!(b.fill_level(), 1);
+        // cannot trigger a second flush while draining
+        assert!(b.trigger_flush(FlushReason::External).is_none());
+        b.drain_complete();
+        let batch2 = b.trigger_flush(FlushReason::External).unwrap();
+        assert_eq!(batch2.events.len(), 1);
+        assert_eq!(batch2.events[0].timestamp, 30);
+    }
+
+    #[test]
+    fn empty_flush_is_none() {
+        let mut b = bucket(8, 100);
+        assert!(b.trigger_flush(FlushReason::External).is_none());
+    }
+
+    #[test]
+    fn deadline_due_within_margin() {
+        let mut b = bucket(124, 100);
+        b.insert(ev(1000));
+        assert!(!b.deadline_due(500)); // slack 500 > 100
+        assert!(b.deadline_due(900)); // slack 100 <= 100
+        assert!(b.deadline_due(950)); // slack 50
+        assert!(b.deadline_due(1001)); // already past (wrapped slack huge)
+    }
+
+    #[test]
+    fn deadline_due_wraps() {
+        let mut b = bucket(124, 100);
+        // deadline just past the wrap point
+        b.insert(ev(5));
+        // now near the top of the window: slack = 5 - 0x7FF0 wrapped = 21
+        assert!(b.deadline_due(0x7FF0));
+        // a deadline that already passed is immediately due
+        assert!(b.deadline_due(1000));
+        // plenty of slack: not due
+        let mut b = bucket(124, 100);
+        b.insert(ev(5000));
+        assert!(!b.deadline_due(1000));
+    }
+
+    #[test]
+    fn min_deadline_tracks_most_urgent_with_wrap() {
+        let mut b = bucket(124, 100);
+        b.insert(ev(0x7FFa));
+        b.insert(ev(3)); // later than 0x7FFa in wrapped order
+        assert_eq!(b.min_deadline(), 0x7FFa);
+        let mut b = bucket(124, 100);
+        b.insert(ev(3));
+        b.insert(ev(0x7FFa)); // earlier in wrapped order
+        assert_eq!(b.min_deadline(), 0x7FFa);
+    }
+
+    #[test]
+    fn deadline_fire_at_is_margin_before() {
+        let mut b = bucket(124, 100);
+        b.insert(ev(500));
+        assert_eq!(b.deadline_fire_at(), Some(400));
+        let mut b = bucket(124, 50);
+        b.insert(ev(10));
+        assert_eq!(b.deadline_fire_at(), Some((10u16.wrapping_sub(50)) & TS_MASK));
+    }
+
+    #[test]
+    fn stats_track_batches() {
+        let mut b = bucket(124, 100);
+        for i in 0..10 {
+            b.insert(ev(i));
+        }
+        b.trigger_flush(FlushReason::Deadline).unwrap();
+        b.drain_complete();
+        for i in 0..20 {
+            b.insert(ev(i));
+        }
+        b.trigger_flush(FlushReason::Full).unwrap();
+        assert_eq!(b.total_flushes, 2);
+        assert!((b.mean_batch_size() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebinding_after_unbind() {
+        let mut b = bucket(8, 100);
+        b.insert(ev(5));
+        b.trigger_flush(FlushReason::Eviction).unwrap();
+        b.drain_complete();
+        b.unbind();
+        assert_eq!(b.dest(), None);
+        b.bind(EndpointAddr::new(NodeAddr(9), 2));
+        b.insert(ev(7));
+        assert_eq!(b.dest(), Some(EndpointAddr::new(NodeAddr(9), 2)));
+        assert_eq!(b.fill_level(), 1);
+    }
+
+    #[test]
+    fn oldest_ingress_resets_per_epoch() {
+        let mut b = bucket(124, 100);
+        b.insert(RoutedEvent::new(1, 10, Time::from_ns(100)));
+        b.insert(RoutedEvent::new(1, 11, Time::from_ns(200)));
+        let batch = b.trigger_flush(FlushReason::External).unwrap();
+        assert_eq!(batch.oldest_ingress, Time::from_ns(100));
+        b.drain_complete();
+        b.insert(RoutedEvent::new(1, 12, Time::from_ns(300)));
+        let batch = b.trigger_flush(FlushReason::External).unwrap();
+        assert_eq!(batch.oldest_ingress, Time::from_ns(300));
+    }
+}

@@ -1,0 +1,188 @@
+//! Spike event representation (paper §3, Fig. 2b).
+//!
+//! Events arriving from HICANN chips carry a **12-bit source neuron pulse
+//! address** and a **15-bit timestamp** stating an *arrival deadline* in
+//! systemtime units. On the Extoll wire the FPGA transmits 30-bit events —
+//! here modeled as a 15-bit GUID (the network-global source identifier
+//! produced by the TX lookup table) plus the 15-bit deadline — packed in
+//! groups of four into 16-byte network cells, so a maximum-size 496-byte
+//! packet carries 124 events, exactly as in the paper.
+
+use crate::sim::Time;
+
+/// Bits of a raw HICANN pulse address.
+pub const PULSE_ADDR_BITS: u32 = 12;
+/// Bits of the arrival-deadline timestamp.
+pub const TIMESTAMP_BITS: u32 = 15;
+/// Mask for 15-bit timestamp arithmetic.
+pub const TS_MASK: u16 = (1 << TIMESTAMP_BITS) - 1;
+/// Half of the timestamp window, for wrap-around comparisons.
+pub const TS_HALF: u16 = 1 << (TIMESTAMP_BITS - 1);
+/// Bits of one event on the Extoll wire (paper: "30 bit events").
+pub const WIRE_EVENT_BITS: u32 = 30;
+/// Events per 16-byte network cell ("deserialised to groups of four").
+pub const EVENTS_PER_CELL: usize = 4;
+/// Bytes of one network cell (4 × 30 bit events + 8 pad bits).
+pub const CELL_BYTES: u32 = 16;
+
+/// One systemtime unit, chosen as one 210 MHz FPGA clock cycle.
+///
+/// The HICANN system time and the FPGA communication clock are mesochronous
+/// in the real system; the paper states deadlines in "systemtime units"
+/// without fixing the unit, so we take the FPGA clock as the reference —
+/// the 15-bit window then spans ≈156 µs, comfortably above realistic
+/// inter-wafer transit times.
+pub fn systime_unit() -> Time {
+    Time::from_fpga_cycles(1)
+}
+
+/// Convert an absolute simulation time to a (wrapping) 15-bit systime stamp.
+/// Rounds to the nearest cycle so `from_fpga_cycles` round-trips exactly.
+pub fn systime_of(t: Time) -> u16 {
+    let cycles = ((t.ps() as u128 * 21 + 50_000) / 100_000) as u64;
+    (cycles & TS_MASK as u64) as u16
+}
+
+/// `true` if deadline `a` is earlier than or equal to `b` in the wrapped
+/// 15-bit systime window (sequence-number comparison).
+#[inline]
+pub fn ts_before_eq(a: u16, b: u16) -> bool {
+    ((b.wrapping_sub(a)) & TS_MASK) < TS_HALF
+}
+
+/// Wrapped distance from `a` to `b` (how far b lies ahead of a).
+#[inline]
+pub fn ts_delta(a: u16, b: u16) -> u16 {
+    b.wrapping_sub(a) & TS_MASK
+}
+
+/// A spike event as emitted by a HICANN chip towards the FPGA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpikeEvent {
+    /// 12-bit source neuron pulse address (HICANN-local).
+    pub pulse_addr: u16,
+    /// 15-bit arrival deadline, systemtime units, wraps.
+    pub timestamp: u16,
+    /// Which of the 8 HICANN links the event arrived on (0..8).
+    pub hicann: u8,
+}
+
+impl SpikeEvent {
+    pub fn new(hicann: u8, pulse_addr: u16, timestamp: u16) -> Self {
+        debug_assert!(hicann < 8);
+        debug_assert!(pulse_addr < (1 << PULSE_ADDR_BITS));
+        debug_assert!(timestamp <= TS_MASK);
+        SpikeEvent {
+            pulse_addr: pulse_addr & 0x0FFF,
+            timestamp: timestamp & TS_MASK,
+            hicann,
+        }
+    }
+
+    /// Pack into the 27 meaningful bits (for codec tests / wire modeling).
+    pub fn pack(&self) -> u32 {
+        ((self.pulse_addr as u32) << TIMESTAMP_BITS) | self.timestamp as u32
+    }
+
+    pub fn unpack(hicann: u8, bits: u32) -> Self {
+        SpikeEvent {
+            pulse_addr: ((bits >> TIMESTAMP_BITS) & 0x0FFF) as u16,
+            timestamp: (bits & TS_MASK as u32) as u16,
+            hicann,
+        }
+    }
+}
+
+/// A routed event as carried on the Extoll wire: the TX lookup table has
+/// replaced the HICANN-local context by a network-global GUID.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RoutedEvent {
+    /// 15-bit Global Unique Identifier of the source context; the RX
+    /// lookup table maps it to a multicast mask + local pulse address.
+    pub guid: u16,
+    /// 15-bit arrival deadline (propagated unchanged).
+    pub timestamp: u16,
+    /// Simulation time at which the event entered the source FPGA
+    /// (metadata for latency accounting, not on the wire).
+    pub ingress: Time,
+}
+
+impl RoutedEvent {
+    pub fn new(guid: u16, timestamp: u16, ingress: Time) -> Self {
+        debug_assert!(guid < (1 << 15));
+        RoutedEvent {
+            guid: guid & 0x7FFF,
+            timestamp: timestamp & TS_MASK,
+            ingress,
+        }
+    }
+
+    /// 30-bit wire image (15-bit GUID + 15-bit deadline).
+    pub fn wire_bits(&self) -> u32 {
+        ((self.guid as u32) << 15) | self.timestamp as u32
+    }
+}
+
+/// Payload bytes consumed by `n` events, in whole 16-byte cells.
+pub fn payload_bytes_for_events(n: usize) -> u32 {
+    (n.div_ceil(EVENTS_PER_CELL) as u32) * CELL_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (h, a, t) in [(0u8, 0u16, 0u16), (3, 0xFFF, 0x7FFF), (7, 0x123, 0x4567 & TS_MASK)] {
+            let e = SpikeEvent::new(h, a, t);
+            let e2 = SpikeEvent::unpack(h, e.pack());
+            assert_eq!(e, e2);
+        }
+    }
+
+    #[test]
+    fn wire_bits_fit_30() {
+        let r = RoutedEvent::new(0x7FFF, 0x7FFF, Time::ZERO);
+        assert!(r.wire_bits() < (1 << WIRE_EVENT_BITS));
+    }
+
+    #[test]
+    fn ts_wraparound_compare() {
+        assert!(ts_before_eq(5, 10));
+        assert!(!ts_before_eq(10, 5));
+        assert!(ts_before_eq(7, 7));
+        // wrap: 0x7FF0 is before 0x0010
+        assert!(ts_before_eq(0x7FF0, 0x0010));
+        assert!(!ts_before_eq(0x0010, 0x7FF0));
+    }
+
+    #[test]
+    fn ts_delta_wraps() {
+        assert_eq!(ts_delta(0x7FFE, 0x0002), 4);
+        assert_eq!(ts_delta(10, 15), 5);
+        assert_eq!(ts_delta(15, 15), 0);
+    }
+
+    #[test]
+    fn cell_math_matches_paper() {
+        // 124 events -> 31 cells -> 496 bytes: the paper's maximum.
+        assert_eq!(payload_bytes_for_events(124), 496);
+        assert_eq!(payload_bytes_for_events(1), 16);
+        assert_eq!(payload_bytes_for_events(4), 16);
+        assert_eq!(payload_bytes_for_events(5), 32);
+        assert_eq!(payload_bytes_for_events(0), 0);
+    }
+
+    #[test]
+    fn systime_of_wraps() {
+        let t = Time::from_fpga_cycles(0x8000 + 5); // one full window + 5
+        assert_eq!(systime_of(t), 5);
+    }
+
+    #[test]
+    fn systime_window_exceeds_100us() {
+        let window = systime_unit() * (1 << TIMESTAMP_BITS);
+        assert!(window > Time::from_us(100), "window = {window}");
+    }
+}

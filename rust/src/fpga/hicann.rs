@@ -1,0 +1,120 @@
+//! HICANN link model (paper §1, §3.1).
+//!
+//! Each BrainScaleS reticle carries 8 HICANN chips connected to the
+//! communication FPGA through 8 serial links of 1 Gbit/s. Events arrive at
+//! the FPGA "with rates of up to approximately one event per 210 MHz FPGA
+//! clock" in aggregate. This module models the per-link pacing (framing
+//! bits per event at the line rate) and the playback direction (FPGA →
+//! HICANN after the RX multicast lookup).
+
+use crate::sim::{ps_for_bits, Time};
+use crate::util::stats::Histogram;
+
+/// Number of HICANN chips per communication FPGA (one reticle).
+pub const HICANNS_PER_FPGA: usize = 8;
+
+/// Physical parameters of one HICANN↔FPGA serial link.
+#[derive(Clone, Copy, Debug)]
+pub struct HicannLinkConfig {
+    /// Line rate in Gbit/s (paper: "8 1 Gbit/s serial links").
+    pub gbps: f64,
+    /// Bits per event frame on the serial link (event + framing). 38 bits
+    /// makes 8 links sum to ≈210 Mevent/s — the paper's "approximately one
+    /// event per 210 MHz FPGA clock".
+    pub bits_per_event: u32,
+}
+
+impl Default for HicannLinkConfig {
+    fn default() -> Self {
+        HicannLinkConfig {
+            gbps: 1.0,
+            bits_per_event: 38,
+        }
+    }
+}
+
+impl HicannLinkConfig {
+    /// Minimum spacing between two events on one link.
+    pub fn event_spacing(&self) -> Time {
+        ps_for_bits(self.bits_per_event as u64, self.gbps)
+    }
+
+    /// Maximum event rate of one link (events/s).
+    pub fn max_rate(&self) -> f64 {
+        self.gbps * 1e9 / self.bits_per_event as f64
+    }
+
+    /// Aggregate maximum rate over the 8 links of an FPGA (events/s).
+    pub fn max_aggregate_rate(&self) -> f64 {
+        self.max_rate() * HICANNS_PER_FPGA as f64
+    }
+}
+
+/// Playback sink: statistics of events delivered from the FPGA back to its
+/// HICANN chips (the end of the RX multicast path).
+#[derive(Clone, Debug, Default)]
+pub struct PlaybackStats {
+    /// Events delivered per HICANN chip.
+    pub per_hicann: [u64; HICANNS_PER_FPGA],
+    /// End-to-end event latency: source-FPGA ingress → HICANN delivery (ps).
+    pub latency_ps: Histogram,
+    /// Events that arrived after their deadline.
+    pub deadline_misses: u64,
+    /// Events whose GUID missed in the RX lookup table.
+    pub unrouted: u64,
+}
+
+impl PlaybackStats {
+    pub fn total_delivered(&self) -> u64 {
+        self.per_hicann.iter().sum()
+    }
+
+    /// Deadline miss rate over delivered events.
+    pub fn miss_rate(&self) -> f64 {
+        let n = self.latency_ps.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_rates_match_paper() {
+        let cfg = HicannLinkConfig::default();
+        // one event per 38 ns per link
+        assert_eq!(cfg.event_spacing(), Time::from_ps(38_000));
+        // 8 links ≈ 210.5 Mevent/s — the paper's "one event per 210 MHz clock"
+        let agg = cfg.max_aggregate_rate();
+        assert!(
+            (agg - 210.5e6).abs() < 1e6,
+            "aggregate rate {agg} not ≈ 210 Mev/s"
+        );
+    }
+
+    #[test]
+    fn spacing_scales_with_rate() {
+        let cfg = HicannLinkConfig {
+            gbps: 2.0,
+            bits_per_event: 38,
+        };
+        assert_eq!(cfg.event_spacing(), Time::from_ps(19_000));
+    }
+
+    #[test]
+    fn playback_stats_accounting() {
+        let mut s = PlaybackStats::default();
+        s.per_hicann[0] += 3;
+        s.per_hicann[7] += 2;
+        s.latency_ps.record(1000);
+        s.latency_ps.record(2000);
+        s.deadline_misses = 1;
+        assert_eq!(s.total_delivered(), 5);
+        assert!((s.miss_rate() - 0.5).abs() < 1e-12);
+    }
+}

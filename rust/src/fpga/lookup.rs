@@ -1,0 +1,270 @@
+//! TX and RX lookup tables (paper §3).
+//!
+//! TX side: a spike from a HICANN "does not inherently define a destination
+//! in the overall network, a lookup table is indexed to retrieve the
+//! respective network destination-address and a generic Global Unique
+//! Identifier (GUID) that will be transmitted over the network together
+//! with the event itself."
+//!
+//! RX side: "At the destination, another lookup table is indexed with the
+//! received GUID, yielding a multicast mask to distribute the event among
+//! the HICANN chips connected to that FPGA."
+
+use crate::extoll::torus::NodeAddr;
+
+use super::event::SpikeEvent;
+
+/// A network destination endpoint: one of the FPGAs behind a torus node's
+/// concentrator (6 in the paper's Fig. 1 topology; the topology-sweep
+/// benchmark also explores other fan-ins). This is the granularity at
+/// which aggregation buckets are keyed ("accumulating events for the same
+/// destination", §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EndpointAddr {
+    /// Extoll torus node (the concentrator's Tourmalet).
+    pub node: NodeAddr,
+    /// FPGA index behind that concentrator (0..64).
+    pub fpga: u8,
+}
+
+impl EndpointAddr {
+    pub fn new(node: NodeAddr, fpga: u8) -> Self {
+        debug_assert!(fpga < 64);
+        EndpointAddr { node, fpga }
+    }
+
+    /// Pack into the 16-bit network destination id the paper's map table
+    /// is sized for (2^16 possible destinations): 10 bits node, 6 bits FPGA
+    /// (covers a 1024-node torus with up to 64 FPGAs per concentrator).
+    pub fn as_u16(&self) -> u16 {
+        assert!(self.node.0 < (1 << 10), "node address exceeds 10 bits");
+        (self.node.0 << 6) | self.fpga as u16
+    }
+
+    pub fn from_u16(v: u16) -> Self {
+        EndpointAddr {
+            node: NodeAddr(v >> 6),
+            fpga: (v & 0x3F) as u8,
+        }
+    }
+}
+
+/// One TX lookup-table entry: where a source pulse address routes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TxEntry {
+    pub dest: EndpointAddr,
+    /// 15-bit GUID transmitted with the event.
+    pub guid: u16,
+}
+
+/// The TX lookup table: `(hicann, pulse_addr) → [TxEntry]`.
+///
+/// Indexed by the 3-bit HICANN id and the 12-bit pulse address, i.e. a
+/// 32768-entry SRAM in the real FPGA. Entries may be absent (unrouted
+/// neurons: events are counted and dropped, mirroring hardware behaviour).
+///
+/// A source may fan out to **multiple destination FPGAs** — the 2-page
+/// abstract specifies a single (destination, GUID) pair per lookup, but a
+/// neuron projecting to several wafers necessarily ships one event per
+/// destination FPGA (network-level multicast exists only at the RX side,
+/// across the 8 HICANNs of one FPGA). The fan-out list models the repeated
+/// lookup the hardware would perform; see DESIGN.md.
+#[derive(Clone, Debug)]
+pub struct TxLookup {
+    entries: Vec<Vec<TxEntry>>,
+    programmed: usize,
+}
+
+impl Default for TxLookup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TxLookup {
+    pub fn new() -> Self {
+        TxLookup {
+            entries: vec![Vec::new(); 8 << 12],
+            programmed: 0,
+        }
+    }
+
+    #[inline]
+    fn index(hicann: u8, pulse_addr: u16) -> usize {
+        debug_assert!(hicann < 8);
+        debug_assert!(pulse_addr < (1 << 12));
+        ((hicann as usize) << 12) | pulse_addr as usize
+    }
+
+    /// Program one entry: replaces the fan-out list with a single target.
+    pub fn set(&mut self, hicann: u8, pulse_addr: u16, entry: TxEntry) {
+        let e = &mut self.entries[Self::index(hicann, pulse_addr)];
+        if e.is_empty() {
+            self.programmed += 1;
+        }
+        e.clear();
+        e.push(entry);
+    }
+
+    /// Add a fan-out target to a source.
+    pub fn add(&mut self, hicann: u8, pulse_addr: u16, entry: TxEntry) {
+        let e = &mut self.entries[Self::index(hicann, pulse_addr)];
+        if e.is_empty() {
+            self.programmed += 1;
+        }
+        e.push(entry);
+    }
+
+    /// Look up the fan-out list for an event (empty slice = unrouted).
+    #[inline]
+    pub fn lookup(&self, ev: &SpikeEvent) -> &[TxEntry] {
+        &self.entries[Self::index(ev.hicann, ev.pulse_addr)]
+    }
+
+    /// Number of programmed sources.
+    pub fn len(&self) -> usize {
+        self.programmed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programmed == 0
+    }
+}
+
+/// One RX lookup-table entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RxEntry {
+    /// Multicast mask over the 8 HICANN chips of this FPGA (bit i set ⇒
+    /// the event is delivered to HICANN i).
+    pub hicann_mask: u8,
+    /// Translated pulse address to present on the HICANN links.
+    pub pulse_addr: u16,
+}
+
+/// The RX lookup table: `GUID → RxEntry` (32768-entry SRAM).
+#[derive(Clone, Debug)]
+pub struct RxLookup {
+    entries: Vec<Option<RxEntry>>,
+}
+
+impl Default for RxLookup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RxLookup {
+    pub fn new() -> Self {
+        RxLookup {
+            entries: vec![None; 1 << 15],
+        }
+    }
+
+    pub fn set(&mut self, guid: u16, entry: RxEntry) {
+        debug_assert!(guid < (1 << 15));
+        self.entries[guid as usize] = Some(entry);
+    }
+
+    #[inline]
+    pub fn lookup(&self, guid: u16) -> Option<RxEntry> {
+        self.entries[(guid & 0x7FFF) as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|e| e.is_none())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_pack_roundtrip() {
+        for node in [0u16, 1, 100, 1023] {
+            for fpga in [0u8, 1, 5, 47, 63] {
+                let e = EndpointAddr::new(NodeAddr(node), fpga);
+                assert_eq!(EndpointAddr::from_u16(e.as_u16()), e);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "10 bits")]
+    fn endpoint_overflow_panics() {
+        let _ = EndpointAddr::new(NodeAddr(1 << 10), 0).as_u16();
+    }
+
+    #[test]
+    fn tx_lookup_roundtrip() {
+        let mut lut = TxLookup::new();
+        let entry = TxEntry {
+            dest: EndpointAddr::new(NodeAddr(7), 3),
+            guid: 1234,
+        };
+        lut.set(2, 0x5A5, entry);
+        let ev = SpikeEvent::new(2, 0x5A5, 100);
+        assert_eq!(lut.lookup(&ev), &[entry]);
+        // unprogrammed entries miss
+        let miss = SpikeEvent::new(3, 0x5A5, 100);
+        assert!(lut.lookup(&miss).is_empty());
+        assert_eq!(lut.len(), 1);
+    }
+
+    #[test]
+    fn tx_lookup_fanout() {
+        let mut lut = TxLookup::new();
+        for i in 0..3u16 {
+            lut.add(
+                1,
+                7,
+                TxEntry {
+                    dest: EndpointAddr::new(NodeAddr(i), 0),
+                    guid: 100 + i,
+                },
+            );
+        }
+        let ev = SpikeEvent::new(1, 7, 0);
+        let targets = lut.lookup(&ev);
+        assert_eq!(targets.len(), 3);
+        assert_eq!(targets[2].guid, 102);
+        assert_eq!(lut.len(), 1, "one source, three targets");
+    }
+
+    #[test]
+    fn rx_lookup_roundtrip() {
+        let mut lut = RxLookup::new();
+        let entry = RxEntry {
+            hicann_mask: 0b1010_0001,
+            pulse_addr: 0x0FF,
+        };
+        lut.set(77, entry);
+        assert_eq!(lut.lookup(77), Some(entry));
+        assert_eq!(lut.lookup(78), None);
+        assert_eq!(lut.len(), 1);
+    }
+
+    #[test]
+    fn tx_index_disambiguates_hicanns() {
+        let mut lut = TxLookup::new();
+        for h in 0..8u8 {
+            lut.set(
+                h,
+                42,
+                TxEntry {
+                    dest: EndpointAddr::new(NodeAddr(h as u16), 0),
+                    guid: h as u16,
+                },
+            );
+        }
+        for h in 0..8u8 {
+            let ev = SpikeEvent::new(h, 42, 0);
+            assert_eq!(lut.lookup(&ev)[0].guid, h as u16);
+        }
+        assert_eq!(lut.len(), 8);
+    }
+}

@@ -1,0 +1,20 @@
+//! The BrainScaleS communication-FPGA model (paper §3): spike events from
+//! 8 HICANN chips, TX/RX lookup tables, event-aggregation buckets with
+//! dual counters and concurrent flush, the bucket manager (map table +
+//! free-bucket list + urgency arbiter), and the complete FPGA actor —
+//! the paper's core contribution.
+
+pub mod bucket;
+pub mod event;
+#[allow(clippy::module_inception)]
+pub mod fpga;
+pub mod hicann;
+pub mod lookup;
+pub mod manager;
+
+pub use bucket::{Bucket, BucketConfig, FlushBatch, FlushReason};
+pub use event::{RoutedEvent, SpikeEvent};
+pub use fpga::{Fpga, FpgaConfig, FpgaStats};
+pub use hicann::{HicannLinkConfig, PlaybackStats, HICANNS_PER_FPGA};
+pub use lookup::{EndpointAddr, RxEntry, RxLookup, TxEntry, TxLookup};
+pub use manager::{BucketManager, EvictionPolicy, InsertResult, ManagerConfig, ManagerStats};

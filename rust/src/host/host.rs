@@ -1,0 +1,402 @@
+//! Host-node actor (paper §2): the Extoll RMA target + driver software.
+//!
+//! "Data moving back to the host is written to main memory in the host.
+//! The arrival of new data at the host is notified to the software by
+//! making use of the notification system in the Extoll RMA unit and the
+//! low-level driver software."
+//!
+//! The actor models: the RMA unit writing PUT payloads to ring-buffer
+//! memory and raising notifications on flagged PUTs; driver software
+//! polling the notification queue with a configurable period; a finite
+//! software processing rate; and batched SpaceFreed credit notifications
+//! back to the producing FPGA (paper §2.1 credit-based flow control).
+
+use std::collections::VecDeque;
+
+use crate::extoll::packet::{Packet, PacketKind};
+use crate::extoll::rma::Notification;
+use crate::extoll::torus::NodeAddr;
+use crate::msg::Msg;
+use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::util::stats::Histogram;
+
+use super::ringbuf::RingConsumer;
+
+/// Timer tag: driver poll tick.
+pub const TIMER_POLL: u32 = 10;
+
+/// One receive channel: a ring buffer fed by one FPGA stream.
+#[derive(Clone, Debug)]
+pub struct ChannelConfig {
+    /// Channel id (appears in notifications).
+    pub id: u16,
+    /// NLA window of the ring in host memory.
+    pub nla_base: u64,
+    pub ring_size: u64,
+    /// Where SpaceFreed credits are sent (the producing FPGA's node).
+    pub producer_node: NodeAddr,
+    /// Send a SpaceFreed notification once this many bytes were freed.
+    pub credit_batch: u64,
+}
+
+/// Per-channel runtime state.
+struct Channel {
+    cfg: ChannelConfig,
+    consumer: RingConsumer,
+    /// Bytes PUT since the last notification flag (completed by notify).
+    pending_data: u64,
+    /// Bytes freed since the last SpaceFreed credit message.
+    freed_unsent: u64,
+    /// FIFO of (bytes, created) for latency accounting.
+    inflight: VecDeque<(u64, Time)>,
+}
+
+/// Host configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HostConfig {
+    /// This host's torus node address.
+    pub node: NodeAddr,
+    /// Driver poll period (notification queue + ring processing).
+    pub poll_period: Time,
+    /// Software processing rate in bytes/s (0 = infinite).
+    pub consume_rate: f64,
+    /// PCIe + memory-write latency for an RMA PUT to land in memory.
+    pub pcie_latency: Time,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        HostConfig {
+            node: NodeAddr(0),
+            poll_period: Time::from_us(5),
+            consume_rate: 0.0,
+            pcie_latency: Time::from_ns(300),
+        }
+    }
+}
+
+/// Host statistics.
+#[derive(Clone, Debug, Default)]
+pub struct HostStats {
+    pub puts_received: u64,
+    pub bytes_received: u64,
+    pub notifications: u64,
+    pub credits_sent: u64,
+    pub bytes_consumed: u64,
+    /// Data latency: packet creation at the FPGA → consumed by software (ps).
+    pub data_latency_ps: Histogram,
+    /// Notification queue depth high-water mark.
+    pub notify_queue_peak: usize,
+}
+
+/// The host actor.
+pub struct Host {
+    pub cfg: HostConfig,
+    channels: Vec<Channel>,
+    /// Hardware notification queue (drained by the driver poll).
+    notify_q: VecDeque<(u16, u64)>, // (channel, bytes completed)
+    /// Our NIC (for sending credit notifications).
+    nic: Option<ActorId>,
+    polling: bool,
+    seq: u64,
+    pub stats: HostStats,
+}
+
+impl Host {
+    pub fn new(cfg: HostConfig) -> Self {
+        Host {
+            cfg,
+            channels: Vec::new(),
+            notify_q: VecDeque::new(),
+            nic: None,
+            polling: false,
+            seq: (cfg.node.0 as u64) << 48,
+            stats: HostStats::default(),
+        }
+    }
+
+    pub fn attach_nic(&mut self, id: ActorId) {
+        self.nic = Some(id);
+    }
+
+    /// Register a receive channel (ring buffer).
+    pub fn add_channel(&mut self, cfg: ChannelConfig) {
+        let ring_size = cfg.ring_size;
+        self.channels.push(Channel {
+            cfg,
+            consumer: RingConsumer::new(ring_size),
+            pending_data: 0,
+            freed_unsent: 0,
+            inflight: VecDeque::new(),
+        });
+    }
+
+    fn channel_for_nla(&mut self, nla: u64) -> Option<&mut Channel> {
+        self.channels
+            .iter_mut()
+            .find(|c| nla >= c.cfg.nla_base && nla < c.cfg.nla_base + c.cfg.ring_size)
+    }
+
+    fn start_polling(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if !self.polling {
+            self.polling = true;
+            ctx.send_self(self.cfg.poll_period, Msg::Timer(TIMER_POLL));
+        }
+    }
+
+    /// One driver poll: drain the notification queue, process ring data,
+    /// return credits.
+    fn poll(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        // 1. notification queue → consumer fill levels
+        while let Some((ch_id, bytes)) = self.notify_q.pop_front() {
+            let ch = self
+                .channels
+                .iter_mut()
+                .find(|c| c.cfg.id == ch_id)
+                .expect("notification for unknown channel");
+            ch.consumer.notify_written(bytes);
+        }
+        // 2. software processing, rate-limited per poll period
+        let budget = if self.cfg.consume_rate <= 0.0 {
+            u64::MAX
+        } else {
+            (self.cfg.consume_rate * self.cfg.poll_period.secs_f64()).max(1.0) as u64
+        };
+        let now = ctx.now();
+        let mut consumed_now = vec![0u64; self.channels.len()];
+        for (i, ch) in self.channels.iter_mut().enumerate() {
+            let n = ch.consumer.consume(budget);
+            consumed_now[i] = n;
+            if n == 0 {
+                continue;
+            }
+            self.stats.bytes_consumed += n;
+            // latency accounting against the inflight FIFO
+            let mut left = n;
+            while left > 0 {
+                match ch.inflight.front_mut() {
+                    None => break,
+                    Some((b, created)) => {
+                        let take = (*b).min(left);
+                        *b -= take;
+                        left -= take;
+                        let done = *b == 0;
+                        let created = *created;
+                        if done {
+                            ch.inflight.pop_front();
+                        }
+                        self.stats
+                            .data_latency_ps
+                            .record(now.saturating_sub(created).ps());
+                    }
+                }
+            }
+            ch.freed_unsent += n;
+        }
+        // 3. batched credit return: send once the batch threshold is
+        // reached, or on an idle poll (nothing consumed, nothing readable)
+        // so trailing credit is never withheld from the producer.
+        for i in 0..self.channels.len() {
+            let idle = consumed_now[i] == 0 && self.channels[i].consumer.available() == 0;
+            let ch = &mut self.channels[i];
+            if ch.freed_unsent == 0 {
+                continue;
+            }
+            if ch.freed_unsent >= ch.cfg.credit_batch || idle {
+                let bytes = ch.freed_unsent;
+                ch.freed_unsent = 0;
+                self.seq += 1;
+                let pkt = Notification::SpaceFreed {
+                    channel: ch.cfg.id,
+                    bytes,
+                }
+                .packet(self.cfg.node, ch.cfg.producer_node, now, self.seq);
+                let nic = self.nic.expect("host has no nic attached");
+                ctx.send(nic, Time::ZERO, Msg::Inject(pkt));
+                self.stats.credits_sent += 1;
+            }
+        }
+        // keep polling while data remains readable, notifications queue, or
+        // unsent credit remains (the next idle poll will flush it)
+        let busy = self
+            .channels
+            .iter()
+            .any(|c| c.consumer.available() > 0 || c.freed_unsent > 0)
+            || !self.notify_q.is_empty();
+        if busy {
+            ctx.send_self(self.cfg.poll_period, Msg::Timer(TIMER_POLL));
+        } else {
+            self.polling = false;
+        }
+    }
+}
+
+impl Actor<Msg> for Host {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Deliver(p) => match p.kind {
+                PacketKind::RmaPut { nla, notify, bytes } => {
+                    self.stats.puts_received += 1;
+                    self.stats.bytes_received += bytes as u64;
+                    let created = p.created;
+                    let ch = self
+                        .channel_for_nla(nla)
+                        .unwrap_or_else(|| panic!("PUT to unmapped nla {nla:#x}"));
+                    ch.pending_data += bytes as u64;
+                    ch.inflight.push_back((bytes as u64, created));
+                    if notify {
+                        // RMA unit raises a notification completing the
+                        // logical write
+                        let done = ch.pending_data;
+                        ch.pending_data = 0;
+                        let id = ch.cfg.id;
+                        self.notify_q.push_back((id, done));
+                        self.stats.notifications += 1;
+                        self.stats.notify_queue_peak =
+                            self.stats.notify_queue_peak.max(self.notify_q.len());
+                        self.start_polling(ctx);
+                    }
+                }
+                PacketKind::Notification { code } => {
+                    // hosts may also receive explicit notifications
+                    let _ = Notification::decode(code);
+                    self.start_polling(ctx);
+                }
+                other => panic!("host: unexpected packet kind {other:?}"),
+            },
+            Msg::Timer(TIMER_POLL) => self.poll(ctx),
+            Msg::Credit { .. } => {}
+            other => panic!("host: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("host-{}", self.cfg.node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::rma::fragment_put;
+    use crate::sim::Sim;
+
+    /// Captures packets the host injects (credit notifications).
+    struct NicStub {
+        injected: Vec<(Time, Packet)>,
+    }
+
+    impl Actor<Msg> for NicStub {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+            if let Msg::Inject(p) = msg {
+                self.injected.push((ctx.now(), p));
+            }
+        }
+    }
+
+    fn setup(consume_rate: f64) -> (Sim<Msg>, ActorId, ActorId) {
+        let mut sim = Sim::new();
+        let host = sim.add(Host::new(HostConfig {
+            node: NodeAddr(9),
+            consume_rate,
+            ..HostConfig::default()
+        }));
+        let nic = sim.add(NicStub { injected: vec![] });
+        {
+            let h = sim.get_mut::<Host>(host);
+            h.attach_nic(nic);
+            h.add_channel(ChannelConfig {
+                id: 1,
+                nla_base: 0x10000,
+                ring_size: 65536,
+                producer_node: NodeAddr(2),
+                credit_batch: 4096,
+            });
+        }
+        (sim, host, nic)
+    }
+
+    fn deliver_write(sim: &mut Sim<Msg>, host: ActorId, at: Time, nla: u64, bytes: u64) {
+        for p in fragment_put(NodeAddr(2), NodeAddr(9), nla, bytes, true, at, 0) {
+            sim.schedule(at, host, Msg::Deliver(p));
+        }
+    }
+
+    #[test]
+    fn put_notify_consume_credit_cycle() {
+        let (mut sim, host, nic) = setup(0.0);
+        deliver_write(&mut sim, host, Time::from_us(1), 0x10000, 8192);
+        sim.run_to_completion();
+        let h: &Host = sim.get(host);
+        assert_eq!(h.stats.puts_received, 17); // ceil(8192/496)
+        assert_eq!(h.stats.bytes_received, 8192);
+        assert_eq!(h.stats.notifications, 1);
+        assert_eq!(h.stats.bytes_consumed, 8192);
+        let n: &NicStub = sim.get(nic);
+        assert_eq!(n.injected.len(), 1, "one batched credit");
+        match n.injected[0].1.kind {
+            PacketKind::Notification { code } => {
+                assert_eq!(
+                    Notification::decode(code),
+                    Some(Notification::SpaceFreed {
+                        channel: 1,
+                        bytes: 8192
+                    })
+                );
+            }
+            _ => panic!("expected notification"),
+        }
+        assert_eq!(n.injected[0].1.dst, NodeAddr(2));
+    }
+
+    #[test]
+    fn small_writes_batch_credits() {
+        let (mut sim, host, nic) = setup(0.0);
+        // 8 writes of 512B; credit_batch 4096 → exactly 1 credit message
+        for i in 0..8u64 {
+            deliver_write(
+                &mut sim,
+                host,
+                Time::from_us(1 + i),
+                0x10000 + i * 512,
+                512,
+            );
+        }
+        sim.run_to_completion();
+        let n: &NicStub = sim.get(nic);
+        assert_eq!(n.injected.len(), 1);
+        let h: &Host = sim.get(host);
+        assert_eq!(h.stats.bytes_consumed, 4096);
+    }
+
+    #[test]
+    fn finite_consume_rate_spreads_processing() {
+        // 100 MB/s with 5us polls = 500B per poll
+        let (mut sim, host, _) = setup(100e6);
+        deliver_write(&mut sim, host, Time::from_us(1), 0x10000, 5000);
+        sim.run_to_completion();
+        let h: &Host = sim.get(host);
+        assert_eq!(h.stats.bytes_consumed, 5000);
+        // needs ~10 polls → at least 50us of simulated time
+        assert!(sim.now >= Time::from_us(50), "finished too fast: {}", sim.now);
+    }
+
+    #[test]
+    fn latency_histogram_populated() {
+        let (mut sim, host, _) = setup(0.0);
+        deliver_write(&mut sim, host, Time::from_us(3), 0x10000, 1024);
+        sim.run_to_completion();
+        let h: &Host = sim.get(host);
+        assert!(h.stats.data_latency_ps.count() > 0);
+        // consumed on the first poll after delivery: ≥ poll period
+        assert!(h.stats.data_latency_ps.min() >= Time::from_us(3).ps() - Time::from_us(3).ps());
+    }
+
+    #[test]
+    #[should_panic(expected = "unmapped nla")]
+    fn put_outside_ring_panics() {
+        let (mut sim, host, _) = setup(0.0);
+        deliver_write(&mut sim, host, Time::from_us(1), 0xDEAD_0000, 64);
+        sim.run_to_completion();
+    }
+}

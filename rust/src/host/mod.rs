@@ -1,0 +1,12 @@
+//! Host communication (paper §2): the RMA ring-buffer protocol between the
+//! FPGAs and a compute-cluster host — write pointer/space registers,
+//! notifications, credit-based flow control, driver polling.
+
+#[allow(clippy::module_inception)]
+pub mod host;
+pub mod ringbuf;
+pub mod stream;
+
+pub use host::{ChannelConfig, Host, HostConfig, HostStats};
+pub use ringbuf::{RingConsumer, RingProducer, WriteSegment};
+pub use stream::{StreamConfig, StreamSource, StreamStats};

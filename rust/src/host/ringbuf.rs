@@ -1,0 +1,278 @@
+//! Ring-buffer communication protocol state machines (paper §2.1, Fig. 2a).
+//!
+//! "In order to avoid additional handshake messages, FPGAs write their data
+//! to host memory in a predefined ring-buffer range for software
+//! processing. [...] The ring-buffer is always tracked by FPGA logic
+//! through the use of a write pointer and space registers. FPGAs exchange
+//! notifications with the software, informing each other about the amount
+//! of data written to or processed from memory. This implements a kind of
+//! credit based flow control."
+//!
+//! [`RingProducer`] is the FPGA-side logic (write pointer + space register),
+//! [`RingConsumer`] the host-side software view (read pointer + fill level
+//! learned through DataWritten notifications). Both are pure state machines;
+//! the actors in [`super::host`] and [`super::stream`] add timing.
+
+/// FPGA-side ring-buffer tracking: write pointer + space register.
+#[derive(Clone, Debug)]
+pub struct RingProducer {
+    /// Ring capacity in bytes.
+    size: u64,
+    /// Network logical address of the ring's base in host memory.
+    nla_base: u64,
+    /// Write pointer (offset into the ring).
+    write_ptr: u64,
+    /// Space register: bytes known free (credit).
+    space: u64,
+    // -- statistics --------------------------------------------------------
+    pub bytes_written: u64,
+    pub writes: u64,
+    pub stalls: u64,
+}
+
+/// One physical write segment (wrap-around may split a logical write).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteSegment {
+    /// Absolute NLA to PUT to.
+    pub nla: u64,
+    pub bytes: u64,
+}
+
+impl RingProducer {
+    pub fn new(nla_base: u64, size: u64) -> Self {
+        assert!(size > 0);
+        RingProducer {
+            size,
+            nla_base,
+            write_ptr: 0,
+            space: size,
+            bytes_written: 0,
+            writes: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Bytes currently available for writing (the space register).
+    pub fn space(&self) -> u64 {
+        self.space
+    }
+
+    pub fn write_ptr(&self) -> u64 {
+        self.write_ptr
+    }
+
+    /// Try to reserve and address a write of `bytes`. Returns the physical
+    /// segments (1 or 2, on wrap) or `None` if the space register is too
+    /// low — the FPGA must stall until software frees memory (credit).
+    pub fn write(&mut self, bytes: u64) -> Option<Vec<WriteSegment>> {
+        assert!(bytes > 0 && bytes <= self.size, "write of {bytes} B into {} B ring", self.size);
+        if bytes > self.space {
+            self.stalls += 1;
+            return None;
+        }
+        self.space -= bytes;
+        let mut segs = Vec::with_capacity(2);
+        let first = bytes.min(self.size - self.write_ptr);
+        segs.push(WriteSegment {
+            nla: self.nla_base + self.write_ptr,
+            bytes: first,
+        });
+        if first < bytes {
+            segs.push(WriteSegment {
+                nla: self.nla_base,
+                bytes: bytes - first,
+            });
+        }
+        self.write_ptr = (self.write_ptr + bytes) % self.size;
+        self.bytes_written += bytes;
+        self.writes += 1;
+        Some(segs)
+    }
+
+    /// Software freed `bytes` (SpaceFreed notification → credit return).
+    pub fn credit(&mut self, bytes: u64) {
+        self.space += bytes;
+        assert!(
+            self.space <= self.size,
+            "space register overflow: {} > {}",
+            self.space,
+            self.size
+        );
+    }
+}
+
+/// Host-side software view of the ring.
+#[derive(Clone, Debug)]
+pub struct RingConsumer {
+    size: u64,
+    read_ptr: u64,
+    /// Bytes known written but not yet processed.
+    available: u64,
+    // -- statistics --------------------------------------------------------
+    pub bytes_consumed: u64,
+    pub notifications_in: u64,
+}
+
+impl RingConsumer {
+    pub fn new(size: u64) -> Self {
+        RingConsumer {
+            size,
+            read_ptr: 0,
+            available: 0,
+            bytes_consumed: 0,
+            notifications_in: 0,
+        }
+    }
+
+    /// A DataWritten notification arrived: `bytes` more are readable.
+    pub fn notify_written(&mut self, bytes: u64) {
+        self.notifications_in += 1;
+        self.available += bytes;
+        assert!(
+            self.available <= self.size,
+            "ring overrun: {} > {} — producer wrote without credit",
+            self.available,
+            self.size
+        );
+    }
+
+    /// Bytes ready for processing.
+    pub fn available(&self) -> u64 {
+        self.available
+    }
+
+    pub fn read_ptr(&self) -> u64 {
+        self.read_ptr
+    }
+
+    /// Consume up to `max` bytes; returns how many were consumed — this is
+    /// the amount to return to the FPGA as a SpaceFreed credit.
+    pub fn consume(&mut self, max: u64) -> u64 {
+        let n = self.available.min(max);
+        self.available -= n;
+        self.read_ptr = (self.read_ptr + n) % self.size;
+        self.bytes_consumed += n;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_write_advances_pointer_and_space() {
+        let mut p = RingProducer::new(0x1000, 1024);
+        let segs = p.write(100).unwrap();
+        assert_eq!(segs, vec![WriteSegment { nla: 0x1000, bytes: 100 }]);
+        assert_eq!(p.space(), 924);
+        assert_eq!(p.write_ptr(), 100);
+    }
+
+    #[test]
+    fn wraparound_splits_segments() {
+        let mut p = RingProducer::new(0, 1024);
+        p.write(1000).unwrap();
+        p.credit(1000); // software consumed everything
+        let segs = p.write(100).unwrap();
+        assert_eq!(
+            segs,
+            vec![
+                WriteSegment { nla: 1000, bytes: 24 },
+                WriteSegment { nla: 0, bytes: 76 },
+            ]
+        );
+        assert_eq!(p.write_ptr(), 76);
+    }
+
+    #[test]
+    fn stalls_without_credit() {
+        let mut p = RingProducer::new(0, 256);
+        assert!(p.write(200).is_some());
+        assert!(p.write(100).is_none(), "must stall: only 56 B left");
+        assert_eq!(p.stalls, 1);
+        p.credit(200);
+        assert!(p.write(100).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "space register overflow")]
+    fn over_credit_is_a_protocol_violation() {
+        let mut p = RingProducer::new(0, 256);
+        p.credit(1);
+    }
+
+    #[test]
+    fn consumer_tracks_available() {
+        let mut c = RingConsumer::new(1024);
+        c.notify_written(300);
+        assert_eq!(c.available(), 300);
+        assert_eq!(c.consume(100), 100);
+        assert_eq!(c.consume(500), 200);
+        assert_eq!(c.consume(10), 0);
+        assert_eq!(c.bytes_consumed, 300);
+    }
+
+    #[test]
+    #[should_panic(expected = "ring overrun")]
+    fn consumer_detects_overrun() {
+        let mut c = RingConsumer::new(128);
+        c.notify_written(100);
+        c.notify_written(100);
+    }
+
+    #[test]
+    fn producer_consumer_conservation() {
+        // classic invariant: space + written-unconsumed == size at every step
+        let mut p = RingProducer::new(0, 4096);
+        let mut c = RingConsumer::new(4096);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut in_flight = 0u64; // written, not yet notified
+        for _ in 0..10_000 {
+            match rng.below(3) {
+                0 => {
+                    let n = rng.range(1, 512);
+                    if p.write(n).is_some() {
+                        in_flight += n;
+                    }
+                }
+                1 => {
+                    // notification delivery (batch everything in flight)
+                    if in_flight > 0 {
+                        c.notify_written(in_flight);
+                        in_flight = 0;
+                    }
+                }
+                _ => {
+                    let freed = c.consume(rng.range(1, 1024));
+                    if freed > 0 {
+                        p.credit(freed);
+                    }
+                }
+            }
+            assert!(p.space() + in_flight + c.available() == 4096);
+        }
+        // drain
+        if in_flight > 0 {
+            c.notify_written(in_flight);
+        }
+        let freed = c.consume(u64::MAX);
+        p.credit(freed);
+        assert_eq!(p.space(), 4096);
+        assert_eq!(p.bytes_written, c.bytes_consumed);
+    }
+
+    #[test]
+    fn read_ptr_follows_write_ptr() {
+        let mut p = RingProducer::new(0, 512);
+        let mut c = RingConsumer::new(512);
+        for _ in 0..100 {
+            if p.write(96).is_some() {
+                c.notify_written(96);
+                let freed = c.consume(96);
+                p.credit(freed);
+                assert_eq!(p.write_ptr(), c.read_ptr());
+            }
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # bss-extoll — BrainScaleS large-scale spike communication over Extoll
+//!
+//! A production-quality reproduction of *"BrainScaleS Large Scale Spike
+//! Communication using Extoll"* (Thommes et al., NICE 2020/2021): a
+//! cycle-approximate discrete-event simulator of the Extoll network fabric
+//! (Tourmalet NIC, 3D torus), the BrainScaleS FPGA communication logic
+//! (event aggregation buckets with renaming, map table, free-bucket list,
+//! deadline arbiter), the RMA ring-buffer host protocol, and a multi-wafer
+//! neuromorphic experiment coordinator that drives AOT-compiled JAX/Pallas
+//! LIF neuron models through PJRT — Python never on the request path.
+//!
+//! ## Layer map
+//!
+//! - **L3 (this crate)** — coordination, simulation, routing, batching.
+//! - **L2** — `python/compile/model.py`: JAX wafer-shard step function,
+//!   lowered once to `artifacts/*.hlo.txt`.
+//! - **L1** — `python/compile/kernels/`: Pallas LIF + synapse kernels.
+//!
+//! ## Module overview
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | zero-dependency substrates: args, json, rng, stats, bench |
+//! | [`sim`] | discrete-event simulation engine (ps clock, actors) |
+//! | [`extoll`] | Tourmalet NIC, links, 3D torus, routing, RMA, baselines |
+//! | [`fpga`] | spike events, lookup tables, aggregation buckets, manager |
+//! | [`host`] | ring-buffer host communication and driver model |
+//! | [`wafer`] | wafer modules, concentrators, multi-wafer system builder |
+//! | [`workload`] | Poisson/regular/burst generators, cortical microcircuit |
+//! | [`runtime`] | PJRT client wrapper: load + execute AOT artifacts |
+//! | [`neuro`] | LIF shard state bridging runtime artifacts ⇄ the simulation |
+//! | [`coordinator`] | experiment configuration, orchestration, reports |
+
+pub mod coordinator;
+pub mod extoll;
+pub mod msg;
+pub mod fpga;
+pub mod host;
+pub mod neuro;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod wafer;
+pub mod workload;
+
+/// Crate version string (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

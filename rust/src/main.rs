@@ -1,0 +1,272 @@
+//! `bss-extoll` — leader entrypoint for the BrainScaleS-Extoll
+//! reproduction: spike-traffic simulations, the multi-wafer cortical
+//! microcircuit co-simulation, and flow-level topology analysis.
+
+use anyhow::Result;
+
+use bss_extoll::coordinator::{run_microcircuit, run_traffic, ExperimentConfig};
+use bss_extoll::extoll::analysis::FlowAnalysis;
+use bss_extoll::extoll::nic::NicConfig;
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::sim::Sim;
+use bss_extoll::util::args::ArgSpec;
+use bss_extoll::util::bench::Table;
+use bss_extoll::wafer::system::{System, SystemConfig};
+use bss_extoll::workload::microcircuit::{Microcircuit, Placement};
+
+const USAGE: &str = "\
+bss-extoll — BrainScaleS large-scale spike communication over Extoll
+
+USAGE:
+  bss-extoll <command> [options]   (--help per command)
+
+COMMANDS:
+  traffic       multi-wafer Poisson spike-traffic simulation
+  microcircuit  end-to-end cortical-microcircuit co-simulation (PJRT)
+  analyze       flow-level topology bandwidth analysis (paper Fig. 1)
+  info          runtime platform + artifact status
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "traffic" => cmd_traffic(rest),
+        "microcircuit" => cmd_microcircuit(rest),
+        "analyze" => cmd_analyze(rest),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown command '{other}'\n{USAGE}");
+        }
+    }
+}
+
+fn load_config(parsed: &bss_extoll::util::args::Parsed) -> Result<ExperimentConfig> {
+    match parsed.get("config") {
+        "" => Ok(ExperimentConfig::default()),
+        path => ExperimentConfig::from_file(path),
+    }
+}
+
+fn cmd_traffic(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("traffic", "multi-wafer Poisson spike-traffic simulation")
+        .opt("config", "", "experiment config JSON (defaults when empty)")
+        .opt("rate", "0", "override: events/s per FPGA")
+        .opt("duration-ms", "0", "override: simulated duration (ms)")
+        .flag("json", "emit the full report as JSON");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let mut cfg = load_config(&p)?;
+    if p.get_f64("rate") > 0.0 {
+        cfg.workload.rate_hz = p.get_f64("rate");
+    }
+    if p.get_f64("duration-ms") > 0.0 {
+        cfg.workload.duration =
+            bss_extoll::sim::Time::from_secs_f64(p.get_f64("duration-ms") * 1e-3);
+    }
+    let r = run_traffic(&cfg)?;
+    if p.flag("json") {
+        println!("{}", r.to_json().pretty());
+    } else {
+        let mut t = Table::new("traffic report", &["metric", "value"]);
+        t.row(vec![
+            "events generated".into(),
+            r.events_generated.to_string(),
+        ]);
+        t.row(vec!["events delivered".into(), r.rx_events.to_string()]);
+        t.row(vec!["packets".into(), r.packets_out.to_string()]);
+        t.row(vec![
+            "mean events/packet".into(),
+            format!("{:.2}", r.mean_batch),
+        ]);
+        t.row(vec![
+            "flushes (deadline/full/evict)".into(),
+            format!("{}/{}/{}", r.flush_deadline, r.flush_full, r.flush_evict),
+        ]);
+        t.row(vec![
+            "latency p50/p99 (ns)".into(),
+            format!(
+                "{:.0}/{:.0}",
+                r.latency.p50() as f64 / 1e3,
+                r.latency.p99() as f64 / 1e3
+            ),
+        ]);
+        t.row(vec![
+            "deadline misses".into(),
+            r.deadline_misses.to_string(),
+        ]);
+        t.row(vec![
+            "peak link util".into(),
+            format!("{:.3}", r.max_link_util),
+        ]);
+        t.row(vec![
+            "delivered events/s".into(),
+            format!("{:.3e}", r.delivered_events_per_s),
+        ]);
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_microcircuit(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "microcircuit",
+        "end-to-end multi-wafer cortical microcircuit (PJRT neuron shards)",
+    )
+    .opt("config", "", "experiment config JSON")
+    .opt("steps", "0", "override: timesteps")
+    .opt("artifact", "", "override: shard artifact name")
+    .flag("json", "emit the full report as JSON");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let mut cfg = load_config(&p)?;
+    if p.get_u64("steps") > 0 {
+        cfg.neuro.steps = p.get_usize("steps");
+    }
+    if !p.get("artifact").is_empty() {
+        cfg.neuro.artifact = p.get("artifact").to_string();
+    }
+    // default system sized for the 4-shard artifacts
+    if p.get("config").is_empty() {
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 2,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+    }
+    let r = run_microcircuit(&cfg)?;
+    if p.flag("json") {
+        println!("{}", r.to_json().pretty());
+    } else {
+        let mut t = Table::new("microcircuit report", &["metric", "value"]);
+        t.row(vec!["neurons".into(), r.n_neurons.to_string()]);
+        t.row(vec!["shards (FPGAs)".into(), r.n_shards.to_string()]);
+        t.row(vec!["steps".into(), r.steps.to_string()]);
+        t.row(vec!["spikes".into(), r.spikes_total.to_string()]);
+        t.row(vec![
+            "mean rate (spk/neuron/step)".into(),
+            format!("{:.4}", r.mean_rate),
+        ]);
+        t.row(vec!["fabric events".into(), r.fabric_events.to_string()]);
+        t.row(vec!["delivered".into(), r.delivered_events.to_string()]);
+        t.row(vec![
+            "mean events/packet".into(),
+            format!("{:.2}", r.mean_batch),
+        ]);
+        t.row(vec![
+            "deadline misses".into(),
+            r.deadline_misses.to_string(),
+        ]);
+        t.row(vec![
+            "latency p50/p99 (ns)".into(),
+            format!(
+                "{:.0}/{:.0}",
+                r.latency.p50() as f64 / 1e3,
+                r.latency.p99() as f64 / 1e3
+            ),
+        ]);
+        t.row(vec![
+            "pjrt / des wall (s)".into(),
+            format!("{:.2} / {:.2}", r.pjrt_seconds, r.des_seconds),
+        ]);
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("analyze", "flow-level topology bandwidth analysis (Fig. 1)")
+        .opt("wafers", "4", "number of wafer modules")
+        .opt("torus", "4x4x2", "torus dimensions XxYxZ")
+        .opt("concentrators", "8", "concentrator nodes per wafer")
+        .opt("scale", "1.0", "microcircuit scale (1.0 = 77k neurons)");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let dims: Vec<u16> = p
+        .get("torus")
+        .split('x')
+        .map(|s| s.parse().unwrap_or(2))
+        .collect();
+    anyhow::ensure!(dims.len() == 3, "--torus must be XxYxZ");
+    let sys_cfg = SystemConfig {
+        n_wafers: p.get_usize("wafers"),
+        torus: TorusSpec::new(dims[0], dims[1], dims[2]),
+        concentrators_per_wafer: p.get_usize("concentrators"),
+        ..SystemConfig::default()
+    };
+    let mut sim: Sim<bss_extoll::msg::Msg> = Sim::new();
+    let sys = System::build(&mut sim, sys_cfg);
+    let mc = Microcircuit::new(p.get_f64("scale"));
+    let placement = Placement::spread(&mc, &sys);
+    let flows = placement.flows(&mc, 32.0);
+    let analysis = FlowAnalysis::run(&sys_cfg.torus, &flows, NicConfig::default().link_gbps());
+    let mut t = Table::new("topology analysis", &["metric", "value"]);
+    t.row(vec!["neurons".into(), mc.total_neurons().to_string()]);
+    t.row(vec![
+        "total spike rate (ev/s)".into(),
+        format!("{:.3e}", mc.total_rate_hz()),
+    ]);
+    t.row(vec!["fabric flows".into(), flows.len().to_string()]);
+    t.row(vec![
+        "offered load (Gbit/s)".into(),
+        format!("{:.3}", analysis.total_offered_gbps),
+    ]);
+    t.row(vec![
+        "peak link util".into(),
+        format!("{:.4}", analysis.max_utilization()),
+    ]);
+    t.row(vec![
+        "mean active link util".into(),
+        format!("{:.4}", analysis.mean_active_utilization()),
+    ]);
+    t.row(vec![
+        "sustainable fraction".into(),
+        format!("{:.3}", analysis.sustainable_fraction()),
+    ]);
+    if let Some(((node, dir), load)) = analysis.bottleneck() {
+        t.row(vec![
+            "bottleneck".into(),
+            format!("{node} {dir:?} @ {:.3} Gbit/s", load.gbps),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("bss-extoll {}", bss_extoll::VERSION);
+    let rt = bss_extoll::runtime::Runtime::cpu()?;
+    println!("pjrt platform: {}", rt.platform());
+    let dir = bss_extoll::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    for name in ["shard_256x1024", "shard_1024x4096"] {
+        match rt.load_shard_model(&dir, name) {
+            Ok(m) => println!(
+                "  {name}: n_local={} n_global={} sha={}",
+                m.n_local(),
+                m.n_global(),
+                &m.manifest.hlo_sha256[..12]
+            ),
+            Err(_) => println!("  {name}: NOT BUILT (run `make artifacts`)"),
+        }
+    }
+    Ok(())
+}

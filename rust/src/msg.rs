@@ -1,0 +1,37 @@
+//! The system-wide message vocabulary for the discrete-event simulation.
+//!
+//! All actors — Tourmalet NICs, FPGAs, hosts, workload generators — exchange
+//! these messages through [`crate::sim::Sim`]. Keeping one enum (instead of
+//! per-module message types) lets heterogeneous components share a single
+//! timeline without dynamic typing on the hot path.
+
+use crate::extoll::packet::Packet;
+use crate::fpga::event::SpikeEvent;
+
+/// One message in the system simulation.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    // ---- Extoll fabric ----------------------------------------------------
+    /// A packet arriving at a NIC over a torus link (fully serialized).
+    Packet(Packet),
+    /// Local unit → NIC: inject a packet into the fabric.
+    Inject(Packet),
+    /// NIC → local unit: a packet addressed to this node, after traversing
+    /// the local (7th) Tourmalet link.
+    Deliver(Packet),
+    /// Self-message: the serializer of `port` finished the current packet.
+    TxDone { port: u8 },
+    /// Link-level credit return for (`port`, `vc`) — the downstream input
+    /// buffer slot was freed. Also used on the local port to signal the
+    /// attached unit that an injection slot is free again.
+    Credit { port: u8, vc: u8 },
+
+    // ---- FPGA / HICANN ----------------------------------------------------
+    /// A spike event arriving from one of the FPGA's 8 HICANN links.
+    HicannEvent(SpikeEvent),
+
+    // ---- generic timers ---------------------------------------------------
+    /// A tagged timer wake-up (bucket-deadline scan, host poll, generator
+    /// ticks...). The tag disambiguates multiple timer streams per actor.
+    Timer(u32),
+}

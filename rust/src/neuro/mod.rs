@@ -1,0 +1,10 @@
+//! Neuron-dynamics layer: bridges the AOT-compiled JAX/Pallas LIF shards
+//! (executed through [`crate::runtime`]) and the simulated BrainScaleS
+//! communication fabric. Each shard plays the role of the HICANN chips
+//! behind one communication FPGA.
+
+pub mod shard;
+pub mod weights;
+
+pub use shard::{neuron_of_pulse, pulse_of_neuron, ShardSim};
+pub use weights::build_weights;

@@ -1,0 +1,138 @@
+//! Synaptic weight generation from the cortical-microcircuit statistics.
+//!
+//! Builds the `f32[n_local, n_global]` weight matrix of one shard from the
+//! Potjans-Diesmann connection probabilities: pairwise Bernoulli
+//! connectivity, excitatory/inhibitory signs by source population, and
+//! deterministic seeding so every run (and every shard) reproduces the
+//! same network.
+
+use crate::util::rng::Rng;
+use crate::workload::microcircuit::{Microcircuit, CONN_PROB};
+
+/// Map a global neuron index to its population under a per-shard layout
+/// where each shard hosts `sizes_local[p]` neurons of population `p`,
+/// laid out population-by-population, shard-by-shard.
+pub fn population_of(local_index: u32, sizes_local: &[u32; 8]) -> usize {
+    let mut acc = 0;
+    for (p, &s) in sizes_local.iter().enumerate() {
+        acc += s;
+        if local_index < acc {
+            return p;
+        }
+    }
+    panic!("index {local_index} outside shard of {} neurons", acc);
+}
+
+/// Build the weight matrix for one shard.
+///
+/// `slices[f]` gives each shard's per-population sizes (all shards use the
+/// same population-major local layout). `shard` is the target shard index;
+/// columns cover the global space `sum_f sum_p slices[f][p]` in shard-major
+/// order. `w_exc`/`w_inh` are the synaptic efficacies; probabilities come
+/// from [`CONN_PROB`], optionally scaled by `k_scale` (down-scaled nets
+/// keep realistic input counts by upscaling weights externally).
+pub fn build_weights(
+    mc: &Microcircuit,
+    slices: &[[u32; 8]],
+    shard: usize,
+    w_exc: f32,
+    w_inh: f32,
+    k_scale: f64,
+    seed: u64,
+) -> Vec<f32> {
+    let _ = mc;
+    let n_local: u32 = slices[shard].iter().sum();
+    let n_global: u32 = slices.iter().map(|s| s.iter().sum::<u32>()).sum();
+    let mut w = vec![0.0f32; n_local as usize * n_global as usize];
+    let mut rng = Rng::new(seed ^ ((shard as u64) << 32));
+    let mut col_base = 0u32;
+    for src_slice in slices {
+        let src_n: u32 = src_slice.iter().sum();
+        for sl in 0..src_n {
+            let sp = population_of(sl, src_slice);
+            let col = (col_base + sl) as usize;
+            for tl in 0..n_local {
+                let tp = population_of(tl, &slices[shard]);
+                let p = CONN_PROB[tp][sp] * k_scale;
+                if p > 0.0 && rng.chance(p.min(1.0)) {
+                    let weight = if sp % 2 == 0 { w_exc } else { w_inh };
+                    w[tl as usize * n_global as usize + col] = weight;
+                }
+            }
+        }
+        col_base += src_n;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::microcircuit::Microcircuit;
+
+    fn slices_2() -> Vec<[u32; 8]> {
+        vec![[8, 4, 8, 4, 2, 1, 4, 1]; 2] // 32 neurons per shard, 64 global
+    }
+
+    #[test]
+    fn population_mapping() {
+        let s = [8u32, 4, 8, 4, 2, 1, 4, 1];
+        assert_eq!(population_of(0, &s), 0);
+        assert_eq!(population_of(7, &s), 0);
+        assert_eq!(population_of(8, &s), 1);
+        assert_eq!(population_of(31, &s), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside shard")]
+    fn population_out_of_range() {
+        let s = [1u32; 8];
+        let _ = population_of(8, &s);
+    }
+
+    #[test]
+    fn weights_deterministic_and_signed() {
+        let mc = Microcircuit::new(0.001);
+        let slices = slices_2();
+        let a = build_weights(&mc, &slices, 0, 0.5, -2.0, 30.0, 42);
+        let b = build_weights(&mc, &slices, 0, 0.5, -2.0, 30.0, 42);
+        assert_eq!(a, b);
+        let c = build_weights(&mc, &slices, 0, 0.5, -2.0, 30.0, 43);
+        assert_ne!(a, c, "different seed must differ");
+        // signs: columns from even (E) populations are ≥ 0, odd (I) ≤ 0
+        let n_global = 64;
+        let mut pos = 0;
+        let mut neg = 0;
+        for (idx, &v) in a.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let col = (idx % n_global) as u32;
+            let src_slice = &slices[col as usize / 32];
+            let sp = population_of(col % 32, src_slice);
+            if sp % 2 == 0 {
+                assert!(v > 0.0);
+                pos += 1;
+            } else {
+                assert!(v < 0.0);
+                neg += 1;
+            }
+        }
+        assert!(pos > 0 && neg > 0, "need both E and I synapses");
+    }
+
+    #[test]
+    fn connection_density_tracks_probability() {
+        let mc = Microcircuit::new(0.01);
+        // single population pair: make a custom slice with only L2/3E
+        let slices = vec![[64u32, 0, 0, 0, 0, 0, 0, 0]; 2];
+        let w = build_weights(&mc, &slices, 0, 1.0, -1.0, 1.0, 7);
+        let nz = w.iter().filter(|&&v| v != 0.0).count();
+        // expected density = CONN_PROB[0][0] ≈ 0.1009 over 64×128 entries
+        let expect = 0.1009 * (64.0 * 128.0);
+        assert!(
+            (nz as f64 - expect).abs() < expect * 0.35,
+            "nz={nz} expect≈{expect}"
+        );
+    }
+}

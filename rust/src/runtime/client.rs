@@ -1,0 +1,314 @@
+//! PJRT runtime: load and execute AOT-compiled HLO artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. The rust
+//! request path never touches Python — artifacts are produced once by
+//! `make artifacts` (see `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact manifest (`<name>.json` next to `<name>.hlo.txt`).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub n_local: usize,
+    pub n_global: usize,
+    pub dtype: String,
+    pub hlo_sha256: String,
+    /// LIF parameters baked into the artifact.
+    pub decay: f64,
+    pub v_th: f64,
+    pub v_reset: f64,
+    pub refrac_steps: f64,
+    pub i_ext: f64,
+}
+
+impl Manifest {
+    /// Parse a manifest JSON file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let params = j.get("params").context("manifest missing 'params'")?;
+        Ok(Manifest {
+            name: j.str_or("name", "?").to_string(),
+            n_local: j.usize_or("n_local", 0),
+            n_global: j.usize_or("n_global", 0),
+            dtype: j.str_or("dtype", "f32").to_string(),
+            hlo_sha256: j.str_or("hlo_sha256", "").to_string(),
+            decay: params.f64_or("decay", 0.99),
+            v_th: params.f64_or("v_th", 1.0),
+            v_reset: params.f64_or("v_reset", 0.0),
+            refrac_steps: params.f64_or("refrac_steps", 20.0),
+            i_ext: params.f64_or("i_ext", 0.0),
+        })
+    }
+}
+
+/// The PJRT client (one per process; compiled executables borrow it).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name from a directory (expects
+    /// `<dir>/<name>.hlo.txt` and `<dir>/<name>.json`).
+    pub fn load_shard_model(&self, dir: &Path, name: &str) -> Result<ShardModel> {
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let man_path = dir.join(format!("{name}.json"));
+        if !hlo_path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo_path.display()
+            );
+        }
+        let manifest = Manifest::load(&man_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("artifact path is not valid UTF-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling artifact {name}: {e:?}"))?;
+        Ok(ShardModel {
+            exe,
+            client: self.client.clone(),
+            manifest,
+            path: hlo_path,
+        })
+    }
+}
+
+/// A compiled wafer-shard step function.
+///
+/// Signature (see `python/compile/model.py`):
+/// `state f32[3, n_local] × spikes_in f32[n_global] × w f32[n_local, n_global]
+///  → state' f32[3, n_local]` — row 2 of the output holds this step's spikes.
+pub struct ShardModel {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub path: PathBuf,
+}
+
+impl ShardModel {
+    pub fn n_local(&self) -> usize {
+        self.manifest.n_local
+    }
+
+    pub fn n_global(&self) -> usize {
+        self.manifest.n_global
+    }
+
+    /// Execute one timestep. `state` is `3 * n_local` floats (packed rows),
+    /// `spikes_in` is `n_global`, `w` is `n_local * n_global` (row-major).
+    ///
+    /// Returns the packed new state (`3 * n_local` floats).
+    pub fn step(&self, state: &[f32], spikes_in: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let n_local = self.manifest.n_local;
+        let n_global = self.manifest.n_global;
+        anyhow::ensure!(state.len() == 3 * n_local, "state length");
+        anyhow::ensure!(spikes_in.len() == n_global, "spikes length");
+        anyhow::ensure!(w.len() == n_local * n_global, "weights length");
+        let state_l = xla::Literal::vec1(state).reshape(&[3, n_local as i64])?;
+        let spikes_l = xla::Literal::vec1(spikes_in);
+        let w_l = xla::Literal::vec1(w).reshape(&[n_local as i64, n_global as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[state_l, spikes_l, w_l])?;
+        let out = result[0][0].to_literal_sync()?;
+        let out = normalize_result(out)?;
+        Ok(out)
+    }
+
+    /// Extract the spike row from a packed state.
+    pub fn spikes_of(state: &[f32], n_local: usize) -> &[f32] {
+        &state[2 * n_local..3 * n_local]
+    }
+
+    /// Upload the (step-invariant) weight matrix to the device once.
+    ///
+    /// Perf: `step` re-marshals all three inputs as Literals on every call;
+    /// the weight matrix is by far the largest (n_local×n_global f32) and
+    /// never changes, so keeping it device-side and using [`Self::step_with`]
+    /// removes ~99% of the per-step host→device traffic.
+    pub fn upload_weights(&self, w: &[f32]) -> Result<xla::PjRtBuffer> {
+        let n_local = self.manifest.n_local;
+        let n_global = self.manifest.n_global;
+        anyhow::ensure!(w.len() == n_local * n_global, "weights length");
+        Ok(self
+            .client
+            .buffer_from_host_buffer(w, &[n_local, n_global], None)?)
+    }
+
+    /// Execute one timestep against a pre-uploaded weight buffer.
+    pub fn step_with(
+        &self,
+        state: &[f32],
+        spikes_in: &[f32],
+        w_buf: &xla::PjRtBuffer,
+    ) -> Result<Vec<f32>> {
+        let n_local = self.manifest.n_local;
+        let n_global = self.manifest.n_global;
+        anyhow::ensure!(state.len() == 3 * n_local, "state length");
+        anyhow::ensure!(spikes_in.len() == n_global, "spikes length");
+        let state_b = self
+            .client
+            .buffer_from_host_buffer(state, &[3, n_local], None)?;
+        let spikes_b = self
+            .client
+            .buffer_from_host_buffer(spikes_in, &[n_global], None)?;
+        let result = self.exe.execute_b(&[&state_b, &spikes_b, w_buf])?;
+        let out = result[0][0].to_literal_sync()?;
+        normalize_result(out)
+    }
+}
+
+/// The AOT path lowers with `return_tuple=False`, so the root is the bare
+/// array; tolerate a 1-tuple anyway (older lowering paths wrap it).
+fn normalize_result(lit: xla::Literal) -> Result<Vec<f32>> {
+    match lit.to_vec::<f32>() {
+        Ok(v) => Ok(v),
+        Err(_) => {
+            let inner = lit
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("unwrapping result tuple: {e:?}"))?;
+            Ok(inner.to_vec::<f32>()?)
+        }
+    }
+}
+
+/// Locate the artifacts directory: `$BSS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("BSS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when the artifact suite has been built.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("shard_256x1024.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        // tests run from the crate root
+        artifacts_dir()
+    }
+
+    fn skip() -> bool {
+        if !artifacts_available() {
+            eprintln!("skipping runtime test: artifacts not built (make artifacts)");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if skip() {
+            return;
+        }
+        let m = Manifest::load(&dir().join("shard_256x1024.json")).unwrap();
+        assert_eq!(m.n_local, 256);
+        assert_eq!(m.n_global, 1024);
+        assert_eq!(m.dtype, "f32");
+        assert!(m.decay > 0.9 && m.decay < 1.0);
+        assert!(!m.hlo_sha256.is_empty());
+    }
+
+    #[test]
+    fn load_and_step_shard() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_shard_model(&dir(), "shard_256x1024").unwrap();
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        // all neurons start at rest with zero input: one step charges the
+        // membrane by i_ext*(1-decay) — far below threshold, no spikes
+        let state = vec![0.0f32; 3 * n_local];
+        let spikes = vec![0.0f32; n_global];
+        let w = vec![0.0f32; n_local * n_global];
+        let out = model.step(&state, &spikes, &w).unwrap();
+        assert_eq!(out.len(), 3 * n_local);
+        let m = &model.manifest;
+        let expect_v = (m.i_ext * (1.0 - m.decay)) as f32;
+        for i in 0..n_local {
+            assert!((out[i] - expect_v).abs() < 1e-5, "v[{i}] = {}", out[i]);
+            assert_eq!(out[2 * n_local + i], 0.0, "unexpected spike at {i}");
+        }
+    }
+
+    #[test]
+    fn spikes_propagate_through_weights() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_shard_model(&dir(), "shard_256x1024").unwrap();
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        // one incoming spike at global index 7 with a huge weight to
+        // local neuron 3: neuron 3 must fire this step
+        let state = vec![0.0f32; 3 * n_local];
+        let mut spikes = vec![0.0f32; n_global];
+        spikes[7] = 1.0;
+        let mut w = vec![0.0f32; n_local * n_global];
+        w[3 * n_global + 7] = 500.0;
+        let out = model.step(&state, &spikes, &w).unwrap();
+        let s = ShardModel::spikes_of(&out, n_local);
+        assert_eq!(s[3], 1.0, "neuron 3 should spike");
+        assert_eq!(s.iter().filter(|&&x| x > 0.0).count(), 1);
+        // and be reset + refractory
+        assert_eq!(out[3], model.manifest.v_reset as f32);
+        assert_eq!(out[n_local + 3], model.manifest.refrac_steps as f32);
+    }
+
+    #[test]
+    fn repeated_steps_are_deterministic() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_shard_model(&dir(), "shard_256x1024").unwrap();
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        let state = vec![0.1f32; 3 * n_local];
+        let spikes = vec![0.0f32; n_global];
+        let w = vec![0.01f32; n_local * n_global];
+        let a = model.step(&state, &spikes, &w).unwrap();
+        let b = model.step(&state, &spikes, &w).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_artifact_is_friendly_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_shard_model(&dir(), "no_such_artifact") {
+            Ok(_) => panic!("expected an error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "got: {err}");
+    }
+}

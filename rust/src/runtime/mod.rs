@@ -1,0 +1,6 @@
+//! PJRT execution substrate: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and runs them from the rust request path.
+
+pub mod client;
+
+pub use client::{artifacts_available, artifacts_dir, Manifest, Runtime, ShardModel};

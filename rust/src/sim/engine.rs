@@ -1,0 +1,498 @@
+//! The discrete-event engine: actors, event queue, simulation loop.
+//!
+//! Components implement [`Actor`] and communicate exclusively via
+//! timestamped messages delivered through the [`Sim`]'s event queue.
+//! Determinism guarantee: events with equal timestamps are delivered in
+//! the order they were scheduled (a monotone sequence number breaks ties),
+//! so a given configuration always produces the same trajectory.
+
+use std::any::Any;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::Time;
+
+/// Index of an actor within a [`Sim`].
+pub type ActorId = usize;
+
+/// A scheduled message delivery.
+#[derive(Debug)]
+pub struct Event<M> {
+    pub at: Time,
+    pub seq: u64,
+    pub dst: ActorId,
+    pub msg: M,
+}
+
+impl<M> PartialEq for Event<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<M> Eq for Event<M> {}
+
+impl<M> PartialOrd for Event<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<M> Ord for Event<M> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert to get earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Fixed-size heap entry: the message payload lives in a slab so that heap
+/// sift operations move 24 bytes instead of the full `M` (40% of a traffic
+/// simulation's time went into `BinaryHeap::pop` before this — see
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, PartialEq, Eq)]
+struct HeapEntry {
+    at: Time,
+    seq: u64,
+    dst: u32,
+    slot: u32,
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert to get earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue of pending events (earliest timestamp first, FIFO ties).
+#[derive(Debug)]
+pub struct EventQueue<M> {
+    heap: BinaryHeap<HeapEntry>,
+    slab: Vec<Option<M>>,
+    free: Vec<u32>,
+    seq: u64,
+}
+
+impl<M> Default for EventQueue<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M> EventQueue<M> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at: Time, dst: ActorId, msg: M) {
+        let seq = self.seq;
+        self.seq += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(msg);
+                s
+            }
+            None => {
+                self.slab.push(Some(msg));
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.heap.push(HeapEntry {
+            at,
+            seq,
+            dst: dst as u32,
+            slot,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<Event<M>> {
+        let e = self.heap.pop()?;
+        let msg = self.slab[e.slot as usize]
+            .take()
+            .expect("slab slot empty");
+        self.free.push(e.slot);
+        Some(Event {
+            at: e.at,
+            seq: e.seq,
+            dst: e.dst as usize,
+            msg,
+        })
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Scheduling context handed to an actor while it handles a message.
+pub struct Ctx<'a, M> {
+    now: Time,
+    self_id: ActorId,
+    queue: &'a mut EventQueue<M>,
+}
+
+impl<'a, M> Ctx<'a, M> {
+    /// Current simulation time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// The id of the actor currently handling a message.
+    pub fn self_id(&self) -> ActorId {
+        self.self_id
+    }
+
+    /// Deliver `msg` to `dst` after `delay`.
+    pub fn send(&mut self, dst: ActorId, delay: Time, msg: M) {
+        self.queue.push(self.now + delay, dst, msg);
+    }
+
+    /// Deliver `msg` to `dst` at absolute time `at` (must be ≥ now).
+    pub fn send_at(&mut self, dst: ActorId, at: Time, msg: M) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        self.queue.push(at.max(self.now), dst, msg);
+    }
+
+    /// Schedule a message to self (timers, clock ticks).
+    pub fn send_self(&mut self, delay: Time, msg: M) {
+        let id = self.self_id;
+        self.send(id, delay, msg);
+    }
+}
+
+/// A simulation component. `handle` consumes one message and may schedule
+/// any number of future messages via the context.
+pub trait Actor<M>: Any {
+    fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>);
+
+    /// Human-readable name for traces and error messages.
+    fn name(&self) -> String {
+        "actor".to_string()
+    }
+}
+
+/// The simulation: a set of actors plus the event queue and clock.
+pub struct Sim<M> {
+    pub now: Time,
+    actors: Vec<Box<dyn Actor<M>>>,
+    queue: EventQueue<M>,
+    processed: u64,
+    /// Optional diagnostic hook invoked on every dispatched message.
+    tracer: Option<Box<dyn FnMut(&M)>>,
+}
+
+impl<M: 'static> Default for Sim<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M: 'static> Sim<M> {
+    pub fn new() -> Self {
+        Sim {
+            now: Time::ZERO,
+            actors: Vec::new(),
+            queue: EventQueue::new(),
+            processed: 0,
+            tracer: None,
+        }
+    }
+
+    /// Register an actor; returns its id for message addressing.
+    pub fn add(&mut self, actor: impl Actor<M>) -> ActorId {
+        self.actors.push(Box::new(actor));
+        self.actors.len() - 1
+    }
+
+    /// Register a pre-boxed actor.
+    pub fn add_boxed(&mut self, actor: Box<dyn Actor<M>>) -> ActorId {
+        self.actors.push(actor);
+        self.actors.len() - 1
+    }
+
+    pub fn n_actors(&self) -> usize {
+        self.actors.len()
+    }
+
+    /// Schedule an initial message from outside the simulation.
+    pub fn schedule(&mut self, at: Time, dst: ActorId, msg: M) {
+        debug_assert!(at >= self.now);
+        self.queue.push(at, dst, msg);
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of events still pending.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Timestamp of the next pending event.
+    pub fn next_time(&self) -> Option<Time> {
+        self.queue.peek_time()
+    }
+
+    /// Install a diagnostic tracer called with every dispatched message.
+    pub fn set_tracer(&mut self, f: impl FnMut(&M) + 'static) {
+        self.tracer = Some(Box::new(f));
+    }
+
+    /// Process exactly one event. Returns false if the queue is empty.
+    pub fn step(&mut self) -> bool {
+        let Some(ev) = self.queue.pop() else {
+            return false;
+        };
+        if let Some(t) = &mut self.tracer {
+            t(&ev.msg);
+        }
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        let actor = self
+            .actors
+            .get_mut(ev.dst)
+            .unwrap_or_else(|| panic!("message to unknown actor {}", ev.dst));
+        let mut ctx = Ctx {
+            now: ev.at,
+            self_id: ev.dst,
+            queue: &mut self.queue,
+        };
+        actor.handle(ev.msg, &mut ctx);
+        self.processed += 1;
+        true
+    }
+
+    /// Run until the queue is empty or `limit` events were processed.
+    /// Returns the number of events processed in this call.
+    pub fn run(&mut self, limit: u64) -> u64 {
+        let start = self.processed;
+        while self.processed - start < limit {
+            if !self.step() {
+                break;
+            }
+        }
+        self.processed - start
+    }
+
+    /// Process all events with timestamp ≤ `until`, then set the clock to
+    /// `until`. Returns the number of events processed.
+    pub fn run_until(&mut self, until: Time) -> u64 {
+        let start = self.processed;
+        while let Some(t) = self.queue.peek_time() {
+            if t > until {
+                break;
+            }
+            self.step();
+        }
+        self.now = self.now.max(until);
+        self.processed - start
+    }
+
+    /// Drain the queue completely (careful: self-perpetuating actors never
+    /// terminate; prefer `run_until`). Returns events processed.
+    pub fn run_to_completion(&mut self) -> u64 {
+        let start = self.processed;
+        while self.step() {}
+        self.processed - start
+    }
+
+    /// Typed access to an actor (post-run metric collection).
+    pub fn get<T: Actor<M>>(&self, id: ActorId) -> &T {
+        (self.actors[id].as_ref() as &dyn Any)
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| panic!("actor {id} is not a {}", std::any::type_name::<T>()))
+    }
+
+    /// Typed mutable access to an actor.
+    pub fn get_mut<T: Actor<M>>(&mut self, id: ActorId) -> &mut T {
+        (self.actors[id].as_mut() as &mut dyn Any)
+            .downcast_mut::<T>()
+            .unwrap_or_else(|| panic!("actor {id} is not a {}", std::any::type_name::<T>()))
+    }
+
+    /// Try typed access (None if the id holds a different type).
+    pub fn try_get<T: Actor<M>>(&self, id: ActorId) -> Option<&T> {
+        (self.actors[id].as_ref() as &dyn Any).downcast_ref::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Time;
+
+    #[derive(Debug, Clone, PartialEq)]
+    enum TestMsg {
+        Ping(u32),
+        Tick,
+    }
+
+    /// Records every delivery with its timestamp.
+    struct Recorder {
+        seen: Vec<(Time, TestMsg)>,
+    }
+
+    impl Actor<TestMsg> for Recorder {
+        fn handle(&mut self, msg: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+            self.seen.push((ctx.now(), msg));
+        }
+    }
+
+    /// Forwards each Ping to a peer with +1 and 10ns delay, up to 5.
+    struct Forwarder {
+        peer: ActorId,
+        sent: u32,
+    }
+
+    impl Actor<TestMsg> for Forwarder {
+        fn handle(&mut self, msg: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+            if let TestMsg::Ping(n) = msg {
+                if n < 5 {
+                    ctx.send(self.peer, Time::from_ns(10), TestMsg::Ping(n + 1));
+                    self.sent += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delivery_order_is_time_then_fifo() {
+        let mut sim = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        sim.schedule(Time::from_ns(20), rec, TestMsg::Ping(2));
+        sim.schedule(Time::from_ns(10), rec, TestMsg::Ping(1));
+        sim.schedule(Time::from_ns(20), rec, TestMsg::Ping(3)); // same time: after Ping(2)
+        sim.run_to_completion();
+        let r: &Recorder = sim.get(rec);
+        assert_eq!(
+            r.seen,
+            vec![
+                (Time::from_ns(10), TestMsg::Ping(1)),
+                (Time::from_ns(20), TestMsg::Ping(2)),
+                (Time::from_ns(20), TestMsg::Ping(3)),
+            ]
+        );
+    }
+
+    #[test]
+    fn ping_pong_chain() {
+        let mut sim = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        let fwd = sim.add(Forwarder { peer: rec, sent: 0 });
+        // drive the forwarder via self-chain: rec gets 1..=5
+        // fwd forwards Ping(n)->rec; also need fwd to receive pings
+        sim.schedule(Time::ZERO, fwd, TestMsg::Ping(0));
+        sim.schedule(Time::from_ns(10), fwd, TestMsg::Ping(1));
+        sim.schedule(Time::from_ns(20), fwd, TestMsg::Ping(2));
+        sim.run_to_completion();
+        let f: &Forwarder = sim.get(fwd);
+        assert_eq!(f.sent, 3);
+        let r: &Recorder = sim.get(rec);
+        assert_eq!(r.seen.len(), 3);
+        assert_eq!(r.seen[0], (Time::from_ns(10), TestMsg::Ping(1)));
+    }
+
+    #[test]
+    fn run_until_stops_at_boundary() {
+        let mut sim = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        for i in 0..10 {
+            sim.schedule(Time::from_ns(i * 10), rec, TestMsg::Tick);
+        }
+        let n = sim.run_until(Time::from_ns(45));
+        assert_eq!(n, 5); // t = 0,10,20,30,40
+        assert_eq!(sim.now, Time::from_ns(45));
+        assert_eq!(sim.pending(), 5);
+        let n = sim.run_until(Time::from_ns(1000));
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn run_limit() {
+        let mut sim = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        for i in 0..100 {
+            sim.schedule(Time::from_ns(i), rec, TestMsg::Tick);
+        }
+        assert_eq!(sim.run(30), 30);
+        assert_eq!(sim.processed(), 30);
+        assert_eq!(sim.pending(), 70);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut sim = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        sim.schedule(Time::from_ns(5), rec, TestMsg::Tick);
+        sim.schedule(Time::from_ns(1), rec, TestMsg::Tick);
+        let mut last = Time::ZERO;
+        while sim.step() {
+            assert!(sim.now >= last);
+            last = sim.now;
+        }
+    }
+
+    #[test]
+    fn self_messages() {
+        struct Timer {
+            fires: u32,
+        }
+        impl Actor<TestMsg> for Timer {
+            fn handle(&mut self, _m: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+                self.fires += 1;
+                if self.fires < 4 {
+                    ctx.send_self(Time::from_ns(100), TestMsg::Tick);
+                }
+            }
+        }
+        let mut sim = Sim::new();
+        let t = sim.add(Timer { fires: 0 });
+        sim.schedule(Time::ZERO, t, TestMsg::Tick);
+        sim.run_to_completion();
+        assert_eq!(sim.get::<Timer>(t).fires, 4);
+        assert_eq!(sim.now, Time::from_ns(300));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a")]
+    fn typed_access_panics_on_wrong_type() {
+        let mut sim: Sim<TestMsg> = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        let _ = sim.get::<Forwarder>(rec);
+    }
+
+    #[test]
+    fn try_get_returns_none_on_wrong_type() {
+        let mut sim: Sim<TestMsg> = Sim::new();
+        let rec = sim.add(Recorder { seen: vec![] });
+        assert!(sim.try_get::<Forwarder>(rec).is_none());
+        assert!(sim.try_get::<Recorder>(rec).is_some());
+    }
+}

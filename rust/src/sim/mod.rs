@@ -1,0 +1,15 @@
+//! Discrete-event simulation core.
+//!
+//! The whole hardware model — Extoll fabric, FPGAs, hosts — runs on this
+//! engine: a picosecond-resolution virtual clock, a deterministic event
+//! queue (ties broken by insertion sequence), and an actor model where
+//! components communicate exclusively through timestamped messages.
+//!
+//! The core is generic over the message type `M`; the domain defines one
+//! message enum per system (see [`crate::wafer::system`]).
+
+pub mod engine;
+pub mod time;
+
+pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Sim};
+pub use time::{ps_for_bits, Time, FPGA_CLK_HZ};

@@ -1,0 +1,230 @@
+//! Simulation time: a picosecond-resolution virtual clock.
+//!
+//! Picoseconds in a `u64` cover ~213 days of simulated time — far beyond
+//! any experiment here — while representing both the 210 MHz FPGA clock
+//! (≈4761.9 ps/cycle) and multi-Gbit/s serial lanes without losing
+//! precision to rounding.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// The BrainScaleS communication FPGA clock (Kintex-7 logic, paper §3.1).
+pub const FPGA_CLK_HZ: u64 = 210_000_000;
+
+/// An instant or duration in simulated picoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Time(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+    pub const MAX: Time = Time(u64::MAX);
+
+    // -- constructors ------------------------------------------------------
+
+    pub const fn from_ps(ps: u64) -> Time {
+        Time(ps)
+    }
+
+    pub const fn from_ns(ns: u64) -> Time {
+        Time(ns * 1_000)
+    }
+
+    pub const fn from_us(us: u64) -> Time {
+        Time(us * 1_000_000)
+    }
+
+    pub const fn from_ms(ms: u64) -> Time {
+        Time(ms * 1_000_000_000)
+    }
+
+    pub const fn from_s(s: u64) -> Time {
+        Time(s * 1_000_000_000_000)
+    }
+
+    /// Exact conversion from 210 MHz FPGA clock cycles.
+    ///
+    /// One cycle is `1e12 / 210e6 = 100000/21` ps; the division is done in
+    /// u128 so that rounding error never exceeds one picosecond total.
+    pub fn from_fpga_cycles(cycles: u64) -> Time {
+        Time(((cycles as u128 * 100_000) / 21) as u64)
+    }
+
+    /// Convert from seconds (f64); used for config values like "2.5e-3 s".
+    pub fn from_secs_f64(s: f64) -> Time {
+        assert!(s >= 0.0 && s.is_finite(), "invalid time {s}");
+        Time((s * 1e12).round() as u64)
+    }
+
+    // -- accessors -----------------------------------------------------------
+
+    pub const fn ps(self) -> u64 {
+        self.0
+    }
+
+    pub fn ns_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn us_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn ms_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn secs_f64(self) -> f64 {
+        self.0 as f64 / 1e12
+    }
+
+    /// Whole FPGA clock cycles elapsed at this instant (floor).
+    pub fn fpga_cycles(self) -> u64 {
+        ((self.0 as u128 * 21) / 100_000) as u64
+    }
+
+    pub fn saturating_sub(self, rhs: Time) -> Time {
+        Time(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn min(self, other: Time) -> Time {
+        Time(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: Time) -> Time {
+        Time(self.0.max(other.0))
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Time {
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Time {
+    type Output = Time;
+    fn sub(self, rhs: Time) -> Time {
+        Time(self.0 - rhs.0)
+    }
+}
+
+impl SubAssign for Time {
+    fn sub_assign(&mut self, rhs: Time) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl Mul<u64> for Time {
+    type Output = Time;
+    fn mul(self, rhs: u64) -> Time {
+        Time(self.0 * rhs)
+    }
+}
+
+impl Div<u64> for Time {
+    type Output = Time;
+    fn div(self, rhs: u64) -> Time {
+        Time(self.0 / rhs)
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ps = self.0;
+        if ps < 1_000 {
+            write!(f, "{ps}ps")
+        } else if ps < 1_000_000 {
+            write!(f, "{:.2}ns", ps as f64 / 1e3)
+        } else if ps < 1_000_000_000 {
+            write!(f, "{:.2}us", ps as f64 / 1e6)
+        } else if ps < 1_000_000_000_000 {
+            write!(f, "{:.3}ms", ps as f64 / 1e9)
+        } else {
+            write!(f, "{:.3}s", ps as f64 / 1e12)
+        }
+    }
+}
+
+/// Serialization time for `bits` at `gbps` Gbit/s, rounded to ps.
+///
+/// `1 Gbit/s = 1 bit/ns`, so time = bits / gbps ns = bits * 1000 / gbps ps.
+pub fn ps_for_bits(bits: u64, gbps: f64) -> Time {
+    assert!(gbps > 0.0);
+    Time((bits as f64 * 1000.0 / gbps).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Time::from_ns(1).ps(), 1_000);
+        assert_eq!(Time::from_us(1).ps(), 1_000_000);
+        assert_eq!(Time::from_ms(1).ps(), 1_000_000_000);
+        assert_eq!(Time::from_s(1).ps(), 1_000_000_000_000);
+        assert!((Time::from_ms(2).ms_f64() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fpga_cycle_roundtrip() {
+        // 210e6 cycles == exactly 1 second
+        assert_eq!(Time::from_fpga_cycles(FPGA_CLK_HZ).ps(), 1_000_000_000_000);
+        for c in [0u64, 1, 2, 21, 210, 1_000_000, 123_456_789] {
+            let t = Time::from_fpga_cycles(c);
+            let back = t.fpga_cycles();
+            assert!(back == c || back + 1 == c, "c={c} back={back}");
+        }
+    }
+
+    #[test]
+    fn one_fpga_cycle_is_4761ps() {
+        let t = Time::from_fpga_cycles(1);
+        assert!(t.ps() == 4761 || t.ps() == 4762, "got {}", t.ps());
+    }
+
+    #[test]
+    fn serialization_time() {
+        // 8400 bits at 8.4 Gbit/s = 1000 ns
+        assert_eq!(ps_for_bits(8400, 8.4), Time::from_ns(1000));
+        // 1 bit at 1 Gbit/s = 1 ns
+        assert_eq!(ps_for_bits(1, 1.0), Time::from_ns(1));
+        // 496 B payload at 100.8 Gbit/s (12 lanes x 8.4)
+        let t = ps_for_bits(496 * 8, 100.8);
+        assert!((t.ns_f64() - 39.365).abs() < 0.01, "{}", t.ns_f64());
+    }
+
+    #[test]
+    fn ordering_and_arith() {
+        let a = Time::from_ns(5);
+        let b = Time::from_ns(3);
+        assert!(a > b);
+        assert_eq!((a - b).ps(), 2_000);
+        assert_eq!((a + b).ps(), 8_000);
+        assert_eq!((a * 2).ps(), 10_000);
+        assert_eq!((a / 5).ps(), 1_000);
+        assert_eq!(b.saturating_sub(a), Time::ZERO);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Time::from_ps(500)), "500ps");
+        assert_eq!(format!("{}", Time::from_ns(1)), "1.00ns");
+        assert_eq!(format!("{}", Time::from_us(2)), "2.00us");
+        assert_eq!(format!("{}", Time::from_ms(3)), "3.000ms");
+        assert_eq!(format!("{}", Time::from_s(4)), "4.000s");
+    }
+
+    #[test]
+    fn from_secs_f64() {
+        assert_eq!(Time::from_secs_f64(1e-3), Time::from_ms(1));
+        assert_eq!(Time::from_secs_f64(0.0), Time::ZERO);
+    }
+}

@@ -1,0 +1,332 @@
+//! Declarative command-line argument parsing (offline replacement for clap).
+//!
+//! Supports subcommands, `--key value`, `--key=value`, boolean `--flag`s,
+//! positional arguments, defaults, and auto-generated `--help` text.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the rpath to libxla_extension)
+//! use bss_extoll::util::args::ArgSpec;
+//! let spec = ArgSpec::new("simulate", "run a spike-communication simulation")
+//!     .opt("wafers", "4", "number of wafer modules")
+//!     .flag("verbose", "chatty output")
+//!     .pos("config", "path to experiment config JSON");
+//! let parsed = spec.parse(&["--wafers".into(), "2".into(), "cfg.json".into()]).unwrap();
+//! assert_eq!(parsed.get_u64("wafers"), 2);
+//! assert_eq!(parsed.positional("config").unwrap(), "cfg.json");
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One named option (with default) or boolean flag.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    default: Option<String>, // None ⇒ boolean flag
+    help: String,
+}
+
+/// Declarative specification of a (sub)command's arguments.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    pub name: String,
+    pub about: String,
+    opts: Vec<Opt>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed argument values.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: BTreeMap<String, String>,
+}
+
+/// Argument parsing error (unknown option, missing value, bad number ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl ArgSpec {
+    pub fn new(name: &str, about: &str) -> Self {
+        ArgSpec {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Add a valued option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Add a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Add a required positional argument.
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                match &o.default {
+                    Some(d) => s.push_str(&format!(
+                        "  --{} <value>  {} [default: {}]\n",
+                        o.name, o.help, d
+                    )),
+                    None => s.push_str(&format!("  --{}  {}\n", o.name, o.help)),
+                }
+            }
+        }
+        s
+    }
+
+    /// Parse a token list (not including argv[0] / the subcommand name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Parsed, ArgError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for o in &self.opts {
+            match &o.default {
+                Some(d) => {
+                    values.insert(o.name.clone(), d.clone());
+                }
+                None => {
+                    flags.insert(o.name.clone(), false);
+                }
+            }
+        }
+        let mut positionals = BTreeMap::new();
+        let mut pos_idx = 0usize;
+
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if key == "help" {
+                    return Err(ArgError(self.help()));
+                }
+                if flags.contains_key(&key) {
+                    if let Some(v) = inline_val {
+                        let b = v
+                            .parse::<bool>()
+                            .map_err(|_| ArgError(format!("--{key} expects true/false")))?;
+                        flags.insert(key, b);
+                    } else {
+                        flags.insert(key, true);
+                    }
+                } else if values.contains_key(&key) {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError(format!("--{key} requires a value")))?
+                        }
+                    };
+                    values.insert(key, v);
+                } else {
+                    return Err(ArgError(format!(
+                        "unknown option --{key} (see --help for {})",
+                        self.name
+                    )));
+                }
+            } else {
+                let slot = self
+                    .positionals
+                    .get(pos_idx)
+                    .ok_or_else(|| ArgError(format!("unexpected positional argument '{tok}'")))?;
+                positionals.insert(slot.0.clone(), tok.clone());
+                pos_idx += 1;
+            }
+            i += 1;
+        }
+
+        if pos_idx < self.positionals.len() {
+            return Err(ArgError(format!(
+                "missing required argument <{}>",
+                self.positionals[pos_idx].0
+            )));
+        }
+
+        Ok(Parsed {
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+impl Parsed {
+    /// Raw string value of an option (panics on unknown name — spec bug).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not in spec"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} is not a valid integer: {}", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_u64(name) as usize
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} is not a valid number: {}", self.get(name)))
+    }
+
+    /// Checked variants (for user-facing error messages).
+    pub fn try_u64(&self, name: &str) -> Result<u64, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError(format!("--{name}: expected integer, got '{}'", self.get(name))))
+    }
+
+    pub fn try_f64(&self, name: &str) -> Result<f64, ArgError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| ArgError(format!("--{name}: expected number, got '{}'", self.get(name))))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not in spec"))
+    }
+
+    pub fn positional(&self, name: &str) -> Option<&str> {
+        self.positionals.get(name).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "test command")
+            .opt("wafers", "4", "wafer count")
+            .opt("rate", "0.5", "event rate")
+            .flag("verbose", "chatty")
+            .pos("config", "config path")
+    }
+
+    fn toks(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&toks(&["cfg.json"])).unwrap();
+        assert_eq!(p.get_u64("wafers"), 4);
+        assert_eq!(p.get_f64("rate"), 0.5);
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.positional("config").unwrap(), "cfg.json");
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = spec()
+            .parse(&toks(&["--wafers", "8", "--rate=0.9", "c.json"]))
+            .unwrap();
+        assert_eq!(p.get_u64("wafers"), 8);
+        assert_eq!(p.get_f64("rate"), 0.9);
+    }
+
+    #[test]
+    fn flags_set() {
+        let p = spec().parse(&toks(&["--verbose", "c.json"])).unwrap();
+        assert!(p.flag("verbose"));
+        let p = spec().parse(&toks(&["--verbose=false", "c.json"])).unwrap();
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = spec().parse(&toks(&["--nope", "1", "c.json"])).unwrap_err();
+        assert!(e.0.contains("unknown option"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = spec().parse(&toks(&["c.json", "--wafers"])).unwrap_err();
+        assert!(e.0.contains("requires a value"));
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let e = spec().parse(&toks(&["--wafers", "2"])).unwrap_err();
+        assert!(e.0.contains("missing required argument"));
+    }
+
+    #[test]
+    fn extra_positional_errors() {
+        let e = spec().parse(&toks(&["a.json", "b.json"])).unwrap_err();
+        assert!(e.0.contains("unexpected positional"));
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = spec().help();
+        assert!(h.contains("--wafers"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("<config>"));
+        assert!(h.contains("[default: 4]"));
+    }
+
+    #[test]
+    fn try_parsers_report_errors() {
+        let p = spec().parse(&toks(&["--wafers", "abc", "c.json"])).unwrap();
+        assert!(p.try_u64("wafers").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Micro-benchmark harness (offline replacement for criterion).
+//!
+//! Each `[[bench]]` target (with `harness = false`) builds a [`BenchSuite`],
+//! registers closures, and calls [`BenchSuite::run`]. The harness does
+//! warmup, timed batches, outlier-robust summary (median of batch means),
+//! and prints aligned rows plus an optional JSON record for EXPERIMENTS.md.
+//!
+//! Throughput-style benches (events/s over simulated time) don't fit the
+//! ns/op mold; those use [`Row`]/[`Table`] to print paper-style result
+//! tables directly.
+
+use std::time::Instant;
+
+use super::stats::OnlineStats;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// median ns per iteration
+    pub ns_per_iter: f64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: u64,
+    /// optional caller-provided "items per iteration" for throughput
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    /// items/second implied by median time (NaN if items_per_iter unset).
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / (self.ns_per_iter * 1e-9)
+    }
+}
+
+/// Micro-benchmark suite: warmup + batched timing.
+pub struct BenchSuite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+    min_batches: u32,
+    target_batch_ns: f64,
+    warmup_ns: f64,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // Allow quick runs: BSS_BENCH_FAST=1 shrinks timing budget ~10x.
+        let fast = std::env::var("BSS_BENCH_FAST").is_ok();
+        BenchSuite {
+            title: title.to_string(),
+            results: Vec::new(),
+            min_batches: if fast { 5 } else { 15 },
+            target_batch_ns: if fast { 2e6 } else { 2e7 },
+            warmup_ns: if fast { 5e6 } else { 5e7 },
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_items(name, 1.0, move || {
+            f();
+        })
+    }
+
+    /// Time `f` and attach an items-per-iteration count for throughput rows.
+    pub fn bench_items(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warmup and per-call cost estimate.
+        let mut calls_done = 0u64;
+        let warm_start = Instant::now();
+        loop {
+            f();
+            calls_done += 1;
+            if warm_start.elapsed().as_nanos() as f64 >= self.warmup_ns {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / calls_done as f64).max(0.5);
+        let batch_iters = (self.target_batch_ns / est_ns).ceil().max(1.0) as u64;
+
+        // Timed batches; summary = median of batch means (outlier-robust).
+        let mut batch_means: Vec<f64> = Vec::with_capacity(self.min_batches as usize);
+        let mut stats = OnlineStats::new();
+        for _ in 0..self.min_batches {
+            let t0 = Instant::now();
+            for _ in 0..batch_iters {
+                f();
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / batch_iters as f64;
+            batch_means.push(per_iter);
+            stats.push(per_iter);
+        }
+        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = batch_means[batch_means.len() / 2];
+
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            ns_per_iter: median,
+            mean_ns: stats.mean(),
+            std_ns: stats.std(),
+            iters: batch_iters * self.min_batches as u64,
+            items_per_iter,
+        });
+        let r = self.results.last().unwrap();
+        let thr = if items_per_iter > 1.0 {
+            format!("  ({:.3e} items/s)", r.items_per_sec())
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:<48} {:>12.1} ns/iter  ±{:>8.1}{}",
+            r.name, r.ns_per_iter, r.std_ns, thr
+        );
+        r
+    }
+
+    /// Print the header; call before benches for nice grouping.
+    pub fn header(&self) {
+        println!("\n== {} ==", self.title);
+    }
+
+    /// Final one-line summary per result (already printed incrementally).
+    pub fn finish(&self) {
+        println!(
+            "== {}: {} benchmarks done ==\n",
+            self.title,
+            self.results.len()
+        );
+    }
+}
+
+/// A paper-style results table (fixed columns, aligned, markdown-friendly).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a markdown table (also pleasant in a terminal).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.columns, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &widths));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a f64 with engineering-style precision for table cells.
+pub fn eng(x: f64) -> String {
+    if !x.is_finite() {
+        return "-".to_string();
+    }
+    let a = x.abs();
+    if a == 0.0 {
+        "0".to_string()
+    } else if a >= 1e9 {
+        format!("{:.3e}", x)
+    } else if a >= 100.0 {
+        format!("{:.0}", x)
+    } else if a >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.4}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BSS_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("selftest");
+        let mut acc = 0u64;
+        let r = suite
+            .bench("noop-ish", || {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            })
+            .clone();
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.ns_per_iter < 1e6, "a multiply took {} ns?!", r.ns_per_iter);
+        assert!(acc != 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            ns_per_iter: 100.0,
+            mean_ns: 100.0,
+            std_ns: 0.0,
+            iters: 1,
+            items_per_iter: 10.0,
+        };
+        assert!((r.items_per_sec() - 1e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "column_b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("| a   | column_b |"));
+        assert!(s.contains("| 333 | 4        |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn eng_formatting() {
+        assert_eq!(eng(0.0), "0");
+        assert_eq!(eng(1234.0), "1234");
+        assert_eq!(eng(12.345), "12.35");
+        assert_eq!(eng(0.01234), "0.0123");
+        assert_eq!(eng(f64::NAN), "-");
+        assert!(eng(3.2e12).contains('e'));
+    }
+}

@@ -1,0 +1,12 @@
+//! Zero-dependency substrates: CLI argument parsing, JSON, deterministic
+//! RNG, statistics, and a micro-benchmark harness.
+//!
+//! This build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! conveniences usually imported from crates.io — `clap`, `serde_json`,
+//! `rand`, `criterion` — are implemented here as small, well-tested modules.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

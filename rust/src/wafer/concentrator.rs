@@ -1,0 +1,206 @@
+//! Concentrator node (paper §1, Fig. 1).
+//!
+//! "6 of these FPGAs are gathered at one of 8 concentrator nodes per wafer
+//! module, connecting them to one torus node, respectively."
+//!
+//! The concentrator is the aggregation switch between 6 communication
+//! FPGAs (each with its own Extoll link) and the local port of one
+//! Tourmalet: it muxes FPGA packets into the NIC (crediting the FPGA when
+//! a packet is taken), and demuxes delivered packets to the right FPGA by
+//! the `dst_fpga` field of the spike batch.
+
+use crate::extoll::packet::PacketKind;
+use crate::extoll::torus::LOCAL_PORT;
+use crate::msg::Msg;
+use crate::sim::{Actor, ActorId, Ctx, Time};
+
+/// Number of FPGAs gathered per concentrator (paper Fig. 1).
+pub const FPGAS_PER_CONCENTRATOR: usize = 6;
+
+/// Concentrator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ConcentratorConfig {
+    /// Mux latency per packet towards the NIC.
+    pub mux_latency: Time,
+    /// Demux latency per packet towards an FPGA.
+    pub demux_latency: Time,
+}
+
+impl Default for ConcentratorConfig {
+    fn default() -> Self {
+        ConcentratorConfig {
+            mux_latency: Time::from_ns(25),
+            demux_latency: Time::from_ns(25),
+        }
+    }
+}
+
+/// Concentrator statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ConcentratorStats {
+    pub muxed: u64,
+    pub demuxed: u64,
+    pub host_bound: u64,
+}
+
+/// The concentrator actor.
+pub struct Concentrator {
+    pub cfg: ConcentratorConfig,
+    /// Downstream FPGAs (index = `dst_fpga`).
+    fpgas: Vec<Option<ActorId>>,
+    /// Our Tourmalet NIC.
+    nic: Option<ActorId>,
+    pub stats: ConcentratorStats,
+}
+
+impl Default for Concentrator {
+    fn default() -> Self {
+        Self::new(ConcentratorConfig::default(), FPGAS_PER_CONCENTRATOR)
+    }
+}
+
+impl Concentrator {
+    pub fn new(cfg: ConcentratorConfig, n_fpgas: usize) -> Self {
+        Concentrator {
+            cfg,
+            fpgas: vec![None; n_fpgas],
+            nic: None,
+            stats: ConcentratorStats::default(),
+        }
+    }
+
+    pub fn attach_nic(&mut self, id: ActorId) {
+        self.nic = Some(id);
+    }
+
+    pub fn attach_fpga(&mut self, idx: u8, id: ActorId) {
+        self.fpgas[idx as usize] = Some(id);
+    }
+}
+
+impl Actor<Msg> for Concentrator {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            // FPGA → fabric: mux into the NIC, credit the FPGA
+            Msg::Inject(mut p) => {
+                self.stats.muxed += 1;
+                if let Some((src_actor, _, _)) = p.ingress.take() {
+                    // concentrator input buffer slot freed once forwarded
+                    ctx.send(
+                        src_actor,
+                        self.cfg.mux_latency,
+                        Msg::Credit {
+                            port: LOCAL_PORT,
+                            vc: 0,
+                        },
+                    );
+                }
+                let nic = self.nic.expect("concentrator has no nic");
+                ctx.send(nic, self.cfg.mux_latency, Msg::Inject(p));
+            }
+            // fabric → FPGA: demux by dst_fpga
+            Msg::Deliver(p) => {
+                match &p.kind {
+                    PacketKind::SpikeBatch { dst_fpga, .. } => {
+                        self.stats.demuxed += 1;
+                        let f = self.fpgas[*dst_fpga as usize]
+                            .unwrap_or_else(|| panic!("no fpga {dst_fpga} attached"));
+                        ctx.send(f, self.cfg.demux_latency, Msg::Deliver(p));
+                    }
+                    PacketKind::Notification { .. } | PacketKind::RmaPut { .. } => {
+                        // host-protocol packets addressed to a wafer node are
+                        // routed to FPGA 0's stream unit by convention
+                        self.stats.host_bound += 1;
+                        let f = self.fpgas[0].expect("no fpga 0 attached");
+                        ctx.send(f, self.cfg.demux_latency, Msg::Deliver(p));
+                    }
+                    PacketKind::Raw => {
+                        self.stats.demuxed += 1;
+                        // raw packets are used by fabric-level tests only;
+                        // deliver to FPGA 0 if attached, else drop
+                        if let Some(f) = self.fpgas[0] {
+                            ctx.send(f, self.cfg.demux_latency, Msg::Deliver(p));
+                        }
+                    }
+                }
+            }
+            Msg::Credit { .. } => {}
+            other => panic!("concentrator: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "concentrator".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::packet::Packet;
+    use crate::extoll::torus::NodeAddr;
+    use crate::fpga::event::RoutedEvent;
+    use crate::fpga::lookup::EndpointAddr;
+    use crate::sim::Sim;
+
+    struct Probe {
+        got: Vec<(Time, Msg)>,
+    }
+
+    impl Actor<Msg> for Probe {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+            self.got.push((ctx.now(), msg));
+        }
+    }
+
+    #[test]
+    fn mux_forwards_and_credits() {
+        let mut sim = Sim::new();
+        let conc = sim.add(Concentrator::default());
+        let nic = sim.add(Probe { got: vec![] });
+        let fpga = sim.add(Probe { got: vec![] });
+        sim.get_mut::<Concentrator>(conc).attach_nic(nic);
+        let mut p = Packet::raw(NodeAddr(0), NodeAddr(1), 64, Time::ZERO, 1);
+        p.ingress = Some((fpga, LOCAL_PORT, 0));
+        sim.schedule(Time::ZERO, conc, Msg::Inject(p));
+        sim.run_to_completion();
+        let nic_probe: &Probe = sim.get(nic);
+        assert_eq!(nic_probe.got.len(), 1);
+        assert!(matches!(nic_probe.got[0].1, Msg::Inject(_)));
+        assert_eq!(nic_probe.got[0].0, Time::from_ns(25));
+        let fpga_probe: &Probe = sim.get(fpga);
+        assert!(matches!(
+            fpga_probe.got[0].1,
+            Msg::Credit {
+                port: LOCAL_PORT,
+                vc: 0
+            }
+        ));
+    }
+
+    #[test]
+    fn demux_routes_by_dst_fpga() {
+        let mut sim = Sim::new();
+        let conc = sim.add(Concentrator::default());
+        let fpgas: Vec<_> = (0..6).map(|_| sim.add(Probe { got: vec![] })).collect();
+        for (i, &f) in fpgas.iter().enumerate() {
+            sim.get_mut::<Concentrator>(conc).attach_fpga(i as u8, f);
+        }
+        for fidx in [0u8, 3, 5] {
+            let p = Packet::spike_batch(
+                NodeAddr(7),
+                EndpointAddr::new(NodeAddr(0), fidx),
+                vec![RoutedEvent::new(1, 2, Time::ZERO)],
+                Time::ZERO,
+                fidx as u64,
+            );
+            sim.schedule(Time::ZERO, conc, Msg::Deliver(p));
+        }
+        sim.run_to_completion();
+        for (i, &f) in fpgas.iter().enumerate() {
+            let probe: &Probe = sim.get(f);
+            let expect = matches!(i, 0 | 3 | 5) as usize;
+            assert_eq!(probe.got.len(), expect, "fpga {i}");
+        }
+    }
+}

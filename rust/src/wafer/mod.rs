@@ -1,0 +1,9 @@
+//! Wafer-module assembly (paper §1, Fig. 1): 48 communication FPGAs per
+//! wafer gathered at 8 concentrator nodes of the Extoll torus, plus the
+//! multi-wafer system builder.
+
+pub mod concentrator;
+pub mod system;
+
+pub use concentrator::{Concentrator, ConcentratorConfig, FPGAS_PER_CONCENTRATOR};
+pub use system::{System, SystemConfig, Wafer, CONCENTRATORS_PER_WAFER, FPGAS_PER_WAFER};

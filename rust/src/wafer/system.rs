@@ -1,0 +1,358 @@
+//! Multi-wafer system builder (paper Fig. 1).
+//!
+//! Assembles the complete simulated machine: an Extoll 3D-torus fabric of
+//! Tourmalet NICs, one or more BrainScaleS wafer modules — each with 48
+//! communication FPGAs gathered at 8 concentrator nodes (6 FPGAs per
+//! concentrator, the topology the paper argues is bandwidth-optimal) —
+//! plus optional host nodes. The concentrators-per-wafer fan-in is a
+//! parameter so `bench_topology` can sweep the alternatives the paper's
+//! Fig. 1 implicitly compares against.
+
+use crate::extoll::network::Fabric;
+use crate::extoll::nic::{Nic, NicConfig};
+use crate::extoll::torus::{NodeAddr, TorusSpec};
+use crate::fpga::fpga::{Fpga, FpgaConfig};
+use crate::fpga::lookup::{EndpointAddr, RxEntry, TxEntry};
+use crate::fpga::manager::ManagerConfig;
+use crate::msg::Msg;
+use crate::sim::{ActorId, Sim};
+use crate::util::stats::Histogram;
+
+use super::concentrator::{Concentrator, ConcentratorConfig};
+
+/// Number of reticles (= communication FPGAs) per wafer module (paper §1).
+pub const FPGAS_PER_WAFER: usize = 48;
+/// Concentrator nodes per wafer in the paper's proposed topology (Fig. 1).
+pub const CONCENTRATORS_PER_WAFER: usize = 8;
+
+/// System configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SystemConfig {
+    /// Number of wafer modules.
+    pub n_wafers: usize,
+    /// Torus dimensions; must provide ≥ `n_wafers × concentrators_per_wafer`
+    /// nodes (extra nodes may host compute hosts).
+    pub torus: TorusSpec,
+    /// NIC/link parameters.
+    pub nic: NicConfig,
+    /// Bucket-manager parameters for every FPGA.
+    pub manager: ManagerConfig,
+    /// Concentrator mux/demux latencies.
+    pub concentrator: ConcentratorConfig,
+    /// FPGAs per wafer (48 in hardware; smaller for unit experiments).
+    pub fpgas_per_wafer: usize,
+    /// Concentrator nodes per wafer — the Fig. 1 sweep parameter.
+    pub concentrators_per_wafer: usize,
+    /// FPGA egress link rate (Gbit/s).
+    pub fpga_egress_gbps: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(4, 2, 2),
+            nic: NicConfig::default(),
+            manager: ManagerConfig::default(),
+            concentrator: ConcentratorConfig::default(),
+            fpgas_per_wafer: FPGAS_PER_WAFER,
+            concentrators_per_wafer: CONCENTRATORS_PER_WAFER,
+            fpga_egress_gbps: 4.0 * 8.4,
+        }
+    }
+}
+
+/// One built wafer module.
+#[derive(Clone, Debug)]
+pub struct Wafer {
+    pub index: usize,
+    /// Torus nodes of this wafer's concentrators.
+    pub nodes: Vec<NodeAddr>,
+    pub concentrators: Vec<ActorId>,
+    /// FPGA actors, indexed `concentrator * fan_in + slot`.
+    pub fpgas: Vec<ActorId>,
+    /// Network endpoint of each FPGA (parallel to `fpgas`).
+    pub endpoints: Vec<EndpointAddr>,
+}
+
+/// The assembled system.
+pub struct System {
+    pub cfg: SystemConfig,
+    pub fabric: Fabric,
+    pub wafers: Vec<Wafer>,
+}
+
+impl System {
+    /// Build fabric, wafers, concentrators and FPGAs, and wire everything.
+    pub fn build(sim: &mut Sim<Msg>, cfg: SystemConfig) -> System {
+        assert!(
+            cfg.fpgas_per_wafer % cfg.concentrators_per_wafer == 0,
+            "fpgas_per_wafer must divide evenly among concentrators"
+        );
+        let fan_in = cfg.fpgas_per_wafer / cfg.concentrators_per_wafer;
+        assert!(fan_in <= 64, "endpoint addressing supports ≤64 FPGAs per node");
+        let needed = cfg.n_wafers * cfg.concentrators_per_wafer;
+        assert!(
+            cfg.torus.n_nodes() >= needed,
+            "torus has {} nodes, need {needed}",
+            cfg.torus.n_nodes()
+        );
+        let fabric = Fabric::build(sim, cfg.torus, cfg.nic);
+        let mut wafers = Vec::with_capacity(cfg.n_wafers);
+        for w in 0..cfg.n_wafers {
+            let mut nodes = Vec::new();
+            let mut concentrators = Vec::new();
+            let mut fpgas = Vec::new();
+            let mut endpoints = Vec::new();
+            for c in 0..cfg.concentrators_per_wafer {
+                let node = NodeAddr((w * cfg.concentrators_per_wafer + c) as u16);
+                let conc = sim.add(Concentrator::new(cfg.concentrator, fan_in));
+                sim.get_mut::<Nic>(fabric.nics[node.0 as usize]).attach_local(conc);
+                sim.get_mut::<Concentrator>(conc)
+                    .attach_nic(fabric.nics[node.0 as usize]);
+                for slot in 0..fan_in {
+                    let endpoint = EndpointAddr::new(node, slot as u8);
+                    let fpga = sim.add(Fpga::new(FpgaConfig {
+                        endpoint,
+                        manager: cfg.manager,
+                        egress_gbps: cfg.fpga_egress_gbps,
+                        ..FpgaConfig::default()
+                    }));
+                    sim.get_mut::<Fpga>(fpga).attach_uplink(conc);
+                    sim.get_mut::<Concentrator>(conc).attach_fpga(slot as u8, fpga);
+                    fpgas.push(fpga);
+                    endpoints.push(endpoint);
+                }
+                nodes.push(node);
+                concentrators.push(conc);
+            }
+            wafers.push(Wafer {
+                index: w,
+                nodes,
+                concentrators,
+                fpgas,
+                endpoints,
+            });
+        }
+        System {
+            cfg,
+            fabric,
+            wafers,
+        }
+    }
+
+    /// Total FPGAs in the system.
+    pub fn n_fpgas(&self) -> usize {
+        self.wafers.iter().map(|w| w.fpgas.len()).sum()
+    }
+
+    /// Iterate (wafer index, fpga slot, actor id, endpoint).
+    pub fn fpgas(&self) -> impl Iterator<Item = (usize, usize, ActorId, EndpointAddr)> + '_ {
+        self.wafers.iter().flat_map(|w| {
+            w.fpgas
+                .iter()
+                .zip(w.endpoints.iter())
+                .enumerate()
+                .map(move |(i, (&id, &ep))| (w.index, i, id, ep))
+        })
+    }
+
+    /// Program a spike route: events with `pulse_addr` on `hicann` of the
+    /// source FPGA are sent to the destination FPGA under `guid`, where
+    /// they are multicast to `hicann_mask` with translated `local_pulse`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn program_route(
+        &self,
+        sim: &mut Sim<Msg>,
+        src: (usize, usize),
+        hicann: u8,
+        pulse_addr: u16,
+        dst: (usize, usize),
+        guid: u16,
+        hicann_mask: u8,
+        local_pulse: u16,
+    ) {
+        let dst_ep = self.wafers[dst.0].endpoints[dst.1];
+        let src_actor = self.wafers[src.0].fpgas[src.1];
+        sim.get_mut::<Fpga>(src_actor).tx_lut.set(
+            hicann,
+            pulse_addr,
+            TxEntry {
+                dest: dst_ep,
+                guid,
+            },
+        );
+        let dst_actor = self.wafers[dst.0].fpgas[dst.1];
+        sim.get_mut::<Fpga>(dst_actor).rx_lut.set(
+            guid,
+            RxEntry {
+                hicann_mask,
+                pulse_addr: local_pulse,
+            },
+        );
+    }
+
+    // ---- aggregated statistics -------------------------------------------
+
+    pub fn total_events_in(&self, sim: &Sim<Msg>) -> u64 {
+        self.fpgas()
+            .map(|(_, _, id, _)| sim.get::<Fpga>(id).stats.events_in)
+            .sum()
+    }
+
+    pub fn total_events_out(&self, sim: &Sim<Msg>) -> u64 {
+        self.fpgas()
+            .map(|(_, _, id, _)| sim.get::<Fpga>(id).stats.events_out)
+            .sum()
+    }
+
+    pub fn total_packets_out(&self, sim: &Sim<Msg>) -> u64 {
+        self.fpgas()
+            .map(|(_, _, id, _)| sim.get::<Fpga>(id).stats.packets_out)
+            .sum()
+    }
+
+    pub fn total_rx_events(&self, sim: &Sim<Msg>) -> u64 {
+        self.fpgas()
+            .map(|(_, _, id, _)| sim.get::<Fpga>(id).stats.rx_events)
+            .sum()
+    }
+
+    pub fn total_deadline_misses(&self, sim: &Sim<Msg>) -> u64 {
+        self.fpgas()
+            .map(|(_, _, id, _)| sim.get::<Fpga>(id).stats.playback.deadline_misses)
+            .sum()
+    }
+
+    /// Mean events per packet over the whole system.
+    pub fn mean_batch_size(&self, sim: &Sim<Msg>) -> f64 {
+        let ev = self.total_events_out(sim);
+        let pk = self.total_packets_out(sim);
+        if pk == 0 {
+            f64::NAN
+        } else {
+            ev as f64 / pk as f64
+        }
+    }
+
+    /// Merged end-to-end event latency histogram (source-FPGA ingress →
+    /// destination playback), picoseconds.
+    pub fn latency_histogram(&self, sim: &Sim<Msg>) -> Histogram {
+        let mut h = Histogram::new();
+        for (_, _, id, _) in self.fpgas() {
+            h.merge(&sim.get::<Fpga>(id).stats.playback.latency_ps);
+        }
+        h
+    }
+
+    /// Flush every FPGA's buckets (experiment barrier) by scheduling the
+    /// external-flush timer at the current simulation time.
+    pub fn flush_all(&self, sim: &mut Sim<Msg>) {
+        let now = sim.now;
+        for (_, _, id, _) in self.fpgas().collect::<Vec<_>>() {
+            sim.schedule(now, id, Msg::Timer(crate::fpga::fpga::TIMER_FLUSH_ALL));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::event::SpikeEvent;
+    use crate::sim::Time;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(4, 2, 2),
+            fpgas_per_wafer: 12,
+            concentrators_per_wafer: 4,
+            ..SystemConfig::default()
+        }
+    }
+
+    #[test]
+    fn build_wires_everything() {
+        let mut sim = Sim::new();
+        let sys = System::build(&mut sim, small_cfg());
+        assert_eq!(sys.n_fpgas(), 24);
+        assert_eq!(sys.wafers.len(), 2);
+        assert_eq!(sys.wafers[0].concentrators.len(), 4);
+        assert_eq!(sys.wafers[1].nodes[0], NodeAddr(4));
+        // endpoints are unique
+        let mut eps: Vec<u16> = sys.fpgas().map(|(_, _, _, ep)| ep.as_u16()).collect();
+        eps.sort_unstable();
+        eps.dedup();
+        assert_eq!(eps.len(), 24);
+    }
+
+    #[test]
+    fn cross_wafer_spike_roundtrip() {
+        let mut sim = Sim::new();
+        let sys = System::build(&mut sim, small_cfg());
+        // wafer 0, fpga 0, hicann 2, pulse 77 → wafer 1, fpga 5, guid 900
+        sys.program_route(&mut sim, (0, 0), 2, 77, (1, 5), 900, 0b0000_1000, 0x155);
+        let src = sys.wafers[0].fpgas[0];
+        // deadline 2000 cycles ≈ 9.5 µs
+        sim.schedule(
+            Time::from_ns(100),
+            src,
+            Msg::HicannEvent(SpikeEvent::new(2, 77, 2000)),
+        );
+        sim.run_until(Time::from_ms(1));
+        let dst: &Fpga = sim.get(sys.wafers[1].fpgas[5]);
+        assert_eq!(dst.stats.rx_events, 1, "event did not arrive");
+        assert_eq!(dst.stats.playback.per_hicann[3], 1);
+        assert_eq!(dst.rx_buffer.len(), 1);
+        assert_eq!(dst.rx_buffer[0].1, 0x155);
+        assert_eq!(dst.stats.playback.deadline_misses, 0);
+        assert_eq!(sys.total_events_in(&sim), 1);
+        assert_eq!(sys.total_events_out(&sim), 1);
+    }
+
+    #[test]
+    fn paper_topology_dimensions() {
+        // the real Fig. 1 numbers: 48 FPGAs, 8 concentrators, 6 per node
+        let mut sim = Sim::new();
+        let cfg = SystemConfig {
+            n_wafers: 1,
+            torus: TorusSpec::new(2, 2, 2),
+            ..SystemConfig::default()
+        };
+        let sys = System::build(&mut sim, cfg);
+        assert_eq!(sys.n_fpgas(), 48);
+        assert_eq!(sys.wafers[0].concentrators.len(), 8);
+        assert_eq!(sys.wafers[0].fpgas.len() / sys.wafers[0].concentrators.len(), 6);
+    }
+
+    #[test]
+    fn flush_all_drains_buckets() {
+        let mut sim = Sim::new();
+        let sys = System::build(&mut sim, small_cfg());
+        sys.program_route(&mut sim, (0, 1), 0, 5, (1, 2), 321, 0b1, 0);
+        let src = sys.wafers[0].fpgas[1];
+        // far-future deadline: would sit in the bucket for a long time
+        sim.schedule(
+            Time::from_ns(10),
+            src,
+            Msg::HicannEvent(SpikeEvent::new(0, 5, 0x3F00)),
+        );
+        sim.run_until(Time::from_us(10));
+        assert_eq!(sys.total_rx_events(&sim), 0, "should still be bucketed");
+        sys.flush_all(&mut sim);
+        sim.run_until(Time::from_us(100));
+        assert_eq!(sys.total_rx_events(&sim), 1, "flush_all did not deliver");
+    }
+
+    #[test]
+    #[should_panic(expected = "torus has")]
+    fn too_small_torus_rejected() {
+        let mut sim = Sim::new();
+        let cfg = SystemConfig {
+            n_wafers: 4,
+            torus: TorusSpec::new(2, 2, 2),
+            ..SystemConfig::default()
+        };
+        let _ = System::build(&mut sim, cfg);
+    }
+}

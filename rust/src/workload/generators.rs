@@ -1,0 +1,359 @@
+//! Spike-traffic generator actors.
+//!
+//! Generators stand in for the HICANN chips: they emit [`SpikeEvent`]s to
+//! an FPGA actor, respecting the per-link pacing of the 8 × 1 Gbit/s
+//! HICANN links (paper §1) — i.e. at most one event per
+//! [`HicannLinkConfig::event_spacing`] per link, ≈210 Mevent/s aggregate.
+//!
+//! [`PoissonGen`] draws exponential inter-event times (biologically
+//! realistic spike trains); [`RegularGen`] emits at a fixed interval
+//! (ceiling/saturation measurements).
+
+use crate::fpga::event::{systime_of, SpikeEvent, TS_MASK};
+use crate::fpga::hicann::{HicannLinkConfig, HICANNS_PER_FPGA};
+use crate::msg::Msg;
+use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::util::rng::Rng;
+
+/// Timer tag base: per-HICANN-link generator wake-up (tag = base + link).
+pub const TIMER_GEN_BASE: u32 = 100;
+
+/// Shared generator configuration.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// Pulse addresses to draw from, per HICANN link (sources must match
+    /// the routes programmed into the FPGA's TX lookup table).
+    pub sources: Vec<(u8, u16)>,
+    /// Aggregate event rate across all 8 links, events/s.
+    pub rate_hz: f64,
+    /// Deadline offset added to the emission time, in systime units.
+    pub deadline_offset: u16,
+    /// Stop generating at this simulation time (None = run forever).
+    pub until: Option<Time>,
+    /// HICANN link pacing parameters.
+    pub link: HicannLinkConfig,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            sources: vec![(0, 0)],
+            rate_hz: 1e6,
+            deadline_offset: 2000,
+            until: None,
+            link: HicannLinkConfig::default(),
+        }
+    }
+}
+
+/// Generator statistics.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub generated: u64,
+    /// Events delayed by link pacing (wanted to fire earlier).
+    pub paced: u64,
+}
+
+/// Poisson spike generator: exponential inter-arrival per HICANN link.
+pub struct PoissonGen {
+    pub cfg: GenConfig,
+    fpga: ActorId,
+    rng: Rng,
+    /// Sources grouped by link for fast draw.
+    by_link: [Vec<u16>; HICANNS_PER_FPGA],
+    /// Earliest next allowed emission per link (pacing).
+    link_free: [Time; HICANNS_PER_FPGA],
+    pub stats: GenStats,
+}
+
+impl PoissonGen {
+    pub fn new(cfg: GenConfig, fpga: ActorId, seed: u64) -> Self {
+        let mut by_link: [Vec<u16>; HICANNS_PER_FPGA] = Default::default();
+        for &(h, p) in &cfg.sources {
+            by_link[h as usize].push(p);
+        }
+        PoissonGen {
+            cfg,
+            fpga,
+            rng: Rng::new(seed),
+            by_link,
+            link_free: [Time::ZERO; HICANNS_PER_FPGA],
+            stats: GenStats::default(),
+        }
+    }
+
+    fn active_links(&self) -> Vec<u8> {
+        (0..HICANNS_PER_FPGA as u8)
+            .filter(|&h| !self.by_link[h as usize].is_empty())
+            .collect()
+    }
+
+    /// Per-link rate (aggregate split over active links).
+    fn link_rate(&self) -> f64 {
+        let n = self.active_links().len().max(1);
+        self.cfg.rate_hz / n as f64
+    }
+
+    fn schedule_next(&mut self, link: u8, ctx: &mut Ctx<'_, Msg>) {
+        let gap = self.rng.exponential(self.link_rate());
+        let mut at = ctx.now() + Time::from_secs_f64(gap);
+        let free = self.link_free[link as usize];
+        if at < free {
+            at = free;
+            self.stats.paced += 1;
+        }
+        if let Some(until) = self.cfg.until {
+            if at > until {
+                return;
+            }
+        }
+        ctx.send_at(
+            ctx.self_id(),
+            at,
+            Msg::Timer(TIMER_GEN_BASE + link as u32),
+        );
+    }
+
+    fn emit(&mut self, link: u8, ctx: &mut Ctx<'_, Msg>) {
+        let pulses = &self.by_link[link as usize];
+        let pulse = pulses[self.rng.index(pulses.len())];
+        let ts = (systime_of(ctx.now()) as u32 + self.cfg.deadline_offset as u32) as u16 & TS_MASK;
+        let ev = SpikeEvent::new(link, pulse, ts);
+        self.link_free[link as usize] = ctx.now() + self.cfg.link.event_spacing();
+        self.stats.generated += 1;
+        ctx.send(self.fpga, Time::ZERO, Msg::HicannEvent(ev));
+    }
+}
+
+impl Actor<Msg> for PoissonGen {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(t) if t >= TIMER_GEN_BASE => {
+                let link = (t - TIMER_GEN_BASE) as u8;
+                self.emit(link, ctx);
+                self.schedule_next(link, ctx);
+            }
+            Msg::Timer(0) => {
+                // kick-off: schedule all active links
+                for link in self.active_links() {
+                    self.schedule_next(link, ctx);
+                }
+            }
+            other => panic!("poisson gen: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "poisson-gen".to_string()
+    }
+}
+
+/// Deterministic fixed-interval generator (saturation/ceiling workloads).
+pub struct RegularGen {
+    pub cfg: GenConfig,
+    fpga: ActorId,
+    by_link: [Vec<u16>; HICANNS_PER_FPGA],
+    /// Round-robin cursor per link.
+    cursor: [usize; HICANNS_PER_FPGA],
+    pub stats: GenStats,
+}
+
+impl RegularGen {
+    pub fn new(cfg: GenConfig, fpga: ActorId) -> Self {
+        let mut by_link: [Vec<u16>; HICANNS_PER_FPGA] = Default::default();
+        for &(h, p) in &cfg.sources {
+            by_link[h as usize].push(p);
+        }
+        RegularGen {
+            cfg,
+            fpga,
+            by_link,
+            cursor: [0; HICANNS_PER_FPGA],
+            stats: GenStats::default(),
+        }
+    }
+
+    fn active_links(&self) -> Vec<u8> {
+        (0..HICANNS_PER_FPGA as u8)
+            .filter(|&h| !self.by_link[h as usize].is_empty())
+            .collect()
+    }
+
+    fn interval(&self) -> Time {
+        let n = self.active_links().len().max(1);
+        let per_link = self.cfg.rate_hz / n as f64;
+        let raw = Time::from_secs_f64(1.0 / per_link);
+        raw.max(self.cfg.link.event_spacing())
+    }
+}
+
+impl Actor<Msg> for RegularGen {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(0) => {
+                for link in self.active_links() {
+                    ctx.send_self(Time::ZERO, Msg::Timer(TIMER_GEN_BASE + link as u32));
+                }
+            }
+            Msg::Timer(t) if t >= TIMER_GEN_BASE => {
+                let link = (t - TIMER_GEN_BASE) as usize;
+                let pulses = &self.by_link[link];
+                let pulse = pulses[self.cursor[link] % pulses.len()];
+                self.cursor[link] += 1;
+                let ts = (systime_of(ctx.now()) as u32 + self.cfg.deadline_offset as u32) as u16
+                    & TS_MASK;
+                self.stats.generated += 1;
+                ctx.send(
+                    self.fpga,
+                    Time::ZERO,
+                    Msg::HicannEvent(SpikeEvent::new(link as u8, pulse, ts)),
+                );
+                let next = ctx.now() + self.interval();
+                if self.cfg.until.map(|u| next <= u).unwrap_or(true) {
+                    ctx.send_at(ctx.self_id(), next, Msg::Timer(TIMER_GEN_BASE + link as u32));
+                }
+            }
+            other => panic!("regular gen: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "regular-gen".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sim;
+
+    /// Counts HICANN events per link with timestamps.
+    struct FpgaStub {
+        events: Vec<(Time, SpikeEvent)>,
+    }
+
+    impl Actor<Msg> for FpgaStub {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+            if let Msg::HicannEvent(ev) = msg {
+                self.events.push((ctx.now(), ev));
+            }
+        }
+    }
+
+    fn sources_all_links(per_link: usize) -> Vec<(u8, u16)> {
+        let mut v = Vec::new();
+        for h in 0..8u8 {
+            for p in 0..per_link as u16 {
+                v.push((h, p));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn poisson_rate_is_close() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: sources_all_links(4),
+            rate_hz: 10e6,
+            until: Some(Time::from_ms(10)),
+            ..GenConfig::default()
+        };
+        let gen = sim.add(PoissonGen::new(cfg, stub, 42));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        let n = sim.get::<FpgaStub>(stub).events.len() as f64;
+        let expect = 10e6 * 10e-3;
+        assert!(
+            (n - expect).abs() < expect * 0.05,
+            "generated {n}, expected ≈{expect}"
+        );
+    }
+
+    #[test]
+    fn pacing_limits_link_rate() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        // one active link, demand 100 Mev/s ≫ 26.3 Mev/s link limit
+        let cfg = GenConfig {
+            sources: vec![(3, 1), (3, 2)],
+            rate_hz: 100e6,
+            until: Some(Time::from_ms(1)),
+            ..GenConfig::default()
+        };
+        let gen = sim.add(PoissonGen::new(cfg.clone(), stub, 7));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        let events = &sim.get::<FpgaStub>(stub).events;
+        // achieved rate must be capped by the link spacing
+        let cap = (Time::from_ms(1).secs_f64() * cfg.link.max_rate()).ceil() as usize + 1;
+        assert!(events.len() <= cap, "{} events exceeds link cap {cap}", events.len());
+        // spacing between consecutive events on the link ≥ event_spacing
+        for w in events.windows(2) {
+            assert!(w[1].0 - w[0].0 >= cfg.link.event_spacing());
+        }
+        assert!(sim.get::<PoissonGen>(gen).stats.paced > 0);
+    }
+
+    #[test]
+    fn regular_generator_exact_count() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: sources_all_links(1),
+            rate_hz: 8e6, // 1 Mev/s per link → 1 µs interval
+            until: Some(Time::from_us(100)),
+            ..GenConfig::default()
+        };
+        let gen = sim.add(RegularGen::new(cfg, stub));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        let events = &sim.get::<FpgaStub>(stub).events;
+        // 8 links × (100 µs / 1 µs + 1 initial) = 808
+        assert_eq!(events.len(), 808);
+    }
+
+    #[test]
+    fn deadline_offsets_applied() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: vec![(0, 9)],
+            rate_hz: 1e6,
+            deadline_offset: 555,
+            until: Some(Time::from_us(50)),
+            ..GenConfig::default()
+        };
+        let gen = sim.add(PoissonGen::new(cfg, stub, 3));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        for (at, ev) in &sim.get::<FpgaStub>(stub).events {
+            let emitted_sys = systime_of(*at);
+            let delta = crate::fpga::event::ts_delta(emitted_sys, ev.timestamp);
+            assert!(delta == 555 || delta == 554 || delta == 556, "delta {delta}");
+        }
+    }
+
+    #[test]
+    fn generator_distributes_over_sources() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: vec![(0, 1), (0, 2), (0, 3), (0, 4)],
+            rate_hz: 5e6,
+            until: Some(Time::from_ms(1)),
+            ..GenConfig::default()
+        };
+        let gen = sim.add(PoissonGen::new(cfg, stub, 11));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        let mut counts = [0u32; 5];
+        for (_, ev) in &sim.get::<FpgaStub>(stub).events {
+            counts[ev.pulse_addr as usize] += 1;
+        }
+        for p in 1..=4 {
+            assert!(counts[p] > 100, "pulse {p} undersampled: {}", counts[p]);
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! The cell-type-specific cortical microcircuit model of Potjans &
+//! Diesmann (paper refs [8, 9]) — the first multi-wafer network the paper
+//! targets ("One of the first multi-wafer networks will be a full scale
+//! cortical microcircuit model").
+//!
+//! Provides: the 8-population architecture (sizes, connection
+//! probabilities, stationary firing rates), arbitrary down-scaling, a
+//! placement of neurons onto wafers/FPGAs/HICANNs, and the derived
+//! FPGA-to-FPGA traffic matrix used by the network benchmarks. The LIF
+//! dynamics themselves run in the AOT-compiled JAX/Pallas artifact (see
+//! `python/compile/model.py` and [`crate::neuro`]).
+
+use crate::extoll::analysis::Flow;
+use crate::fpga::lookup::EndpointAddr;
+use crate::wafer::system::System;
+
+/// The eight populations of the microcircuit (layer 2/3 … 6, E/I).
+pub const POPULATIONS: [(&str, u32); 8] = [
+    ("L2/3E", 20_683),
+    ("L2/3I", 5_834),
+    ("L4E", 21_915),
+    ("L4I", 5_479),
+    ("L5E", 4_850),
+    ("L5I", 1_065),
+    ("L6E", 14_395),
+    ("L6I", 2_948),
+];
+
+/// Total neurons at full scale.
+pub const FULL_SCALE_NEURONS: u32 = 77_169;
+
+/// Connection probabilities `CONN_PROB[target][source]` (Potjans &
+/// Diesmann 2014, Table 5).
+pub const CONN_PROB: [[f64; 8]; 8] = [
+    [0.1009, 0.1689, 0.0437, 0.0818, 0.0323, 0.0000, 0.0076, 0.0000],
+    [0.1346, 0.1371, 0.0316, 0.0515, 0.0755, 0.0000, 0.0042, 0.0000],
+    [0.0077, 0.0059, 0.0497, 0.1350, 0.0067, 0.0003, 0.0453, 0.0000],
+    [0.0691, 0.0029, 0.0794, 0.1597, 0.0033, 0.0000, 0.1057, 0.0000],
+    [0.1004, 0.0622, 0.0505, 0.0057, 0.0831, 0.3726, 0.0204, 0.0000],
+    [0.0548, 0.0269, 0.0257, 0.0022, 0.0600, 0.3158, 0.0086, 0.0000],
+    [0.0156, 0.0066, 0.0211, 0.0166, 0.0572, 0.0197, 0.0396, 0.2252],
+    [0.0364, 0.0010, 0.0034, 0.0005, 0.0277, 0.0080, 0.0658, 0.1443],
+];
+
+/// Stationary single-neuron firing rates (Hz) of the spontaneous state
+/// (Potjans & Diesmann 2014, Fig. 6; NEST reference simulation).
+pub const FIRING_RATES_HZ: [f64; 8] = [0.86, 2.80, 4.45, 5.93, 7.59, 8.64, 1.09, 7.88];
+
+/// A (possibly down-scaled) instance of the microcircuit.
+#[derive(Clone, Debug)]
+pub struct Microcircuit {
+    /// Scale factor applied to population sizes (1.0 = full 77k).
+    pub scale: f64,
+    /// Scaled population sizes.
+    pub sizes: [u32; 8],
+}
+
+impl Microcircuit {
+    pub fn new(scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let sizes = std::array::from_fn(|i| {
+            ((POPULATIONS[i].1 as f64 * scale).round() as u32).max(1)
+        });
+        Microcircuit { scale, sizes }
+    }
+
+    pub fn total_neurons(&self) -> u32 {
+        self.sizes.iter().sum()
+    }
+
+    /// Expected spikes/s emitted by population `p` in total.
+    pub fn population_rate_hz(&self, p: usize) -> f64 {
+        self.sizes[p] as f64 * FIRING_RATES_HZ[p]
+    }
+
+    /// Total expected spike rate of the whole circuit (events/s at the
+    /// neuron level, before network multicast).
+    pub fn total_rate_hz(&self) -> f64 {
+        (0..8).map(|p| self.population_rate_hz(p)).sum()
+    }
+
+    /// Expected number of synapses (pairwise Bernoulli connectivity).
+    pub fn expected_synapses(&self) -> f64 {
+        let mut total = 0.0;
+        for (t, row) in CONN_PROB.iter().enumerate() {
+            for (s, &p) in row.iter().enumerate() {
+                total += p * self.sizes[s] as f64 * self.sizes[t] as f64;
+            }
+        }
+        total
+    }
+}
+
+/// Assignment of the circuit onto the simulated machine: populations are
+/// split evenly over all FPGAs (each FPGA hosts a slice of every
+/// population — the layout that maximizes inter-FPGA traffic and thus
+/// stresses the communication fabric, matching the paper's motivation).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Per-FPGA slice sizes: `slice[f][p]` = neurons of population `p` on
+    /// FPGA `f` (flat FPGA index over all wafers).
+    pub slices: Vec<[u32; 8]>,
+    /// Endpoints parallel to `slices`.
+    pub endpoints: Vec<EndpointAddr>,
+}
+
+impl Placement {
+    /// Distribute `mc` round-robin over the FPGAs of `sys`.
+    pub fn spread(mc: &Microcircuit, sys: &System) -> Placement {
+        let endpoints: Vec<EndpointAddr> = sys.fpgas().map(|(_, _, _, ep)| ep).collect();
+        let n = endpoints.len();
+        assert!(n > 0);
+        let mut slices = vec![[0u32; 8]; n];
+        for p in 0..8 {
+            let base = mc.sizes[p] / n as u32;
+            let rem = (mc.sizes[p] % n as u32) as usize;
+            for (f, slice) in slices.iter_mut().enumerate() {
+                slice[p] = base + u32::from(f < rem);
+            }
+        }
+        Placement { slices, endpoints }
+    }
+
+    pub fn n_fpgas(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Neurons hosted on FPGA `f`.
+    pub fn neurons_on(&self, f: usize) -> u32 {
+        self.slices[f].iter().sum()
+    }
+
+    /// Probability that a spike from population `s` has ≥1 target among
+    /// the population slices on FPGA `f` — i.e. that the spike must be
+    /// delivered to that FPGA at all (the GUID multicast granularity).
+    pub fn delivery_prob(&self, s: usize, f: usize) -> f64 {
+        let mut p_none = 1.0;
+        for t in 0..8 {
+            let n_targets = self.slices[f][t] as f64;
+            let p_conn = CONN_PROB[t][s];
+            if p_conn > 0.0 && n_targets > 0.0 {
+                p_none *= (1.0 - p_conn).powf(n_targets);
+            }
+        }
+        1.0 - p_none
+    }
+
+    /// Expected FPGA→FPGA event rates (events/s on the wire): every spike
+    /// of a source slice is shipped once to each FPGA with ≥1 target.
+    pub fn traffic_matrix(&self, mc: &Microcircuit) -> Vec<Vec<f64>> {
+        let n = self.n_fpgas();
+        // per-destination delivery probability per source population
+        let deliver: Vec<[f64; 8]> = (0..n)
+            .map(|f| std::array::from_fn(|s| self.delivery_prob(s, f)))
+            .collect();
+        let mut m = vec![vec![0.0; n]; n];
+        for (src, row) in m.iter_mut().enumerate() {
+            for s in 0..8 {
+                // per-neuron firing rates are scale-invariant; slice sizes
+                // already carry the down-scaling
+                let src_rate = self.slices[src][s] as f64 * FIRING_RATES_HZ[s];
+                for (dst, out) in row.iter_mut().enumerate() {
+                    if dst == src {
+                        continue; // intra-FPGA spikes do not cross the fabric
+                    }
+                    *out += src_rate * deliver[dst][s];
+                }
+            }
+        }
+        let _ = mc;
+        m
+    }
+
+    /// Convert the traffic matrix into fabric-level flows (Gbit/s) between
+    /// torus nodes, using `bits_per_event` for the wire footprint.
+    ///
+    /// `speedup`: BrainScaleS emulates neurons 10^3–10^4× faster than
+    /// biology (the wafer's analog time constant), so wall-clock spike
+    /// rates are the biological rates times this factor — this is what
+    /// makes the interconnect bandwidth question non-trivial.
+    pub fn flows_accelerated(
+        &self,
+        mc: &Microcircuit,
+        bits_per_event: f64,
+        speedup: f64,
+    ) -> Vec<Flow> {
+        let mut flows = self.flows(mc, bits_per_event);
+        for f in &mut flows {
+            f.gbps *= speedup;
+        }
+        flows
+    }
+
+    /// Biological-real-time flows (speedup 1).
+    pub fn flows(&self, mc: &Microcircuit, bits_per_event: f64) -> Vec<Flow> {
+        let m = self.traffic_matrix(mc);
+        let mut flows = Vec::new();
+        for (src, row) in m.iter().enumerate() {
+            for (dst, &events_per_s) in row.iter().enumerate() {
+                if events_per_s <= 0.0 {
+                    continue;
+                }
+                let src_node = self.endpoints[src].node;
+                let dst_node = self.endpoints[dst].node;
+                if src_node == dst_node {
+                    continue; // same torus node: concentrator-local
+                }
+                flows.push(Flow {
+                    src: src_node,
+                    dst: dst_node,
+                    gbps: events_per_s * bits_per_event / 1e9,
+                });
+            }
+        }
+        flows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::TorusSpec;
+    use crate::sim::Sim;
+    use crate::wafer::system::{System, SystemConfig};
+
+    #[test]
+    fn full_scale_sizes_match_paper() {
+        let mc = Microcircuit::new(1.0);
+        assert_eq!(mc.total_neurons(), FULL_SCALE_NEURONS);
+        assert_eq!(mc.sizes[0], 20_683);
+        assert_eq!(mc.sizes[7], 2_948);
+    }
+
+    #[test]
+    fn scaling_preserves_proportions() {
+        let mc = Microcircuit::new(0.1);
+        assert!((mc.total_neurons() as f64 - 7717.0).abs() < 8.0);
+        let ratio = mc.sizes[0] as f64 / mc.sizes[1] as f64;
+        let full = 20_683.0 / 5_834.0;
+        assert!((ratio - full).abs() < 0.05);
+    }
+
+    #[test]
+    fn expected_synapses_order_of_magnitude() {
+        // the paper's model has ≈0.3 billion synapses at full scale
+        let mc = Microcircuit::new(1.0);
+        let syn = mc.expected_synapses();
+        assert!(
+            (2.5e8..3.5e8).contains(&syn),
+            "expected ≈3e8 synapses, got {syn:.3e}"
+        );
+    }
+
+    #[test]
+    fn total_rate_plausible() {
+        // ≈77k neurons × ~3 Hz ≈ 2-3×10^5 events/s
+        let mc = Microcircuit::new(1.0);
+        let r = mc.total_rate_hz();
+        assert!((1e5..1e6).contains(&r), "rate {r}");
+    }
+
+    fn sys_2x12() -> (Sim<crate::msg::Msg>, System) {
+        let mut sim = Sim::new();
+        let sys = System::build(
+            &mut sim,
+            SystemConfig {
+                n_wafers: 2,
+                torus: TorusSpec::new(4, 2, 2),
+                fpgas_per_wafer: 12,
+                concentrators_per_wafer: 4,
+                ..SystemConfig::default()
+            },
+        );
+        (sim, sys)
+    }
+
+    #[test]
+    fn placement_conserves_neurons() {
+        let (_sim, sys) = sys_2x12();
+        let mc = Microcircuit::new(0.25);
+        let pl = Placement::spread(&mc, &sys);
+        assert_eq!(pl.n_fpgas(), 24);
+        for p in 0..8 {
+            let sum: u32 = pl.slices.iter().map(|s| s[p]).sum();
+            assert_eq!(sum, mc.sizes[p], "population {p} lost neurons");
+        }
+    }
+
+    #[test]
+    fn delivery_prob_saturates_at_scale() {
+        // with thousands of potential targets per FPGA, nearly every spike
+        // must be delivered to nearly every FPGA — the regime that makes
+        // aggregation worthwhile
+        let (_sim, sys) = sys_2x12();
+        let mc = Microcircuit::new(1.0);
+        let pl = Placement::spread(&mc, &sys);
+        let p = pl.delivery_prob(0, 5); // L2/3E spikes to some FPGA
+        assert!(p > 0.99, "delivery prob {p}");
+    }
+
+    #[test]
+    fn traffic_matrix_symmetric_under_symmetric_placement() {
+        let (_sim, sys) = sys_2x12();
+        let mc = Microcircuit::new(0.5);
+        let pl = Placement::spread(&mc, &sys);
+        let m = pl.traffic_matrix(&mc);
+        // diag zero, off-diag positive and near-uniform
+        for (i, row) in m.iter().enumerate() {
+            assert_eq!(row[i], 0.0);
+            for (j, &v) in row.iter().enumerate() {
+                if i != j {
+                    assert!(v > 0.0, "zero flow {i}->{j}");
+                }
+            }
+        }
+        let a = m[0][1];
+        let b = m[5][9];
+        assert!((a - b).abs() / a < 0.05, "flows {a} vs {b} differ");
+    }
+
+    #[test]
+    fn flows_skip_same_node_pairs() {
+        let (_sim, sys) = sys_2x12();
+        let mc = Microcircuit::new(0.25);
+        let pl = Placement::spread(&mc, &sys);
+        let flows = pl.flows(&mc, 32.0);
+        for f in &flows {
+            assert_ne!(f.src, f.dst);
+            assert!(f.gbps > 0.0);
+        }
+        // 24 FPGAs on 8 nodes: 3 per node; flows between distinct nodes only
+        let n_pairs_distinct_nodes = flows.len();
+        assert_eq!(n_pairs_distinct_nodes, 24 * 24 - 24 - 24 * 2 /* same-node pairs (3 per node → 2 others) */);
+    }
+}

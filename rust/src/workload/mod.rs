@@ -1,0 +1,13 @@
+//! Workload generation: Poisson/regular spike traffic with HICANN link
+//! pacing, trace record/replay, and the Potjans-Diesmann cortical
+//! microcircuit (the paper's target multi-wafer network).
+
+pub mod generators;
+pub mod microcircuit;
+pub mod trace;
+
+pub use generators::{GenConfig, GenStats, PoissonGen, RegularGen, TIMER_GEN_BASE};
+pub use microcircuit::{
+    Microcircuit, Placement, CONN_PROB, FIRING_RATES_HZ, FULL_SCALE_NEURONS, POPULATIONS,
+};
+pub use trace::{Trace, TraceReplay};

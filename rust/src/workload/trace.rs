@@ -1,0 +1,217 @@
+//! Spike trace record / replay.
+//!
+//! A [`Trace`] is a time-sorted list of HICANN events. Traces can be saved
+//! to and loaded from JSON (regression fixtures, cross-run comparisons)
+//! and replayed into an FPGA actor with exact timing via [`TraceReplay`].
+
+use crate::fpga::event::SpikeEvent;
+use crate::msg::Msg;
+use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::util::json::Json;
+
+/// A recorded spike trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// (emission time, event), sorted by time.
+    pub events: Vec<(Time, SpikeEvent)>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { events: Vec::new() }
+    }
+
+    /// Append an event (must be ≥ the last timestamp).
+    pub fn push(&mut self, at: Time, ev: SpikeEvent) {
+        if let Some((last, _)) = self.events.last() {
+            assert!(at >= *last, "trace must be appended in time order");
+        }
+        self.events.push((at, ev));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn duration(&self) -> Time {
+        self.events.last().map(|(t, _)| *t).unwrap_or(Time::ZERO)
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut rows = Json::arr();
+        for (t, ev) in &self.events {
+            rows.push(
+                Json::obj()
+                    .set("t_ps", t.ps())
+                    .set("hicann", ev.hicann as u64)
+                    .set("pulse", ev.pulse_addr as u64)
+                    .set("ts", ev.timestamp as u64),
+            );
+        }
+        Json::obj().set("version", 1u64).set("events", rows)
+    }
+
+    /// Parse from JSON (inverse of [`Trace::to_json`]).
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let rows = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'events' array")?;
+        let mut trace = Trace::new();
+        for r in rows {
+            let t = Time::from_ps(r.get("t_ps").and_then(Json::as_u64).ok_or("bad t_ps")?);
+            let ev = SpikeEvent::new(
+                r.get("hicann").and_then(Json::as_u64).ok_or("bad hicann")? as u8,
+                r.get("pulse").and_then(Json::as_u64).ok_or("bad pulse")? as u16,
+                r.get("ts").and_then(Json::as_u64).ok_or("bad ts")? as u16,
+            );
+            trace.push(t, ev);
+        }
+        Ok(trace)
+    }
+
+    /// Write to a file (pretty JSON).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> std::io::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        Trace::from_json(&j)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// Actor that replays a trace into an FPGA with exact timing. Events are
+/// scheduled lazily (one timer at a time) so huge traces do not flood the
+/// event queue.
+pub struct TraceReplay {
+    trace: Trace,
+    fpga: ActorId,
+    cursor: usize,
+    pub replayed: u64,
+}
+
+impl TraceReplay {
+    pub fn new(trace: Trace, fpga: ActorId) -> Self {
+        TraceReplay {
+            trace,
+            fpga,
+            cursor: 0,
+            replayed: 0,
+        }
+    }
+
+    fn emit_due(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        // emit every event due now, then schedule the next wake-up
+        while self.cursor < self.trace.events.len() {
+            let (at, ev) = self.trace.events[self.cursor];
+            if at > ctx.now() {
+                ctx.send_at(ctx.self_id(), at, Msg::Timer(0));
+                return;
+            }
+            ctx.send(self.fpga, Time::ZERO, Msg::HicannEvent(ev));
+            self.replayed += 1;
+            self.cursor += 1;
+        }
+    }
+}
+
+impl Actor<Msg> for TraceReplay {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(_) => self.emit_due(ctx),
+            other => panic!("trace replay: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "trace-replay".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sim;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new();
+        t.push(Time::from_ns(10), SpikeEvent::new(0, 1, 100));
+        t.push(Time::from_ns(10), SpikeEvent::new(1, 2, 101));
+        t.push(Time::from_ns(50), SpikeEvent::new(7, 4095, 0x7FFF));
+        t
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_trace();
+        let j = t.to_json();
+        let t2 = Trace::from_json(&j).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample_trace();
+        let path = std::env::temp_dir().join("bss_extoll_trace_test.json");
+        t.save(&path).unwrap();
+        let t2 = Trace::load(&path).unwrap();
+        assert_eq!(t, t2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[should_panic(expected = "time order")]
+    fn out_of_order_rejected() {
+        let mut t = Trace::new();
+        t.push(Time::from_ns(50), SpikeEvent::new(0, 1, 2));
+        t.push(Time::from_ns(10), SpikeEvent::new(0, 1, 2));
+    }
+
+    struct FpgaStub {
+        events: Vec<(Time, SpikeEvent)>,
+    }
+
+    impl Actor<Msg> for FpgaStub {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+            if let Msg::HicannEvent(ev) = msg {
+                self.events.push((ctx.now(), ev));
+            }
+        }
+    }
+
+    #[test]
+    fn replay_preserves_timing() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let rep = sim.add(TraceReplay::new(sample_trace(), stub));
+        sim.schedule(Time::ZERO, rep, Msg::Timer(0));
+        sim.run_to_completion();
+        let got = &sim.get::<FpgaStub>(stub).events;
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].0, Time::from_ns(10));
+        assert_eq!(got[1].0, Time::from_ns(10));
+        assert_eq!(got[2].0, Time::from_ns(50));
+        assert_eq!(got[2].1.pulse_addr, 4095);
+        assert_eq!(sim.get::<TraceReplay>(rep).replayed, 3);
+    }
+
+    #[test]
+    fn empty_trace_replay_is_noop() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let rep = sim.add(TraceReplay::new(Trace::new(), stub));
+        sim.schedule(Time::ZERO, rep, Msg::Timer(0));
+        sim.run_to_completion();
+        assert!(sim.get::<FpgaStub>(stub).events.is_empty());
+    }
+}

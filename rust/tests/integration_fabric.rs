@@ -1,0 +1,185 @@
+//! Integration tests: Extoll fabric under adversarial load — saturation,
+//! hot-spots, deadlock scenarios, and conservation under random traffic.
+
+use bss_extoll::extoll::network::{build_torus, Fabric};
+use bss_extoll::extoll::nic::{Nic, NicConfig};
+use bss_extoll::extoll::packet::Packet;
+use bss_extoll::extoll::torus::{NodeAddr, TorusSpec};
+use bss_extoll::msg::Msg;
+use bss_extoll::sim::{Actor, ActorId, Ctx, Sim, Time};
+use bss_extoll::util::rng::Rng;
+
+struct Sink {
+    received: u64,
+    bytes: u64,
+    last_seq_from: std::collections::HashMap<u16, u64>,
+    ooo: u64,
+}
+
+impl Sink {
+    fn new() -> Self {
+        Sink {
+            received: 0,
+            bytes: 0,
+            last_seq_from: std::collections::HashMap::new(),
+            ooo: 0,
+        }
+    }
+}
+
+impl Actor<Msg> for Sink {
+    fn handle(&mut self, msg: Msg, _ctx: &mut Ctx<'_, Msg>) {
+        if let Msg::Deliver(p) = msg {
+            self.received += 1;
+            self.bytes += p.payload_bytes as u64;
+            // per-source ordering check (same src+dst ⇒ FIFO)
+            let last = self.last_seq_from.entry(p.src.0).or_insert(0);
+            if p.seq <= *last {
+                self.ooo += 1;
+            }
+            *last = p.seq;
+        }
+    }
+}
+
+fn setup(dims: (u16, u16, u16), credits: u32) -> (Sim<Msg>, TorusSpec, Vec<ActorId>, Vec<ActorId>) {
+    let mut sim = Sim::new();
+    let spec = TorusSpec::new(dims.0, dims.1, dims.2);
+    let cfg = NicConfig {
+        credits_per_vc: credits,
+        ..NicConfig::default()
+    };
+    let nics = build_torus(&mut sim, &spec, cfg);
+    let sinks: Vec<ActorId> = nics
+        .iter()
+        .map(|&nic| {
+            let s = sim.add(Sink::new());
+            sim.get_mut::<Nic>(nic).attach_local(s);
+            s
+        })
+        .collect();
+    (sim, spec, nics, sinks)
+}
+
+#[test]
+fn random_traffic_4x4x4_conservation_and_order() {
+    let (mut sim, spec, nics, sinks) = setup((4, 4, 4), 4);
+    let mut rng = Rng::new(2024);
+    let n = spec.n_nodes();
+    let total = 20_000u64;
+    // per-source monotone seq AND monotone injection time, so the FIFO
+    // check below observes the actual injection order per (src, dst)
+    let mut seq_of = vec![0u64; n];
+    let mut t_of = vec![Time::ZERO; n];
+    for _ in 0..total {
+        let s = rng.index(n);
+        let d = rng.index(n);
+        seq_of[s] += 1;
+        t_of[s] += Time::from_ns(rng.range(10, 400));
+        let p = Packet::raw(
+            NodeAddr(s as u16),
+            NodeAddr(d as u16),
+            (rng.range(1, 31) * 16) as u32,
+            Time::ZERO,
+            seq_of[s],
+        );
+        sim.schedule(t_of[s], nics[s], Msg::Inject(p));
+    }
+    sim.run_to_completion();
+    let mut received = 0;
+    let mut ooo = 0;
+    for &s in &sinks {
+        let sink: &Sink = sim.get(s);
+        received += sink.received;
+        ooo += sink.ooo;
+    }
+    assert_eq!(received, total, "packets lost or duplicated");
+    assert_eq!(ooo, 0, "per-source FIFO ordering violated");
+}
+
+#[test]
+fn hotspot_traffic_backpressure_survives() {
+    // everyone hammers node 0 with minimum credits
+    let (mut sim, spec, nics, sinks) = setup((4, 4, 2), 1);
+    let mut count = 0u64;
+    for s in spec.nodes() {
+        if s.0 == 0 {
+            continue;
+        }
+        for k in 0..100 {
+            count += 1;
+            let p = Packet::raw(s, NodeAddr(0), 496, Time::ZERO, k);
+            sim.schedule(Time::ZERO, nics[s.0 as usize], Msg::Inject(p));
+        }
+    }
+    let steps = sim.run(50_000_000);
+    assert!(steps < 50_000_000, "simulation did not converge (livelock?)");
+    let sink: &Sink = sim.get(sinks[0]);
+    assert_eq!(sink.received, count);
+}
+
+#[test]
+fn antipodal_stress_every_ring_direction() {
+    // worst case for the dateline scheme: all three axes wrap simultaneously
+    let (mut sim, spec, nics, sinks) = setup((4, 4, 4), 1);
+    let mut total = 0u64;
+    for s in spec.nodes() {
+        let (x, y, z) = spec.coords_of(s);
+        let anti = spec.addr_of((x + 2) % 4, (y + 2) % 4, (z + 2) % 4);
+        for k in 0..25 {
+            total += 1;
+            let p = Packet::raw(s, anti, 496, Time::ZERO, k);
+            sim.schedule(Time::ZERO, nics[s.0 as usize], Msg::Inject(p));
+        }
+    }
+    sim.run_to_completion();
+    let received: u64 = sinks.iter().map(|&s| sim.get::<Sink>(s).received).sum();
+    assert_eq!(received, total, "deadlock or loss under antipodal stress");
+}
+
+#[test]
+fn throughput_approaches_link_rate_point_to_point() {
+    let (mut sim, _, nics, sinks) = setup((2, 1, 1), 8);
+    let n = 5_000u64;
+    for i in 0..n {
+        let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, i + 1);
+        sim.schedule(Time::ZERO, nics[0], Msg::Inject(p));
+    }
+    sim.run_to_completion();
+    let sink: &Sink = sim.get(sinks[1]);
+    assert_eq!(sink.received, n);
+    // 5k * 520B at ~97.7 Gbit/s ≈ 213 µs; allow 15% pipeline overhead
+    let ideal = 5_000.0 * 520.0 * 8.0 / 97.745e9;
+    let actual = sim.now.secs_f64();
+    assert!(
+        actual < ideal * 1.15,
+        "throughput too low: {actual:.2e}s vs ideal {ideal:.2e}s"
+    );
+}
+
+#[test]
+fn fabric_handle_statistics() {
+    let mut sim = Sim::new();
+    let spec = TorusSpec::new(3, 3, 1);
+    let fabric = Fabric::build(&mut sim, spec, NicConfig::default());
+    let sinks: Vec<ActorId> = fabric
+        .nics
+        .iter()
+        .map(|&nic| {
+            let s = sim.add(Sink::new());
+            sim.get_mut::<Nic>(nic).attach_local(s);
+            s
+        })
+        .collect();
+    let _ = sinks;
+    for i in 0..100u64 {
+        let p = Packet::raw(NodeAddr(0), NodeAddr(4), 256, Time::ZERO, i);
+        sim.schedule(Time::from_ns(i * 50), fabric.nics[0], Msg::Inject(p));
+    }
+    sim.run_to_completion();
+    assert_eq!(fabric.total_delivered(&sim), 100);
+    let h = fabric.transit_histogram(&sim);
+    assert_eq!(h.count(), 100);
+    assert!(h.p50() > 0);
+    assert!(fabric.max_link_utilization(&sim, sim.now) > 0.0);
+}

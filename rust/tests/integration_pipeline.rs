@@ -1,0 +1,239 @@
+//! Integration tests: the complete spike pipeline across wafers —
+//! generators → FPGA TX (lookup, buckets) → concentrators → torus →
+//! FPGA RX (GUID multicast) — including determinism and failure injection.
+
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::fpga::event::SpikeEvent;
+use bss_extoll::fpga::fpga::Fpga;
+use bss_extoll::fpga::lookup::{RxEntry, TxEntry};
+use bss_extoll::msg::Msg;
+use bss_extoll::sim::{Sim, Time};
+use bss_extoll::util::rng::Rng;
+use bss_extoll::wafer::system::{System, SystemConfig};
+use bss_extoll::workload::generators::{GenConfig, PoissonGen};
+use bss_extoll::workload::trace::{Trace, TraceReplay};
+
+fn small_system(sim: &mut Sim<Msg>) -> System {
+    System::build(
+        sim,
+        SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        },
+    )
+}
+
+/// Route every (hicann, pulse<32) source of every FPGA to one fixed
+/// partner on the other wafer.
+fn program_pair_routes(sim: &mut Sim<Msg>, sys: &System) {
+    let n = sys.n_fpgas();
+    for src in 0..n {
+        let dst = (src + n / 2) % n; // wafer 0 ↔ wafer 1
+        let (sw, ss) = (src / 4, src % 4);
+        let (dw, ds) = (dst / 4, dst % 4);
+        for h in 0..8u8 {
+            for pulse in 0..4u16 {
+                let guid = (src * 32 + (h as usize) * 4 + pulse as usize) as u16;
+                sys.program_route(sim, (sw, ss), h, pulse, (dw, ds), guid, 0xFF, pulse);
+            }
+        }
+    }
+}
+
+#[test]
+fn poisson_pipeline_no_loss_across_wafers() {
+    let mut sim = Sim::new();
+    let sys = small_system(&mut sim);
+    program_pair_routes(&mut sim, &sys);
+    let mut rng = Rng::new(55);
+    let mut gens = Vec::new();
+    for (_, _, actor, _) in sys.fpgas() {
+        let sources: Vec<(u8, u16)> = (0..8).flat_map(|h| (0..4).map(move |p| (h, p))).collect();
+        let g = sim.add(PoissonGen::new(
+            GenConfig {
+                sources,
+                rate_hz: 5e6,
+                deadline_offset: 2100,
+                until: Some(Time::from_us(500)),
+                ..GenConfig::default()
+            },
+            actor,
+            rng.next_u64(),
+        ));
+        sim.schedule(Time::ZERO, g, Msg::Timer(0));
+        gens.push(g);
+    }
+    sim.run_until(Time::from_ms(1));
+    sys.flush_all(&mut sim);
+    sim.run_until(Time::from_ms(2));
+
+    let generated: u64 = gens
+        .iter()
+        .map(|&g| sim.get::<PoissonGen>(g).stats.generated)
+        .sum();
+    assert!(generated > 10_000, "generated only {generated}");
+    assert_eq!(sys.total_events_in(&sim), generated);
+    assert_eq!(sys.total_events_out(&sim), generated, "events stuck in buckets");
+    assert_eq!(sys.total_rx_events(&sim), generated, "events lost in fabric");
+    // aggregation must be active at 5 Mev/s
+    assert!(sys.mean_batch_size(&sim) > 2.0);
+}
+
+#[test]
+fn trace_replay_is_bit_deterministic() {
+    // identical trace replays must produce identical system statistics
+    let mut trace = Trace::new();
+    let mut rng = Rng::new(9);
+    let mut t = Time::ZERO;
+    for _ in 0..500 {
+        t += Time::from_ns(rng.range(10, 500));
+        let deadline = ((bss_extoll::fpga::event::systime_of(t) as u32 + 2100) & 0x7FFF) as u16;
+        trace.push(
+            t,
+            SpikeEvent::new(rng.below(8) as u8, rng.below(4) as u16, deadline),
+        );
+    }
+    let run = |trace: Trace| -> (u64, u64, u64) {
+        let mut sim = Sim::new();
+        let sys = small_system(&mut sim);
+        program_pair_routes(&mut sim, &sys);
+        let target = sys.wafers[0].fpgas[0];
+        let rep = sim.add(TraceReplay::new(trace, target));
+        sim.schedule(Time::ZERO, rep, Msg::Timer(0));
+        sim.run_until(Time::from_ms(1));
+        sys.flush_all(&mut sim);
+        sim.run_until(Time::from_ms(2));
+        (
+            sys.total_rx_events(&sim),
+            sys.total_packets_out(&sim),
+            sim.processed(),
+        )
+    };
+    let a = run(trace.clone());
+    let b = run(trace);
+    assert_eq!(a, b, "non-deterministic replay");
+    assert_eq!(a.0, 500);
+}
+
+#[test]
+fn unrouted_events_counted_not_crashing() {
+    let mut sim = Sim::new();
+    let sys = small_system(&mut sim);
+    // no routes programmed at all
+    let target = sys.wafers[0].fpgas[0];
+    for i in 0..100u64 {
+        sim.schedule(
+            Time::from_ns(i * 100),
+            target,
+            Msg::HicannEvent(SpikeEvent::new(0, 99, 1000)),
+        );
+    }
+    sim.run_to_completion();
+    let f: &Fpga = sim.get(target);
+    assert_eq!(f.stats.tx_unrouted, 100);
+    assert_eq!(sys.total_packets_out(&sim), 0);
+}
+
+#[test]
+fn rx_guid_miss_counted() {
+    let mut sim = Sim::new();
+    let sys = small_system(&mut sim);
+    // program only TX; RX side misses the GUID
+    let src_actor = sys.wafers[0].fpgas[0];
+    let dst_ep = sys.wafers[1].endpoints[1];
+    sim.get_mut::<Fpga>(src_actor).tx_lut.set(
+        0,
+        7,
+        TxEntry {
+            dest: dst_ep,
+            guid: 777,
+        },
+    );
+    sim.schedule(
+        Time::ZERO,
+        src_actor,
+        Msg::HicannEvent(SpikeEvent::new(0, 7, 500)),
+    );
+    sim.run_until(Time::from_ms(1));
+    let dst: &Fpga = sim.get(sys.wafers[1].fpgas[1]);
+    assert_eq!(dst.stats.rx_events, 1);
+    assert_eq!(dst.stats.playback.unrouted, 1);
+    assert_eq!(dst.stats.playback.total_delivered(), 0);
+}
+
+#[test]
+fn multicast_mask_fans_out_to_hicanns() {
+    let mut sim = Sim::new();
+    let sys = small_system(&mut sim);
+    let src_actor = sys.wafers[0].fpgas[0];
+    let dst_ep = sys.wafers[1].endpoints[0];
+    sim.get_mut::<Fpga>(src_actor).tx_lut.set(
+        1,
+        3,
+        TxEntry {
+            dest: dst_ep,
+            guid: 42,
+        },
+    );
+    let dst_actor = sys.wafers[1].fpgas[0];
+    sim.get_mut::<Fpga>(dst_actor).rx_lut.set(
+        42,
+        RxEntry {
+            hicann_mask: 0xFF, // all 8
+            pulse_addr: 0x10,
+        },
+    );
+    sim.schedule(
+        Time::ZERO,
+        src_actor,
+        Msg::HicannEvent(SpikeEvent::new(1, 3, 2100)),
+    );
+    sim.run_until(Time::from_ms(1));
+    let dst: &Fpga = sim.get(dst_actor);
+    assert_eq!(dst.stats.playback.total_delivered(), 8, "8-way multicast");
+    for h in 0..8 {
+        assert_eq!(dst.stats.playback.per_hicann[h], 1);
+    }
+}
+
+#[test]
+fn fan_out_to_three_wafer_destinations() {
+    let mut sim = Sim::new();
+    let sys = small_system(&mut sim);
+    let src_actor = sys.wafers[0].fpgas[0];
+    // one source, three destinations on the other wafer
+    for (i, slot) in [0usize, 1, 2].iter().enumerate() {
+        let dst_ep = sys.wafers[1].endpoints[*slot];
+        sim.get_mut::<Fpga>(src_actor).tx_lut.add(
+            2,
+            9,
+            TxEntry {
+                dest: dst_ep,
+                guid: 100 + i as u16,
+            },
+        );
+        sim.get_mut::<Fpga>(sys.wafers[1].fpgas[*slot]).rx_lut.set(
+            100 + i as u16,
+            RxEntry {
+                hicann_mask: 1,
+                pulse_addr: 0,
+            },
+        );
+    }
+    sim.schedule(
+        Time::ZERO,
+        src_actor,
+        Msg::HicannEvent(SpikeEvent::new(2, 9, 2100)),
+    );
+    sim.run_until(Time::from_ms(1));
+    for slot in [0usize, 1, 2] {
+        let f: &Fpga = sim.get(sys.wafers[1].fpgas[slot]);
+        assert_eq!(f.stats.rx_events, 1, "fpga {slot} missed the fan-out copy");
+    }
+    let src: &Fpga = sim.get(src_actor);
+    assert_eq!(src.stats.events_in, 1);
+    assert_eq!(src.stats.events_out, 3, "one event → three wire events");
+}

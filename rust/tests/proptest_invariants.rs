@@ -1,0 +1,263 @@
+//! Property-based tests (hand-rolled generators on the deterministic RNG):
+//! random operation sequences against the protocol invariants the paper's
+//! hardware must uphold — no loss, no duplication, credit conservation,
+//! bounded buffers, wrapped-timestamp coherence.
+
+use bss_extoll::extoll::rma::Notification;
+use bss_extoll::extoll::routing::{links_on_route, route};
+use bss_extoll::extoll::torus::{NodeAddr, TorusSpec};
+use bss_extoll::fpga::bucket::BucketConfig;
+use bss_extoll::fpga::event::{ts_before_eq, RoutedEvent};
+use bss_extoll::fpga::lookup::EndpointAddr;
+use bss_extoll::fpga::manager::{BucketManager, EvictionPolicy, ManagerConfig};
+use bss_extoll::host::ringbuf::{RingConsumer, RingProducer};
+use bss_extoll::sim::Time;
+use bss_extoll::util::json::Json;
+use bss_extoll::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+/// Random manager configurations × random insert/poll/drain interleavings:
+/// every accepted event appears in exactly one flush batch.
+#[test]
+fn prop_manager_conserves_events() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xABCD + case);
+        let cfg = ManagerConfig {
+            n_buckets: rng.range(1, 24) as usize,
+            bucket: BucketConfig {
+                capacity: rng.range(1, 124) as usize,
+                deadline_margin: rng.range(10, 2000) as u16,
+                concurrent: rng.chance(0.7),
+            },
+            eviction: *rng.choose(&[
+                EvictionPolicy::MostUrgent,
+                EvictionPolicy::Fullest,
+                EvictionPolicy::Oldest,
+                EvictionPolicy::RoundRobin,
+            ]),
+        };
+        let mut mgr = BucketManager::new(cfg);
+        let n_dests = rng.range(1, 200) as u16;
+        let mut accepted = 0u64;
+        let mut flushed = 0u64;
+        let mut draining: Vec<usize> = Vec::new();
+        let mut now: u16 = 0;
+        for _ in 0..2000 {
+            match rng.below(10) {
+                0..=5 => {
+                    now = (now + rng.below(4) as u16) & 0x7FFF;
+                    let dest = EndpointAddr::new(NodeAddr(rng.below(n_dests as u64) as u16), 0);
+                    let deadline = (now as u32 + rng.range(1, 3000) as u32) as u16 & 0x7FFF;
+                    let r = mgr.insert(dest, RoutedEvent::new(1, deadline, Time::ZERO));
+                    if r.accepted {
+                        accepted += 1;
+                    }
+                    for b in r.batches {
+                        flushed += b.events.len() as u64;
+                        draining.push(b.bucket_idx);
+                    }
+                }
+                6..=7 => {
+                    for b in mgr.poll_deadlines(now) {
+                        flushed += b.events.len() as u64;
+                        draining.push(b.bucket_idx);
+                    }
+                }
+                _ => {
+                    if !draining.is_empty() {
+                        let i = rng.index(draining.len());
+                        let idx = draining.swap_remove(i);
+                        mgr.drain_complete(idx);
+                    }
+                }
+            }
+            // invariant: buffered + flushed == accepted at all times
+            assert_eq!(
+                mgr.buffered_events() as u64 + flushed,
+                accepted,
+                "case {case}: conservation violated mid-run"
+            );
+        }
+        // settle: complete outstanding drains, then flush until dry (a
+        // draining bucket cannot cut a second batch until its packet left)
+        for idx in draining.drain(..) {
+            mgr.drain_complete(idx);
+        }
+        loop {
+            let batches = mgr.flush_all();
+            if batches.is_empty() {
+                break;
+            }
+            for b in batches {
+                flushed += b.events.len() as u64;
+                mgr.drain_complete(b.bucket_idx);
+            }
+        }
+        assert_eq!(mgr.buffered_events(), 0, "case {case}: events stranded");
+        assert_eq!(flushed, accepted, "case {case}: final conservation violated");
+    }
+}
+
+/// Ring-buffer protocol: random produce/notify/consume/credit interleaving
+/// never overruns and conserves every byte.
+#[test]
+fn prop_ringbuffer_conservation() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xBEEF + case);
+        let size = 1u64 << rng.range(8, 16);
+        let mut p = RingProducer::new(0, size);
+        let mut c = RingConsumer::new(size);
+        let mut notified_pending = 0u64; // written, notification not yet seen
+        for _ in 0..3000 {
+            match rng.below(4) {
+                0 => {
+                    let n = rng.range(1, size / 2);
+                    if p.write(n).is_some() {
+                        notified_pending += n;
+                    }
+                }
+                1 => {
+                    if notified_pending > 0 {
+                        let n = rng.range(1, notified_pending);
+                        c.notify_written(n);
+                        notified_pending -= n;
+                    }
+                }
+                2 => {
+                    let freed = c.consume(rng.range(1, size));
+                    if freed > 0 {
+                        p.credit(freed);
+                    }
+                }
+                _ => {
+                    // idle tick: check the conservation invariant
+                }
+            }
+            assert_eq!(
+                p.space() + notified_pending + c.available(),
+                size,
+                "case {case}: ring accounting broken"
+            );
+            assert!(p.bytes_written >= c.bytes_consumed);
+        }
+    }
+}
+
+/// Routing: for random torus shapes and random pairs, routes are minimal,
+/// dimension-ordered, and consistent with links_on_route.
+#[test]
+fn prop_routing_minimal_and_ordered() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x2222 + case);
+        let t = TorusSpec::new(
+            rng.range(1, 8) as u16,
+            rng.range(1, 8) as u16,
+            rng.range(1, 8) as u16,
+        );
+        for _ in 0..50 {
+            let a = NodeAddr(rng.below(t.n_nodes() as u64) as u16);
+            let b = NodeAddr(rng.below(t.n_nodes() as u64) as u16);
+            let path = route(&t, a, b);
+            assert_eq!(path.len() as u32, t.hop_distance(a, b));
+            let mut axis = 0;
+            let mut here = a;
+            for d in &path {
+                assert!(d.axis() >= axis, "not dimension-ordered");
+                axis = d.axis();
+                here = t.neighbor(here, *d);
+            }
+            assert_eq!(here, b);
+            assert_eq!(links_on_route(&t, a, b).len(), path.len());
+        }
+    }
+}
+
+/// Wrapped 15-bit timestamps behave like a total order inside any window
+/// smaller than half the range.
+#[test]
+fn prop_timestamp_window_order() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x3333 + case);
+        let base = rng.below(1 << 15) as u16;
+        let mut offs: Vec<u16> = (0..20).map(|_| rng.below(16000) as u16).collect();
+        offs.sort_unstable();
+        for w in offs.windows(2) {
+            let a = (base.wrapping_add(w[0])) & 0x7FFF;
+            let b = (base.wrapping_add(w[1])) & 0x7FFF;
+            assert!(
+                ts_before_eq(a, b),
+                "case {case}: {a:#x} should be ≤ {b:#x} (base {base:#x})"
+            );
+        }
+    }
+}
+
+/// Notification codec: random words round-trip (valid kinds) and decode
+/// never panics on arbitrary bits.
+#[test]
+fn prop_notification_codec() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x4444 + case);
+        for _ in 0..100 {
+            let n = match rng.below(3) {
+                0 => Notification::DataWritten {
+                    channel: rng.below(1 << 12) as u16,
+                    bytes: rng.below(1 << 48),
+                },
+                1 => Notification::SpaceFreed {
+                    channel: rng.below(1 << 12) as u16,
+                    bytes: rng.below(1 << 48),
+                },
+                _ => Notification::Completion {
+                    channel: rng.below(1 << 12) as u16,
+                    value: rng.below(1 << 48),
+                },
+            };
+            assert_eq!(Notification::decode(n.encode()), Some(n));
+            let _ = Notification::decode(rng.next_u64()); // must not panic
+        }
+    }
+}
+
+/// JSON: random values survive emit → parse → emit.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.below(1 << 53) as f64) - (1u64 << 52) as f64),
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(rng.range(32, 0x2FA0) as u32).unwrap_or('x'))
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let mut a = Json::arr();
+                for _ in 0..rng.below(5) {
+                    a.push(random_json(rng, depth - 1));
+                }
+                a
+            }
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.insert(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x5555 + case);
+        let v = random_json(&mut rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+        let pretty = v.pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v, "case {case} (pretty)");
+    }
+}
