@@ -1,0 +1,16 @@
+.PHONY: artifacts test bench clean
+
+# AOT-lower the JAX/Pallas shard models into artifacts/ (HLO + manifest).
+# The rust runtime consumes the manifests; see rust/src/runtime/client.rs.
+artifacts:
+	cd python && python3 -m compile.aot --suite --out ../artifacts
+
+# Tier-1 verification.
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	BSS_BENCH_FAST=1 cargo bench
+
+clean:
+	cargo clean

@@ -9,6 +9,9 @@
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example microcircuit_multiwafer [steps] [artifact]
 
+// The deprecated driver wrappers stay supported for one release.
+#![allow(deprecated)]
+
 use bss_extoll::coordinator::{run_microcircuit, ExperimentConfig};
 use bss_extoll::extoll::torus::TorusSpec;
 use bss_extoll::wafer::system::SystemConfig;

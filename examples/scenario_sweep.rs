@@ -1,0 +1,51 @@
+//! Scenario-API tour: dispatch experiments generically through the
+//! registry, then run a 2×2 parameter sweep and print its artifacts.
+//!
+//! Adding a scenario to the system is one type implementing
+//! `coordinator::Scenario` plus one line in `scenario::registry()` —
+//! after that it is runnable here, from `bss-extoll run <name>`, and
+//! sweepable from `bss-extoll sweep`.
+//!
+//! Run: `cargo run --release --example scenario_sweep`
+
+use bss_extoll::coordinator::scenario;
+use bss_extoll::coordinator::sweep::SweepRunner;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::sim::Time;
+use bss_extoll::wafer::system::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.system = SystemConfig {
+        n_wafers: 2,
+        torus: TorusSpec::new(2, 2, 1),
+        fpgas_per_wafer: 4,
+        concentrators_per_wafer: 2,
+        ..SystemConfig::default()
+    };
+    cfg.workload.rate_hz = 4e6;
+    cfg.workload.sources_per_fpga = 16;
+    cfg.workload.duration = Time::from_us(500);
+
+    // 1. the registry: every experiment behind one trait
+    println!("registered scenarios:");
+    for s in scenario::registry() {
+        println!("  {:<14} {}", s.name(), s.about());
+    }
+
+    // 2. generic dispatch — same call shape for every scenario
+    let report = scenario::find("hotspot").expect("registered").run(&cfg)?;
+    report.print();
+
+    // 3. a 2×2 sweep: rate × generator kind, one report row per point
+    let runner = SweepRunner::new(cfg)
+        .axis("rate_hz", &["1e6", "8e6"])
+        .axis("generator", &["poisson", "burst"]);
+    let result = runner.run(scenario::find("traffic").unwrap().as_ref())?;
+    result.table().print();
+    println!("\nCSV artifact:\n{}", result.to_csv());
+    anyhow::ensure!(result.points.len() == 4, "expected a 2×2 grid");
+    println!("scenario_sweep OK");
+    Ok(())
+}

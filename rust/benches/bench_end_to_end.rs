@@ -7,6 +7,9 @@
 //!
 //! Run: `cargo bench --bench bench_end_to_end`
 
+// The deprecated driver wrappers stay supported for one release.
+#![allow(deprecated)]
+
 use bss_extoll::coordinator::{run_microcircuit, ExperimentConfig};
 use bss_extoll::extoll::torus::TorusSpec;
 use bss_extoll::runtime::{artifacts_available, artifacts_dir, Runtime};

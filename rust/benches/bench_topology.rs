@@ -8,6 +8,9 @@
 //!
 //! Run: `cargo bench --bench bench_topology`
 
+// The deprecated driver wrappers stay supported for one release.
+#![allow(deprecated)]
+
 use bss_extoll::coordinator::{run_traffic, ExperimentConfig};
 use bss_extoll::extoll::analysis::FlowAnalysis;
 use bss_extoll::extoll::baseline::{GbeConfig, GbeLink};

@@ -10,6 +10,7 @@ use crate::fpga::manager::{EvictionPolicy, ManagerConfig};
 use crate::sim::Time;
 use crate::util::json::Json;
 use crate::wafer::system::SystemConfig;
+use crate::workload::generators::GeneratorKind;
 
 /// Top-level experiment configuration.
 #[derive(Clone, Debug)]
@@ -39,6 +40,13 @@ pub struct WorkloadConfig {
     pub deadline_offset: u16,
     /// Simulated duration.
     pub duration: Time,
+    /// Traffic generator kind (scenario-selectable; "poisson" default).
+    pub generator: GeneratorKind,
+    /// Events per burst (burst generator only).
+    pub burst_len: u32,
+    /// Microcircuit scale for the flow-level `analyze` scenario
+    /// (1.0 = the full 77k-neuron circuit).
+    pub mc_scale: f64,
 }
 
 impl Default for WorkloadConfig {
@@ -50,6 +58,9 @@ impl Default for WorkloadConfig {
             zipf_s: 0.0,
             deadline_offset: 2000,
             duration: Time::from_ms(2),
+            generator: GeneratorKind::Poisson,
+            burst_len: 64,
+            mc_scale: 1.0,
         }
     }
 }
@@ -153,6 +164,13 @@ impl ExperimentConfig {
                 zipf_s: w.f64_or("zipf_s", d.zipf_s),
                 deadline_offset: w.u64_or("deadline_offset", d.deadline_offset as u64) as u16,
                 duration: Time::from_secs_f64(w.f64_or("duration_s", 2e-3)),
+                generator: {
+                    let name = w.str_or("generator", d.generator.as_str());
+                    GeneratorKind::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown generator '{name}'"))?
+                },
+                burst_len: w.u64_or("burst_len", d.burst_len as u64) as u32,
+                mc_scale: w.f64_or("mc_scale", d.mc_scale),
             };
         }
         if let Some(n) = j.get("neuro") {
@@ -222,6 +240,23 @@ mod tests {
     #[test]
     fn bad_eviction_rejected() {
         let j = Json::parse(r#"{"system": {"eviction": "bogus"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn generator_kind_parses() {
+        let j = Json::parse(r#"{"workload": {"generator": "burst", "burst_len": 16}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workload.generator, GeneratorKind::Burst);
+        assert_eq!(cfg.workload.burst_len, 16);
+        assert_eq!(
+            ExperimentConfig::from_json(&Json::parse("{}").unwrap())
+                .unwrap()
+                .workload
+                .generator,
+            GeneratorKind::Poisson
+        );
+        let j = Json::parse(r#"{"workload": {"generator": "bogus"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 }

@@ -27,12 +27,15 @@ use crate::neuro::weights::build_weights;
 use crate::runtime::Runtime;
 use crate::sim::{Sim, Time};
 use crate::util::json::Json;
+use crate::util::report::Report;
 use crate::util::rng::Rng;
+use crate::extoll::torus::TorusSpec;
 use crate::util::stats::Histogram;
-use crate::wafer::system::System;
+use crate::wafer::system::{System, SystemConfig};
 use crate::workload::microcircuit::{Microcircuit, FULL_SCALE_NEURONS};
 
 use super::config::ExperimentConfig;
+use super::scenario::Scenario;
 
 /// Result of a microcircuit co-simulation.
 #[derive(Clone, Debug)]
@@ -87,6 +90,58 @@ impl NeuroReport {
                     .collect::<Vec<_>>(),
             )
     }
+
+    /// Convert into the unified metric-keyed [`Report`] (the per-step
+    /// spike curve stays on the struct / full JSON form).
+    pub fn to_report(&self, scenario: &str) -> Report {
+        let mut r = Report::new(scenario);
+        r.push_unit("steps", self.steps, "steps");
+        r.push_unit("n_neurons", self.n_neurons, "neurons");
+        r.push_unit("n_shards", self.n_shards, "shards");
+        r.push_unit("spikes_total", self.spikes_total, "spikes");
+        r.push_unit("fabric_events", self.fabric_events, "events");
+        r.push_unit("delivered_events", self.delivered_events, "events");
+        r.push_unit("mean_rate", self.mean_rate, "spikes/neuron/step");
+        r.push_unit("mean_batch", self.mean_batch, "events/packet");
+        r.push_unit("deadline_misses", self.deadline_misses, "events");
+        r.push_unit("latency_p50", self.latency.p50() as f64 / 1e3, "ns");
+        r.push_unit("latency_p99", self.latency.p99() as f64 / 1e3, "ns");
+        r.push_unit("pjrt_seconds", self.pjrt_seconds, "s");
+        r.push_unit("des_seconds", self.des_seconds, "s");
+        r
+    }
+}
+
+/// End-to-end multi-wafer cortical-microcircuit co-simulation (paper §4).
+/// Requires `make artifacts`.
+pub struct MicrocircuitScenario;
+
+impl Scenario for MicrocircuitScenario {
+    fn name(&self) -> &'static str {
+        "microcircuit"
+    }
+
+    fn about(&self) -> &'static str {
+        "cortical-microcircuit co-simulation: LIF shards × Extoll fabric"
+    }
+
+    /// Default machine sized for the 4-shard artifacts (the full-size
+    /// default system would demand 96 shards).
+    fn default_config(&self) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 2,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg
+    }
+
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        Ok(microcircuit_experiment(cfg)?.to_report(self.name()))
+    }
 }
 
 /// Split the microcircuit into `n_shards` equal shards of exactly
@@ -116,7 +171,16 @@ pub fn shard_slices(n_shards: usize, n_local: u32) -> Vec<[u32; 8]> {
 }
 
 /// Run the experiment. Requires `make artifacts`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the Scenario registry: coordinator::scenario::find(\"microcircuit\")"
+)]
 pub fn run_microcircuit(cfg: &ExperimentConfig) -> Result<NeuroReport> {
+    microcircuit_experiment(cfg)
+}
+
+/// The co-simulation driver behind [`MicrocircuitScenario`].
+pub(crate) fn microcircuit_experiment(cfg: &ExperimentConfig) -> Result<NeuroReport> {
     let rt = Runtime::cpu()?;
     let dir = crate::runtime::artifacts_dir();
 
@@ -130,7 +194,7 @@ pub fn run_microcircuit(cfg: &ExperimentConfig) -> Result<NeuroReport> {
     let n_shards = n_global / n_local;
 
     // the system must expose exactly n_shards FPGAs
-    let mut sys_cfg = cfg.system;
+    let sys_cfg = cfg.system;
     anyhow::ensure!(
         sys_cfg.n_wafers * sys_cfg.fpgas_per_wafer == n_shards,
         "system has {} FPGAs but artifact needs {n_shards}",
@@ -334,7 +398,7 @@ mod tests {
         };
         cfg.neuro.artifact = "shard_256x1024".to_string();
         cfg.neuro.steps = 30;
-        let r = run_microcircuit(&cfg).unwrap();
+        let r = microcircuit_experiment(&cfg).unwrap();
         assert_eq!(r.n_neurons, 1024);
         assert_eq!(r.n_shards, 4);
         assert!(r.spikes_total > 0, "network silent — tune v_init/w");

@@ -1,10 +1,59 @@
-//! Experiment coordination: configuration, orchestration of the simulated
-//! machine + PJRT neuron shards, and result reporting.
+//! Experiment coordination: configuration, the `Scenario` API, the sweep
+//! runner, and unified result reporting.
+//!
+//! ## The `Scenario` API
+//!
+//! Experiments are orchestrated through the [`scenario::Scenario`] trait:
+//!
+//! ```text
+//! trait Scenario {
+//!     fn name(&self)  -> &'static str;            // CLI id + report tag
+//!     fn about(&self) -> &'static str;            // one-line description
+//!     fn run(&self, cfg: &ExperimentConfig) -> Result<Report>;
+//! }
+//! ```
+//!
+//! **Contract.** `name()` is the stable identifier used by
+//! `bss-extoll run <scenario>` and stamped into the report. `run()`
+//! must be deterministic for a fixed config (derive all randomness from
+//! `cfg.seed`) and collect every result into the metric-keyed
+//! [`Report`](crate::util::report::Report) so the CLI table renderer,
+//! the JSON emitter and the [`sweep::SweepRunner`] can handle any
+//! scenario generically.
+//!
+//! Scenarios that drive the packet-level simulator implement the
+//! build/run/collect split of [`traffic::FabricScenario`] instead and get
+//! the simulation loop plus the standard communication metrics from
+//! [`traffic::run_fabric_scenario`].
+//!
+//! **Registry.** [`scenario::registry`] lists every scenario; adding one
+//! is a single type implementing the trait plus one registry line.
+//! Registered today: `traffic`, `microcircuit`, `burst`, `hotspot`,
+//! `analyze`.
+//!
+//! **Sweeps.** [`sweep::SweepRunner`] runs one scenario over a cartesian
+//! grid of config overrides (`rate_hz=1e6,5e6 × n_wafers=2,4 × ...`) and
+//! aggregates one report row per point into JSON/CSV artifacts.
+//!
+//! The pre-scenario entry points [`run_traffic`] / [`run_microcircuit`]
+//! remain as deprecated thin wrappers for one release.
 
 pub mod config;
 pub mod microcircuit;
+pub mod scenario;
+pub mod sweep;
 pub mod traffic;
 
 pub use config::{ExperimentConfig, NeuroConfig, WorkloadConfig};
-pub use microcircuit::{run_microcircuit, shard_slices, NeuroReport};
-pub use traffic::{run_traffic, TrafficReport};
+pub use microcircuit::{shard_slices, MicrocircuitScenario, NeuroReport};
+pub use scenario::{find, names, registry, AnalyzeScenario, Scenario};
+pub use sweep::{apply_override, parse_grid, SweepResult, SweepRunner};
+pub use traffic::{
+    run_fabric_scenario, BurstScenario, FabricScenario, HotspotScenario, TrafficReport,
+    TrafficScenario,
+};
+
+#[allow(deprecated)]
+pub use microcircuit::run_microcircuit;
+#[allow(deprecated)]
+pub use traffic::run_traffic;

@@ -1,0 +1,213 @@
+//! The `Scenario` experiment API: trait, registry, generic dispatch.
+//!
+//! A scenario is one self-contained experiment: it consumes an
+//! [`ExperimentConfig`], drives whatever machinery it needs (packet-level
+//! DES, neural co-simulation, flow-level analysis), and returns a unified
+//! metric-keyed [`Report`]. The CLI (`bss-extoll run <scenario>`), the
+//! sweep runner and tests all dispatch through the [`registry`], so adding
+//! a scenario is one type + one registry line.
+//!
+//! ## Contract
+//!
+//! - [`Scenario::name`] is the stable CLI identifier (lowercase, no
+//!   spaces) and the `scenario` field of the resulting [`Report`].
+//! - [`Scenario::run`] must be **deterministic**: the same config
+//!   (including `seed`) must produce the same report. Draw all randomness
+//!   from an [`crate::util::rng::Rng`] seeded with `cfg.seed`.
+//! - Fabric-driven scenarios should implement
+//!   [`super::traffic::FabricScenario`] (a build/collect split) and let
+//!   [`super::traffic::run_fabric_scenario`] own the simulation loop, so
+//!   every scenario reports the same standard communication metrics.
+
+use anyhow::Result;
+
+use crate::extoll::analysis::FlowAnalysis;
+use crate::msg::Msg;
+use crate::sim::Sim;
+use crate::util::report::Report;
+use crate::wafer::system::System;
+use crate::workload::microcircuit::{Microcircuit, Placement};
+
+use super::config::ExperimentConfig;
+use super::microcircuit::MicrocircuitScenario;
+use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
+
+/// One registered experiment.
+pub trait Scenario {
+    /// Stable identifier used by the CLI and the report.
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `bss-extoll run --list`.
+    fn about(&self) -> &'static str;
+
+    /// The config the CLI starts from when the user supplies none.
+    /// Scenarios with machine-shape requirements (e.g. the microcircuit
+    /// must match its artifact's shard count) override this.
+    fn default_config(&self) -> ExperimentConfig {
+        ExperimentConfig::default()
+    }
+
+    /// Execute the experiment and collect its metrics.
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report>;
+}
+
+/// All registered scenarios, in listing order.
+///
+/// Adding a scenario = implement [`Scenario`] + add one line here.
+pub fn registry() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(TrafficScenario),
+        Box::new(MicrocircuitScenario),
+        Box::new(BurstScenario),
+        Box::new(HotspotScenario),
+        Box::new(AnalyzeScenario),
+    ]
+}
+
+/// Look up a scenario by name.
+pub fn find(name: &str) -> Option<Box<dyn Scenario>> {
+    registry().into_iter().find(|s| s.name() == name)
+}
+
+/// Registered scenario names, in listing order.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|s| s.name()).collect()
+}
+
+// ---- analyze -------------------------------------------------------------
+
+/// Flow-level topology bandwidth analysis (paper Fig. 1): route the
+/// cortical-microcircuit traffic matrix over the configured torus and
+/// report utilizations and the saturation bottleneck — no packet
+/// simulation involved.
+pub struct AnalyzeScenario;
+
+impl Scenario for AnalyzeScenario {
+    fn name(&self) -> &'static str {
+        "analyze"
+    }
+
+    fn about(&self) -> &'static str {
+        "flow-level torus bandwidth analysis of microcircuit traffic"
+    }
+
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        let mut sim: Sim<Msg> = Sim::new();
+        let sys = System::build(&mut sim, cfg.system);
+        let mc = Microcircuit::new(cfg.workload.mc_scale);
+        let placement = Placement::spread(&mc, &sys);
+        let flows = placement.flows(&mc, 32.0);
+        let analysis = FlowAnalysis::run(&cfg.system.torus, &flows, cfg.system.nic.link_gbps());
+
+        let mut r = Report::new(self.name());
+        r.push_unit("n_wafers", cfg.system.n_wafers, "wafers");
+        r.push(
+            "torus",
+            format!(
+                "{}x{}x{}",
+                cfg.system.torus.nx, cfg.system.torus.ny, cfg.system.torus.nz
+            ),
+        );
+        r.push_unit("neurons", mc.total_neurons(), "neurons");
+        r.push_unit("total_spike_rate", mc.total_rate_hz(), "events/s");
+        r.push_unit("fabric_flows", flows.len(), "flows");
+        r.push_unit("offered_load", analysis.total_offered_gbps, "Gbit/s");
+        r.push_unit("max_link_util", analysis.max_utilization(), "1");
+        r.push_unit(
+            "mean_active_link_util",
+            analysis.mean_active_utilization(),
+            "1",
+        );
+        r.push_unit(
+            "sustainable_fraction",
+            analysis.sustainable_fraction(),
+            "1",
+        );
+        if let Some(((node, dir), load)) = analysis.bottleneck() {
+            r.push(
+                "bottleneck",
+                format!("{node} {dir:?} @ {:.3} Gbit/s", load.gbps),
+            );
+        }
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::TorusSpec;
+    use crate::sim::Time;
+    use crate::wafer::system::SystemConfig;
+
+    fn small() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 16;
+        cfg.workload.duration = Time::from_us(200);
+        cfg
+    }
+
+    #[test]
+    fn registry_contains_required_scenarios() {
+        let names = names();
+        for required in ["traffic", "microcircuit", "burst", "hotspot"] {
+            assert!(names.contains(&required), "missing scenario {required}");
+        }
+        assert!(names.len() >= 4);
+    }
+
+    #[test]
+    fn registry_names_unique() {
+        let mut names = names();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate scenario names");
+    }
+
+    #[test]
+    fn find_dispatches_by_name() {
+        let s = find("traffic").expect("traffic registered");
+        assert_eq!(s.name(), "traffic");
+        assert!(!s.about().is_empty());
+        assert!(find("no_such_scenario").is_none());
+    }
+
+    #[test]
+    fn dispatched_run_produces_named_report() {
+        let cfg = small();
+        let report = find("traffic").unwrap().run(&cfg).unwrap();
+        assert_eq!(report.scenario(), "traffic");
+        assert!(report.get_count("events_generated").unwrap() > 0);
+    }
+
+    #[test]
+    fn dispatch_is_deterministic() {
+        let cfg = small();
+        let a = find("burst").unwrap().run(&cfg).unwrap();
+        let b = find("burst").unwrap().run(&cfg).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn analyze_scenario_reports_flow_metrics() {
+        let mut cfg = small();
+        cfg.workload.mc_scale = 0.1;
+        let r = AnalyzeScenario.run(&cfg).unwrap();
+        assert_eq!(r.scenario(), "analyze");
+        assert!(r.get_count("fabric_flows").unwrap() > 0);
+        assert!(r.get_f64("offered_load").unwrap() > 0.0);
+        assert!(r.get_f64("max_link_util").unwrap() > 0.0);
+        let s = r.get_f64("sustainable_fraction").unwrap();
+        assert!(s > 0.0 && s <= 1.0);
+        assert!(r.get("bottleneck").is_some());
+    }
+}

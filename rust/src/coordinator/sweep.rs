@@ -1,0 +1,454 @@
+//! Parameter-sweep runner: one scenario × a grid of config overrides.
+//!
+//! A [`SweepRunner`] takes a base [`ExperimentConfig`] plus named axes
+//! (`rate_hz = 1e6, 5e6 × n_wafers = 2, 4 × ...`), runs the scenario at
+//! every point of the cartesian product, and collects one [`Report`] row
+//! per point. Results aggregate into a single JSON document or CSV —
+//! the artifact behind every "metric vs. parameter" figure.
+//!
+//! Axis values are strings, parsed per-parameter by [`apply_override`]
+//! (the same override path the CLI `--set` flag uses), so numeric and
+//! symbolic knobs (e.g. `eviction=fullest`) sweep uniformly.
+
+use anyhow::{bail, Result};
+
+use crate::sim::Time;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::report::{Report, Value};
+use crate::workload::generators::GeneratorKind;
+
+use super::config::ExperimentConfig;
+use super::scenario::Scenario;
+
+/// Apply one `key=value` override onto a config. Shared by the sweep
+/// axes and the CLI `--set` flag.
+pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Result<()> {
+    fn num(key: &str, value: &str) -> Result<f64> {
+        value
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--{key}: '{value}' is not a number"))
+    }
+    fn int(key: &str, value: &str) -> Result<u64> {
+        let x = num(key, value)?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("--{key}: '{value}' is not a non-negative integer");
+        }
+        Ok(x as u64)
+    }
+    match key {
+        "seed" => cfg.seed = int(key, value)?,
+        // workload
+        "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
+        "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
+        "fan_out" => cfg.workload.fan_out = int(key, value)? as usize,
+        "zipf_s" => cfg.workload.zipf_s = num(key, value)?,
+        "deadline_offset" => cfg.workload.deadline_offset = int(key, value)? as u16,
+        "duration_s" => cfg.workload.duration = Time::from_secs_f64(num(key, value)?),
+        "generator" => {
+            cfg.workload.generator = GeneratorKind::parse(value)
+                .ok_or_else(|| anyhow::anyhow!("unknown generator '{value}'"))?
+        }
+        "burst_len" => cfg.workload.burst_len = int(key, value)? as u32,
+        "mc_scale" => cfg.workload.mc_scale = num(key, value)?,
+        // system
+        "n_wafers" => cfg.system.n_wafers = int(key, value)? as usize,
+        "fpgas_per_wafer" => cfg.system.fpgas_per_wafer = int(key, value)? as usize,
+        "concentrators_per_wafer" => {
+            cfg.system.concentrators_per_wafer = int(key, value)? as usize
+        }
+        "torus" => {
+            let dims: Vec<u16> = value
+                .split('x')
+                .map(|s| s.parse::<u16>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| anyhow::anyhow!("--torus: expected XxYxZ, got '{value}'"))?;
+            if dims.len() != 3 {
+                bail!("--torus: expected XxYxZ, got '{value}'");
+            }
+            cfg.system.torus = crate::extoll::torus::TorusSpec::new(dims[0], dims[1], dims[2]);
+        }
+        "buckets" => cfg.system.manager.n_buckets = int(key, value)? as usize,
+        "bucket_capacity" => cfg.system.manager.bucket.capacity = int(key, value)? as usize,
+        "deadline_margin" => cfg.system.manager.bucket.deadline_margin = int(key, value)? as u16,
+        "eviction" => {
+            use crate::fpga::manager::EvictionPolicy;
+            cfg.system.manager.eviction = match value {
+                "most_urgent" => EvictionPolicy::MostUrgent,
+                "fullest" => EvictionPolicy::Fullest,
+                "oldest" => EvictionPolicy::Oldest,
+                "round_robin" => EvictionPolicy::RoundRobin,
+                other => bail!("unknown eviction policy '{other}'"),
+            }
+        }
+        // neuro
+        "steps" => cfg.neuro.steps = int(key, value)? as usize,
+        "artifact" => cfg.neuro.artifact = value.to_string(),
+        "dt_s" => cfg.neuro.dt = Time::from_secs_f64(num(key, value)?),
+        "w_exc" => cfg.neuro.w_exc = num(key, value)? as f32,
+        "w_inh" => cfg.neuro.w_inh = num(key, value)? as f32,
+        "k_scale" => cfg.neuro.k_scale = num(key, value)?,
+        other => bail!(
+            "unknown parameter '{other}' (known: seed, rate_hz, sources_per_fpga, \
+             fan_out, zipf_s, deadline_offset, duration_s, generator, burst_len, \
+             mc_scale, n_wafers, fpgas_per_wafer, concentrators_per_wafer, torus, \
+             buckets, bucket_capacity, deadline_margin, eviction, steps, artifact, \
+             dt_s, w_exc, w_inh, k_scale)"
+        ),
+    }
+    Ok(())
+}
+
+/// Parse `"a=1,2;b=x,y"` into sweep axes.
+pub fn parse_grid(spec: &str) -> Result<Vec<(String, Vec<String>)>> {
+    let mut axes = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, values) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("grid axis '{part}' is not key=v1,v2,..."))?;
+        let values: Vec<String> = values
+            .split(',')
+            .map(|v| v.trim().to_string())
+            .filter(|v| !v.is_empty())
+            .collect();
+        if values.is_empty() {
+            bail!("grid axis '{key}' has no values");
+        }
+        axes.push((key.trim().to_string(), values));
+    }
+    if axes.is_empty() {
+        bail!("empty sweep grid");
+    }
+    Ok(axes)
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// The overrides applied at this point, in axis order.
+    pub params: Vec<(String, String)>,
+    pub report: Report,
+}
+
+/// All points of a finished sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub scenario: String,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepResult {
+    /// Aggregate JSON artifact:
+    /// `{"scenario":.., "n_points":.., "points":[{"params":{..},"metrics":{..}},..]}`.
+    pub fn to_json(&self) -> Json {
+        let mut pts = Json::arr();
+        for p in &self.points {
+            let mut params = Json::obj();
+            for (k, v) in &p.params {
+                match v.parse::<f64>() {
+                    Ok(x) => params.insert(k, x),
+                    Err(_) => params.insert(k, v.as_str()),
+                }
+            }
+            pts.push(
+                Json::obj()
+                    .set("params", params)
+                    .set("metrics", p.report.to_flat_json()),
+            );
+        }
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("n_points", self.points.len())
+            .set("points", pts)
+    }
+
+    /// Metric columns: union over every point's report, first-seen order
+    /// (scenarios may emit conditional metrics, e.g. `bottleneck` only
+    /// when saturated — no point's data is dropped).
+    fn metric_columns(&self) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for p in &self.points {
+            for k in p.report.keys() {
+                if !keys.iter().any(|e| e == k) {
+                    keys.push(k.to_string());
+                }
+            }
+        }
+        keys
+    }
+
+    /// CSV artifact: one column per axis, then one per metric.
+    pub fn to_csv(&self) -> String {
+        let Some(first) = self.points.first() else {
+            return String::new();
+        };
+        let metric_keys = self.metric_columns();
+        let mut out = String::new();
+        let header: Vec<String> = first
+            .params
+            .iter()
+            .map(|(k, _)| k.clone())
+            .chain(metric_keys.iter().cloned())
+            .collect();
+        push_csv_row(&mut out, &header);
+        for p in &self.points {
+            let row: Vec<String> = p
+                .params
+                .iter()
+                .map(|(_, v)| v.clone())
+                .chain(metric_keys.iter().map(|k| match p.report.get(k) {
+                    Some(Value::Count(c)) => c.to_string(),
+                    Some(Value::Real(x)) => format!("{x}"),
+                    Some(Value::Text(s)) => s.clone(),
+                    None => String::new(),
+                }))
+                .collect();
+            push_csv_row(&mut out, &row);
+        }
+        out
+    }
+
+    /// Render as a (wide) table: axes + every metric column.
+    pub fn table(&self) -> Table {
+        let Some(first) = self.points.first() else {
+            return Table::new("sweep (no points)", &[]);
+        };
+        let metric_keys = self.metric_columns();
+        let columns: Vec<String> = first
+            .params
+            .iter()
+            .map(|(k, _)| k.clone())
+            .chain(metric_keys.iter().cloned())
+            .collect();
+        let col_refs: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("{} sweep — {} points", self.scenario, self.points.len()),
+            &col_refs,
+        );
+        for p in &self.points {
+            let row: Vec<String> = p
+                .params
+                .iter()
+                .map(|(_, v)| v.clone())
+                .chain(
+                    metric_keys
+                        .iter()
+                        .map(|k| p.report.get(k).map(Value::render).unwrap_or_default()),
+                )
+                .collect();
+            t.row(row);
+        }
+        t
+    }
+}
+
+fn push_csv_row(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            out.push('"');
+            out.push_str(&cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+/// Config grid × scenario → one report per point.
+pub struct SweepRunner {
+    base: ExperimentConfig,
+    axes: Vec<(String, Vec<String>)>,
+}
+
+impl SweepRunner {
+    pub fn new(base: ExperimentConfig) -> SweepRunner {
+        SweepRunner {
+            base,
+            axes: Vec::new(),
+        }
+    }
+
+    /// Build from a `"a=1,2;b=x,y"` grid spec.
+    pub fn from_grid(base: ExperimentConfig, spec: &str) -> Result<SweepRunner> {
+        Ok(SweepRunner {
+            base,
+            axes: parse_grid(spec)?,
+        })
+    }
+
+    /// Add one sweep axis (builder style).
+    pub fn axis(mut self, key: &str, values: &[&str]) -> SweepRunner {
+        self.axes
+            .push((key.to_string(), values.iter().map(|v| v.to_string()).collect()));
+        self
+    }
+
+    /// Number of grid points (product of axis lengths; 1 when no axes).
+    pub fn n_points(&self) -> usize {
+        self.axes.iter().map(|(_, v)| v.len()).product()
+    }
+
+    /// Run `scenario` at every grid point (row-major: last axis fastest).
+    /// `progress` is invoked before each point with (index, n_points).
+    pub fn run_with_progress(
+        &self,
+        scenario: &dyn Scenario,
+        mut progress: impl FnMut(usize, usize),
+    ) -> Result<SweepResult> {
+        for (key, values) in &self.axes {
+            anyhow::ensure!(!values.is_empty(), "sweep axis '{key}' has no values");
+        }
+        let n = self.n_points();
+        let mut points = Vec::with_capacity(n);
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            progress(points.len(), n);
+            let mut cfg = self.base.clone();
+            let mut params = Vec::with_capacity(self.axes.len());
+            for (ai, (key, values)) in self.axes.iter().enumerate() {
+                let value = &values[idx[ai]];
+                apply_override(&mut cfg, key, value)?;
+                params.push((key.clone(), value.clone()));
+            }
+            let report = scenario.run(&cfg)?;
+            points.push(SweepPoint { params, report });
+
+            // odometer increment, last axis fastest
+            let mut ai = self.axes.len();
+            while ai > 0 {
+                idx[ai - 1] += 1;
+                if idx[ai - 1] < self.axes[ai - 1].1.len() {
+                    break;
+                }
+                idx[ai - 1] = 0;
+                ai -= 1;
+            }
+            if ai == 0 {
+                break;
+            }
+        }
+        Ok(SweepResult {
+            scenario: scenario.name().to_string(),
+            points,
+        })
+    }
+
+    /// Run without progress reporting.
+    pub fn run(&self, scenario: &dyn Scenario) -> Result<SweepResult> {
+        self.run_with_progress(scenario, |_, _| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::find;
+    use crate::extoll::torus::TorusSpec;
+    use crate::wafer::system::SystemConfig;
+
+    fn small() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 16;
+        cfg.workload.duration = Time::from_us(200);
+        cfg
+    }
+
+    #[test]
+    fn grid_parses() {
+        let axes = parse_grid("rate_hz=1e6,5e6; fan_out = 1,2 ;eviction=fullest").unwrap();
+        assert_eq!(axes.len(), 3);
+        assert_eq!(axes[0].0, "rate_hz");
+        assert_eq!(axes[0].1, vec!["1e6", "5e6"]);
+        assert_eq!(axes[1].1, vec!["1", "2"]);
+        assert_eq!(axes[2].1, vec!["fullest"]);
+        assert!(parse_grid("").is_err());
+        assert!(parse_grid("novalues=").is_err());
+        assert!(parse_grid("noequals").is_err());
+    }
+
+    #[test]
+    fn overrides_touch_all_layers() {
+        let mut cfg = ExperimentConfig::default();
+        apply_override(&mut cfg, "rate_hz", "5e6").unwrap();
+        apply_override(&mut cfg, "n_wafers", "4").unwrap();
+        apply_override(&mut cfg, "torus", "4x4x2").unwrap();
+        apply_override(&mut cfg, "eviction", "oldest").unwrap();
+        apply_override(&mut cfg, "generator", "burst").unwrap();
+        apply_override(&mut cfg, "steps", "17").unwrap();
+        assert_eq!(cfg.workload.rate_hz, 5e6);
+        assert_eq!(cfg.system.n_wafers, 4);
+        assert_eq!(cfg.system.torus.n_nodes(), 32);
+        assert_eq!(cfg.neuro.steps, 17);
+        assert!(apply_override(&mut cfg, "no_such_knob", "1").is_err());
+        assert!(apply_override(&mut cfg, "rate_hz", "fast").is_err());
+        assert!(apply_override(&mut cfg, "torus", "4x4").is_err());
+    }
+
+    #[test]
+    fn sweep_2x2_is_deterministic_and_complete() {
+        let runner = SweepRunner::new(small())
+            .axis("rate_hz", &["1e6", "4e6"])
+            .axis("fan_out", &["1", "2"]);
+        assert_eq!(runner.n_points(), 4);
+        let scenario = find("traffic").unwrap();
+        let a = runner.run(scenario.as_ref()).unwrap();
+        assert_eq!(a.points.len(), 4);
+        for p in &a.points {
+            assert_eq!(p.params.len(), 2);
+            assert!(p.report.get_count("events_generated").unwrap() > 0);
+        }
+        // last axis fastest: fan_out toggles first
+        assert_eq!(a.points[0].params[1].1, "1");
+        assert_eq!(a.points[1].params[1].1, "2");
+        assert_eq!(a.points[0].params[0].1, "1e6");
+        assert_eq!(a.points[2].params[0].1, "4e6");
+        // the fan_out axis is visible in the physics of each point
+        for (pi, fan_out) in [(0usize, 1u64), (1, 2), (2, 1), (3, 2)] {
+            let r = &a.points[pi].report;
+            assert_eq!(
+                r.get_count("rx_events").unwrap(),
+                fan_out * r.get_count("events_generated").unwrap(),
+                "point {pi}: fan-out accounting"
+            );
+        }
+        // deterministic end to end
+        let b = runner.run(scenario.as_ref()).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn csv_and_json_artifacts_cover_every_point() {
+        let runner = SweepRunner::new(small()).axis("rate_hz", &["1e6", "2e6"]);
+        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        let csv = result.to_csv();
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows");
+        assert!(lines[0].starts_with("rate_hz,"));
+        assert!(lines[0].contains("rx_events"));
+        let j = result.to_json();
+        assert_eq!(j.u64_or("n_points", 0), 2);
+        let pts = j.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(
+            pts[0].at(&["params", "rate_hz"]).unwrap().as_f64().unwrap(),
+            1e6
+        );
+        assert!(pts[0].at(&["metrics", "rx_events"]).unwrap().as_u64().unwrap() > 0);
+    }
+}

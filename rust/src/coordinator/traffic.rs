@@ -1,24 +1,44 @@
-//! Spike-traffic experiment driver: multi-wafer system under synthetic
-//! Poisson load, measuring the paper's communication-path metrics —
+//! Fabric-driven spike-traffic scenarios: multi-wafer system under
+//! synthetic load, measuring the paper's communication-path metrics —
 //! aggregation efficiency, end-to-end latency, deadline misses, link
 //! utilization, flush-reason breakdown.
+//!
+//! The shared driver [`run_fabric_scenario`] implements the
+//! build → run → collect split of the [`Scenario`] contract for every
+//! scenario that drives the packet-level simulator: it builds the
+//! [`System`], delegates route programming + generator spawning to the
+//! scenario's [`FabricScenario::build`], runs the workload window plus a
+//! drain tail, collects the standard [`TrafficReport`], and lets the
+//! scenario append extra metrics via [`FabricScenario::collect`].
+//!
+//! Scenarios in this module:
+//! - [`TrafficScenario`] — Poisson/Zipf fan-out load (port of the seed
+//!   `run_traffic` driver; identical metrics for identical seed/config).
+//! - [`BurstScenario`] — same routes, bursty generators.
+//! - [`HotspotScenario`] — every FPGA fires at one hot FPGA.
 
 use anyhow::Result;
 
 use crate::fpga::fpga::Fpga;
-use crate::fpga::lookup::TxEntry;
-use crate::fpga::lookup::{EndpointAddr, RxEntry};
+use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
 use crate::sim::{Sim, Time};
 use crate::util::json::Json;
+use crate::util::report::Report;
 use crate::util::rng::{Rng, Zipf};
 use crate::util::stats::Histogram;
 use crate::wafer::system::System;
-use crate::workload::generators::{GenConfig, PoissonGen};
+use crate::workload::generators::{
+    spawn_generator, total_generated, BurstGen, GenConfig, GeneratorKind,
+};
 
 use super::config::ExperimentConfig;
+use super::scenario::Scenario;
 
-/// Aggregated result of one traffic run.
+/// Aggregated result of one fabric-driven run.
+///
+/// Kept for compatibility with the pre-`Scenario` API; new code should
+/// use the metric-keyed [`Report`] obtained from [`Scenario::run`].
 #[derive(Clone, Debug)]
 pub struct TrafficReport {
     pub duration: Time,
@@ -65,49 +85,275 @@ impl TrafficReport {
             .set("max_link_util", self.max_link_util)
             .set("delivered_events_per_s", self.delivered_events_per_s)
     }
+
 }
 
-/// Program random routes and run Poisson traffic over the system.
+/// The build/collect half of a fabric-driven scenario. Implementors
+/// program routes and spawn generators into the freshly built system;
+/// the shared driver owns the simulation loop and the common collect.
+pub trait FabricScenario {
+    /// Program routes + spawn workload generators. `rng` is the
+    /// experiment-seeded generator; draw all randomness from it so runs
+    /// are reproducible.
+    fn build(
+        &self,
+        sim: &mut Sim<Msg>,
+        sys: &System,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<()>;
+
+    /// Append scenario-specific metrics after the common collect.
+    fn collect(&self, _sim: &Sim<Msg>, _sys: &System, _report: &mut Report) {}
+}
+
+/// Shared driver: build system → scenario build → run workload window +
+/// drain tail → collect. Returns the simulation for post-hoc inspection.
+pub(crate) fn run_fabric_experiment(
+    scn: &dyn FabricScenario,
+    cfg: &ExperimentConfig,
+) -> Result<(Sim<Msg>, System, TrafficReport)> {
+    let mut sim: Sim<Msg> = Sim::new();
+    let sys = System::build(&mut sim, cfg.system);
+    let mut rng = Rng::new(cfg.seed);
+    scn.build(&mut sim, &sys, cfg, &mut rng)?;
+
+    // run: workload window + drain tail
+    sim.run_until(cfg.workload.duration);
+    sys.flush_all(&mut sim);
+    sim.run_until(cfg.workload.duration + Time::from_ms(1));
+
+    let report = collect_traffic(&sim, &sys, cfg);
+    Ok((sim, sys, report))
+}
+
+/// Drive `scn` and return the unified [`Report`]: the standard fabric
+/// metrics come from [`System::fabric_report`] (single source of truth),
+/// plus the generator-side count and the scenario's extra metrics.
+pub fn run_fabric_scenario(
+    scn: &dyn FabricScenario,
+    name: &str,
+    cfg: &ExperimentConfig,
+) -> Result<Report> {
+    let (sim, sys, _tr) = run_fabric_experiment(scn, cfg)?;
+    let mut report = sys.fabric_report(&sim, name, cfg.workload.duration);
+    report.push_unit("events_generated", total_generated(&sim), "events");
+    scn.collect(&sim, &sys, &mut report);
+    Ok(report)
+}
+
+/// Common post-run collect for fabric scenarios (stat collection lives
+/// behind [`System`]'s aggregation helpers).
+fn collect_traffic(sim: &Sim<Msg>, sys: &System, cfg: &ExperimentConfig) -> TrafficReport {
+    let totals = sys.manager_totals(sim);
+    let rx_events = sys.total_rx_events(sim);
+    TrafficReport {
+        duration: cfg.workload.duration,
+        events_generated: total_generated(sim),
+        events_in: sys.total_events_in(sim),
+        events_out: sys.total_events_out(sim),
+        packets_out: sys.total_packets_out(sim),
+        rx_events,
+        dropped: totals.dropped,
+        unrouted: totals.unrouted,
+        mean_batch: sys.mean_batch_size(sim),
+        flush_deadline: totals.flush_deadline,
+        flush_full: totals.flush_full,
+        flush_evict: totals.flush_evict,
+        evictions: totals.evictions,
+        deadline_misses: sys.total_deadline_misses(sim),
+        latency: sys.latency_histogram(sim),
+        max_link_util: sys
+            .fabric
+            .max_link_utilization(sim, cfg.workload.duration),
+        delivered_events_per_s: rx_events as f64 / cfg.workload.duration.secs_f64(),
+    }
+}
+
+/// Shared generator configuration for fabric scenarios.
+fn gen_config(cfg: &ExperimentConfig, sources: Vec<(u8, u16)>) -> GenConfig {
+    GenConfig {
+        sources,
+        rate_hz: cfg.workload.rate_hz,
+        deadline_offset: cfg.workload.deadline_offset,
+        until: Some(cfg.workload.duration),
+        burst_len: cfg.workload.burst_len,
+        ..GenConfig::default()
+    }
+}
+
+// ---- traffic -------------------------------------------------------------
+
+/// Poisson/Zipf fan-out load (port of the seed `run_traffic` driver).
 ///
 /// Every FPGA gets `sources_per_fpga` sources spread over its 8 HICANN
 /// links; each source fans out to `fan_out` destination FPGAs drawn
 /// Zipf(`zipf_s`) over all *other* FPGAs. GUIDs encode (destination-local
 /// route id); RX entries multicast to all 8 HICANNs.
-pub fn run_traffic(cfg: &ExperimentConfig) -> Result<TrafficReport> {
-    let mut sim: Sim<Msg> = Sim::new();
-    let sys = System::build(&mut sim, cfg.system);
-    let mut rng = Rng::new(cfg.seed);
+pub struct TrafficScenario;
 
-    // collect endpoints+actors
-    let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
-    let n = fpgas.len();
-    let zipf = Zipf::new(n - 1, cfg.workload.zipf_s);
+impl FabricScenario for TrafficScenario {
+    fn build(
+        &self,
+        sim: &mut Sim<Msg>,
+        sys: &System,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
+        let n = fpgas.len();
+        anyhow::ensure!(n >= 2, "traffic scenario needs at least 2 FPGAs");
+        let zipf = Zipf::new(n - 1, cfg.workload.zipf_s);
 
-    // program routes + spawn generators
-    let mut guid_next = vec![0u16; n]; // per-destination GUID allocator
-    for (fi, &(_, _, actor, _ep)) in fpgas.iter().enumerate() {
-        let mut sources = Vec::new();
-        for s in 0..cfg.workload.sources_per_fpga {
-            let hicann = (s % 8) as u8;
-            let pulse = (s / 8) as u16;
-            sources.push((hicann, pulse));
-            // fan-out destinations (distinct, excluding self)
-            let mut picked = std::collections::BTreeSet::new();
-            while picked.len() < cfg.workload.fan_out.min(n - 1) {
-                let mut d = zipf.sample(&mut rng);
-                if d >= fi {
-                    d += 1; // skip self
+        // program routes + spawn generators
+        let mut guid_next = vec![0u16; n]; // per-destination GUID allocator
+        for (fi, &(_, _, actor, _ep)) in fpgas.iter().enumerate() {
+            let mut sources = Vec::new();
+            for s in 0..cfg.workload.sources_per_fpga {
+                let hicann = (s % 8) as u8;
+                let pulse = (s / 8) as u16;
+                sources.push((hicann, pulse));
+                // fan-out destinations (distinct, excluding self)
+                let mut picked = std::collections::BTreeSet::new();
+                while picked.len() < cfg.workload.fan_out.min(n - 1) {
+                    let mut d = zipf.sample(rng);
+                    if d >= fi {
+                        d += 1; // skip self
+                    }
+                    picked.insert(d);
                 }
-                picked.insert(d);
+                for d in picked {
+                    let dest = fpgas[d].3;
+                    let guid = guid_next[d];
+                    guid_next[d] = guid_next[d].wrapping_add(1) & 0x7FFF;
+                    sim.get_mut::<Fpga>(actor)
+                        .tx_lut
+                        .add(hicann, pulse, TxEntry { dest, guid });
+                    sim.get_mut::<Fpga>(fpgas[d].2).rx_lut.set(
+                        guid,
+                        RxEntry {
+                            hicann_mask: 0xFF,
+                            pulse_addr: pulse,
+                        },
+                    );
+                }
             }
-            for d in picked {
-                let dest: EndpointAddr = fpgas[d].3;
-                let guid = guid_next[d];
-                guid_next[d] = guid_next[d].wrapping_add(1) & 0x7FFF;
-                sim.get_mut::<Fpga>(actor)
-                    .tx_lut
-                    .add(hicann, pulse, TxEntry { dest, guid });
-                sim.get_mut::<Fpga>(fpgas[d].2).rx_lut.set(
+            let gen_id = spawn_generator(
+                sim,
+                cfg.workload.generator,
+                gen_config(cfg, sources),
+                actor,
+                rng.next_u64(),
+            );
+            sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+        }
+        Ok(())
+    }
+}
+
+impl Scenario for TrafficScenario {
+    fn name(&self) -> &'static str {
+        "traffic"
+    }
+
+    fn about(&self) -> &'static str {
+        "multi-wafer Poisson spike traffic with Zipf fan-out destinations"
+    }
+
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        run_fabric_scenario(self, Scenario::name(self), cfg)
+    }
+}
+
+// ---- burst ---------------------------------------------------------------
+
+/// Same routes as [`TrafficScenario`], but the load arrives in
+/// link-rate-paced bursts — the synchronized-population regime that
+/// stresses bucket fill and renaming.
+pub struct BurstScenario;
+
+impl FabricScenario for BurstScenario {
+    fn build(
+        &self,
+        sim: &mut Sim<Msg>,
+        sys: &System,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let mut cfg = cfg.clone();
+        cfg.workload.generator = GeneratorKind::Burst;
+        TrafficScenario.build(sim, sys, &cfg, rng)
+    }
+
+    fn collect(&self, sim: &Sim<Msg>, _sys: &System, report: &mut Report) {
+        let mut bursts = 0u64;
+        for id in 0..sim.n_actors() {
+            if let Some(g) = sim.try_get::<BurstGen>(id) {
+                bursts += g.bursts;
+            }
+        }
+        report.push_unit("bursts", bursts, "bursts");
+    }
+}
+
+impl Scenario for BurstScenario {
+    fn name(&self) -> &'static str {
+        "burst"
+    }
+
+    fn about(&self) -> &'static str {
+        "traffic routes under bursty (synchronized-population) load"
+    }
+
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        run_fabric_scenario(self, Scenario::name(self), cfg)
+    }
+}
+
+// ---- hotspot -------------------------------------------------------------
+
+/// All traffic converges on one hot FPGA (wafer 0, slot 0): every other
+/// FPGA's sources route there. Stresses the destination's concentrator
+/// ingress and RX path — the worst case for the paper's topology claim.
+pub struct HotspotScenario;
+
+impl FabricScenario for HotspotScenario {
+    fn build(
+        &self,
+        sim: &mut Sim<Msg>,
+        sys: &System,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let fpgas: Vec<_> = sys.fpgas().collect();
+        let n = fpgas.len();
+        anyhow::ensure!(n >= 2, "hotspot scenario needs at least 2 FPGAs");
+        anyhow::ensure!(
+            cfg.workload.sources_per_fpga * (n - 1) <= 1 << 15,
+            "hotspot GUID space exceeded: {} sources × {} senders",
+            cfg.workload.sources_per_fpga,
+            n - 1
+        );
+        let hot = 0usize;
+        let (_, _, hot_actor, hot_ep) = fpgas[hot];
+        let mut guid_next: u16 = 0;
+        for (fi, &(_, _, actor, _)) in fpgas.iter().enumerate() {
+            if fi == hot {
+                continue; // the hot FPGA only receives
+            }
+            let mut sources = Vec::new();
+            for s in 0..cfg.workload.sources_per_fpga {
+                let hicann = (s % 8) as u8;
+                let pulse = (s / 8) as u16;
+                sources.push((hicann, pulse));
+                let guid = guid_next;
+                guid_next = guid_next.wrapping_add(1) & 0x7FFF;
+                sim.get_mut::<Fpga>(actor).tx_lut.add(
+                    hicann,
+                    pulse,
+                    TxEntry { dest: hot_ep, guid },
+                );
+                sim.get_mut::<Fpga>(hot_actor).rx_lut.set(
                     guid,
                     RxEntry {
                         hicann_mask: 0xFF,
@@ -115,65 +361,49 @@ pub fn run_traffic(cfg: &ExperimentConfig) -> Result<TrafficReport> {
                     },
                 );
             }
+            let gen_id = spawn_generator(
+                sim,
+                cfg.workload.generator,
+                gen_config(cfg, sources),
+                actor,
+                rng.next_u64(),
+            );
+            sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
         }
-        let gen = PoissonGen::new(
-            GenConfig {
-                sources,
-                rate_hz: cfg.workload.rate_hz,
-                deadline_offset: cfg.workload.deadline_offset,
-                until: Some(cfg.workload.duration),
-                ..GenConfig::default()
-            },
-            actor,
-            rng.next_u64(),
-        );
-        let gen_id = sim.add(gen);
-        sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+        Ok(())
     }
 
-    // run: workload window + drain tail
-    sim.run_until(cfg.workload.duration);
-    sys.flush_all(&mut sim);
-    sim.run_until(cfg.workload.duration + Time::from_ms(1));
+    fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
+        let hot_actor = sys.wafers[0].fpgas[0];
+        let hot: &Fpga = sim.get(hot_actor);
+        report.push_unit("hot_rx_events", hot.stats.rx_events, "events");
+        report.push_unit("hot_rx_packets", hot.stats.rx_packets, "packets");
+    }
+}
 
-    // collect
-    let mut report = TrafficReport {
-        duration: cfg.workload.duration,
-        events_generated: 0,
-        events_in: sys.total_events_in(&sim),
-        events_out: sys.total_events_out(&sim),
-        packets_out: sys.total_packets_out(&sim),
-        rx_events: sys.total_rx_events(&sim),
-        dropped: 0,
-        unrouted: 0,
-        mean_batch: sys.mean_batch_size(&sim),
-        flush_deadline: 0,
-        flush_full: 0,
-        flush_evict: 0,
-        evictions: 0,
-        deadline_misses: sys.total_deadline_misses(&sim),
-        latency: sys.latency_histogram(&sim),
-        max_link_util: sys
-            .fabric
-            .max_link_utilization(&sim, cfg.workload.duration),
-        delivered_events_per_s: 0.0,
-    };
-    for (_, _, actor, _) in &fpgas {
-        let f: &Fpga = sim.get(*actor);
-        report.dropped += f.stats.dropped_events;
-        report.unrouted += f.stats.tx_unrouted;
-        report.flush_deadline += f.mgr.stats.flush_deadline;
-        report.flush_full += f.mgr.stats.flush_full;
-        report.flush_evict += f.mgr.stats.flush_eviction;
-        report.evictions += f.mgr.stats.evictions;
+impl Scenario for HotspotScenario {
+    fn name(&self) -> &'static str {
+        "hotspot"
     }
-    // generators were added after FPGAs; count generated events
-    for id in 0..sim.n_actors() {
-        if let Some(g) = sim.try_get::<PoissonGen>(id) {
-            report.events_generated += g.stats.generated;
-        }
+
+    fn about(&self) -> &'static str {
+        "all traffic converges on one hot FPGA (worst-case convergence)"
     }
-    report.delivered_events_per_s = report.rx_events as f64 / report.duration.secs_f64();
+
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        run_fabric_scenario(self, Scenario::name(self), cfg)
+    }
+}
+
+// ---- deprecated wrapper --------------------------------------------------
+
+/// Program random routes and run Poisson traffic over the system.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the Scenario registry: coordinator::scenario::find(\"traffic\")"
+)]
+pub fn run_traffic(cfg: &ExperimentConfig) -> Result<TrafficReport> {
+    let (_sim, _sys, report) = run_fabric_experiment(&TrafficScenario, cfg)?;
     Ok(report)
 }
 
@@ -199,10 +429,14 @@ mod tests {
         cfg
     }
 
+    fn run(cfg: &ExperimentConfig) -> TrafficReport {
+        run_fabric_experiment(&TrafficScenario, cfg).unwrap().2
+    }
+
     #[test]
     fn traffic_run_is_loss_free() {
         let cfg = small();
-        let r = run_traffic(&cfg).unwrap();
+        let r = run(&cfg);
         assert!(r.events_generated > 0);
         assert_eq!(r.events_in, r.events_generated);
         assert_eq!(r.unrouted, 0);
@@ -217,7 +451,7 @@ mod tests {
     fn fan_out_multiplies_delivery() {
         let mut cfg = small();
         cfg.workload.fan_out = 3;
-        let r = run_traffic(&cfg).unwrap();
+        let r = run(&cfg);
         assert_eq!(r.rx_events, 3 * r.events_generated, "fan-out mismatch");
     }
 
@@ -227,8 +461,8 @@ mod tests {
         lo.workload.rate_hz = 0.5e6;
         let mut hi = small();
         hi.workload.rate_hz = 20e6;
-        let r_lo = run_traffic(&lo).unwrap();
-        let r_hi = run_traffic(&hi).unwrap();
+        let r_lo = run(&lo);
+        let r_hi = run(&hi);
         assert!(
             r_hi.mean_batch > r_lo.mean_batch,
             "aggregation should grow with rate: {} vs {}",
@@ -240,11 +474,60 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let cfg = small();
-        let a = run_traffic(&cfg).unwrap();
-        let b = run_traffic(&cfg).unwrap();
+        let a = run(&cfg);
+        let b = run(&cfg);
         assert_eq!(a.events_generated, b.events_generated);
         assert_eq!(a.rx_events, b.rx_events);
         assert_eq!(a.packets_out, b.packets_out);
         assert_eq!(a.latency.p99(), b.latency.p99());
+    }
+
+    #[test]
+    fn deprecated_wrapper_matches_scenario() {
+        let cfg = small();
+        #[allow(deprecated)]
+        let wrapper = run_traffic(&cfg).unwrap();
+        let report = TrafficScenario.run(&cfg).unwrap();
+        assert_eq!(
+            report.get_count("events_generated"),
+            Some(wrapper.events_generated)
+        );
+        assert_eq!(report.get_count("rx_events"), Some(wrapper.rx_events));
+        assert_eq!(report.get_count("packets_out"), Some(wrapper.packets_out));
+        assert_eq!(
+            report.get_f64("latency_p99"),
+            Some(wrapper.latency.p99() as f64 / 1e3)
+        );
+        assert_eq!(
+            report.get_f64("mean_batch"),
+            Some(wrapper.mean_batch)
+        );
+    }
+
+    #[test]
+    fn burst_scenario_smoke() {
+        let cfg = small();
+        let r = BurstScenario.run(&cfg).unwrap();
+        assert_eq!(r.scenario(), "burst");
+        assert!(r.get_count("events_generated").unwrap() > 0);
+        assert!(r.get_count("rx_events").unwrap() > 0);
+        assert!(r.get_count("bursts").unwrap() > 0, "no bursts recorded");
+        assert_eq!(r.get_count("unrouted"), Some(0));
+    }
+
+    #[test]
+    fn hotspot_scenario_converges_on_hot_fpga() {
+        let cfg = small();
+        let r = HotspotScenario.run(&cfg).unwrap();
+        assert_eq!(r.scenario(), "hotspot");
+        let generated = r.get_count("events_generated").unwrap();
+        let rx = r.get_count("rx_events").unwrap();
+        let dropped = r.get_count("dropped").unwrap();
+        assert!(generated > 0);
+        assert_eq!(r.get_count("unrouted"), Some(0));
+        // every accepted event is delivered, and all of it lands on the
+        // hot FPGA
+        assert_eq!(rx + dropped, generated, "event loss in fabric");
+        assert_eq!(r.get_count("hot_rx_events"), Some(rx));
     }
 }

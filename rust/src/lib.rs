@@ -7,29 +7,36 @@
 //! (event aggregation buckets with renaming, map table, free-bucket list,
 //! deadline arbiter), the RMA ring-buffer host protocol, and a multi-wafer
 //! neuromorphic experiment coordinator that drives AOT-compiled JAX/Pallas
-//! LIF neuron models through PJRT — Python never on the request path.
+//! LIF neuron models — Python never on the request path.
 //!
 //! ## Layer map
 //!
 //! - **L3 (this crate)** — coordination, simulation, routing, batching.
+//!   Experiments are `Scenario`s dispatched from a registry
+//!   (`bss-extoll run <scenario>`), reporting into one metric-keyed
+//!   [`util::report::Report`]; parameter grids run through
+//!   [`coordinator::sweep::SweepRunner`].
 //! - **L2** — `python/compile/model.py`: JAX wafer-shard step function,
-//!   lowered once to `artifacts/*.hlo.txt`.
+//!   lowered once to `artifacts/*.hlo.txt` (+ manifest).
 //! - **L1** — `python/compile/kernels/`: Pallas LIF + synapse kernels.
+//!   This offline build executes the artifact semantics with a native
+//!   interpreter (see [`runtime::client`]); the PJRT backend slots back
+//!   in behind the same `Runtime`/`ShardModel` surface.
 //!
 //! ## Module overview
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | zero-dependency substrates: args, json, rng, stats, bench |
+//! | [`util`] | zero-dependency substrates: args, json, rng, stats, report, bench |
 //! | [`sim`] | discrete-event simulation engine (ps clock, actors) |
 //! | [`extoll`] | Tourmalet NIC, links, 3D torus, routing, RMA, baselines |
 //! | [`fpga`] | spike events, lookup tables, aggregation buckets, manager |
 //! | [`host`] | ring-buffer host communication and driver model |
-//! | [`wafer`] | wafer modules, concentrators, multi-wafer system builder |
+//! | [`wafer`] | wafer modules, concentrators, system builder + fabric reports |
 //! | [`workload`] | Poisson/regular/burst generators, cortical microcircuit |
-//! | [`runtime`] | PJRT client wrapper: load + execute AOT artifacts |
+//! | [`runtime`] | artifact loader + shard-step execution backend |
 //! | [`neuro`] | LIF shard state bridging runtime artifacts ⇄ the simulation |
-//! | [`coordinator`] | experiment configuration, orchestration, reports |
+//! | [`coordinator`] | config, `Scenario` trait + registry, sweep runner, reports |
 
 pub mod coordinator;
 pub mod extoll;

@@ -1,18 +1,15 @@
 //! `bss-extoll` — leader entrypoint for the BrainScaleS-Extoll
-//! reproduction: spike-traffic simulations, the multi-wafer cortical
-//! microcircuit co-simulation, and flow-level topology analysis.
+//! reproduction. Experiments dispatch generically through the `Scenario`
+//! registry (`run <scenario>`), and the sweep runner explores parameter
+//! grids (`sweep`) emitting JSON/CSV artifacts.
 
 use anyhow::Result;
 
-use bss_extoll::coordinator::{run_microcircuit, run_traffic, ExperimentConfig};
-use bss_extoll::extoll::analysis::FlowAnalysis;
-use bss_extoll::extoll::nic::NicConfig;
-use bss_extoll::extoll::torus::TorusSpec;
-use bss_extoll::sim::Sim;
+use bss_extoll::coordinator::scenario;
+use bss_extoll::coordinator::sweep::{apply_override, SweepRunner};
+use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::util::args::ArgSpec;
 use bss_extoll::util::bench::Table;
-use bss_extoll::wafer::system::{System, SystemConfig};
-use bss_extoll::workload::microcircuit::{Microcircuit, Placement};
 
 const USAGE: &str = "\
 bss-extoll — BrainScaleS large-scale spike communication over Extoll
@@ -21,10 +18,20 @@ USAGE:
   bss-extoll <command> [options]   (--help per command)
 
 COMMANDS:
-  traffic       multi-wafer Poisson spike-traffic simulation
-  microcircuit  end-to-end cortical-microcircuit co-simulation (PJRT)
-  analyze       flow-level topology bandwidth analysis (paper Fig. 1)
-  info          runtime platform + artifact status
+  run <scenario>  run a registered experiment scenario
+  run --list      list registered scenarios
+  sweep           run one scenario over a parameter grid (JSON/CSV out)
+  info            runtime platform + artifact status
+
+DEPRECATED ALIASES (kept for one release):
+  traffic         = run traffic       (+ --rate / --duration-ms)
+  microcircuit    = run microcircuit  (+ --steps / --artifact)
+  analyze         = run analyze       (+ --wafers / --torus / --concentrators / --scale)
+
+Configs are JSON files (--config); individual knobs override with
+--set \"key=v;key=v\" — the same keys sweep axes use, e.g.
+  bss-extoll run traffic --set \"rate_hz=2e7;fan_out=2\"
+  bss-extoll sweep --scenario traffic --grid \"rate_hz=1e6,1e7;n_wafers=2,4\" --csv sweep.csv
 ";
 
 fn main() {
@@ -46,6 +53,8 @@ fn run(args: &[String]) -> Result<()> {
     };
     let rest = &args[1..];
     match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
         "traffic" => cmd_traffic(rest),
         "microcircuit" => cmd_microcircuit(rest),
         "analyze" => cmd_analyze(rest),
@@ -60,11 +69,113 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-fn load_config(parsed: &bss_extoll::util::args::Parsed) -> Result<ExperimentConfig> {
+/// Load `--config`, falling back to the scenario's own default config
+/// (scenarios with machine-shape requirements size themselves).
+fn load_config(
+    parsed: &bss_extoll::util::args::Parsed,
+    scenario: &dyn scenario::Scenario,
+) -> Result<ExperimentConfig> {
     match parsed.get("config") {
-        "" => Ok(ExperimentConfig::default()),
+        "" => Ok(scenario.default_config()),
         path => ExperimentConfig::from_file(path),
     }
+}
+
+/// Apply a `--set "key=v;key=v"` override list onto a config.
+fn apply_set(cfg: &mut ExperimentConfig, spec: &str) -> Result<()> {
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, value) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set entry '{part}' is not key=value"))?;
+        apply_override(cfg, key.trim(), value.trim())?;
+    }
+    Ok(())
+}
+
+fn list_scenarios() {
+    let mut t = Table::new("registered scenarios", &["scenario", "about"]);
+    for s in scenario::registry() {
+        t.row(vec![s.name().to_string(), s.about().to_string()]);
+    }
+    t.print();
+}
+
+fn find_scenario(name: &str) -> Result<Box<dyn scenario::Scenario>> {
+    scenario::find(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario '{name}' (registered: {})",
+            scenario::names().join(", ")
+        )
+    })
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "--list") {
+        list_scenarios();
+        return Ok(());
+    }
+    let spec = ArgSpec::new("run", "run a registered experiment scenario")
+        .pos("scenario", "scenario name (see `bss-extoll run --list`)")
+        .opt("config", "", "experiment config JSON (defaults when empty)")
+        .opt("set", "", "config overrides \"key=v;key=v\"")
+        .flag("json", "emit the full report as JSON");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let name = p.positional("scenario").expect("required positional");
+    let s = find_scenario(name)?;
+    let mut cfg = load_config(&p, s.as_ref())?;
+    apply_set(&mut cfg, p.get("set"))?;
+    let report = s.run(&cfg)?;
+    if p.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        report.print();
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("sweep", "run one scenario over a parameter grid")
+        .opt("scenario", "traffic", "scenario to sweep")
+        .opt(
+            "grid",
+            "",
+            "sweep axes \"key=v1,v2;key2=v1,v2\" (required; keys as in --set)",
+        )
+        .opt("config", "", "base experiment config JSON")
+        .opt("set", "", "base-config overrides \"key=v;key=v\"")
+        .opt("out", "", "write the aggregate JSON artifact to this file")
+        .opt("csv", "", "write the CSV artifact to this file")
+        .flag("json", "print the aggregate JSON to stdout");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    anyhow::ensure!(
+        !p.get("grid").is_empty(),
+        "--grid is required, e.g. --grid \"rate_hz=1e6,5e6;fan_out=1,2\""
+    );
+    let s = find_scenario(p.get("scenario"))?;
+    let mut cfg = load_config(&p, s.as_ref())?;
+    apply_set(&mut cfg, p.get("set"))?;
+    let runner = SweepRunner::from_grid(cfg, p.get("grid"))?;
+    let result = runner.run_with_progress(s.as_ref(), |i, n| {
+        eprintln!("sweep: point {}/{n}", i + 1);
+    })?;
+    if !p.get("out").is_empty() {
+        std::fs::write(p.get("out"), result.to_json().pretty())?;
+        eprintln!("wrote {}", p.get("out"));
+    }
+    if !p.get("csv").is_empty() {
+        std::fs::write(p.get("csv"), result.to_csv())?;
+        eprintln!("wrote {}", p.get("csv"));
+    }
+    if p.flag("json") {
+        println!("{}", result.to_json().pretty());
+    } else {
+        result.table().print();
+    }
+    Ok(())
 }
 
 fn cmd_traffic(args: &[String]) -> Result<()> {
@@ -72,9 +183,11 @@ fn cmd_traffic(args: &[String]) -> Result<()> {
         .opt("config", "", "experiment config JSON (defaults when empty)")
         .opt("rate", "0", "override: events/s per FPGA")
         .opt("duration-ms", "0", "override: simulated duration (ms)")
+        .opt("set", "", "config overrides \"key=v;key=v\"")
         .flag("json", "emit the full report as JSON");
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
-    let mut cfg = load_config(&p)?;
+    let s = find_scenario("traffic")?;
+    let mut cfg = load_config(&p, s.as_ref())?;
     if p.get_f64("rate") > 0.0 {
         cfg.workload.rate_hz = p.get_f64("rate");
     }
@@ -82,46 +195,12 @@ fn cmd_traffic(args: &[String]) -> Result<()> {
         cfg.workload.duration =
             bss_extoll::sim::Time::from_secs_f64(p.get_f64("duration-ms") * 1e-3);
     }
-    let r = run_traffic(&cfg)?;
+    apply_set(&mut cfg, p.get("set"))?;
+    let report = s.run(&cfg)?;
     if p.flag("json") {
-        println!("{}", r.to_json().pretty());
+        println!("{}", report.to_json().pretty());
     } else {
-        let mut t = Table::new("traffic report", &["metric", "value"]);
-        t.row(vec![
-            "events generated".into(),
-            r.events_generated.to_string(),
-        ]);
-        t.row(vec!["events delivered".into(), r.rx_events.to_string()]);
-        t.row(vec!["packets".into(), r.packets_out.to_string()]);
-        t.row(vec![
-            "mean events/packet".into(),
-            format!("{:.2}", r.mean_batch),
-        ]);
-        t.row(vec![
-            "flushes (deadline/full/evict)".into(),
-            format!("{}/{}/{}", r.flush_deadline, r.flush_full, r.flush_evict),
-        ]);
-        t.row(vec![
-            "latency p50/p99 (ns)".into(),
-            format!(
-                "{:.0}/{:.0}",
-                r.latency.p50() as f64 / 1e3,
-                r.latency.p99() as f64 / 1e3
-            ),
-        ]);
-        t.row(vec![
-            "deadline misses".into(),
-            r.deadline_misses.to_string(),
-        ]);
-        t.row(vec![
-            "peak link util".into(),
-            format!("{:.3}", r.max_link_util),
-        ]);
-        t.row(vec![
-            "delivered events/s".into(),
-            format!("{:.3e}", r.delivered_events_per_s),
-        ]);
-        t.print();
+        report.print();
     }
     Ok(())
 }
@@ -129,66 +208,28 @@ fn cmd_traffic(args: &[String]) -> Result<()> {
 fn cmd_microcircuit(args: &[String]) -> Result<()> {
     let spec = ArgSpec::new(
         "microcircuit",
-        "end-to-end multi-wafer cortical microcircuit (PJRT neuron shards)",
+        "end-to-end multi-wafer cortical microcircuit (LIF neuron shards)",
     )
     .opt("config", "", "experiment config JSON")
     .opt("steps", "0", "override: timesteps")
     .opt("artifact", "", "override: shard artifact name")
+    .opt("set", "", "config overrides \"key=v;key=v\"")
     .flag("json", "emit the full report as JSON");
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
-    let mut cfg = load_config(&p)?;
+    let s = find_scenario("microcircuit")?;
+    let mut cfg = load_config(&p, s.as_ref())?;
     if p.get_u64("steps") > 0 {
         cfg.neuro.steps = p.get_usize("steps");
     }
     if !p.get("artifact").is_empty() {
         cfg.neuro.artifact = p.get("artifact").to_string();
     }
-    // default system sized for the 4-shard artifacts
-    if p.get("config").is_empty() {
-        cfg.system = SystemConfig {
-            n_wafers: 2,
-            torus: TorusSpec::new(2, 2, 1),
-            fpgas_per_wafer: 2,
-            concentrators_per_wafer: 2,
-            ..SystemConfig::default()
-        };
-    }
-    let r = run_microcircuit(&cfg)?;
+    apply_set(&mut cfg, p.get("set"))?;
+    let report = s.run(&cfg)?;
     if p.flag("json") {
-        println!("{}", r.to_json().pretty());
+        println!("{}", report.to_json().pretty());
     } else {
-        let mut t = Table::new("microcircuit report", &["metric", "value"]);
-        t.row(vec!["neurons".into(), r.n_neurons.to_string()]);
-        t.row(vec!["shards (FPGAs)".into(), r.n_shards.to_string()]);
-        t.row(vec!["steps".into(), r.steps.to_string()]);
-        t.row(vec!["spikes".into(), r.spikes_total.to_string()]);
-        t.row(vec![
-            "mean rate (spk/neuron/step)".into(),
-            format!("{:.4}", r.mean_rate),
-        ]);
-        t.row(vec!["fabric events".into(), r.fabric_events.to_string()]);
-        t.row(vec!["delivered".into(), r.delivered_events.to_string()]);
-        t.row(vec![
-            "mean events/packet".into(),
-            format!("{:.2}", r.mean_batch),
-        ]);
-        t.row(vec![
-            "deadline misses".into(),
-            r.deadline_misses.to_string(),
-        ]);
-        t.row(vec![
-            "latency p50/p99 (ns)".into(),
-            format!(
-                "{:.0}/{:.0}",
-                r.latency.p50() as f64 / 1e3,
-                r.latency.p99() as f64 / 1e3
-            ),
-        ]);
-        t.row(vec![
-            "pjrt / des wall (s)".into(),
-            format!("{:.2} / {:.2}", r.pjrt_seconds, r.des_seconds),
-        ]);
-        t.print();
+        report.print();
     }
     Ok(())
 }
@@ -198,63 +239,27 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
         .opt("wafers", "4", "number of wafer modules")
         .opt("torus", "4x4x2", "torus dimensions XxYxZ")
         .opt("concentrators", "8", "concentrator nodes per wafer")
-        .opt("scale", "1.0", "microcircuit scale (1.0 = 77k neurons)");
+        .opt("scale", "1.0", "microcircuit scale (1.0 = 77k neurons)")
+        .flag("json", "emit the full report as JSON");
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
-    let dims: Vec<u16> = p
-        .get("torus")
-        .split('x')
-        .map(|s| s.parse().unwrap_or(2))
-        .collect();
-    anyhow::ensure!(dims.len() == 3, "--torus must be XxYxZ");
-    let sys_cfg = SystemConfig {
-        n_wafers: p.get_usize("wafers"),
-        torus: TorusSpec::new(dims[0], dims[1], dims[2]),
-        concentrators_per_wafer: p.get_usize("concentrators"),
-        ..SystemConfig::default()
-    };
-    let mut sim: Sim<bss_extoll::msg::Msg> = Sim::new();
-    let sys = System::build(&mut sim, sys_cfg);
-    let mc = Microcircuit::new(p.get_f64("scale"));
-    let placement = Placement::spread(&mc, &sys);
-    let flows = placement.flows(&mc, 32.0);
-    let analysis = FlowAnalysis::run(&sys_cfg.torus, &flows, NicConfig::default().link_gbps());
-    let mut t = Table::new("topology analysis", &["metric", "value"]);
-    t.row(vec!["neurons".into(), mc.total_neurons().to_string()]);
-    t.row(vec![
-        "total spike rate (ev/s)".into(),
-        format!("{:.3e}", mc.total_rate_hz()),
-    ]);
-    t.row(vec!["fabric flows".into(), flows.len().to_string()]);
-    t.row(vec![
-        "offered load (Gbit/s)".into(),
-        format!("{:.3}", analysis.total_offered_gbps),
-    ]);
-    t.row(vec![
-        "peak link util".into(),
-        format!("{:.4}", analysis.max_utilization()),
-    ]);
-    t.row(vec![
-        "mean active link util".into(),
-        format!("{:.4}", analysis.mean_active_utilization()),
-    ]);
-    t.row(vec![
-        "sustainable fraction".into(),
-        format!("{:.3}", analysis.sustainable_fraction()),
-    ]);
-    if let Some(((node, dir), load)) = analysis.bottleneck() {
-        t.row(vec![
-            "bottleneck".into(),
-            format!("{node} {dir:?} @ {:.3} Gbit/s", load.gbps),
-        ]);
+    let mut cfg = ExperimentConfig::default();
+    apply_override(&mut cfg, "n_wafers", p.get("wafers"))?;
+    apply_override(&mut cfg, "torus", p.get("torus"))?;
+    apply_override(&mut cfg, "concentrators_per_wafer", p.get("concentrators"))?;
+    apply_override(&mut cfg, "mc_scale", p.get("scale"))?;
+    let report = find_scenario("analyze")?.run(&cfg)?;
+    if p.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        report.print();
     }
-    t.print();
     Ok(())
 }
 
 fn cmd_info() -> Result<()> {
     println!("bss-extoll {}", bss_extoll::VERSION);
     let rt = bss_extoll::runtime::Runtime::cpu()?;
-    println!("pjrt platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
     let dir = bss_extoll::runtime::artifacts_dir();
     println!("artifacts dir: {}", dir.display());
     for name in ["shard_256x1024", "shard_1024x4096"] {
@@ -268,5 +273,6 @@ fn cmd_info() -> Result<()> {
             Err(_) => println!("  {name}: NOT BUILT (run `make artifacts`)"),
         }
     }
+    println!("scenarios: {}", scenario::names().join(", "));
     Ok(())
 }

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::ShardModel;
+use crate::runtime::{ShardModel, WeightBuffer};
 
 /// Mapping local neuron index → (HICANN link, pulse address). The 8
 /// HICANNs of an FPGA interleave across the shard.
@@ -22,17 +22,20 @@ pub fn neuron_of_pulse(hicann: u8, pulse: u16) -> u32 {
     ((pulse as u32) << 3) | hicann as u32
 }
 
+/// Step-invariant weights: retained by the runtime when the upload
+/// succeeds, host-resident fallback otherwise — exactly one copy of the
+/// n_local×n_global matrix either way.
+enum Weights {
+    Uploaded(WeightBuffer),
+    Host(Vec<f32>),
+}
+
 /// A live shard: state + weights + compiled step.
 pub struct ShardSim {
     model: ShardModel,
     /// Packed `[3, n_local]` state.
     state: Vec<f32>,
-    /// Step-invariant weights, uploaded to the device once (perf: avoids
-    /// re-marshalling the n_local×n_global matrix every step).
-    w_buf: Option<xla::PjRtBuffer>,
-    /// Row-major `[n_local, n_global]` weights (host copy, kept for the
-    /// fallback path and diagnostics).
-    weights: Vec<f32>,
+    weights: Weights,
     /// Global index of this shard's first neuron.
     pub global_base: u32,
     /// Spikes emitted in the most recent step (local indices).
@@ -46,11 +49,13 @@ impl ShardSim {
     pub fn new(model: ShardModel, weights: Vec<f32>, global_base: u32) -> Self {
         let n_local = model.n_local();
         assert_eq!(weights.len(), n_local * model.n_global());
-        let w_buf = model.upload_weights(&weights).ok();
+        let weights = match model.upload_weights(&weights) {
+            Ok(buf) => Weights::Uploaded(buf),
+            Err(_) => Weights::Host(weights),
+        };
         ShardSim {
             model,
             state: vec![0.0; 3 * n_local],
-            w_buf,
             weights,
             global_base,
             last_spikes: Vec::new(),
@@ -79,9 +84,9 @@ impl ShardSim {
     /// Advance one timestep given the global spike-count vector; records
     /// and returns the local indices that spiked.
     pub fn step(&mut self, spikes_global: &[f32]) -> Result<&[u32]> {
-        let out = match &self.w_buf {
-            Some(w_buf) => self.model.step_with(&self.state, spikes_global, w_buf)?,
-            None => self.model.step(&self.state, spikes_global, &self.weights)?,
+        let out = match &self.weights {
+            Weights::Uploaded(buf) => self.model.step_with(&self.state, spikes_global, buf)?,
+            Weights::Host(w) => self.model.step(&self.state, spikes_global, w)?,
         };
         self.state = out;
         let n = self.n_local();

@@ -1,9 +1,28 @@
-//! PJRT runtime: load and execute AOT-compiled HLO artifacts.
+//! Execution runtime for the AOT-compiled shard step artifacts.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. The rust
-//! request path never touches Python — artifacts are produced once by
-//! `make artifacts` (see `python/compile/aot.py`).
+//! Artifacts are produced once by `make artifacts` (see
+//! `python/compile/aot.py`): each is a `<name>.hlo.txt` lowered HLO module
+//! plus a `<name>.json` manifest recording shapes and the LIF parameters
+//! baked into the module.
+//!
+//! This offline build executes the artifacts with a **native reference
+//! interpreter**: the shard step semantics are fixed by the manifest (see
+//! `python/compile/kernels/ref.py` — `shard_step_ref`), so the interpreter
+//! reproduces the compiled module exactly:
+//!
+//! ```text
+//! i_total = w @ spikes_in + i_ext
+//! active  = refrac <= 0
+//! v'      = active ? v * decay + i_total * (1 - decay) : v
+//! spike   = active && v' >= v_th
+//! v_out   = spike ? v_reset : v'
+//! r_out   = spike ? refrac_steps : max(refrac - 1, 0)
+//! ```
+//!
+//! The PJRT C-API backend (`xla` crate: `PjRtClient::cpu()` → compile →
+//! execute) used the same public surface — `Runtime`, `ShardModel`,
+//! [`ShardModel::step`] / [`ShardModel::step_with`] — so it can be
+//! re-vendored later without touching any caller.
 
 use std::path::{Path, PathBuf};
 
@@ -49,23 +68,24 @@ impl Manifest {
     }
 }
 
-/// The PJRT client (one per process; compiled executables borrow it).
+/// The execution runtime (one per process).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    platform: String,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU runtime.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        Ok(Runtime {
+            platform: "cpu (native LIF interpreter)".to_string(),
+        })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 
-    /// Load + compile one artifact by name from a directory (expects
+    /// Load one artifact by name from a directory (expects
     /// `<dir>/<name>.hlo.txt` and `<dir>/<name>.json`).
     pub fn load_shard_model(&self, dir: &Path, name: &str) -> Result<ShardModel> {
         let hlo_path = dir.join(format!("{name}.hlo.txt"));
@@ -77,34 +97,41 @@ impl Runtime {
             );
         }
         let manifest = Manifest::load(&man_path)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .context("artifact path is not valid UTF-8")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing HLO text: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling artifact {name}: {e:?}"))?;
+        anyhow::ensure!(
+            manifest.n_local > 0 && manifest.n_global > 0,
+            "artifact {name}: degenerate shapes in manifest"
+        );
+        anyhow::ensure!(
+            manifest.dtype == "f32",
+            "artifact {name}: unsupported dtype {}",
+            manifest.dtype
+        );
         Ok(ShardModel {
-            exe,
-            client: self.client.clone(),
             manifest,
             path: hlo_path,
         })
     }
 }
 
-/// A compiled wafer-shard step function.
+/// Step-invariant weights retained by the runtime (the analogue of a
+/// device-resident `PjRtBuffer` on the PJRT backend).
+pub struct WeightBuffer {
+    w: Vec<f32>,
+}
+
+impl WeightBuffer {
+    /// Row-major `[n_local, n_global]` host view.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+/// A loaded wafer-shard step function.
 ///
 /// Signature (see `python/compile/model.py`):
 /// `state f32[3, n_local] × spikes_in f32[n_global] × w f32[n_local, n_global]
 ///  → state' f32[3, n_local]` — row 2 of the output holds this step's spikes.
 pub struct ShardModel {
-    exe: xla::PjRtLoadedExecutable,
-    client: xla::PjRtClient,
     pub manifest: Manifest,
     pub path: PathBuf,
 }
@@ -128,13 +155,7 @@ impl ShardModel {
         anyhow::ensure!(state.len() == 3 * n_local, "state length");
         anyhow::ensure!(spikes_in.len() == n_global, "spikes length");
         anyhow::ensure!(w.len() == n_local * n_global, "weights length");
-        let state_l = xla::Literal::vec1(state).reshape(&[3, n_local as i64])?;
-        let spikes_l = xla::Literal::vec1(spikes_in);
-        let w_l = xla::Literal::vec1(w).reshape(&[n_local as i64, n_global as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[state_l, spikes_l, w_l])?;
-        let out = result[0][0].to_literal_sync()?;
-        let out = normalize_result(out)?;
-        Ok(out)
+        Ok(self.execute(state, spikes_in, w))
     }
 
     /// Extract the spike row from a packed state.
@@ -142,55 +163,80 @@ impl ShardModel {
         &state[2 * n_local..3 * n_local]
     }
 
-    /// Upload the (step-invariant) weight matrix to the device once.
+    /// Retain the (step-invariant) weight matrix in the runtime once.
     ///
-    /// Perf: `step` re-marshals all three inputs as Literals on every call;
-    /// the weight matrix is by far the largest (n_local×n_global f32) and
-    /// never changes, so keeping it device-side and using [`Self::step_with`]
-    /// removes ~99% of the per-step host→device traffic.
-    pub fn upload_weights(&self, w: &[f32]) -> Result<xla::PjRtBuffer> {
+    /// Perf: the weight matrix is by far the largest input
+    /// (n_local×n_global f32) and never changes between steps, so callers
+    /// hand it over once and use [`Self::step_with`] afterwards — on the
+    /// PJRT backend this kept the buffer device-side and removed ~99% of
+    /// the per-step host→device traffic.
+    pub fn upload_weights(&self, w: &[f32]) -> Result<WeightBuffer> {
         let n_local = self.manifest.n_local;
         let n_global = self.manifest.n_global;
         anyhow::ensure!(w.len() == n_local * n_global, "weights length");
-        Ok(self
-            .client
-            .buffer_from_host_buffer(w, &[n_local, n_global], None)?)
+        Ok(WeightBuffer { w: w.to_vec() })
     }
 
-    /// Execute one timestep against a pre-uploaded weight buffer.
+    /// Execute one timestep against pre-uploaded weights.
     pub fn step_with(
         &self,
         state: &[f32],
         spikes_in: &[f32],
-        w_buf: &xla::PjRtBuffer,
+        w_buf: &WeightBuffer,
     ) -> Result<Vec<f32>> {
         let n_local = self.manifest.n_local;
         let n_global = self.manifest.n_global;
         anyhow::ensure!(state.len() == 3 * n_local, "state length");
         anyhow::ensure!(spikes_in.len() == n_global, "spikes length");
-        let state_b = self
-            .client
-            .buffer_from_host_buffer(state, &[3, n_local], None)?;
-        let spikes_b = self
-            .client
-            .buffer_from_host_buffer(spikes_in, &[n_global], None)?;
-        let result = self.exe.execute_b(&[&state_b, &spikes_b, w_buf])?;
-        let out = result[0][0].to_literal_sync()?;
-        normalize_result(out)
+        anyhow::ensure!(w_buf.w.len() == n_local * n_global, "weights length");
+        Ok(self.execute(state, spikes_in, &w_buf.w))
     }
-}
 
-/// The AOT path lowers with `return_tuple=False`, so the root is the bare
-/// array; tolerate a 1-tuple anyway (older lowering paths wrap it).
-fn normalize_result(lit: xla::Literal) -> Result<Vec<f32>> {
-    match lit.to_vec::<f32>() {
-        Ok(v) => Ok(v),
-        Err(_) => {
-            let inner = lit
-                .to_tuple1()
-                .map_err(|e| anyhow::anyhow!("unwrapping result tuple: {e:?}"))?;
-            Ok(inner.to_vec::<f32>()?)
+    /// The reference LIF shard step (semantics of `shard_step_ref`).
+    fn execute(&self, state: &[f32], spikes_in: &[f32], w: &[f32]) -> Vec<f32> {
+        let n_local = self.manifest.n_local;
+        let n_global = self.manifest.n_global;
+        let decay = self.manifest.decay as f32;
+        let v_th = self.manifest.v_th as f32;
+        let v_reset = self.manifest.v_reset as f32;
+        let refrac_steps = self.manifest.refrac_steps as f32;
+        let i_ext = self.manifest.i_ext as f32;
+
+        // Spike vectors are sparse: gather active indices once so the
+        // synaptic accumulation is O(n_local × n_active).
+        let active_in: Vec<usize> = spikes_in
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s != 0.0)
+            .map(|(j, _)| j)
+            .collect();
+
+        let mut out = vec![0.0f32; 3 * n_local];
+        for i in 0..n_local {
+            let row = &w[i * n_global..(i + 1) * n_global];
+            let mut i_syn = 0.0f32;
+            for &j in &active_in {
+                i_syn += row[j] * spikes_in[j];
+            }
+            let i_total = i_syn + i_ext;
+            let v = state[i];
+            let r = state[n_local + i];
+            let active = r <= 0.0;
+            let v_new = if active {
+                v * decay + i_total * (1.0 - decay)
+            } else {
+                v
+            };
+            let spike = active && v_new >= v_th;
+            out[i] = if spike { v_reset } else { v_new };
+            out[n_local + i] = if spike {
+                refrac_steps
+            } else {
+                (r - 1.0).max(0.0)
+            };
+            out[2 * n_local + i] = if spike { 1.0 } else { 0.0 };
         }
+        out
     }
 }
 
@@ -299,6 +345,26 @@ mod tests {
         let w = vec![0.01f32; n_local * n_global];
         let a = model.step(&state, &spikes, &w).unwrap();
         let b = model.step(&state, &spikes, &w).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn step_with_matches_step() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_shard_model(&dir(), "shard_256x1024").unwrap();
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        let state = vec![0.5f32; 3 * n_local];
+        let mut spikes = vec![0.0f32; n_global];
+        spikes[1] = 1.0;
+        spikes[900] = 2.0;
+        let w = vec![0.03f32; n_local * n_global];
+        let w_buf = model.upload_weights(&w).unwrap();
+        let a = model.step(&state, &spikes, &w).unwrap();
+        let b = model.step_with(&state, &spikes, &w_buf).unwrap();
         assert_eq!(a, b);
     }
 

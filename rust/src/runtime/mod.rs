@@ -1,6 +1,10 @@
-//! PJRT execution substrate: loads the AOT artifacts produced by
-//! `python/compile/aot.py` and runs them from the rust request path.
+//! Execution substrate: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and runs them from the rust request path —
+//! Python never on the request path. This offline build interprets the
+//! artifacts natively (see [`client`] for the backend contract).
 
 pub mod client;
 
-pub use client::{artifacts_available, artifacts_dir, Manifest, Runtime, ShardModel};
+pub use client::{
+    artifacts_available, artifacts_dir, Manifest, Runtime, ShardModel, WeightBuffer,
+};

@@ -1,12 +1,13 @@
 //! Zero-dependency substrates: CLI argument parsing, JSON, deterministic
-//! RNG, statistics, and a micro-benchmark harness.
+//! RNG, statistics, metric reports, and a micro-benchmark harness.
 //!
-//! This build is fully offline (only `xla` + `anyhow` are vendored), so the
-//! conveniences usually imported from crates.io — `clap`, `serde_json`,
+//! This build is fully offline (only a minimal `anyhow` is vendored), so
+//! the conveniences usually imported from crates.io — `clap`, `serde_json`,
 //! `rand`, `criterion` — are implemented here as small, well-tested modules.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod report;
 pub mod rng;
 pub mod stats;

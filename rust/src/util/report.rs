@@ -1,0 +1,342 @@
+//! Unified, metric-keyed experiment reports.
+//!
+//! Every scenario (see [`crate::coordinator::scenario`]) collects its
+//! results into a [`Report`]: an insertion-ordered list of
+//! `metric → value` entries with units. One container replaces the
+//! per-driver report structs, so the CLI, the JSON emitter, the table
+//! renderer and the sweep runner all handle every scenario generically.
+//!
+//! Values are typed ([`Value::Count`], [`Value::Real`], [`Value::Text`])
+//! so counters emit as exact integers and rates as floats; JSON
+//! round-trips through [`Report::to_json`] / [`Report::from_json`] up to
+//! numeric normalization (JSON cannot distinguish `17.0` from `17`, so
+//! integral non-negative numbers parse back as [`Value::Count`]).
+
+use crate::util::bench::{eng, Table};
+use crate::util::json::Json;
+
+/// One metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Exact event/packet/... counter.
+    Count(u64),
+    /// Real-valued measurement (rate, utilization, seconds, ...).
+    Real(f64),
+    /// Non-numeric metric (policy name, bottleneck description, ...).
+    Text(String),
+}
+
+impl Value {
+    /// Numeric view (counts widen to f64; text is `None`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Count(c) => Some(*c as f64),
+            Value::Real(x) => Some(*x),
+            Value::Text(_) => None,
+        }
+    }
+
+    /// Render for tables and CSV cells.
+    pub fn render(&self) -> String {
+        match self {
+            Value::Count(c) => c.to_string(),
+            Value::Real(x) => eng(*x),
+            Value::Text(s) => s.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Value::Count(c) => Json::from(*c),
+            Value::Real(x) => Json::Num(*x),
+            Value::Text(s) => Json::from(s.as_str()),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Value, String> {
+        match j {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= u64::MAX as f64 => {
+                Ok(Value::Count(*x as u64))
+            }
+            Json::Num(x) => Ok(Value::Real(*x)),
+            Json::Str(s) => Ok(Value::Text(s.clone())),
+            Json::Null => Ok(Value::Real(f64::NAN)),
+            other => Err(format!("unsupported metric value {other:?}")),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::Count(v)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Count(v as u64)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::Count(v as u64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Real(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::Text(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::Text(v)
+    }
+}
+
+/// One `metric → value` entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub key: String,
+    pub value: Value,
+    /// Unit label (`"events"`, `"ns"`, `"1"`, ...); empty when unitless.
+    pub unit: String,
+}
+
+/// An insertion-ordered, metric-keyed experiment report.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Report {
+    scenario: String,
+    entries: Vec<Entry>,
+}
+
+impl Report {
+    pub fn new(scenario: &str) -> Report {
+        Report {
+            scenario: scenario.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Name of the scenario that produced this report.
+    pub fn scenario(&self) -> &str {
+        &self.scenario
+    }
+
+    /// Insert (or replace) a unitless metric. Insertion order is kept;
+    /// replacing keeps the original position.
+    pub fn push(&mut self, key: &str, value: impl Into<Value>) {
+        self.push_unit(key, value, "");
+    }
+
+    /// Insert (or replace) a metric with a unit label.
+    pub fn push_unit(&mut self, key: &str, value: impl Into<Value>, unit: &str) {
+        let value = value.into();
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.value = value;
+            e.unit = unit.to_string();
+        } else {
+            self.entries.push(Entry {
+                key: key.to_string(),
+                value,
+                unit: unit.to_string(),
+            });
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|e| e.key == key).map(|e| &e.value)
+    }
+
+    /// Numeric metric lookup (counts widen to f64).
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    /// Counter lookup.
+    pub fn get_count(&self, key: &str) -> Option<u64> {
+        match self.get(key) {
+            Some(Value::Count(c)) => Some(*c),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Metric keys in insertion order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.key.as_str())
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// Serialize: `{"scenario": .., "metrics": [{key, value, unit}, ..]}`.
+    /// The metrics array preserves insertion order (a flat object would
+    /// not: [`Json`] objects sort their keys).
+    pub fn to_json(&self) -> Json {
+        let mut metrics = Json::arr();
+        for e in &self.entries {
+            let mut row = Json::obj()
+                .set("key", e.key.as_str())
+                .set("value", e.value.to_json());
+            if !e.unit.is_empty() {
+                row = row.set("unit", e.unit.as_str());
+            }
+            metrics.push(row);
+        }
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("metrics", metrics)
+    }
+
+    /// Flat `metric → value` object (lossy: drops order and units).
+    /// Convenient for sweep rows and ad-hoc scripting.
+    pub fn to_flat_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for e in &self.entries {
+            obj.insert(&e.key, e.value.to_json());
+        }
+        obj
+    }
+
+    /// Inverse of [`Report::to_json`] up to numeric normalization:
+    /// a [`Value::Real`] whose value is a non-negative integer parses
+    /// back as [`Value::Count`] (JSON carries no int/float distinction).
+    /// Use [`Report::get_f64`] rather than [`Report::get_count`] when a
+    /// metric's integrality is value-dependent.
+    pub fn from_json(j: &Json) -> Result<Report, String> {
+        let scenario = j
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or("missing 'scenario'")?;
+        let rows = j
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'metrics' array")?;
+        let mut report = Report::new(scenario);
+        for row in rows {
+            let key = row
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or("metric missing 'key'")?;
+            let value = Value::from_json(row.get("value").ok_or("metric missing 'value'")?)?;
+            report.push_unit(key, value, row.str_or("unit", ""));
+        }
+        Ok(report)
+    }
+
+    /// Render as a metric/value/unit table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("{} report", self.scenario),
+            &["metric", "value", "unit"],
+        );
+        for e in &self.entries {
+            t.row(vec![e.key.clone(), e.value.render(), e.unit.clone()]);
+        }
+        t
+    }
+
+    pub fn print(&self) {
+        self.table().print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("traffic");
+        r.push_unit("events_generated", 12345u64, "events");
+        r.push_unit("mean_batch", 17.25, "events/packet");
+        r.push_unit("latency_p99", 1234.5, "ns");
+        r.push("eviction", "most_urgent");
+        r
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let r = sample();
+        let keys: Vec<&str> = r.keys().collect();
+        assert_eq!(
+            keys,
+            vec!["events_generated", "mean_batch", "latency_p99", "eviction"]
+        );
+    }
+
+    #[test]
+    fn replace_keeps_position() {
+        let mut r = sample();
+        r.push_unit("mean_batch", 99.5, "events/packet");
+        let keys: Vec<&str> = r.keys().collect();
+        assert_eq!(keys[1], "mean_batch");
+        assert_eq!(r.get_f64("mean_batch"), Some(99.5));
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let r = sample();
+        assert_eq!(r.get_count("events_generated"), Some(12345));
+        assert_eq!(r.get_f64("events_generated"), Some(12345.0));
+        assert_eq!(r.get_count("mean_batch"), None);
+        assert_eq!(r.get("eviction"), Some(&Value::Text("most_urgent".into())));
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        let r2 = Report::from_json(&j).unwrap();
+        assert_eq!(r, r2);
+        // and through actual text
+        let r3 = Report::from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(r, r3);
+    }
+
+    #[test]
+    fn flat_json_has_plain_keys() {
+        let r = sample();
+        let f = r.to_flat_json();
+        assert_eq!(f.u64_or("events_generated", 0), 12345);
+        assert_eq!(f.f64_or("mean_batch", 0.0), 17.25);
+        assert_eq!(f.str_or("eviction", ""), "most_urgent");
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let r = sample();
+        let s = r.table().render();
+        assert!(s.contains("traffic report"));
+        assert!(s.contains("events_generated"));
+        assert!(s.contains("12345"));
+        assert!(s.contains("events/packet"));
+    }
+
+    #[test]
+    fn nan_real_survives_as_null() {
+        let mut r = Report::new("x");
+        r.push("mean_batch", f64::NAN);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = Report::from_json(&j).unwrap();
+        assert!(r2.get_f64("mean_batch").unwrap().is_nan());
+    }
+}

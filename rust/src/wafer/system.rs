@@ -15,7 +15,8 @@ use crate::fpga::fpga::{Fpga, FpgaConfig};
 use crate::fpga::lookup::{EndpointAddr, RxEntry, TxEntry};
 use crate::fpga::manager::ManagerConfig;
 use crate::msg::Msg;
-use crate::sim::{ActorId, Sim};
+use crate::sim::{ActorId, Sim, Time};
+use crate::util::report::Report;
 use crate::util::stats::Histogram;
 
 use super::concentrator::{Concentrator, ConcentratorConfig};
@@ -80,6 +81,18 @@ pub struct System {
     pub cfg: SystemConfig,
     pub fabric: Fabric,
     pub wafers: Vec<Wafer>,
+}
+
+/// System-wide sums of the per-FPGA bucket-manager / drop counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ManagerTotals {
+    pub dropped: u64,
+    pub unrouted: u64,
+    pub flush_deadline: u64,
+    pub flush_full: u64,
+    pub flush_external: u64,
+    pub flush_evict: u64,
+    pub evictions: u64,
 }
 
 impl System {
@@ -245,6 +258,61 @@ impl System {
         h
     }
 
+    /// Sum the per-FPGA bucket-manager and drop counters over the system.
+    pub fn manager_totals(&self, sim: &Sim<Msg>) -> ManagerTotals {
+        let mut t = ManagerTotals::default();
+        for (_, _, id, _) in self.fpgas() {
+            let f: &Fpga = sim.get(id);
+            t.dropped += f.stats.dropped_events;
+            t.unrouted += f.stats.tx_unrouted;
+            t.flush_deadline += f.mgr.stats.flush_deadline;
+            t.flush_full += f.mgr.stats.flush_full;
+            t.flush_external += f.mgr.stats.flush_external;
+            t.flush_evict += f.mgr.stats.flush_eviction;
+            t.evictions += f.mgr.stats.evictions;
+        }
+        t
+    }
+
+    /// Collect the standard communication-path metrics of a finished run
+    /// into a [`Report`] — the paper's headline numbers (aggregation
+    /// efficiency, end-to-end latency, deadline misses, link utilization,
+    /// flush-reason breakdown). Scenario drivers start from this and
+    /// append their scenario-specific metrics.
+    pub fn fabric_report(&self, sim: &Sim<Msg>, scenario: &str, duration: Time) -> Report {
+        let totals = self.manager_totals(sim);
+        let latency = self.latency_histogram(sim);
+        let rx_events = self.total_rx_events(sim);
+        let mut r = Report::new(scenario);
+        r.push_unit("duration", duration.secs_f64(), "s");
+        r.push_unit("events_in", self.total_events_in(sim), "events");
+        r.push_unit("events_out", self.total_events_out(sim), "events");
+        r.push_unit("packets_out", self.total_packets_out(sim), "packets");
+        r.push_unit("rx_events", rx_events, "events");
+        r.push_unit("dropped", totals.dropped, "events");
+        r.push_unit("unrouted", totals.unrouted, "events");
+        r.push_unit("mean_batch", self.mean_batch_size(sim), "events/packet");
+        r.push_unit("flush_deadline", totals.flush_deadline, "flushes");
+        r.push_unit("flush_full", totals.flush_full, "flushes");
+        r.push_unit("flush_evict", totals.flush_evict, "flushes");
+        r.push_unit("flush_external", totals.flush_external, "flushes");
+        r.push_unit("evictions", totals.evictions, "evictions");
+        r.push_unit("deadline_misses", self.total_deadline_misses(sim), "events");
+        r.push_unit("latency_p50", latency.p50() as f64 / 1e3, "ns");
+        r.push_unit("latency_p99", latency.p99() as f64 / 1e3, "ns");
+        r.push_unit(
+            "max_link_util",
+            self.fabric.max_link_utilization(sim, duration),
+            "1",
+        );
+        r.push_unit(
+            "delivered_events_per_s",
+            rx_events as f64 / duration.secs_f64(),
+            "events/s",
+        );
+        r
+    }
+
     /// Flush every FPGA's buckets (experiment barrier) by scheduling the
     /// external-flush timer at the current simulation time.
     pub fn flush_all(&self, sim: &mut Sim<Msg>) {
@@ -342,6 +410,31 @@ mod tests {
         sys.flush_all(&mut sim);
         sim.run_until(Time::from_us(100));
         assert_eq!(sys.total_rx_events(&sim), 1, "flush_all did not deliver");
+    }
+
+    #[test]
+    fn fabric_report_collects_standard_metrics() {
+        let mut sim = Sim::new();
+        let sys = System::build(&mut sim, small_cfg());
+        sys.program_route(&mut sim, (0, 0), 2, 77, (1, 5), 900, 0b0000_1000, 0x155);
+        let src = sys.wafers[0].fpgas[0];
+        sim.schedule(
+            Time::from_ns(100),
+            src,
+            Msg::HicannEvent(SpikeEvent::new(2, 77, 2000)),
+        );
+        sim.run_until(Time::from_ms(1));
+        let r = sys.fabric_report(&sim, "unit", Time::from_ms(1));
+        assert_eq!(r.scenario(), "unit");
+        assert_eq!(r.get_count("events_in"), Some(1));
+        assert_eq!(r.get_count("rx_events"), Some(1));
+        assert_eq!(r.get_count("dropped"), Some(0));
+        assert_eq!(r.get_count("unrouted"), Some(0));
+        assert!(r.get_f64("latency_p50").unwrap() > 0.0);
+        assert!(r.get_f64("delivered_events_per_s").unwrap() > 0.0);
+        let totals = sys.manager_totals(&sim);
+        assert_eq!(totals.dropped, 0);
+        assert!(totals.flush_deadline + totals.flush_full + totals.flush_evict >= 1);
     }
 
     #[test]

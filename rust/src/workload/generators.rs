@@ -7,12 +7,15 @@
 //!
 //! [`PoissonGen`] draws exponential inter-event times (biologically
 //! realistic spike trains); [`RegularGen`] emits at a fixed interval
-//! (ceiling/saturation measurements).
+//! (ceiling/saturation measurements); [`BurstGen`] emits Poisson-arriving
+//! bursts of link-rate-paced events (synchronous-population regime that
+//! stresses bucket renaming). Scenarios select between them via
+//! [`GeneratorKind`] and [`spawn_generator`].
 
 use crate::fpga::event::{systime_of, SpikeEvent, TS_MASK};
 use crate::fpga::hicann::{HicannLinkConfig, HICANNS_PER_FPGA};
 use crate::msg::Msg;
-use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::sim::{Actor, ActorId, Ctx, Sim, Time};
 use crate::util::rng::Rng;
 
 /// Timer tag base: per-HICANN-link generator wake-up (tag = base + link).
@@ -32,6 +35,8 @@ pub struct GenConfig {
     pub until: Option<Time>,
     /// HICANN link pacing parameters.
     pub link: HicannLinkConfig,
+    /// Events per burst ([`BurstGen`] only; others ignore it).
+    pub burst_len: u32,
 }
 
 impl Default for GenConfig {
@@ -42,8 +47,71 @@ impl Default for GenConfig {
             deadline_offset: 2000,
             until: None,
             link: HicannLinkConfig::default(),
+            burst_len: 64,
         }
     }
+}
+
+/// Which traffic generator a scenario spawns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeneratorKind {
+    /// Exponential inter-event times (default).
+    Poisson,
+    /// Fixed inter-event interval.
+    Regular,
+    /// Poisson-arriving bursts of back-to-back events.
+    Burst,
+}
+
+impl GeneratorKind {
+    pub fn parse(s: &str) -> Option<GeneratorKind> {
+        match s {
+            "poisson" => Some(GeneratorKind::Poisson),
+            "regular" => Some(GeneratorKind::Regular),
+            "burst" => Some(GeneratorKind::Burst),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GeneratorKind::Poisson => "poisson",
+            GeneratorKind::Regular => "regular",
+            GeneratorKind::Burst => "burst",
+        }
+    }
+}
+
+/// Spawn a generator of `kind` feeding `fpga` and return its actor id.
+/// The caller still schedules the kick-off `Msg::Timer(0)`.
+pub fn spawn_generator(
+    sim: &mut Sim<Msg>,
+    kind: GeneratorKind,
+    cfg: GenConfig,
+    fpga: ActorId,
+    seed: u64,
+) -> ActorId {
+    match kind {
+        GeneratorKind::Poisson => sim.add(PoissonGen::new(cfg, fpga, seed)),
+        GeneratorKind::Regular => sim.add(RegularGen::new(cfg, fpga)),
+        GeneratorKind::Burst => sim.add(BurstGen::new(cfg, fpga, seed)),
+    }
+}
+
+/// Sum of `stats.generated` over every generator actor in the simulation,
+/// regardless of kind (post-run metric collection).
+pub fn total_generated(sim: &Sim<Msg>) -> u64 {
+    let mut total = 0;
+    for id in 0..sim.n_actors() {
+        if let Some(g) = sim.try_get::<PoissonGen>(id) {
+            total += g.stats.generated;
+        } else if let Some(g) = sim.try_get::<RegularGen>(id) {
+            total += g.stats.generated;
+        } else if let Some(g) = sim.try_get::<BurstGen>(id) {
+            total += g.stats.generated;
+        }
+    }
+    total
 }
 
 /// Generator statistics.
@@ -222,6 +290,117 @@ impl Actor<Msg> for RegularGen {
     }
 }
 
+/// Bursty generator: bursts arrive per link as a Poisson process; inside a
+/// burst, `burst_len` events fire back-to-back at the HICANN link rate
+/// (one per [`HicannLinkConfig::event_spacing`]). Models synchronized
+/// population activity — the regime in which aggregation buckets fill
+/// fastest and renaming/eviction is stressed.
+pub struct BurstGen {
+    pub cfg: GenConfig,
+    fpga: ActorId,
+    rng: Rng,
+    /// Sources grouped by link for fast draw.
+    by_link: [Vec<u16>; HICANNS_PER_FPGA],
+    /// Events left in the current burst, per link (0 = between bursts).
+    remaining: [u32; HICANNS_PER_FPGA],
+    pub stats: GenStats,
+    /// Bursts started so far.
+    pub bursts: u64,
+}
+
+impl BurstGen {
+    pub fn new(cfg: GenConfig, fpga: ActorId, seed: u64) -> Self {
+        let mut by_link: [Vec<u16>; HICANNS_PER_FPGA] = Default::default();
+        for &(h, p) in &cfg.sources {
+            by_link[h as usize].push(p);
+        }
+        BurstGen {
+            cfg,
+            fpga,
+            rng: Rng::new(seed),
+            by_link,
+            remaining: [0; HICANNS_PER_FPGA],
+            stats: GenStats::default(),
+            bursts: 0,
+        }
+    }
+
+    fn active_links(&self) -> Vec<u8> {
+        (0..HICANNS_PER_FPGA as u8)
+            .filter(|&h| !self.by_link[h as usize].is_empty())
+            .collect()
+    }
+
+    /// Per-link burst arrival rate so the mean event rate over all active
+    /// links approximates `cfg.rate_hz`.
+    fn burst_rate(&self) -> f64 {
+        let n = self.active_links().len().max(1);
+        self.cfg.rate_hz / (n as f64 * self.cfg.burst_len.max(1) as f64)
+    }
+
+    fn schedule(&mut self, link: u8, at: Time, ctx: &mut Ctx<'_, Msg>) {
+        if let Some(until) = self.cfg.until {
+            if at > until {
+                self.remaining[link as usize] = 0;
+                return;
+            }
+        }
+        ctx.send_at(ctx.self_id(), at, Msg::Timer(TIMER_GEN_BASE + link as u32));
+    }
+
+    fn schedule_next_burst(&mut self, link: u8, ctx: &mut Ctx<'_, Msg>) {
+        let gap = self.rng.exponential(self.burst_rate());
+        let at = ctx.now() + Time::from_secs_f64(gap);
+        self.remaining[link as usize] = self.cfg.burst_len.max(1);
+        self.schedule(link, at, ctx);
+    }
+
+    fn emit(&mut self, link: u8, ctx: &mut Ctx<'_, Msg>) {
+        let pulses = &self.by_link[link as usize];
+        let pulse = pulses[self.rng.index(pulses.len())];
+        let ts =
+            (systime_of(ctx.now()) as u32 + self.cfg.deadline_offset as u32) as u16 & TS_MASK;
+        self.stats.generated += 1;
+        ctx.send(
+            self.fpga,
+            Time::ZERO,
+            Msg::HicannEvent(SpikeEvent::new(link, pulse, ts)),
+        );
+    }
+}
+
+impl Actor<Msg> for BurstGen {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(0) => {
+                // kick-off: schedule the first burst on every active link
+                for link in self.active_links() {
+                    self.schedule_next_burst(link, ctx);
+                }
+            }
+            Msg::Timer(t) if t >= TIMER_GEN_BASE => {
+                let link = (t - TIMER_GEN_BASE) as u8;
+                if self.remaining[link as usize] == self.cfg.burst_len.max(1) {
+                    self.bursts += 1;
+                }
+                self.emit(link, ctx);
+                self.remaining[link as usize] -= 1;
+                if self.remaining[link as usize] > 0 {
+                    let at = ctx.now() + self.cfg.link.event_spacing();
+                    self.schedule(link, at, ctx);
+                } else {
+                    self.schedule_next_burst(link, ctx);
+                }
+            }
+            other => panic!("burst gen: unexpected message {other:?}"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "burst-gen".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +512,103 @@ mod tests {
             let delta = crate::fpga::event::ts_delta(emitted_sys, ev.timestamp);
             assert!(delta == 555 || delta == 554 || delta == 556, "delta {delta}");
         }
+    }
+
+    #[test]
+    fn burst_generator_is_bursty_and_rate_close() {
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: sources_all_links(4),
+            rate_hz: 10e6,
+            burst_len: 32,
+            until: Some(Time::from_ms(10)),
+            ..GenConfig::default()
+        };
+        let spacing = cfg.link.event_spacing();
+        let gen = sim.add(BurstGen::new(cfg, stub, 99));
+        sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+        sim.run_to_completion();
+        let g: &BurstGen = sim.get(gen);
+        assert!(g.bursts > 10, "only {} bursts", g.bursts);
+        let events = &sim.get::<FpgaStub>(stub).events;
+        // mean rate within 25% of nominal (burst duration biases it low)
+        let n = events.len() as f64;
+        let expect = 10e6 * 10e-3;
+        assert!(
+            n > expect * 0.75 && n < expect * 1.25,
+            "generated {n}, expected ≈{expect}"
+        );
+        // burstiness: a large fraction of same-link gaps equal the pacing
+        let mut per_link: Vec<Vec<Time>> = vec![Vec::new(); 8];
+        for (at, ev) in events {
+            per_link[ev.hicann as usize].push(*at);
+        }
+        let mut paced = 0u64;
+        let mut gaps = 0u64;
+        for times in &per_link {
+            for w in times.windows(2) {
+                gaps += 1;
+                if w[1] - w[0] == spacing {
+                    paced += 1;
+                }
+            }
+        }
+        assert!(
+            paced as f64 > gaps as f64 * 0.8,
+            "{paced}/{gaps} gaps at link pacing — not bursty"
+        );
+    }
+
+    #[test]
+    fn burst_generator_deterministic() {
+        let run = || {
+            let mut sim = Sim::new();
+            let stub = sim.add(FpgaStub { events: vec![] });
+            let cfg = GenConfig {
+                sources: sources_all_links(2),
+                rate_hz: 5e6,
+                burst_len: 16,
+                until: Some(Time::from_ms(2)),
+                ..GenConfig::default()
+            };
+            let gen = sim.add(BurstGen::new(cfg, stub, 7));
+            sim.schedule(Time::ZERO, gen, Msg::Timer(0));
+            sim.run_to_completion();
+            sim.get::<FpgaStub>(stub).events.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn spawn_generator_dispatches_kinds() {
+        assert_eq!(GeneratorKind::parse("poisson"), Some(GeneratorKind::Poisson));
+        assert_eq!(GeneratorKind::parse("regular"), Some(GeneratorKind::Regular));
+        assert_eq!(GeneratorKind::parse("burst"), Some(GeneratorKind::Burst));
+        assert_eq!(GeneratorKind::parse("nope"), None);
+        let mut sim = Sim::new();
+        let stub = sim.add(FpgaStub { events: vec![] });
+        let cfg = GenConfig {
+            sources: sources_all_links(1),
+            rate_hz: 4e6,
+            until: Some(Time::from_us(200)),
+            ..GenConfig::default()
+        };
+        for kind in [
+            GeneratorKind::Poisson,
+            GeneratorKind::Regular,
+            GeneratorKind::Burst,
+        ] {
+            let g = spawn_generator(&mut sim, kind, cfg.clone(), stub, 5);
+            sim.schedule(Time::ZERO, g, Msg::Timer(0));
+        }
+        sim.run_to_completion();
+        assert!(!sim.get::<FpgaStub>(stub).events.is_empty());
+        assert!(total_generated(&sim) > 0);
+        assert_eq!(
+            total_generated(&sim),
+            sim.get::<FpgaStub>(stub).events.len() as u64
+        );
     }
 
     #[test]

@@ -1,12 +1,16 @@
-//! Workload generation: Poisson/regular spike traffic with HICANN link
-//! pacing, trace record/replay, and the Potjans-Diesmann cortical
-//! microcircuit (the paper's target multi-wafer network).
+//! Workload generation: Poisson/regular/burst spike traffic with HICANN
+//! link pacing, trace record/replay, and the Potjans-Diesmann cortical
+//! microcircuit (the paper's target multi-wafer network). Scenarios pick
+//! their generator via [`generators::GeneratorKind`].
 
 pub mod generators;
 pub mod microcircuit;
 pub mod trace;
 
-pub use generators::{GenConfig, GenStats, PoissonGen, RegularGen, TIMER_GEN_BASE};
+pub use generators::{
+    spawn_generator, total_generated, BurstGen, GenConfig, GenStats, GeneratorKind,
+    PoissonGen, RegularGen, TIMER_GEN_BASE,
+};
 pub use microcircuit::{
     Microcircuit, Placement, CONN_PROB, FIRING_RATES_HZ, FULL_SCALE_NEURONS, POPULATIONS,
 };

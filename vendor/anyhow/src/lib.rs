@@ -1,0 +1,241 @@
+//! Vendored minimal re-implementation of the `anyhow` API surface used by
+//! this repository (the build is fully offline, so crates.io is not
+//! available). Provides [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics follow upstream `anyhow` where the repository relies on them:
+//!
+//! - `{e}` displays the outermost context only; `{e:#}` displays the whole
+//!   chain as `outer: inner: root`.
+//! - `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what allows the blanket `From<E: std::error::Error>` conversion
+//!   (and hence `?` on arbitrary error types) to coexist with the identity
+//!   `From<Error>` impl.
+//! - [`Context`] is implemented for both `Result` and `Option`.
+
+use std::fmt;
+
+/// A context-carrying error: an ordered chain of messages, root cause
+/// first, outermost context last.
+pub struct Error {
+    /// `frames[0]` is the root cause; later entries wrap earlier ones.
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an additional layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.push(context.to_string());
+        self
+    }
+
+    /// Iterate the chain from the outermost context to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The root cause message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut chain = self.chain();
+        match chain.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        if f.alternate() {
+            for frame in chain {
+                write!(f, ": {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut chain = self.chain();
+        match chain.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        let rest: Vec<&str> = chain.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Capture the source chain, root cause first.
+        let mut messages = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            messages.push(s.to_string());
+            source = s.source();
+        }
+        messages.reverse();
+        Error { frames: messages }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_outer_only_alternate_full_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too large: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+        assert!(f(11).unwrap_err().to_string().contains("11"));
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: file missing");
+    }
+}
