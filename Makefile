@@ -1,4 +1,4 @@
-.PHONY: artifacts test bench clean
+.PHONY: artifacts test bench bench-json clean
 
 # AOT-lower the JAX/Pallas shard models into artifacts/ (HLO + manifest).
 # The rust runtime consumes the manifests; see rust/src/runtime/client.rs.
@@ -11,6 +11,13 @@ test:
 
 bench:
 	BSS_BENCH_FAST=1 cargo bench
+
+# Perf-trajectory artifact: heap-vs-wheel event engine + sweep scaling.
+# Writes BENCH_PR2.json at the repo root (see PERF.md). Honors
+# BSS_BENCH_FAST=1 (CI smoke); override the output with BSS_BENCH_JSON.
+BSS_BENCH_JSON ?= BENCH_PR2.json
+bench-json:
+	BSS_BENCH_JSON=$(BSS_BENCH_JSON) cargo bench --bench bench_events
 
 clean:
 	cargo clean

@@ -1,4 +1,4 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): multi-wafer cortical
+//! End-to-end driver: multi-wafer cortical
 //! microcircuit with LIF dynamics in AOT-compiled JAX/Pallas artifacts,
 //! every inter-wafer spike crossing the simulated Extoll fabric.
 //!

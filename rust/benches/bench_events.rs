@@ -1,0 +1,224 @@
+//! Perf-trajectory benchmark (see PERF.md): A/B of the event-queue
+//! backends (binary heap vs calendar wheel) and serial-vs-parallel sweep
+//! execution.
+//!
+//! `make bench-json` runs this and writes the machine-readable artifact
+//! `BENCH_PR2.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! without it, e.g. under a generic `cargo bench`, nothing is written so
+//! the committed full-mode artifact cannot be clobbered by fast-mode
+//! numbers): per-bench ns/op and events/s for heap vs wheel, plus
+//! wall-clock and speedup for `sweep --jobs {1,2,4}`. The CI
+//! `bench-smoke` job re-runs it with `BSS_BENCH_FAST=1` and fails on any
+//! `SKIPPED` row, so this artifact cannot silently rot.
+
+use std::time::Instant;
+
+use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::sweep::SweepRunner;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::sim::{EventQueue, QueueKind, Time};
+use bss_extoll::util::bench::{eng, fast_mode, BenchSuite, Table};
+use bss_extoll::util::json::Json;
+use bss_extoll::util::rng::Rng;
+use bss_extoll::wafer::system::SystemConfig;
+
+/// Pure queue hold-pattern: pop one event, push one ~Poisson-spaced
+/// replacement. Exactly the access pattern the DES inner loop produces.
+fn bench_queue_transit(suite: &mut BenchSuite, kind: QueueKind, resident: usize) {
+    let mut q = EventQueue::<u64>::with_capacity(kind, resident + 1);
+    let mut rng = Rng::new(0xB55);
+    let mut now = Time::ZERO;
+    for i in 0..resident {
+        q.push(now + Time::from_ps(rng.below(2_000_000)), 0, i as u64);
+    }
+    suite.bench_items(
+        &format!("transit/{}/{}k-resident", kind.as_str(), resident / 1000),
+        1.0,
+        move || {
+            let ev = q.pop().expect("hold pattern never empties");
+            now = ev.at;
+            q.push(now + Time::from_ps(1 + rng.below(2_000_000)), 0, ev.msg);
+        },
+    );
+}
+
+/// Traffic scenario sized so one run is seconds-scale (fast: sub-second).
+fn traffic_base(fast: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.system = SystemConfig {
+        n_wafers: 2,
+        torus: TorusSpec::new(2, 2, 1),
+        fpgas_per_wafer: 4,
+        concentrators_per_wafer: 2,
+        ..SystemConfig::default()
+    };
+    cfg.workload.rate_hz = 2e7;
+    cfg.workload.sources_per_fpga = 64;
+    cfg.workload.duration = if fast {
+        Time::from_us(300)
+    } else {
+        Time::from_ms(2)
+    };
+    cfg
+}
+
+/// One traffic run on `kind`: (DES events dispatched, wall seconds).
+fn traffic_run(kind: QueueKind, base: &ExperimentConfig) -> (u64, f64) {
+    let mut cfg = base.clone();
+    cfg.queue = kind;
+    let scenario = find("traffic").expect("traffic registered");
+    let t0 = Instant::now();
+    let report = scenario.run(&cfg).expect("traffic run failed");
+    let wall = t0.elapsed().as_secs_f64();
+    let events = report
+        .get_count("des_events")
+        .expect("des_events metric missing");
+    (events, wall)
+}
+
+/// The `eviction_ablation` base config, trimmed so a grid point stays
+/// seconds-scale (relative job scaling is what the artifact tracks).
+fn sweep_base(fast: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::from_file("configs/eviction_ablation.json")
+        .expect("configs/eviction_ablation.json");
+    cfg.system.fpgas_per_wafer = if fast { 8 } else { 16 };
+    cfg.workload.sources_per_fpga = if fast { 16 } else { 64 };
+    cfg.workload.duration = if fast {
+        Time::from_us(200)
+    } else {
+        Time::from_ms(1)
+    };
+    cfg
+}
+
+fn main() {
+    let fast = fast_mode();
+    let reps = if fast { 2 } else { 3 };
+
+    // ---- 1. pure queue ops: heap vs wheel --------------------------------
+    let mut suite = BenchSuite::new("event-queue transit (pop+push)");
+    suite.header();
+    for resident in [4_096usize, 65_536] {
+        for kind in [QueueKind::Heap, QueueKind::Wheel] {
+            bench_queue_transit(&mut suite, kind, resident);
+        }
+    }
+    suite.finish();
+
+    // ---- 2. traffic-scenario event loop: heap vs wheel --------------------
+    let base = traffic_base(fast);
+    let mut loop_runs = Json::arr();
+    let mut loop_table = Table::new(
+        "traffic-scenario event loop",
+        &["queue", "des_events", "wall_s", "events/s"],
+    );
+    let mut events_per_s = [0.0f64; 2];
+    for (ki, kind) in [QueueKind::Heap, QueueKind::Wheel].into_iter().enumerate() {
+        let mut best_wall = f64::INFINITY;
+        let mut events = 0u64;
+        for _ in 0..reps {
+            let (e, wall) = traffic_run(kind, &base);
+            events = e;
+            if wall < best_wall {
+                best_wall = wall;
+            }
+        }
+        let eps = events as f64 / best_wall;
+        events_per_s[ki] = eps;
+        loop_table.row(vec![
+            kind.as_str().to_string(),
+            events.to_string(),
+            format!("{best_wall:.3}"),
+            eng(eps),
+        ]);
+        loop_runs.push(
+            Json::obj()
+                .set("queue", kind.as_str())
+                .set("des_events", events)
+                .set("wall_s", best_wall)
+                .set("events_per_s", eps),
+        );
+    }
+    let wheel_vs_heap = events_per_s[1] / events_per_s[0];
+    loop_table.print();
+    println!("wheel vs heap: {wheel_vs_heap:.2}x events/s\n");
+
+    // ---- 3. sweep scaling: serial vs parallel -----------------------------
+    let grid = "eviction=most_urgent,fullest,oldest,round_robin";
+    let scenario = find("traffic").expect("traffic registered");
+    let sweep_cfg = sweep_base(fast);
+    let mut sweep_runs = Json::arr();
+    let mut sweep_table = Table::new(
+        "eviction_ablation sweep scaling",
+        &["jobs", "points", "wall_s", "speedup"],
+    );
+    let mut wall_serial = 0.0f64;
+    let mut csv_serial = String::new();
+    let mut deterministic = true;
+    for jobs in [1usize, 2, 4] {
+        let runner = SweepRunner::from_grid(sweep_cfg.clone(), grid)
+            .expect("sweep grid")
+            .jobs(jobs);
+        let t0 = Instant::now();
+        let result = runner.run(scenario.as_ref()).expect("sweep run failed");
+        let wall = t0.elapsed().as_secs_f64();
+        let csv = result.to_csv();
+        if jobs == 1 {
+            wall_serial = wall;
+            csv_serial = csv.clone();
+        } else if csv != csv_serial {
+            deterministic = false;
+        }
+        let speedup = wall_serial / wall;
+        sweep_table.row(vec![
+            jobs.to_string(),
+            result.points.len().to_string(),
+            format!("{wall:.3}"),
+            format!("{speedup:.2}"),
+        ]);
+        sweep_runs.push(
+            Json::obj()
+                .set("jobs", jobs)
+                .set("n_points", result.points.len())
+                .set("wall_s", wall)
+                .set("speedup_vs_serial", speedup),
+        );
+    }
+    sweep_table.print();
+    assert!(deterministic, "parallel sweep CSV diverged from serial");
+
+    // ---- artifact ----------------------------------------------------------
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let doc = Json::obj()
+        .set("schema", "bss-extoll-bench/1")
+        .set("artifact", "BENCH_PR2")
+        .set("fast", fast)
+        .set("threads_available", threads)
+        .set("queue_transit", suite.to_json())
+        .set(
+            "traffic_event_loop",
+            Json::obj()
+                .set("runs", loop_runs)
+                .set("wheel_vs_heap_speedup", wheel_vs_heap),
+        )
+        .set(
+            "sweep_scaling",
+            Json::obj()
+                .set("grid", grid)
+                .set("deterministic_across_jobs", deterministic)
+                .set("runs", sweep_runs),
+        );
+    // Only write when explicitly asked (make bench-json sets the path):
+    // a generic `cargo bench` / `make bench` run must not clobber the
+    // committed full-mode trajectory artifact with fast-mode numbers.
+    match std::env::var("BSS_BENCH_JSON") {
+        Ok(path) => {
+            std::fs::write(&path, doc.pretty()).expect("write bench artifact");
+            println!("\nwrote {path}");
+        }
+        Err(_) => println!("\nBSS_BENCH_JSON not set — artifact not written (use `make bench-json`)"),
+    }
+}

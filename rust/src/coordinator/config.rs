@@ -7,7 +7,7 @@ use crate::extoll::nic::NicConfig;
 use crate::extoll::torus::TorusSpec;
 use crate::fpga::bucket::BucketConfig;
 use crate::fpga::manager::{EvictionPolicy, ManagerConfig};
-use crate::sim::Time;
+use crate::sim::{QueueKind, Time};
 use crate::util::json::Json;
 use crate::wafer::system::SystemConfig;
 use crate::workload::generators::GeneratorKind;
@@ -23,6 +23,9 @@ pub struct ExperimentConfig {
     pub neuro: NeuroConfig,
     /// RNG seed for everything derived.
     pub seed: u64,
+    /// Event-queue backend for the discrete-event simulation
+    /// (`wheel` default; `heap` kept for A/B benchmarking — PERF.md).
+    pub queue: QueueKind,
 }
 
 /// Spike-traffic workload knobs.
@@ -104,6 +107,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::default(),
             neuro: NeuroConfig::default(),
             seed: 0xB55,
+            queue: QueueKind::default(),
         }
     }
 }
@@ -113,6 +117,11 @@ impl ExperimentConfig {
     pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
         let mut cfg = ExperimentConfig {
             seed: j.u64_or("seed", 0xB55),
+            queue: {
+                let name = j.str_or("queue", QueueKind::default().as_str());
+                QueueKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown queue kind '{name}' (heap|wheel)"))?
+            },
             ..ExperimentConfig::default()
         };
         if let Some(sys) = j.get("system") {
@@ -235,6 +244,19 @@ mod tests {
         assert_eq!(cfg.workload.duration, Time::from_ms(1));
         assert_eq!(cfg.neuro.steps, 10);
         assert_eq!(cfg.neuro.w_exc, 2.5);
+    }
+
+    #[test]
+    fn queue_kind_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.queue, QueueKind::Wheel);
+        let j = Json::parse(r#"{"queue": "heap"}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&j).unwrap().queue,
+            QueueKind::Heap
+        );
+        let j = Json::parse(r#"{"queue": "splay"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

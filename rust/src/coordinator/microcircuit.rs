@@ -25,7 +25,7 @@ use crate::msg::Msg;
 use crate::neuro::shard::{pulse_of_neuron, ShardSim};
 use crate::neuro::weights::build_weights;
 use crate::runtime::Runtime;
-use crate::sim::{Sim, Time};
+use crate::sim::{EventQueue, Sim, Time};
 use crate::util::json::Json;
 use crate::util::report::Report;
 use crate::util::rng::Rng;
@@ -200,7 +200,10 @@ pub(crate) fn microcircuit_experiment(cfg: &ExperimentConfig) -> Result<NeuroRep
         "system has {} FPGAs but artifact needs {n_shards}",
         sys_cfg.n_wafers * sys_cfg.fpgas_per_wafer
     );
-    let mut sim: Sim<Msg> = Sim::new();
+    // every neuron can have at most a handful of in-flight events per
+    // step; 4× the global population is a comfortable slab pre-size
+    let mut sim: Sim<Msg> =
+        Sim::with_queue(EventQueue::with_capacity(cfg.queue, 4 * n_global));
     let sys = System::build(&mut sim, sys_cfg);
     let fpgas: Vec<_> = sys.fpgas().collect();
 

@@ -33,7 +33,10 @@
 //!
 //! **Sweeps.** [`sweep::SweepRunner`] runs one scenario over a cartesian
 //! grid of config overrides (`rate_hz=1e6,5e6 × n_wafers=2,4 × ...`) and
-//! aggregates one report row per point into JSON/CSV artifacts.
+//! aggregates one report row per point into JSON/CSV artifacts. Grid
+//! points are independent simulations: `SweepRunner::jobs(n)` (CLI:
+//! `sweep --jobs N`) evaluates them on a scoped worker pool with result
+//! ordering — and therefore artifacts — identical to the serial run.
 //!
 //! The pre-scenario entry points [`run_traffic`] / [`run_microcircuit`]
 //! remain as deprecated thin wrappers for one release.

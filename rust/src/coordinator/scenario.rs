@@ -33,7 +33,12 @@ use super::microcircuit::MicrocircuitScenario;
 use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 
 /// One registered experiment.
-pub trait Scenario {
+///
+/// `Send + Sync` is part of the contract: the parallel sweep runner
+/// (`sweep --jobs N`) calls [`Scenario::run`] concurrently from worker
+/// threads, so scenarios must keep all run state local to `run` (every
+/// registered scenario is a stateless unit struct).
+pub trait Scenario: Send + Sync {
     /// Stable identifier used by the CLI and the report.
     fn name(&self) -> &'static str;
 

@@ -9,6 +9,14 @@
 //! Axis values are strings, parsed per-parameter by [`apply_override`]
 //! (the same override path the CLI `--set` flag uses), so numeric and
 //! symbolic knobs (e.g. `eviction=fullest`) sweep uniformly.
+//!
+//! Grid points are independent simulations, so the runner can evaluate
+//! them on a [`std::thread::scope`] worker pool (`sweep --jobs N`); the
+//! result order — and therefore every JSON/CSV artifact — is identical
+//! to the serial run's, regardless of worker scheduling.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -38,6 +46,10 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
     }
     match key {
         "seed" => cfg.seed = int(key, value)?,
+        "queue" => {
+            cfg.queue = crate::sim::QueueKind::parse(value)
+                .ok_or_else(|| anyhow::anyhow!("unknown queue kind '{value}' (heap|wheel)"))?
+        }
         // workload
         "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
         "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
@@ -89,11 +101,12 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "w_inh" => cfg.neuro.w_inh = num(key, value)? as f32,
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
-            "unknown parameter '{other}' (known: seed, rate_hz, sources_per_fpga, \
-             fan_out, zipf_s, deadline_offset, duration_s, generator, burst_len, \
-             mc_scale, n_wafers, fpgas_per_wafer, concentrators_per_wafer, torus, \
-             buckets, bucket_capacity, deadline_margin, eviction, steps, artifact, \
-             dt_s, w_exc, w_inh, k_scale)"
+            "unknown parameter '{other}' (known: seed, queue, rate_hz, \
+             sources_per_fpga, fan_out, zipf_s, deadline_offset, duration_s, \
+             generator, burst_len, mc_scale, n_wafers, fpgas_per_wafer, \
+             concentrators_per_wafer, torus, buckets, bucket_capacity, \
+             deadline_margin, eviction, steps, artifact, dt_s, w_exc, w_inh, \
+             k_scale)"
         ),
     }
     Ok(())
@@ -262,10 +275,15 @@ fn push_csv_row(out: &mut String, cells: &[String]) {
     out.push('\n');
 }
 
+/// One result slot per grid point, written by whichever worker claims
+/// the point; collected in index order after the pool joins.
+type PointSlot = Mutex<Option<Result<SweepPoint>>>;
+
 /// Config grid × scenario → one report per point.
 pub struct SweepRunner {
     base: ExperimentConfig,
     axes: Vec<(String, Vec<String>)>,
+    jobs: usize,
 }
 
 impl SweepRunner {
@@ -273,6 +291,7 @@ impl SweepRunner {
         SweepRunner {
             base,
             axes: Vec::new(),
+            jobs: 1,
         }
     }
 
@@ -281,6 +300,7 @@ impl SweepRunner {
         Ok(SweepRunner {
             base,
             axes: parse_grid(spec)?,
+            jobs: 1,
         })
     }
 
@@ -291,35 +311,34 @@ impl SweepRunner {
         self
     }
 
+    /// Evaluate grid points on `jobs` worker threads (builder style).
+    /// `1` (the default) runs serially on the calling thread.
+    pub fn jobs(mut self, jobs: usize) -> SweepRunner {
+        self.jobs = jobs.max(1);
+        self
+    }
+
     /// Number of grid points (product of axis lengths; 1 when no axes).
     pub fn n_points(&self) -> usize {
         self.axes.iter().map(|(_, v)| v.len()).product()
     }
 
-    /// Run `scenario` at every grid point (row-major: last axis fastest).
-    /// `progress` is invoked before each point with (index, n_points).
-    pub fn run_with_progress(
-        &self,
-        scenario: &dyn Scenario,
-        mut progress: impl FnMut(usize, usize),
-    ) -> Result<SweepResult> {
+    /// Parameter assignments of every grid point, row-major (last axis
+    /// fastest) — the canonical result order for both execution modes.
+    fn grid_points(&self) -> Result<Vec<Vec<(String, String)>>> {
         for (key, values) in &self.axes {
             anyhow::ensure!(!values.is_empty(), "sweep axis '{key}' has no values");
         }
-        let n = self.n_points();
-        let mut points = Vec::with_capacity(n);
+        let mut points = Vec::with_capacity(self.n_points());
         let mut idx = vec![0usize; self.axes.len()];
         loop {
-            progress(points.len(), n);
-            let mut cfg = self.base.clone();
-            let mut params = Vec::with_capacity(self.axes.len());
-            for (ai, (key, values)) in self.axes.iter().enumerate() {
-                let value = &values[idx[ai]];
-                apply_override(&mut cfg, key, value)?;
-                params.push((key.clone(), value.clone()));
-            }
-            let report = scenario.run(&cfg)?;
-            points.push(SweepPoint { params, report });
+            let params: Vec<(String, String)> = self
+                .axes
+                .iter()
+                .enumerate()
+                .map(|(ai, (key, values))| (key.clone(), values[idx[ai]].clone()))
+                .collect();
+            points.push(params);
 
             // odometer increment, last axis fastest
             let mut ai = self.axes.len();
@@ -335,15 +354,117 @@ impl SweepRunner {
                 break;
             }
         }
+        Ok(points)
+    }
+
+    /// Evaluate one grid point: base config + overrides → report.
+    fn eval_point(
+        &self,
+        scenario: &dyn Scenario,
+        params: &[(String, String)],
+    ) -> Result<SweepPoint> {
+        let mut cfg = self.base.clone();
+        for (key, value) in params {
+            apply_override(&mut cfg, key, value)?;
+        }
+        let report = scenario.run(&cfg)?;
+        Ok(SweepPoint {
+            params: params.to_vec(),
+            report,
+        })
+    }
+
+    /// Run `scenario` at every grid point (row-major: last axis fastest),
+    /// serially. `progress` is invoked before each point with
+    /// (index, n_points).
+    pub fn run_with_progress(
+        &self,
+        scenario: &dyn Scenario,
+        mut progress: impl FnMut(usize, usize),
+    ) -> Result<SweepResult> {
+        let grid = self.grid_points()?;
+        let n = grid.len();
+        let mut points = Vec::with_capacity(n);
+        for params in &grid {
+            progress(points.len(), n);
+            points.push(self.eval_point(scenario, params)?);
+        }
         Ok(SweepResult {
             scenario: scenario.name().to_string(),
             points,
         })
     }
 
-    /// Run without progress reporting.
+    /// Run `scenario` at every grid point on `self.jobs` worker threads.
+    ///
+    /// Workers claim points from a shared counter and write results into
+    /// per-point slots, so the returned order (and every artifact derived
+    /// from it) is byte-identical to the serial run's. On errors, the
+    /// lowest-indexed failure is reported — again matching the serial
+    /// run — and workers stop claiming further points.
+    /// `progress(done, n_points)` fires after each completed point,
+    /// possibly out of order; it must be thread-safe (`Fn + Sync`).
+    pub fn run_parallel(
+        &self,
+        scenario: &dyn Scenario,
+        progress: impl Fn(usize, usize) + Sync,
+    ) -> Result<SweepResult> {
+        let grid = self.grid_points()?;
+        let n = grid.len();
+        let workers = self.jobs.min(n).max(1);
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<PointSlot> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let (grid, slots, next, done) = (&grid, &slots, &next, &done);
+            let (progress, failed) = (&progress, &failed);
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(move || loop {
+                        // stop claiming new points once any point failed;
+                        // points claimed earlier (all lower-indexed) still
+                        // finish, so the lowest-indexed error is recorded
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let point = self.eval_point(scenario, &grid[i]);
+                        if point.is_err() {
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        *slots[i].lock().expect("sweep slot poisoned") = Some(point);
+                        progress(done.fetch_add(1, Ordering::Relaxed) + 1, n);
+                    });
+                }
+            });
+        }
+        let mut points = Vec::with_capacity(n);
+        for slot in slots {
+            match slot.into_inner().expect("sweep slot poisoned") {
+                Some(Ok(point)) => points.push(point),
+                Some(Err(e)) => return Err(e),
+                // only reachable past the lowest-indexed error, which the
+                // match arm above returns first
+                None => bail!("sweep aborted before this point was evaluated"),
+            }
+        }
+        Ok(SweepResult {
+            scenario: scenario.name().to_string(),
+            points,
+        })
+    }
+
+    /// Run without progress reporting (parallel when `jobs > 1`).
     pub fn run(&self, scenario: &dyn Scenario) -> Result<SweepResult> {
-        self.run_with_progress(scenario, |_, _| {})
+        if self.jobs > 1 {
+            self.run_parallel(scenario, |_, _| {})
+        } else {
+            self.run_with_progress(scenario, |_, _| {})
+        }
     }
 }
 
@@ -430,6 +551,66 @@ mod tests {
         // deterministic end to end
         let b = runner.run(scenario.as_ref()).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_byte_for_byte() {
+        let runner = SweepRunner::new(small())
+            .axis("rate_hz", &["1e6", "2e6", "4e6"])
+            .axis("fan_out", &["1", "2"]);
+        let scenario = find("traffic").unwrap();
+        let serial = runner.run(scenario.as_ref()).unwrap();
+        let parallel = SweepRunner::new(small())
+            .axis("rate_hz", &["1e6", "2e6", "4e6"])
+            .axis("fan_out", &["1", "2"])
+            .jobs(4)
+            .run(scenario.as_ref())
+            .unwrap();
+        assert_eq!(serial.points.len(), 6);
+        assert_eq!(serial.to_csv(), parallel.to_csv());
+        assert_eq!(
+            serial.to_json().to_string(),
+            parallel.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn parallel_progress_counts_every_point() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let runner = SweepRunner::new(small())
+            .axis("fan_out", &["1", "2", "3"])
+            .jobs(3);
+        let calls = AtomicUsize::new(0);
+        let result = runner
+            .run_parallel(find("traffic").unwrap().as_ref(), |done, n| {
+                assert!((1..=n).contains(&done));
+                calls.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        assert_eq!(result.points.len(), 3);
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn parallel_sweep_reports_first_bad_override() {
+        let runner = SweepRunner::new(small())
+            .axis("rate_hz", &["1e6", "not_a_number"])
+            .jobs(2);
+        let err = runner.run(find("traffic").unwrap().as_ref()).unwrap_err();
+        assert!(format!("{err:#}").contains("rate_hz"), "{err:#}");
+    }
+
+    #[test]
+    fn queue_override_sweeps_backends_identically() {
+        let runner = SweepRunner::new(small()).axis("queue", &["heap", "wheel"]);
+        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        assert_eq!(result.points.len(), 2);
+        // same physics on both backends: every metric column agrees
+        let a = result.points[0].report.to_flat_json().to_string();
+        let b = result.points[1].report.to_flat_json().to_string();
+        assert_eq!(a, b);
+        let mut cfg = small();
+        assert!(apply_override(&mut cfg, "queue", "splay").is_err());
     }
 
     #[test]

@@ -242,7 +242,7 @@ impl Fpga {
     /// Schedule a scan for one known fire time if it is earlier than the
     /// currently scheduled one. O(1) — the per-event path uses this with
     /// the affected bucket's fire time instead of scanning all buckets
-    /// (EXPERIMENTS.md §Perf).
+    /// (PERF.md §Methodology).
     fn schedule_scan_at(&mut self, fire_sys: u16, ctx: &mut Ctx<'_, Msg>) {
         let now = ctx.now();
         let now_sys = systime_of(now);

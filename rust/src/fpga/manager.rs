@@ -103,7 +103,7 @@ pub struct BucketManager {
     /// Map table: 16-bit destination id → physical bucket index. A
     /// direct-indexed 2^16-entry table — the software analog of the
     /// hardware CAM, and ~4× faster on the ingest hot path than a hash
-    /// map (see EXPERIMENTS.md §Perf).
+    /// map (see PERF.md §Methodology).
     map: Vec<u32>,
     /// Number of live destinations (mapped entries).
     live: usize,
@@ -323,7 +323,7 @@ impl BucketManager {
     /// (all buckets mid-drain with pending accumulation) — backpressure.
     fn choose_victim(&mut self) -> Option<usize> {
         // allocation-free single pass (this sits on the ingest hot path
-        // whenever renaming pressure is high — see EXPERIMENTS.md §Perf)
+        // whenever renaming pressure is high — see PERF.md §Methodology)
         fn eligible(b: &Bucket) -> bool {
             b.dest().is_some() && (b.is_empty() || !b.is_draining())
         }

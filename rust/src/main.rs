@@ -32,6 +32,10 @@ Configs are JSON files (--config); individual knobs override with
 --set \"key=v;key=v\" — the same keys sweep axes use, e.g.
   bss-extoll run traffic --set \"rate_hz=2e7;fan_out=2\"
   bss-extoll sweep --scenario traffic --grid \"rate_hz=1e6,1e7;n_wafers=2,4\" --csv sweep.csv
+  bss-extoll sweep --scenario traffic --grid \"eviction=most_urgent,fullest\" --jobs 4
+
+Sweep grid points are independent simulations: --jobs N runs them on N
+worker threads with results (and artifacts) ordered exactly as --jobs 1.
 ";
 
 fn main() {
@@ -147,6 +151,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         )
         .opt("config", "", "base experiment config JSON")
         .opt("set", "", "base-config overrides \"key=v;key=v\"")
+        .opt("jobs", "1", "worker threads; grid points run in parallel")
         .opt("out", "", "write the aggregate JSON artifact to this file")
         .opt("csv", "", "write the CSV artifact to this file")
         .flag("json", "print the aggregate JSON to stdout");
@@ -158,10 +163,18 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let s = find_scenario(p.get("scenario"))?;
     let mut cfg = load_config(&p, s.as_ref())?;
     apply_set(&mut cfg, p.get("set"))?;
-    let runner = SweepRunner::from_grid(cfg, p.get("grid"))?;
-    let result = runner.run_with_progress(s.as_ref(), |i, n| {
-        eprintln!("sweep: point {}/{n}", i + 1);
-    })?;
+    let jobs = p.try_u64("jobs").map_err(|e| anyhow::anyhow!("{}", e.0))? as usize;
+    let runner = SweepRunner::from_grid(cfg, p.get("grid"))?.jobs(jobs);
+    let result = if jobs > 1 {
+        // completion order is nondeterministic; result order is not
+        runner.run_parallel(s.as_ref(), |done, n| {
+            eprintln!("sweep: {done}/{n} points done ({jobs} jobs)");
+        })?
+    } else {
+        runner.run_with_progress(s.as_ref(), |i, n| {
+            eprintln!("sweep: point {}/{n}", i + 1);
+        })?
+    };
     if !p.get("out").is_empty() {
         std::fs::write(p.get("out"), result.to_json().pretty())?;
         eprintln!("wrote {}", p.get("out"));

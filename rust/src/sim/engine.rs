@@ -5,8 +5,21 @@
 //! Determinism guarantee: events with equal timestamps are delivered in
 //! the order they were scheduled (a monotone sequence number breaks ties),
 //! so a given configuration always produces the same trajectory.
+//!
+//! Two interchangeable queue backends implement that contract (selected
+//! by [`QueueKind`], A/B-benchmarked in `benches/bench_events.rs` — see
+//! PERF.md):
+//!
+//! - [`QueueKind::Heap`] — a slab-backed binary heap, O(log n) per
+//!   operation; the reference implementation.
+//! - [`QueueKind::Wheel`] — a calendar queue (timing wheel) keyed on
+//!   picosecond buckets. Spike traffic schedules almost everything within
+//!   a few µs of "now", the classic O(1)-amortized sweet spot; far-future
+//!   events overflow into a small auxiliary heap and are promoted as the
+//!   cursor approaches them.
 
 use std::any::Any;
+use std::cell::Cell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -48,25 +61,54 @@ impl<M> Ord for Event<M> {
     }
 }
 
-/// Fixed-size heap entry: the message payload lives in a slab so that heap
-/// sift operations move 24 bytes instead of the full `M` (40% of a traffic
-/// simulation's time went into `BinaryHeap::pop` before this — see
-/// EXPERIMENTS.md §Perf).
-#[derive(Debug, PartialEq, Eq)]
-struct HeapEntry {
+/// Which pending-event structure a [`Sim`] uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Slab-backed binary heap: O(log n) push/pop. The reference
+    /// implementation every other backend must match event-for-event.
+    Heap,
+    /// Calendar queue / timing wheel: amortized O(1) for workloads whose
+    /// events cluster in time (spike traffic does). The default.
+    #[default]
+    Wheel,
+}
+
+impl QueueKind {
+    pub fn parse(s: &str) -> Option<QueueKind> {
+        match s {
+            "heap" => Some(QueueKind::Heap),
+            "wheel" => Some(QueueKind::Wheel),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Wheel => "wheel",
+        }
+    }
+}
+
+/// Fixed-size queue entry: the message payload lives in a slab so that
+/// heap sifts and bucket moves shuffle 24 bytes instead of the full `M`
+/// (40% of a traffic simulation's time went into `BinaryHeap::pop`
+/// before this — see PERF.md §Methodology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct QueueEntry {
     at: Time,
     seq: u64,
     dst: u32,
     slot: u32,
 }
 
-impl PartialOrd for HeapEntry {
+impl PartialOrd for QueueEntry {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for HeapEntry {
+impl Ord for QueueEntry {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert to get earliest-first.
         other
@@ -76,10 +118,156 @@ impl Ord for HeapEntry {
     }
 }
 
+/// log2 of the wheel bucket width in picoseconds (8.192 ns per bucket).
+const WHEEL_BUCKET_PS_LOG2: u32 = 13;
+/// log2 of the bucket count (8192 buckets ≈ 67 µs horizon).
+const WHEEL_N_BUCKETS_LOG2: u32 = 13;
+
+/// Calendar-queue backend. Entries within the horizon live in
+/// per-bucket vectors kept sorted latest-first (so the earliest entry is
+/// a `Vec::pop` away); entries beyond it wait in an overflow heap and
+/// are promoted as the cursor advances into their revolution.
+///
+/// Invariants (maintained by `push`/`pop`/`promote`):
+/// - every in-wheel entry has `bucket_of(at) ∈ [cursor, cursor + N)`,
+/// - every overflow entry has `bucket_of(at) ≥ cursor + N`,
+/// - `cursor` never moves backwards (events are never scheduled into the
+///   past, which `Ctx::send`/`Sim::schedule` enforce upstream).
+///
+/// Together these guarantee the earliest (time, seq) pair overall is the
+/// last element of the first non-empty bucket at or after `cursor` — so
+/// pop order is identical to the heap backend's.
+#[derive(Debug)]
+struct Wheel {
+    buckets: Vec<Vec<QueueEntry>>,
+    /// Absolute bucket index (`at.ps() >> WHEEL_BUCKET_PS_LOG2`) the
+    /// drain cursor is currently parked on.
+    cursor: u64,
+    /// Entries at least one full revolution ahead, earliest first.
+    overflow: BinaryHeap<QueueEntry>,
+    /// Number of entries stored in `buckets` (excludes `overflow`).
+    in_wheel: usize,
+    /// Scan hint: no in-wheel entry has a bucket in `[cursor, hint)`.
+    /// `peek_time` records how far it scanned so the following `pop`
+    /// (e.g. `Sim::run_until`'s peek-then-step loop) skips the empty
+    /// prefix instead of walking it twice. `Cell` because peek is `&self`.
+    hint: Cell<u64>,
+}
+
+impl Wheel {
+    fn new() -> Wheel {
+        Wheel {
+            buckets: (0..(1usize << WHEEL_N_BUCKETS_LOG2))
+                .map(|_| Vec::new())
+                .collect(),
+            cursor: 0,
+            overflow: BinaryHeap::new(),
+            in_wheel: 0,
+            hint: Cell::new(0),
+        }
+    }
+
+    fn bucket_of(at: Time) -> u64 {
+        at.ps() >> WHEEL_BUCKET_PS_LOG2
+    }
+
+    fn len(&self) -> usize {
+        self.in_wheel + self.overflow.len()
+    }
+
+    fn push(&mut self, e: QueueEntry) {
+        let n = self.buckets.len() as u64;
+        // A past-dated entry (impossible via Ctx/Sim, but cheap to be safe)
+        // clamps into the cursor bucket; in-bucket (time, seq) ordering
+        // still delivers it first.
+        let b = Self::bucket_of(e.at).max(self.cursor);
+        if b >= self.cursor + n {
+            self.overflow.push(e);
+        } else {
+            self.insert_bucket(b, e);
+        }
+    }
+
+    fn insert_bucket(&mut self, b: u64, e: QueueEntry) {
+        if b < self.hint.get() {
+            self.hint.set(b);
+        }
+        let mask = self.buckets.len() as u64 - 1;
+        let v = &mut self.buckets[(b & mask) as usize];
+        // Sorted latest-first; the common case (monotonically increasing
+        // times within a bucket) inserts at the front of a short vector.
+        let p = v.partition_point(|x| (x.at, x.seq) > (e.at, e.seq));
+        v.insert(p, e);
+        self.in_wheel += 1;
+    }
+
+    /// Move overflow entries whose revolution the cursor has reached into
+    /// their buckets.
+    fn promote(&mut self) {
+        let n = self.buckets.len() as u64;
+        while let Some(top) = self.overflow.peek() {
+            let b = Self::bucket_of(top.at);
+            if b >= self.cursor + n {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked entry vanished");
+            self.insert_bucket(b.max(self.cursor), e);
+        }
+    }
+
+    fn pop(&mut self) -> Option<QueueEntry> {
+        if self.in_wheel == 0 {
+            // Jump the cursor straight to the earliest far-future entry.
+            let top = self.overflow.peek()?;
+            self.cursor = Self::bucket_of(top.at);
+            self.promote();
+        }
+        // Skip the empty prefix a preceding peek already scanned.
+        if self.hint.get() > self.cursor {
+            self.cursor = self.hint.get();
+            self.promote();
+        }
+        let mask = self.buckets.len() as u64 - 1;
+        loop {
+            if let Some(e) = self.buckets[(self.cursor & mask) as usize].pop() {
+                self.in_wheel -= 1;
+                self.hint.set(self.cursor);
+                return Some(e);
+            }
+            self.cursor += 1;
+            self.promote();
+        }
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        if self.in_wheel == 0 {
+            return self.overflow.peek().map(|e| e.at);
+        }
+        let n = self.buckets.len() as u64;
+        let mask = n - 1;
+        let start = self.cursor.max(self.hint.get());
+        for d in 0..n {
+            let b = start + d;
+            if let Some(e) = self.buckets[(b & mask) as usize].last() {
+                self.hint.set(b);
+                return Some(e.at);
+            }
+        }
+        unreachable!("in_wheel > 0 but no bucket holds an entry")
+    }
+}
+
+/// Backend storage behind [`EventQueue`].
+#[derive(Debug)]
+enum Backend {
+    Heap(BinaryHeap<QueueEntry>),
+    Wheel(Wheel),
+}
+
 /// Priority queue of pending events (earliest timestamp first, FIFO ties).
 #[derive(Debug)]
 pub struct EventQueue<M> {
-    heap: BinaryHeap<HeapEntry>,
+    backend: Backend,
     slab: Vec<Option<M>>,
     free: Vec<u32>,
     seq: u64,
@@ -93,12 +281,40 @@ impl<M> Default for EventQueue<M> {
 
 impl<M> EventQueue<M> {
     pub fn new() -> Self {
+        Self::with_kind(QueueKind::default())
+    }
+
+    pub fn with_kind(kind: QueueKind) -> Self {
+        Self::with_capacity(kind, 0)
+    }
+
+    /// Pre-size the payload slab (and the heap, where applicable) for an
+    /// expected number of simultaneously pending events, so warmup does
+    /// not grow the slab one reallocation at a time.
+    pub fn with_capacity(kind: QueueKind, capacity: usize) -> Self {
+        let backend = match kind {
+            QueueKind::Heap => Backend::Heap(BinaryHeap::with_capacity(capacity)),
+            QueueKind::Wheel => Backend::Wheel(Wheel::new()),
+        };
         EventQueue {
-            heap: BinaryHeap::new(),
-            slab: Vec::new(),
-            free: Vec::new(),
+            backend,
+            slab: Vec::with_capacity(capacity),
+            free: Vec::with_capacity(capacity),
             seq: 0,
         }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn kind(&self) -> QueueKind {
+        match &self.backend {
+            Backend::Heap(_) => QueueKind::Heap,
+            Backend::Wheel(_) => QueueKind::Wheel,
+        }
+    }
+
+    /// Current payload-slab capacity (diagnostics / pre-sizing tests).
+    pub fn capacity(&self) -> usize {
+        self.slab.capacity()
     }
 
     pub fn push(&mut self, at: Time, dst: ActorId, msg: M) {
@@ -114,16 +330,23 @@ impl<M> EventQueue<M> {
                 (self.slab.len() - 1) as u32
             }
         };
-        self.heap.push(HeapEntry {
+        let e = QueueEntry {
             at,
             seq,
             dst: dst as u32,
             slot,
-        });
+        };
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(e),
+            Backend::Wheel(w) => w.push(e),
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event<M>> {
-        let e = self.heap.pop()?;
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop()?,
+            Backend::Wheel(w) => w.pop()?,
+        };
         let msg = self.slab[e.slot as usize]
             .take()
             .expect("slab slot empty");
@@ -137,15 +360,21 @@ impl<M> EventQueue<M> {
     }
 
     pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.at),
+            Backend::Wheel(w) => w.peek_time(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Wheel(w) => w.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
@@ -214,13 +443,28 @@ impl<M: 'static> Default for Sim<M> {
 
 impl<M: 'static> Sim<M> {
     pub fn new() -> Self {
+        Self::with_queue(EventQueue::new())
+    }
+
+    /// A simulation on the given queue backend.
+    pub fn with_kind(kind: QueueKind) -> Self {
+        Self::with_queue(EventQueue::with_kind(kind))
+    }
+
+    /// A simulation on a pre-configured (e.g. pre-sized) event queue.
+    pub fn with_queue(queue: EventQueue<M>) -> Self {
         Sim {
             now: Time::ZERO,
             actors: Vec::new(),
-            queue: EventQueue::new(),
+            queue,
             processed: 0,
             tracer: None,
         }
+    }
+
+    /// Which queue backend this simulation runs on.
+    pub fn queue_kind(&self) -> QueueKind {
+        self.queue.kind()
     }
 
     /// Register an actor; returns its id for message addressing.
@@ -494,5 +738,133 @@ mod tests {
         let rec = sim.add(Recorder { seen: vec![] });
         assert!(sim.try_get::<Forwarder>(rec).is_none());
         assert!(sim.try_get::<Recorder>(rec).is_some());
+    }
+
+    // ---- queue backends ---------------------------------------------------
+
+    #[test]
+    fn queue_kind_parse_roundtrip() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("wheel"), Some(QueueKind::Wheel));
+        assert_eq!(QueueKind::parse("splay"), None);
+        for k in [QueueKind::Heap, QueueKind::Wheel] {
+            assert_eq!(QueueKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(QueueKind::default(), QueueKind::Wheel);
+    }
+
+    #[test]
+    fn with_capacity_pre_sizes_slab() {
+        let q = EventQueue::<u64>::with_capacity(QueueKind::Wheel, 1024);
+        assert!(q.capacity() >= 1024);
+        assert_eq!(q.kind(), QueueKind::Wheel);
+        let q = EventQueue::<u64>::with_capacity(QueueKind::Heap, 16);
+        assert!(q.capacity() >= 16);
+        assert_eq!(q.kind(), QueueKind::Heap);
+        let sim = Sim::<TestMsg>::with_kind(QueueKind::Heap);
+        assert_eq!(sim.queue_kind(), QueueKind::Heap);
+    }
+
+    /// The wheel must agree with the heap pop-for-pop on a randomized
+    /// hold-pattern workload with exact-tie timestamps and far-future
+    /// (overflow-horizon) events.
+    #[test]
+    fn wheel_matches_heap_on_random_workload() {
+        let mut heap = EventQueue::<u32>::with_kind(QueueKind::Heap);
+        let mut wheel = EventQueue::<u32>::with_kind(QueueKind::Wheel);
+        let mut state = 0x5EED_CAFE_u64;
+        let mut next = move |m: u64| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (state >> 33) % m
+        };
+        let mut now = 0u64;
+        let mut pending = 0usize;
+        let mut pushed = 0u32;
+        for step in 0..20_000 {
+            if pending == 0 || next(100) < 55 {
+                let delay = match next(10) {
+                    // mostly ≤ 2 µs (in-wheel), some exact ties with now,
+                    // some 0.1–1.1 ms ahead (overflow horizon)
+                    0..=6 => next(2_000_000),
+                    7 | 8 => 0,
+                    _ => 100_000_000 + next(1_000_000_000),
+                };
+                let at = Time::from_ps(now + delay);
+                heap.push(at, (pushed % 7) as usize, pushed);
+                wheel.push(at, (pushed % 7) as usize, pushed);
+                pushed += 1;
+                pending += 1;
+            } else {
+                let a = heap.pop().unwrap();
+                let b = wheel.pop().unwrap();
+                assert_eq!(
+                    (a.at, a.seq, a.dst, a.msg),
+                    (b.at, b.seq, b.dst, b.msg),
+                    "divergence at step {step}"
+                );
+                now = a.at.ps();
+                pending -= 1;
+            }
+            assert_eq!(heap.len(), wheel.len());
+            assert_eq!(heap.peek_time(), wheel.peek_time());
+        }
+        while let Some(a) = heap.pop() {
+            let b = wheel.pop().unwrap();
+            assert_eq!((a.at, a.seq, a.dst, a.msg), (b.at, b.seq, b.dst, b.msg));
+        }
+        assert!(wheel.pop().is_none());
+        assert!(wheel.is_empty());
+    }
+
+    /// Events spread over many horizon revolutions drain in order.
+    #[test]
+    fn wheel_crosses_horizon_boundaries() {
+        let mut q = EventQueue::<u32>::with_kind(QueueKind::Wheel);
+        // horizon is ≈67 µs; spread pushes over ~12 ms
+        for i in (0..16u64).rev() {
+            q.push(Time::from_us(i * 800), 0, i as u32);
+        }
+        assert_eq!(q.len(), 16);
+        let mut last = Time::ZERO;
+        let mut popped = Vec::new();
+        for _ in 0..8 {
+            let e = q.pop().unwrap();
+            assert!(e.at >= last);
+            last = e.at;
+            popped.push(e.msg);
+        }
+        // push more while partially drained, both near and far
+        q.push(last + Time::from_ns(1), 0, 100);
+        q.push(last + Time::from_ms(50), 0, 101);
+        while let Some(e) = q.pop() {
+            assert!(e.at >= last);
+            last = e.at;
+            popped.push(e.msg);
+        }
+        assert_eq!(popped.len(), 18);
+        assert_eq!(popped[0..8], [0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(popped[8], 100); // the near event lands right after pop 8
+        assert_eq!(*popped.last().unwrap(), 101); // the +50ms event drains last
+    }
+
+    /// Whole-sim trajectories must be identical across queue backends.
+    #[test]
+    fn sim_trajectory_identical_across_queue_kinds() {
+        let run = |kind: QueueKind| {
+            let mut sim = Sim::with_kind(kind);
+            let rec = sim.add(Recorder { seen: vec![] });
+            let fwd = sim.add(Forwarder { peer: rec, sent: 0 });
+            for i in 0..50u64 {
+                sim.schedule(Time::from_ns(i * 3), fwd, TestMsg::Ping((i % 4) as u32));
+            }
+            sim.run_to_completion();
+            sim.get::<Recorder>(rec).seen.clone()
+        };
+        let a = run(QueueKind::Heap);
+        let b = run(QueueKind::Wheel);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
     }
 }

@@ -11,5 +11,5 @@
 pub mod engine;
 pub mod time;
 
-pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Sim};
+pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, QueueKind, Sim};
 pub use time::{ps_for_bits, Time, FPGA_CLK_HZ};

@@ -3,15 +3,28 @@
 //! Each `[[bench]]` target (with `harness = false`) builds a [`BenchSuite`],
 //! registers closures, and calls [`BenchSuite::run`]. The harness does
 //! warmup, timed batches, outlier-robust summary (median of batch means),
-//! and prints aligned rows plus an optional JSON record for EXPERIMENTS.md.
+//! and prints aligned rows plus JSON records for the perf trajectory (PERF.md).
 //!
 //! Throughput-style benches (events/s over simulated time) don't fit the
 //! ns/op mold; those use [`Row`]/[`Table`] to print paper-style result
 //! tables directly.
+//!
+//! Results serialize to JSON ([`BenchResult::to_json`] /
+//! [`BenchSuite::to_json`]) so bench binaries can emit machine-readable
+//! trajectory artifacts like `BENCH_PR2.json` (see PERF.md and
+//! `benches/bench_events.rs`); the CI `bench-smoke` job regenerates them
+//! in fast mode and fails on any `SKIPPED` row.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::OnlineStats;
+
+/// True when `BSS_BENCH_FAST` is set: ~10× smaller timing budgets, for
+/// CI smoke runs and quick local iteration.
+pub fn fast_mode() -> bool {
+    std::env::var("BSS_BENCH_FAST").is_ok()
+}
 
 /// Result of one timed benchmark.
 #[derive(Clone, Debug)]
@@ -31,12 +44,26 @@ impl BenchResult {
     pub fn items_per_sec(&self) -> f64 {
         self.items_per_iter / (self.ns_per_iter * 1e-9)
     }
+
+    /// Machine-readable record for trajectory artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("ns_per_iter", self.ns_per_iter)
+            .set("mean_ns", self.mean_ns)
+            .set("std_ns", self.std_ns)
+            .set("iters", self.iters)
+            .set("items_per_iter", self.items_per_iter)
+            .set("items_per_sec", self.items_per_sec())
+    }
 }
 
 /// Micro-benchmark suite: warmup + batched timing.
 pub struct BenchSuite {
     pub title: String,
     pub results: Vec<BenchResult>,
+    /// Benches that could not run: (name, reason). CI fails on these.
+    pub skipped: Vec<(String, String)>,
     min_batches: u32,
     target_batch_ns: f64,
     warmup_ns: f64,
@@ -45,14 +72,43 @@ pub struct BenchSuite {
 impl BenchSuite {
     pub fn new(title: &str) -> Self {
         // Allow quick runs: BSS_BENCH_FAST=1 shrinks timing budget ~10x.
-        let fast = std::env::var("BSS_BENCH_FAST").is_ok();
+        let fast = fast_mode();
         BenchSuite {
             title: title.to_string(),
             results: Vec::new(),
+            skipped: Vec::new(),
             min_batches: if fast { 5 } else { 15 },
             target_batch_ns: if fast { 2e6 } else { 2e7 },
             warmup_ns: if fast { 5e6 } else { 5e7 },
         }
+    }
+
+    /// Record (and print) a benchmark that could not run. The CI
+    /// `bench-smoke` job greps the output for `SKIPPED` and fails, so a
+    /// committed trajectory artifact can never silently go stale.
+    pub fn skip(&mut self, name: &str, reason: &str) {
+        println!("  {name:<48} SKIPPED: {reason}");
+        self.skipped.push((name.to_string(), reason.to_string()));
+    }
+
+    /// Machine-readable record of the whole suite.
+    pub fn to_json(&self) -> Json {
+        let mut results = Json::arr();
+        for r in &self.results {
+            results.push(r.to_json());
+        }
+        let mut skipped = Json::arr();
+        for (name, reason) in &self.skipped {
+            skipped.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("reason", reason.as_str()),
+            );
+        }
+        Json::obj()
+            .set("suite", self.title.as_str())
+            .set("results", results)
+            .set("skipped", skipped)
     }
 
     /// Time `f`, which performs ONE logical iteration per call.
@@ -226,6 +282,27 @@ mod tests {
         assert!(r.ns_per_iter > 0.0);
         assert!(r.ns_per_iter < 1e6, "a multiply took {} ns?!", r.ns_per_iter);
         assert!(acc != 0);
+    }
+
+    #[test]
+    fn suite_json_records_results_and_skips() {
+        std::env::set_var("BSS_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("jsontest");
+        suite.bench("spin", || {
+            std::hint::black_box(1 + 1);
+        });
+        suite.skip("needs-artifacts", "artifacts not built");
+        let j = suite.to_json();
+        assert_eq!(j.str_or("suite", ""), "jsontest");
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].str_or("name", ""), "spin");
+        assert!(results[0].f64_or("ns_per_iter", 0.0) > 0.0);
+        let skipped = j.get("skipped").unwrap().as_arr().unwrap();
+        assert_eq!(skipped.len(), 1);
+        assert_eq!(skipped[0].str_or("name", ""), "needs-artifacts");
+        // the JSON must parse back (valid document)
+        assert!(Json::parse(&j.pretty()).is_ok());
     }
 
     #[test]

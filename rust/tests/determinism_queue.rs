@@ -1,0 +1,144 @@
+//! Cross-backend and cross-job-count determinism.
+//!
+//! The calendar-wheel event queue (`QueueKind::Wheel`) and the parallel
+//! sweep runner (`--jobs N`) are performance features only: they must be
+//! observationally identical to the reference heap backend and the
+//! serial runner. These tests pin that contract at the artifact level —
+//! byte-identical report JSON and sweep CSV.
+
+use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::sweep::SweepRunner;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::sim::{QueueKind, Time};
+use bss_extoll::util::report::Report;
+use bss_extoll::wafer::system::SystemConfig;
+
+fn small() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.system = SystemConfig {
+        n_wafers: 2,
+        torus: TorusSpec::new(2, 2, 1),
+        fpgas_per_wafer: 4,
+        concentrators_per_wafer: 2,
+        ..SystemConfig::default()
+    };
+    cfg.workload.rate_hz = 4e6;
+    cfg.workload.sources_per_fpga = 16;
+    cfg.workload.duration = Time::from_us(400);
+    cfg
+}
+
+/// Run `scenario` on the given backend; returns the pretty report JSON.
+fn report_json(scenario: &str, kind: QueueKind) -> String {
+    let mut cfg = small();
+    cfg.queue = kind;
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(&cfg)
+        .unwrap_or_else(|e| panic!("{scenario} run failed: {e:#}"))
+        .to_json()
+        .pretty()
+}
+
+#[test]
+fn traffic_report_identical_across_backends() {
+    let heap = report_json("traffic", QueueKind::Heap);
+    let wheel = report_json("traffic", QueueKind::Wheel);
+    assert!(heap.contains("rx_events"));
+    assert_eq!(heap, wheel);
+}
+
+#[test]
+fn burst_report_identical_across_backends() {
+    assert_eq!(
+        report_json("burst", QueueKind::Heap),
+        report_json("burst", QueueKind::Wheel)
+    );
+}
+
+#[test]
+fn hotspot_report_identical_across_backends() {
+    assert_eq!(
+        report_json("hotspot", QueueKind::Heap),
+        report_json("hotspot", QueueKind::Wheel)
+    );
+}
+
+/// The microcircuit report carries two wall-clock metrics
+/// (`pjrt_seconds`, `des_seconds`) that can never be byte-identical
+/// across runs; every simulated metric must be.
+fn canonical_without_wallclock(r: &Report) -> String {
+    let mut s = String::new();
+    for e in r.entries() {
+        if e.key == "pjrt_seconds" || e.key == "des_seconds" {
+            continue;
+        }
+        s.push_str(&format!("{}|{:?}|{}\n", e.key, e.value, e.unit));
+    }
+    s
+}
+
+#[test]
+fn microcircuit_report_identical_across_backends() {
+    if !bss_extoll::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let run = |kind: QueueKind| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 2,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.neuro.steps = 15;
+        cfg.queue = kind;
+        let report = find("microcircuit").unwrap().run(&cfg).unwrap();
+        canonical_without_wallclock(&report)
+    };
+    let heap = run(QueueKind::Heap);
+    assert!(heap.contains("spikes_total"));
+    assert_eq!(heap, run(QueueKind::Wheel));
+}
+
+#[test]
+fn sweep_csv_identical_across_backends() {
+    let scenario = find("traffic").unwrap();
+    let grid = "rate_hz=1e6,4e6;fan_out=1,2";
+    let run = |kind: QueueKind| {
+        let mut base = small();
+        base.queue = kind;
+        SweepRunner::from_grid(base, grid)
+            .unwrap()
+            .run(scenario.as_ref())
+            .unwrap()
+            .to_csv()
+    };
+    let heap = run(QueueKind::Heap);
+    assert_eq!(heap.lines().count(), 5, "header + 4 points");
+    assert_eq!(heap, run(QueueKind::Wheel));
+}
+
+#[test]
+fn sweep_jobs4_artifacts_identical_to_serial() {
+    let scenario = find("traffic").unwrap();
+    let grid = "eviction=most_urgent,fullest,oldest,round_robin;fan_out=1,2";
+    let serial = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .run(scenario.as_ref())
+        .unwrap();
+    let parallel = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .jobs(4)
+        .run(scenario.as_ref())
+        .unwrap();
+    assert_eq!(serial.points.len(), 8);
+    assert_eq!(serial.to_csv(), parallel.to_csv());
+    assert_eq!(
+        serial.to_json().pretty(),
+        parallel.to_json().pretty()
+    );
+}
