@@ -1,0 +1,83 @@
+//! Partitioned conservative PDES from the library API: run the same
+//! traffic scenario at `domains = 1, 2, 4`, verify the reports are
+//! byte-identical (domain count is a perf knob, not physics — see
+//! docs/ARCHITECTURE.md §2.3), and print the wall-clock scaling.
+//!
+//! Run: `cargo run --release --example pdes_domains`
+//!
+//! The CLI spelling of the same thing:
+//! `bss-extoll run traffic --set "domains=4"` — every knob is documented
+//! in docs/TUNING.md.
+
+use std::time::Instant;
+
+use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::network::pdes_lookahead;
+use bss_extoll::extoll::torus::{DomainMap, TorusSpec};
+use bss_extoll::sim::Time;
+use bss_extoll::util::bench::{eng, Table};
+use bss_extoll::wafer::system::SystemConfig;
+
+fn main() {
+    // 4 wafers on a 2x2x2 torus: one concentrator node per torus node,
+    // dense enough that each conservative window carries real work.
+    let mut cfg = ExperimentConfig::default();
+    cfg.system = SystemConfig {
+        n_wafers: 4,
+        torus: TorusSpec::new(2, 2, 2),
+        fpgas_per_wafer: 8,
+        concentrators_per_wafer: 2,
+        ..SystemConfig::default()
+    };
+    cfg.workload.rate_hz = 2e7;
+    cfg.workload.duration = Time::from_ms(1);
+
+    let dm = DomainMap::new(cfg.system.torus, 4);
+    let lookahead = pdes_lookahead(&dm, &cfg.system.nic).expect("inter-domain links");
+    println!(
+        "machine: {} wafers, {} torus nodes; lookahead at 4 domains: {} \
+         (min cross-domain link latency)\n",
+        cfg.system.n_wafers,
+        cfg.system.torus.n_nodes(),
+        lookahead
+    );
+
+    let scenario = find("traffic").expect("traffic registered");
+    let mut table = Table::new(
+        "PDES domain scaling — traffic scenario",
+        &["domains", "des_events", "wall_s", "events/s", "speedup"],
+    );
+    let mut reference: Option<(String, f64)> = None;
+    for domains in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.domains = domains;
+        let t0 = Instant::now();
+        let report = scenario.run(&c).expect("run failed");
+        let wall = t0.elapsed().as_secs_f64();
+        let events = report.get_count("des_events").expect("des_events");
+        let json = report.to_json().pretty();
+        let eps = events as f64 / wall;
+        let speedup = if let Some((serial_json, serial_eps)) = &reference {
+            assert_eq!(
+                serial_json, &json,
+                "report diverged at domains={domains} — determinism bug"
+            );
+            eps / *serial_eps
+        } else {
+            1.0
+        };
+        if reference.is_none() {
+            reference = Some((json, eps));
+        }
+        table.row(vec![
+            domains.to_string(),
+            events.to_string(),
+            format!("{wall:.3}"),
+            eng(eps),
+            format!("{speedup:.2}"),
+        ]);
+    }
+    table.print();
+    println!("\nreports byte-identical across domain counts ✓");
+}

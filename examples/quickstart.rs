@@ -6,6 +6,12 @@
 //! prints what happened at each layer.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! For ready-made experiments use the `Scenario` registry CLI instead of
+//! hand-building a system: `bss-extoll run <scenario>` (list with
+//! `run --list`), parameter grids with `bss-extoll sweep --jobs N`, knobs
+//! via `--set "key=v;..."` (docs/TUNING.md). The spike's full journey
+//! through the layers below is narrated in docs/ARCHITECTURE.md §3.
 
 use bss_extoll::extoll::torus::TorusSpec;
 use bss_extoll::fpga::event::SpikeEvent;

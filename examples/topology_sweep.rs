@@ -6,6 +6,13 @@
 //! each alternative saturates — concentrator ingress vs torus links.
 //!
 //! Run: `cargo run --release --example topology_sweep`
+//!
+//! The same flow-level analysis is registered as the `analyze` scenario:
+//! `bss-extoll run analyze --set "n_wafers=4;torus=4x4x2"`, and the
+//! packet-level equivalent sweeps through the registry CLI, e.g.
+//! `bss-extoll sweep --scenario traffic
+//!  --grid "concentrators_per_wafer=4,8,16" --jobs 4` (knob reference:
+//! docs/TUNING.md).
 
 use bss_extoll::extoll::analysis::FlowAnalysis;
 use bss_extoll::extoll::nic::NicConfig;

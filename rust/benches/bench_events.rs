@@ -1,15 +1,16 @@
 //! Perf-trajectory benchmark (see PERF.md): A/B of the event-queue
-//! backends (binary heap vs calendar wheel) and serial-vs-parallel sweep
-//! execution.
+//! backends (binary heap vs calendar wheel), serial-vs-parallel sweep
+//! execution, and PDES domain scaling within one scenario.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR2.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR3.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
-//! numbers): per-bench ns/op and events/s for heap vs wheel, plus
-//! wall-clock and speedup for `sweep --jobs {1,2,4}`. The CI
-//! `bench-smoke` job re-runs it with `BSS_BENCH_FAST=1` and fails on any
-//! `SKIPPED` row, so this artifact cannot silently rot.
+//! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
+//! and speedup for `sweep --jobs {1,2,4}`, and events/s at
+//! `domains=1/2/4` with a report-identity check against the serial run.
+//! The CI `bench-smoke` job re-runs it with `BSS_BENCH_FAST=1` and fails
+//! on any `SKIPPED` row, so this artifact cannot silently rot.
 
 use std::time::Instant;
 
@@ -188,13 +189,85 @@ fn main() {
     sweep_table.print();
     assert!(deterministic, "parallel sweep CSV diverged from serial");
 
+    // ---- 4. PDES domain scaling: one scenario on N domains -----------------
+    // Bigger machine than the heap/wheel A/B so each conservative window
+    // (one lookahead ≈ 75 ns of simulated time) carries enough events to
+    // amortize the barrier: 4 wafers on a 2x2x2 torus.
+    let mut pdes_cfg = traffic_base(fast);
+    pdes_cfg.system.n_wafers = 4;
+    pdes_cfg.system.torus = TorusSpec::new(2, 2, 2);
+    pdes_cfg.system.fpgas_per_wafer = 8;
+    let mut pdes_runs = Json::arr();
+    let mut pdes_table = Table::new(
+        "PDES domain scaling (traffic scenario, wheel queue)",
+        &["domains", "des_events", "wall_s", "events/s", "speedup"],
+    );
+    let mut serial_eps = 0.0f64;
+    let mut serial_json = String::new();
+    let mut pdes_deterministic = true;
+    let mut multi_domain_best_eps = 0.0f64;
+    for domains in [1usize, 2, 4] {
+        let mut cfg = pdes_cfg.clone();
+        cfg.domains = domains;
+        let scenario = find("traffic").expect("traffic registered");
+        let mut best_wall = f64::INFINITY;
+        let mut events = 0u64;
+        let mut json = String::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let report = scenario.run(&cfg).expect("pdes traffic run failed");
+            let wall = t0.elapsed().as_secs_f64();
+            events = report
+                .get_count("des_events")
+                .expect("des_events metric missing");
+            json = report.to_json().pretty();
+            if wall < best_wall {
+                best_wall = wall;
+            }
+        }
+        let eps = events as f64 / best_wall;
+        if domains == 1 {
+            serial_eps = eps;
+            serial_json = json;
+        } else {
+            if json != serial_json {
+                pdes_deterministic = false;
+            }
+            if eps > multi_domain_best_eps {
+                multi_domain_best_eps = eps;
+            }
+        }
+        let speedup = eps / serial_eps;
+        pdes_table.row(vec![
+            domains.to_string(),
+            events.to_string(),
+            format!("{best_wall:.3}"),
+            eng(eps),
+            format!("{speedup:.2}"),
+        ]);
+        pdes_runs.push(
+            Json::obj()
+                .set("domains", domains)
+                .set("des_events", events)
+                .set("wall_s", best_wall)
+                .set("events_per_s", eps)
+                .set("speedup_vs_serial", speedup),
+        );
+    }
+    pdes_table.print();
+    println!(
+        "best multi-domain vs serial: {:.2}x events/s\n",
+        multi_domain_best_eps / serial_eps
+    );
+    assert!(pdes_deterministic, "PDES report diverged from serial");
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR2")
+        .set("artifact", "BENCH_PR3")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -210,6 +283,16 @@ fn main() {
                 .set("grid", grid)
                 .set("deterministic_across_jobs", deterministic)
                 .set("runs", sweep_runs),
+        )
+        .set(
+            "pdes_domain_scaling",
+            Json::obj()
+                .set("deterministic_across_domains", pdes_deterministic)
+                .set(
+                    "multi_domain_vs_serial_speedup",
+                    multi_domain_best_eps / serial_eps,
+                )
+                .set("runs", pdes_runs),
         );
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the

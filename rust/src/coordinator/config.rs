@@ -1,5 +1,9 @@
 //! Experiment configuration: JSON-backed, with sensible defaults for every
 //! knob so configs only state what they change.
+//!
+//! Per-knob tuning guidance (when to flip `queue=`, `jobs=`, `domains=`,
+//! and every other `--set` key) lives in `docs/TUNING.md`; the engine and
+//! layering contract behind them in `docs/ARCHITECTURE.md`.
 
 use anyhow::{Context, Result};
 
@@ -26,6 +30,12 @@ pub struct ExperimentConfig {
     /// Event-queue backend for the discrete-event simulation
     /// (`wheel` default; `heap` kept for A/B benchmarking — PERF.md).
     pub queue: QueueKind,
+    /// PDES domain count for fabric scenarios: `1` (default) runs the
+    /// classic serial event loop; `N > 1` partitions the torus into `N`
+    /// conservatively synchronized domains advanced on worker threads
+    /// (clamped to the node count; reports are byte-identical either
+    /// way — see docs/TUNING.md and docs/ARCHITECTURE.md).
+    pub domains: usize,
 }
 
 /// Spike-traffic workload knobs.
@@ -108,6 +118,7 @@ impl Default for ExperimentConfig {
             neuro: NeuroConfig::default(),
             seed: 0xB55,
             queue: QueueKind::default(),
+            domains: 1,
         }
     }
 }
@@ -121,6 +132,11 @@ impl ExperimentConfig {
                 let name = j.str_or("queue", QueueKind::default().as_str());
                 QueueKind::parse(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown queue kind '{name}' (heap|wheel)"))?
+            },
+            domains: {
+                let d = j.u64_or("domains", 1) as usize;
+                anyhow::ensure!(d >= 1, "domains must be >= 1");
+                d
             },
             ..ExperimentConfig::default()
         };
@@ -244,6 +260,16 @@ mod tests {
         assert_eq!(cfg.workload.duration, Time::from_ms(1));
         assert_eq!(cfg.neuro.steps, 10);
         assert_eq!(cfg.neuro.w_exc, 2.5);
+    }
+
+    #[test]
+    fn domains_knob_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.domains, 1);
+        let j = Json::parse(r#"{"domains": 4}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().domains, 4);
+        let j = Json::parse(r#"{"domains": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

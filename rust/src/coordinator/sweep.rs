@@ -50,6 +50,13 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
             cfg.queue = crate::sim::QueueKind::parse(value)
                 .ok_or_else(|| anyhow::anyhow!("unknown queue kind '{value}' (heap|wheel)"))?
         }
+        "domains" => {
+            let d = int(key, value)? as usize;
+            if d == 0 {
+                bail!("--domains: must be >= 1");
+            }
+            cfg.domains = d;
+        }
         // workload
         "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
         "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
@@ -101,12 +108,12 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "w_inh" => cfg.neuro.w_inh = num(key, value)? as f32,
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
-            "unknown parameter '{other}' (known: seed, queue, rate_hz, \
+            "unknown parameter '{other}' (known: seed, queue, domains, rate_hz, \
              sources_per_fpga, fan_out, zipf_s, deadline_offset, duration_s, \
              generator, burst_len, mc_scale, n_wafers, fpgas_per_wafer, \
              concentrators_per_wafer, torus, buckets, bucket_capacity, \
              deadline_margin, eviction, steps, artifact, dt_s, w_exc, w_inh, \
-             k_scale)"
+             k_scale — see docs/TUNING.md)"
         ),
     }
     Ok(())
@@ -611,6 +618,22 @@ mod tests {
         assert_eq!(a, b);
         let mut cfg = small();
         assert!(apply_override(&mut cfg, "queue", "splay").is_err());
+    }
+
+    #[test]
+    fn domains_override_sweeps_identically() {
+        // domain count is a perf knob: every metric must agree at 1/2/4
+        let runner = SweepRunner::new(small()).axis("domains", &["1", "2", "4"]);
+        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        assert_eq!(result.points.len(), 3);
+        let a = result.points[0].report.to_flat_json().to_string();
+        for p in &result.points[1..] {
+            assert_eq!(a, p.report.to_flat_json().to_string());
+        }
+        let mut cfg = small();
+        assert!(apply_override(&mut cfg, "domains", "0").is_err());
+        apply_override(&mut cfg, "domains", "2").unwrap();
+        assert_eq!(cfg.domains, 2);
     }
 
     #[test]

@@ -19,10 +19,12 @@
 
 use anyhow::Result;
 
-use crate::fpga::fpga::Fpga;
+use crate::extoll::network::pdes_lookahead;
+use crate::extoll::torus::{DomainMap, NodeAddr};
+use crate::fpga::fpga::{Fpga, TIMER_FLUSH_ALL};
 use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
-use crate::sim::{EventQueue, Sim, Time};
+use crate::sim::{EventQueue, Partition, Placement, Sim, Time};
 use crate::util::json::Json;
 use crate::util::report::Report;
 use crate::util::rng::{Rng, Zipf};
@@ -118,6 +120,12 @@ fn expected_pending_events(cfg: &ExperimentConfig) -> usize {
 
 /// Shared driver: build system → scenario build → run workload window +
 /// drain tail → collect. Returns the simulation for post-hoc inspection.
+///
+/// With `cfg.domains > 1` the run loop executes as partitioned
+/// conservative PDES ([`crate::sim::Partition`]): same build, same
+/// external schedules, same collect — and, by the engine's merge-key
+/// contract, byte-identical reports (gated in
+/// `rust/tests/determinism_queue.rs`).
 pub(crate) fn run_fabric_experiment(
     scn: &dyn FabricScenario,
     cfg: &ExperimentConfig,
@@ -130,13 +138,79 @@ pub(crate) fn run_fabric_experiment(
     let mut rng = Rng::new(cfg.seed);
     scn.build(&mut sim, &sys, cfg, &mut rng)?;
 
-    // run: workload window + drain tail
-    sim.run_until(cfg.workload.duration);
-    sys.flush_all(&mut sim);
-    sim.run_until(cfg.workload.duration + Time::from_ms(1));
+    let dm = DomainMap::new(cfg.system.torus, cfg.domains);
+    let sim = if dm.n_domains() > 1 {
+        run_loop_partitioned(sim, &sys, cfg, &dm)?
+    } else {
+        run_loop_serial(sim, &sys, cfg)
+    };
 
     let report = collect_traffic(&sim, &sys, cfg);
     Ok((sim, sys, report))
+}
+
+/// The classic single-threaded run loop: workload window + drain tail.
+fn run_loop_serial(mut sim: Sim<Msg>, sys: &System, cfg: &ExperimentConfig) -> Sim<Msg> {
+    sim.run_until(cfg.workload.duration);
+    sys.flush_all(&mut sim);
+    sim.run_until(cfg.workload.duration + Time::from_ms(1));
+    sim
+}
+
+/// The same run loop over a torus-partitioned [`Partition`]: identical
+/// phases, identical external-schedule order (so the merge keys match the
+/// serial run), merged back into one `Sim` for collection.
+fn run_loop_partitioned(
+    sim: Sim<Msg>,
+    sys: &System,
+    cfg: &ExperimentConfig,
+    dm: &DomainMap,
+) -> Result<Sim<Msg>> {
+    let lookahead = pdes_lookahead(dm, &cfg.system.nic)
+        .ok_or_else(|| anyhow::anyhow!("partition has no inter-domain links"))?;
+    let owner = resolve_owners(&sim, dm)?;
+    let mut part = Partition::split(sim, owner, dm.n_domains(), lookahead);
+    part.run_until(cfg.workload.duration);
+    // experiment barrier: same targets, same order as System::flush_all,
+    // so the external-schedule merge keys match the serial run's
+    for id in sys.flush_targets().collect::<Vec<_>>() {
+        part.schedule(cfg.workload.duration, id, Msg::Timer(TIMER_FLUSH_ALL));
+    }
+    part.run_until(cfg.workload.duration + Time::from_ms(1));
+    Ok(part.into_sim())
+}
+
+/// Map every actor to its PDES domain by resolving [`Placement`] chains
+/// (generator → FPGA → torus node, concentrator → NIC → node, ...).
+fn resolve_owners(sim: &Sim<Msg>, dm: &DomainMap) -> Result<Vec<u32>> {
+    let n_nodes = dm.spec().n_nodes();
+    let mut owner = Vec::with_capacity(sim.n_actors());
+    for id in 0..sim.n_actors() {
+        let mut cur = id;
+        let mut site = None;
+        for _ in 0..32 {
+            match sim.placement_of(cur) {
+                Some(Placement::Site(s)) => {
+                    site = Some(s);
+                    break;
+                }
+                Some(Placement::With(next)) => cur = next,
+                Some(Placement::Free) => anyhow::bail!(
+                    "actor {id} has no domain placement; partitioned runs \
+                     (domains > 1) require every actor to resolve to a torus node"
+                ),
+                None => anyhow::bail!("placement chain of actor {id} hit missing actor {cur}"),
+            }
+        }
+        let site =
+            site.ok_or_else(|| anyhow::anyhow!("placement chain of actor {id} too deep"))?;
+        anyhow::ensure!(
+            (site as usize) < n_nodes,
+            "actor {id} placed on site {site}, but the torus has {n_nodes} nodes"
+        );
+        owner.push(dm.domain_of(NodeAddr(site as u16)));
+    }
+    Ok(owner)
 }
 
 /// Drive `scn` and return the unified [`Report`]: the standard fabric
@@ -507,6 +581,25 @@ mod tests {
         let b = TrafficScenario.run(&wheel_cfg).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
         assert!(a.get_count("des_events").unwrap() > 0);
+    }
+
+    #[test]
+    fn domain_count_does_not_change_physics() {
+        // the tentpole invariant: partitioned conservative PDES is a perf
+        // knob only — byte-identical reports at any domain count
+        let mut base = small();
+        base.workload.fan_out = 2;
+        let serial = TrafficScenario.run(&base).unwrap();
+        for d in [2usize, 4] {
+            let mut cfg = base.clone();
+            cfg.domains = d;
+            let r = TrafficScenario.run(&cfg).unwrap();
+            assert_eq!(
+                serial.to_json().to_string(),
+                r.to_json().to_string(),
+                "report diverged at domains={d}"
+            );
+        }
     }
 
     #[test]

@@ -6,10 +6,10 @@
 //! of node `a` is `base + a.0`, and neighbor wiring needs no second pass.
 
 use crate::msg::Msg;
-use crate::sim::{ActorId, Sim};
+use crate::sim::{ActorId, Sim, Time};
 
 use super::nic::{Nic, NicConfig};
-use super::torus::{TorusSpec, DIRS};
+use super::torus::{DomainMap, TorusSpec, DIRS};
 
 /// Build a full torus of NICs; returns the actor ids in node-address order.
 ///
@@ -29,6 +29,26 @@ pub fn build_torus(sim: &mut Sim<Msg>, spec: &TorusSpec, cfg: NicConfig) -> Vec<
         }
     }
     ids
+}
+
+/// Conservative-PDES lookahead for a partitioned fabric: the minimum
+/// latency any message can incur on any **inter-domain** torus link
+/// (packets pay serialization + cable + router pipeline; credit returns
+/// pay cable + pipeline — see [`NicConfig::min_link_latency`]). A domain
+/// may therefore execute up to `min(domain clocks) + lookahead`,
+/// exclusive, without risking a causality violation
+/// (`docs/ARCHITECTURE.md` has the full invariant).
+///
+/// All torus links share one [`NicConfig`], so the minimum over the
+/// inter-domain edge set degenerates to that config's per-link minimum;
+/// a multi-domain partition of a (connected) torus always has crossing
+/// edges, so no enumeration is needed. Returns `None` for a single
+/// domain — nothing to synchronize on.
+pub fn pdes_lookahead(dm: &DomainMap, cfg: &NicConfig) -> Option<Time> {
+    if dm.n_domains() <= 1 {
+        return None;
+    }
+    Some(cfg.min_link_latency())
 }
 
 /// A handle to a built fabric (spec + NIC actor ids), with convenience

@@ -67,6 +67,22 @@ impl NicConfig {
     pub fn ser_time(&self, bytes: u32) -> Time {
         crate::sim::ps_for_bits(bytes as u64 * 8, self.link_gbps())
     }
+
+    /// Latency of a link-level credit return to the upstream router: the
+    /// credit flit rides the reverse-direction link, so it pays the cable
+    /// propagation plus the receiving router's pipeline.
+    pub fn credit_return_latency(&self) -> Time {
+        self.cable_latency + self.hop_latency
+    }
+
+    /// The smallest latency **any** message can incur crossing a torus
+    /// link — the link's contribution to the conservative-PDES lookahead
+    /// (`docs/ARCHITECTURE.md`). Packets pay `ser + cable + hop` with
+    /// `ser > 0`, credits pay exactly `cable + hop`, so the minimum is
+    /// the credit-return latency.
+    pub fn min_link_latency(&self) -> Time {
+        self.credit_return_latency()
+    }
 }
 
 /// Per-port egress state. One queue **per virtual channel**: a VC0 packet
@@ -269,11 +285,13 @@ impl Nic {
         port_state.tx_bytes += p.wire_bytes() as u64;
 
         // This packet no longer occupies our input buffer → return the
-        // credit upstream for the (port, vc) slot it arrived on.
+        // credit upstream for the (port, vc) slot it arrived on. The
+        // credit crosses the reverse link (cable + pipeline); a positive
+        // latency here is also what gives cross-domain PDES its lookahead.
         if let Some((up_actor, up_port, up_vc)) = p.ingress.take() {
             ctx.send(
                 up_actor,
-                Time::ZERO,
+                self.cfg.credit_return_latency(),
                 Msg::Credit {
                     port: up_port,
                     vc: up_vc,
@@ -334,6 +352,10 @@ impl Actor<Msg> for Nic {
 
     fn name(&self) -> String {
         format!("nic-{}", self.addr)
+    }
+
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::Site(self.addr.0 as u32)
     }
 }
 

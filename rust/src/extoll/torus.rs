@@ -188,6 +188,71 @@ impl TorusSpec {
     }
 }
 
+/// Partition of the torus nodes into PDES domains (see `sim/pdes.rs` and
+/// `docs/ARCHITECTURE.md`).
+///
+/// Nodes are split into contiguous **address blocks** of near-equal size
+/// (`⌊n/D⌋` or `⌈n/D⌉` nodes each). Addresses are row-major (x fastest),
+/// so contiguous blocks are slabs along the high-order axes — and because
+/// the system builder places wafers on consecutive node addresses, a
+/// domain boundary tends to coincide with a wafer boundary, keeping the
+/// chatty concentrator↔FPGA traffic inside one domain.
+#[derive(Clone, Copy, Debug)]
+pub struct DomainMap {
+    spec: TorusSpec,
+    n_domains: usize,
+}
+
+impl DomainMap {
+    /// Partition `spec` into (at most) `requested` domains; the count is
+    /// clamped to `[1, n_nodes]` so every domain owns at least one node.
+    pub fn new(spec: TorusSpec, requested: usize) -> DomainMap {
+        DomainMap {
+            spec,
+            n_domains: requested.clamp(1, spec.n_nodes()),
+        }
+    }
+
+    pub fn spec(&self) -> &TorusSpec {
+        &self.spec
+    }
+
+    /// Effective number of domains (after clamping).
+    pub fn n_domains(&self) -> usize {
+        self.n_domains
+    }
+
+    /// The domain owning node `a`. Total and exclusive: every node maps
+    /// to exactly one domain in `0..n_domains`.
+    pub fn domain_of(&self, a: NodeAddr) -> u32 {
+        debug_assert!((a.0 as usize) < self.spec.n_nodes());
+        (a.0 as usize * self.n_domains / self.spec.n_nodes()) as u32
+    }
+
+    /// Number of nodes owned by domain `d`.
+    pub fn nodes_in(&self, d: u32) -> usize {
+        self.spec.nodes().filter(|&a| self.domain_of(a) == d).count()
+    }
+
+    /// Enumerate every **directed** torus link whose endpoints live in
+    /// different domains, as `(node, dir, neighbor)`. The set is
+    /// symmetric: `(a, d, b)` is listed iff `(b, d.opposite(), a)` is —
+    /// these are exactly the channels whose minimum message latency
+    /// determines the conservative lookahead.
+    pub fn inter_domain_edges(&self) -> Vec<(NodeAddr, Dir, NodeAddr)> {
+        let mut edges = Vec::new();
+        for a in self.spec.nodes() {
+            for d in DIRS {
+                let b = self.spec.neighbor(a, d);
+                if self.domain_of(a) != self.domain_of(b) {
+                    edges.push((a, d, b));
+                }
+            }
+        }
+        edges
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +336,38 @@ mod tests {
     #[should_panic(expected = "16-bit")]
     fn too_big_rejected() {
         let _ = TorusSpec::new(256, 256, 2);
+    }
+
+    #[test]
+    fn domain_map_partitions_evenly() {
+        let t = TorusSpec::new(4, 2, 2);
+        for d in [1usize, 2, 3, 4, 16] {
+            let dm = DomainMap::new(t, d);
+            assert_eq!(dm.n_domains(), d.min(16));
+            let total: usize = (0..dm.n_domains() as u32).map(|i| dm.nodes_in(i)).sum();
+            assert_eq!(total, 16, "every node in exactly one domain");
+            let max = (0..dm.n_domains() as u32).map(|i| dm.nodes_in(i)).max().unwrap();
+            let min = (0..dm.n_domains() as u32).map(|i| dm.nodes_in(i)).min().unwrap();
+            assert!(max - min <= 1, "unbalanced split at D={d}: {min}..{max}");
+        }
+        // requested > nodes clamps
+        assert_eq!(DomainMap::new(TorusSpec::new(2, 1, 1), 8).n_domains(), 2);
+        assert_eq!(DomainMap::new(t, 0).n_domains(), 1);
+    }
+
+    #[test]
+    fn domain_edges_symmetric_and_boundary_only() {
+        let t = TorusSpec::new(4, 2, 2);
+        let dm = DomainMap::new(t, 4);
+        let edges = dm.inter_domain_edges();
+        assert!(!edges.is_empty());
+        for &(a, d, b) in &edges {
+            assert_ne!(dm.domain_of(a), dm.domain_of(b));
+            assert_eq!(t.neighbor(a, d), b);
+            assert!(edges.contains(&(b, d.opposite(), a)), "missing reverse edge");
+        }
+        // one domain ⇒ no inter-domain edges
+        assert!(DomainMap::new(t, 1).inter_domain_edges().is_empty());
     }
 
     #[test]

@@ -399,6 +399,13 @@ impl Actor<Msg> for Fpga {
     fn name(&self) -> String {
         format!("fpga-{}-{}", self.cfg.endpoint.node, self.cfg.endpoint.fpga)
     }
+
+    /// Lives on its concentrator's torus node: FPGA↔concentrator traffic
+    /// is sub-lookahead, so the whole wafer-side stack of a node shares
+    /// one PDES domain.
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::Site(self.cfg.endpoint.node.0 as u32)
+    }
 }
 
 #[cfg(test)]

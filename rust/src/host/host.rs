@@ -273,6 +273,10 @@ impl Actor<Msg> for Host {
     fn name(&self) -> String {
         format!("host-{}", self.cfg.node)
     }
+
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::Site(self.cfg.node.0 as u32)
+    }
 }
 
 #[cfg(test)]

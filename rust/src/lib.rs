@@ -11,6 +11,11 @@
 //!
 //! ## Layer map
 //!
+//! (The full architecture book — layer responsibilities, the
+//! event-ordering/determinism contract, PDES lookahead invariant, and a
+//! spike's end-to-end walkthrough — is `docs/ARCHITECTURE.md`; runtime
+//! knob guidance is `docs/TUNING.md`.)
+//!
 //! - **L3 (this crate)** — coordination, simulation, routing, batching.
 //!   Experiments are `Scenario`s dispatched from a registry
 //!   (`bss-extoll run <scenario>`), reporting into one metric-keyed

@@ -2,9 +2,20 @@
 //!
 //! Components implement [`Actor`] and communicate exclusively via
 //! timestamped messages delivered through the [`Sim`]'s event queue.
-//! Determinism guarantee: events with equal timestamps are delivered in
-//! the order they were scheduled (a monotone sequence number breaks ties),
-//! so a given configuration always produces the same trajectory.
+//! The full event-ordering and determinism contract is documented in
+//! `docs/ARCHITECTURE.md`; in short:
+//!
+//! - events are delivered in nondecreasing `(timestamp, key)` order among
+//!   the events currently pending,
+//! - the tie-break `key` is a **partition-independent merge key**: the
+//!   sending actor's id plus that actor's private send counter (external
+//!   [`Sim::schedule`] calls use a reserved source id and their own
+//!   counter). Because the key depends only on *who* sent a message and
+//!   *how many* messages that sender emitted before it — never on how
+//!   sends from different actors interleave in wall-clock execution — a
+//!   trajectory is reproduced exactly whether the actors run in one
+//!   [`Sim`] or are spread across the domains of a
+//!   [`super::pdes::Partition`].
 //!
 //! Two interchangeable queue backends implement that contract (selected
 //! by [`QueueKind`], A/B-benchmarked in `benches/bench_events.rs` — see
@@ -28,7 +39,26 @@ use super::time::Time;
 /// Index of an actor within a [`Sim`].
 pub type ActorId = usize;
 
-/// A scheduled message delivery.
+/// Number of low bits of a merge key holding the per-source send counter.
+const KEY_CNT_BITS: u32 = 40;
+
+/// Reserved merge-key source id for events scheduled from outside the
+/// simulation ([`Sim::schedule`] and `Partition::schedule`). Also the
+/// exclusive upper bound on actor ids (enforced by [`Sim::add`]).
+pub(crate) const EXTERNAL_SRC: u64 = (1 << (64 - KEY_CNT_BITS)) - 1;
+
+/// Compose the deterministic merge key for the `cnt`-th send of source
+/// `src`: keys order ties by source id, then FIFO per source. See the
+/// module docs (and `docs/ARCHITECTURE.md`) for why this key — unlike a
+/// global push counter — is identical across PDES domain partitionings.
+pub(crate) fn merge_key(src: u64, cnt: u64) -> u64 {
+    debug_assert!(src <= EXTERNAL_SRC, "source id {src} overflows key space");
+    debug_assert!(cnt < 1 << KEY_CNT_BITS, "send counter overflow for {src}");
+    (src << KEY_CNT_BITS) | cnt
+}
+
+/// A scheduled message delivery. `seq` is the deterministic merge key
+/// (source id ‖ per-source counter) that breaks timestamp ties.
 #[derive(Debug)]
 pub struct Event<M> {
     pub at: Time,
@@ -317,9 +347,19 @@ impl<M> EventQueue<M> {
         self.slab.capacity()
     }
 
+    /// Push with an auto-assigned key (monotone insertion counter): ties
+    /// drain FIFO. This is the standalone-queue API (benches, fuzz tests);
+    /// [`Sim`] always pushes through the crate-internal `push_keyed` with
+    /// a partition-independent merge key, and the two must not be mixed
+    /// on one queue (auto keys could collide with keyed ones).
     pub fn push(&mut self, at: Time, dst: ActorId, msg: M) {
         let seq = self.seq;
         self.seq += 1;
+        self.push_keyed(at, seq, dst, msg);
+    }
+
+    /// Push with an explicit merge key (see [`merge_key`]).
+    pub(crate) fn push_keyed(&mut self, at: Time, key: u64, dst: ActorId, msg: M) {
         let slot = match self.free.pop() {
             Some(s) => {
                 self.slab[s as usize] = Some(msg);
@@ -332,7 +372,7 @@ impl<M> EventQueue<M> {
         };
         let e = QueueEntry {
             at,
-            seq,
+            seq: key,
             dst: dst as u32,
             slot,
         };
@@ -378,11 +418,35 @@ impl<M> EventQueue<M> {
     }
 }
 
+/// A message bound for an actor owned by another PDES domain, captured in
+/// the sending domain's outbox and exchanged at the next window barrier
+/// (see [`super::pdes::Partition`]).
+#[derive(Debug)]
+pub(crate) struct Outgoing<M> {
+    pub at: Time,
+    pub key: u64,
+    pub dst: ActorId,
+    pub msg: M,
+}
+
+/// Per-domain routing state of a partitioned [`Sim`]: the global
+/// actor → domain ownership map, this domain's id, and the outbox of
+/// cross-domain messages produced since the last barrier.
+pub(crate) struct DomainCtx<M> {
+    pub owner: std::sync::Arc<Vec<u32>>,
+    pub me: u32,
+    pub outbox: Vec<Outgoing<M>>,
+}
+
 /// Scheduling context handed to an actor while it handles a message.
 pub struct Ctx<'a, M> {
     now: Time,
     self_id: ActorId,
     queue: &'a mut EventQueue<M>,
+    /// The handling actor's private send counter (merge-key low bits).
+    send_cnt: &'a mut u64,
+    /// Cross-domain routing (None when the whole system runs in one Sim).
+    domain: Option<&'a mut DomainCtx<M>>,
 }
 
 impl<'a, M> Ctx<'a, M> {
@@ -398,13 +462,14 @@ impl<'a, M> Ctx<'a, M> {
 
     /// Deliver `msg` to `dst` after `delay`.
     pub fn send(&mut self, dst: ActorId, delay: Time, msg: M) {
-        self.queue.push(self.now + delay, dst, msg);
+        let at = self.now + delay;
+        self.push(dst, at, msg);
     }
 
     /// Deliver `msg` to `dst` at absolute time `at` (must be ≥ now).
     pub fn send_at(&mut self, dst: ActorId, at: Time, msg: M) {
         debug_assert!(at >= self.now, "scheduling into the past");
-        self.queue.push(at.max(self.now), dst, msg);
+        self.push(dst, at.max(self.now), msg);
     }
 
     /// Schedule a message to self (timers, clock ticks).
@@ -412,27 +477,85 @@ impl<'a, M> Ctx<'a, M> {
         let id = self.self_id;
         self.send(id, delay, msg);
     }
+
+    fn push(&mut self, dst: ActorId, at: Time, msg: M) {
+        let key = merge_key(self.self_id as u64, *self.send_cnt);
+        *self.send_cnt += 1;
+        match &mut self.domain {
+            Some(d) if d.owner[dst] != d.me => d.outbox.push(Outgoing { at, key, dst, msg }),
+            _ => self.queue.push_keyed(at, key, dst, msg),
+        }
+    }
+}
+
+/// Where an actor must live when the simulation is partitioned into PDES
+/// domains (returned by [`Actor::placement`]). Sites are abstract indices;
+/// the Extoll layer uses the torus node address
+/// ([`crate::extoll::torus::NodeAddr`]`.0`) as the site id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// No placement constraint; such an actor cannot take part in a
+    /// partitioned run (the partitioning driver rejects it).
+    Free,
+    /// Same domain as another actor (e.g. a generator rides with the FPGA
+    /// it feeds — they exchange zero-latency messages).
+    With(ActorId),
+    /// A physical site (torus node) mapped to a domain by the partitioner.
+    Site(u32),
 }
 
 /// A simulation component. `handle` consumes one message and may schedule
 /// any number of future messages via the context.
-pub trait Actor<M>: Any {
+///
+/// `Send` is part of the contract: partitioned runs move each domain's
+/// actors onto a worker thread (actors hold plain state, never shared
+/// references, so this is automatic in practice).
+pub trait Actor<M>: Any + Send {
     fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>);
 
     /// Human-readable name for traces and error messages.
     fn name(&self) -> String {
         "actor".to_string()
     }
+
+    /// Domain-placement constraint for partitioned (PDES) execution; see
+    /// [`Placement`]. Actors that exchange sub-lookahead-latency messages
+    /// must resolve to the same site.
+    fn placement(&self) -> Placement {
+        Placement::Free
+    }
+}
+
+/// The moveable state of a [`Sim`], used by [`super::pdes::Partition`] to
+/// split a built simulation into per-domain instances and to merge them
+/// back for post-run metric collection.
+pub(crate) struct SimParts<M> {
+    pub now: Time,
+    pub actors: Vec<Option<Box<dyn Actor<M>>>>,
+    pub queue: EventQueue<M>,
+    pub processed: u64,
+    pub send_seq: Vec<u64>,
+    pub ext_seq: u64,
 }
 
 /// The simulation: a set of actors plus the event queue and clock.
+///
+/// In a partitioned (PDES) run there is one `Sim` per torus domain; actor
+/// ids stay **global** — slots owned by other domains are `None`, and
+/// sends addressed to them are diverted into the domain outbox.
 pub struct Sim<M> {
     pub now: Time,
-    actors: Vec<Box<dyn Actor<M>>>,
+    actors: Vec<Option<Box<dyn Actor<M>>>>,
     queue: EventQueue<M>,
     processed: u64,
     /// Optional diagnostic hook invoked on every dispatched message.
-    tracer: Option<Box<dyn FnMut(&M)>>,
+    tracer: Option<Box<dyn FnMut(&M) + Send>>,
+    /// Per-actor send counters (merge-key low bits), indexed by actor id.
+    send_seq: Vec<u64>,
+    /// Counter for externally scheduled events ([`Sim::schedule`]).
+    ext_seq: u64,
+    /// Cross-domain routing state (None outside partitioned runs).
+    domain: Option<DomainCtx<M>>,
 }
 
 impl<M: 'static> Default for Sim<M> {
@@ -459,6 +582,9 @@ impl<M: 'static> Sim<M> {
             queue,
             processed: 0,
             tracer: None,
+            send_seq: Vec::new(),
+            ext_seq: 0,
+            domain: None,
         }
     }
 
@@ -469,13 +595,14 @@ impl<M: 'static> Sim<M> {
 
     /// Register an actor; returns its id for message addressing.
     pub fn add(&mut self, actor: impl Actor<M>) -> ActorId {
-        self.actors.push(Box::new(actor));
-        self.actors.len() - 1
+        self.add_boxed(Box::new(actor))
     }
 
     /// Register a pre-boxed actor.
     pub fn add_boxed(&mut self, actor: Box<dyn Actor<M>>) -> ActorId {
-        self.actors.push(actor);
+        assert!((self.actors.len() as u64) < EXTERNAL_SRC, "actor id space exhausted");
+        self.actors.push(Some(actor));
+        self.send_seq.push(0);
         self.actors.len() - 1
     }
 
@@ -483,10 +610,21 @@ impl<M: 'static> Sim<M> {
         self.actors.len()
     }
 
+    /// Placement constraint of an actor (None for remote slots).
+    pub(crate) fn placement_of(&self, id: ActorId) -> Option<Placement> {
+        self.actors[id].as_ref().map(|a| a.placement())
+    }
+
     /// Schedule an initial message from outside the simulation.
     pub fn schedule(&mut self, at: Time, dst: ActorId, msg: M) {
         debug_assert!(at >= self.now);
-        self.queue.push(at, dst, msg);
+        let key = merge_key(EXTERNAL_SRC, self.ext_seq);
+        self.ext_seq += 1;
+        if let Some(d) = &self.domain {
+            // cross-domain external schedules go through Partition::schedule
+            debug_assert_eq!(d.owner[dst], d.me, "domain does not own actor {dst}");
+        }
+        self.queue.push_keyed(at, key, dst, msg);
     }
 
     /// Number of events processed so far.
@@ -505,7 +643,7 @@ impl<M: 'static> Sim<M> {
     }
 
     /// Install a diagnostic tracer called with every dispatched message.
-    pub fn set_tracer(&mut self, f: impl FnMut(&M) + 'static) {
+    pub fn set_tracer(&mut self, f: impl FnMut(&M) + Send + 'static) {
         self.tracer = Some(Box::new(f));
     }
 
@@ -519,14 +657,17 @@ impl<M: 'static> Sim<M> {
         }
         debug_assert!(ev.at >= self.now, "time went backwards");
         self.now = ev.at;
-        let actor = self
-            .actors
-            .get_mut(ev.dst)
-            .unwrap_or_else(|| panic!("message to unknown actor {}", ev.dst));
+        let actor = match self.actors.get_mut(ev.dst) {
+            Some(Some(a)) => a,
+            Some(None) => panic!("message to non-local actor {} (PDES routing bug)", ev.dst),
+            None => panic!("message to unknown actor {}", ev.dst),
+        };
         let mut ctx = Ctx {
             now: ev.at,
             self_id: ev.dst,
             queue: &mut self.queue,
+            send_cnt: &mut self.send_seq[ev.dst],
+            domain: self.domain.as_mut(),
         };
         actor.handle(ev.msg, &mut ctx);
         self.processed += 1;
@@ -559,6 +700,22 @@ impl<M: 'static> Sim<M> {
         self.processed - start
     }
 
+    /// Process all events with timestamp **strictly before** `bound`; the
+    /// clock is left at the last processed event. This is the PDES window
+    /// primitive: a domain may only execute below its conservative bound
+    /// `min(neighbor clocks) + lookahead`, exclusive, because a
+    /// cross-domain message can arrive *at* the bound but never below it.
+    pub fn run_before(&mut self, bound: Time) -> u64 {
+        let start = self.processed;
+        while let Some(t) = self.queue.peek_time() {
+            if t >= bound {
+                break;
+            }
+            self.step();
+        }
+        self.processed - start
+    }
+
     /// Drain the queue completely (careful: self-perpetuating actors never
     /// terminate; prefer `run_until`). Returns events processed.
     pub fn run_to_completion(&mut self) -> u64 {
@@ -569,21 +726,81 @@ impl<M: 'static> Sim<M> {
 
     /// Typed access to an actor (post-run metric collection).
     pub fn get<T: Actor<M>>(&self, id: ActorId) -> &T {
-        (self.actors[id].as_ref() as &dyn Any)
+        let a = self.actors[id]
+            .as_ref()
+            .unwrap_or_else(|| panic!("actor {id} is not local to this domain"));
+        (a.as_ref() as &dyn Any)
             .downcast_ref::<T>()
             .unwrap_or_else(|| panic!("actor {id} is not a {}", std::any::type_name::<T>()))
     }
 
     /// Typed mutable access to an actor.
     pub fn get_mut<T: Actor<M>>(&mut self, id: ActorId) -> &mut T {
-        (self.actors[id].as_mut() as &mut dyn Any)
+        let a = self.actors[id]
+            .as_mut()
+            .unwrap_or_else(|| panic!("actor {id} is not local to this domain"));
+        (a.as_mut() as &mut dyn Any)
             .downcast_mut::<T>()
             .unwrap_or_else(|| panic!("actor {id} is not a {}", std::any::type_name::<T>()))
     }
 
-    /// Try typed access (None if the id holds a different type).
+    /// Try typed access (None if the id holds a different type or the
+    /// actor lives in another PDES domain).
     pub fn try_get<T: Actor<M>>(&self, id: ActorId) -> Option<&T> {
-        (self.actors[id].as_ref() as &dyn Any).downcast_ref::<T>()
+        (self.actors[id].as_ref()?.as_ref() as &dyn Any).downcast_ref::<T>()
+    }
+
+    // ---- partitioning plumbing (see sim/pdes.rs) -------------------------
+
+    /// Decompose into raw parts for domain splitting. Panics if a tracer
+    /// is installed (tracers observe the global dispatch order, which a
+    /// partitioned run does not materialize).
+    pub(crate) fn into_parts(self) -> SimParts<M> {
+        assert!(self.tracer.is_none(), "PDES partitioning does not support tracers");
+        SimParts {
+            now: self.now,
+            actors: self.actors,
+            queue: self.queue,
+            processed: self.processed,
+            send_seq: self.send_seq,
+            ext_seq: self.ext_seq,
+        }
+    }
+
+    /// Reassemble a simulation from raw parts, optionally as one domain
+    /// of a partition.
+    pub(crate) fn from_parts(parts: SimParts<M>, domain: Option<DomainCtx<M>>) -> Sim<M> {
+        Sim {
+            now: parts.now,
+            actors: parts.actors,
+            queue: parts.queue,
+            processed: parts.processed,
+            tracer: None,
+            send_seq: parts.send_seq,
+            ext_seq: parts.ext_seq,
+            domain,
+        }
+    }
+
+    /// Insert a pre-keyed event (barrier delivery of a cross-domain
+    /// message, or queue redistribution during split/merge).
+    pub(crate) fn inject_keyed(&mut self, at: Time, key: u64, dst: ActorId, msg: M) {
+        self.queue.push_keyed(at, key, dst, msg);
+    }
+
+    /// Drain the outbox of cross-domain messages (empty outside
+    /// partitioned runs).
+    pub(crate) fn take_outbox(&mut self) -> Vec<Outgoing<M>> {
+        match &mut self.domain {
+            Some(d) => std::mem::take(&mut d.outbox),
+            None => Vec::new(),
+        }
+    }
+
+    /// Advance the clock to at least `t` without processing events
+    /// (window epilogue, mirroring [`Sim::run_until`]'s clock semantics).
+    pub(crate) fn advance_clock(&mut self, t: Time) {
+        self.now = self.now.max(t);
     }
 }
 

@@ -2,14 +2,21 @@
 //!
 //! The whole hardware model — Extoll fabric, FPGAs, hosts — runs on this
 //! engine: a picosecond-resolution virtual clock, a deterministic event
-//! queue (ties broken by insertion sequence), and an actor model where
-//! components communicate exclusively through timestamped messages.
+//! queue (timestamp ties broken by a partition-independent merge key),
+//! and an actor model where components communicate exclusively through
+//! timestamped messages. [`pdes::Partition`] splits one simulation into
+//! conservatively synchronized domains that advance on parallel worker
+//! threads without changing any trajectory.
 //!
 //! The core is generic over the message type `M`; the domain defines one
-//! message enum per system (see [`crate::wafer::system`]).
+//! message enum per system (see [`crate::wafer::system`]). The engine
+//! contract — ordering, determinism, the PDES lookahead invariant — is
+//! documented in `docs/ARCHITECTURE.md`.
 
 pub mod engine;
+pub mod pdes;
 pub mod time;
 
-pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, QueueKind, Sim};
+pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Placement, QueueKind, Sim};
+pub use pdes::Partition;
 pub use time::{ps_for_bits, Time, FPGA_CLK_HZ};

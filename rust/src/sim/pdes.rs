@@ -1,0 +1,586 @@
+//! Partitioned conservative parallel DES (PDES) across torus domains.
+//!
+//! A [`Partition`] splits one built [`Sim`] into per-domain instances —
+//! one domain per group of torus nodes, each owning its local actors and
+//! event queue — and advances them on parallel worker threads under a
+//! conservative synchronization protocol in the Chandy–Misra–Bryant
+//! family. The safety bound is the windowed (global-minimum) special
+//! case of CMB's per-neighbor rule: with every cross-domain link
+//! guaranteeing at least `lookahead` of latency, a domain whose earliest
+//! pending event is at `t_min_global` or later may execute everything
+//! strictly below
+//!
+//! ```text
+//! bound = min(domain clocks) + lookahead  =  t_min_global + lookahead
+//! ```
+//!
+//! because any message another domain emits in the same window is sent at
+//! `≥ t_min_global` and therefore arrives at `≥ bound`. Instead of
+//! streaming null messages, domains run in lock-step windows on a spin
+//! barrier: publish next-event times → leader computes the bound → all
+//! domains execute their window in parallel → cross-domain messages are
+//! exchanged through per-domain mailboxes → repeat. The lookahead comes
+//! from the Extoll link model (cable + router pipeline latency; see
+//! [`crate::extoll::network::pdes_lookahead`]).
+//!
+//! ## Determinism
+//!
+//! Domain count is a performance knob, not physics: reports are
+//! byte-identical at any partitioning (gated by
+//! `rust/tests/determinism_queue.rs`). Two properties make that true:
+//!
+//! 1. every event carries the partition-independent merge key of
+//!    `sim/engine.rs` (source actor ‖ per-source send counter), so each
+//!    domain's queue pops its local + injected events in exactly the
+//!    relative order the single-`Sim` run would have, and
+//! 2. the conservative bound guarantees a cross-domain message is always
+//!    injected before the receiving domain reaches its timestamp, so no
+//!    event is ever delivered "into the key-past".
+//!
+//! See `docs/ARCHITECTURE.md` for the full argument and the invariants.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::engine::{
+    merge_key, ActorId, DomainCtx, EventQueue, Outgoing, Sim, SimParts, EXTERNAL_SRC,
+};
+use super::time::Time;
+
+/// Sentinel bound value signalling "no work at or below `until` remains".
+const STOP: u64 = u64::MAX;
+
+/// A reusable sense-counting spin barrier for the window lock-step.
+///
+/// Windows are short (one lookahead of simulated time, typically tens of
+/// events per domain), so parking on a futex every window would dominate;
+/// workers spin briefly and fall back to `yield_now` so oversubscribed
+/// hosts (more domains than cores) still make progress. A panicking
+/// worker poisons the barrier, releasing every other worker with `false`
+/// so the panic propagates instead of deadlocking the fleet.
+struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+impl SpinBarrier {
+    fn new(n: usize) -> SpinBarrier {
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Wait for all `n` workers; returns false if the barrier was
+    /// poisoned (some worker panicked) and the caller should bail out.
+    fn wait(&self) -> bool {
+        if self.poisoned.load(Ordering::Acquire) {
+            return false;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Release);
+            self.generation.fetch_add(1, Ordering::Release);
+            !self.poisoned.load(Ordering::Acquire)
+        } else {
+            let mut spins = 0u32;
+            loop {
+                if self.generation.load(Ordering::Acquire) != gen {
+                    return !self.poisoned.load(Ordering::Acquire);
+                }
+                // re-check inside the loop: a worker can capture the
+                // post-poison generation (poison bumps it) and would
+                // otherwise spin on a generation that never changes again
+                if self.poisoned.load(Ordering::Acquire) {
+                    return false;
+                }
+                spins += 1;
+                if spins < 1 << 10 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        // release any worker currently spinning on the generation
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Poisons the barrier if its worker unwinds, so sibling workers exit
+/// their window loop instead of spinning forever.
+struct PoisonOnPanic<'a>(&'a SpinBarrier);
+
+impl Drop for PoisonOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// A simulation partitioned into conservatively synchronized domains.
+///
+/// Construct with [`Partition::split`] after the system is fully built,
+/// drive with [`Partition::run_until`] / [`Partition::schedule`], then
+/// [`Partition::into_sim`] reassembles a single [`Sim`] (all actors,
+/// global ids intact) for unchanged post-run metric collection.
+///
+/// ```
+/// use bss_extoll::sim::{Actor, Ctx, Partition, Sim, Time};
+///
+/// // Two actors ping-ponging a countdown over a 100 ns "link".
+/// struct Counter { n: u64, peer: usize, link: Time }
+/// impl Actor<u32> for Counter {
+///     fn handle(&mut self, msg: u32, ctx: &mut Ctx<'_, u32>) {
+///         self.n += 1;
+///         if msg > 0 {
+///             ctx.send(self.peer, self.link, msg - 1);
+///         }
+///     }
+/// }
+///
+/// let link = Time::from_ns(100);
+/// let mut sim = Sim::new();
+/// let a = sim.add(Counter { n: 0, peer: 1, link });
+/// let b = sim.add(Counter { n: 0, peer: 0, link });
+/// sim.schedule(Time::ZERO, a, 64);
+///
+/// // One domain per actor; the link latency is the lookahead.
+/// let mut part = Partition::split(sim, vec![0, 1], 2, link);
+/// part.run_until(Time::from_us(100));
+/// let merged = part.into_sim();
+/// assert_eq!(merged.processed(), 65);
+/// let handled = merged.get::<Counter>(a).n + merged.get::<Counter>(b).n;
+/// assert_eq!(handled, 65);
+/// ```
+pub struct Partition<M> {
+    domains: Vec<Sim<M>>,
+    owner: Arc<Vec<u32>>,
+    lookahead: Time,
+    /// Continuation of the master sim's external-schedule counter, so
+    /// `Partition::schedule` mints the same merge keys the serial run's
+    /// `Sim::schedule` would.
+    ext_seq: u64,
+}
+
+impl<M: Send + 'static> Partition<M> {
+    /// Split a built simulation into `n_domains` domains. `owner` maps
+    /// every actor id to its domain (resolved from
+    /// [`crate::sim::Placement`] by the partitioning driver), and
+    /// `lookahead` is the minimum latency of any cross-domain message
+    /// (must be positive — conservative synchronization cannot make
+    /// progress otherwise).
+    pub fn split(sim: Sim<M>, owner: Vec<u32>, n_domains: usize, lookahead: Time) -> Partition<M> {
+        assert!(n_domains >= 1, "partition needs at least one domain");
+        assert!(lookahead > Time::ZERO, "conservative PDES requires positive lookahead");
+        let parts = sim.into_parts();
+        assert_eq!(owner.len(), parts.actors.len(), "owner map does not cover every actor");
+        assert!(
+            owner.iter().all(|&d| (d as usize) < n_domains),
+            "owner map references a domain >= {n_domains}"
+        );
+        let owner = Arc::new(owner);
+        let n = parts.actors.len();
+        let kind = parts.queue.kind();
+        let cap = parts.queue.capacity() / n_domains + 1;
+
+        // distribute actors to their owning domain (global ids preserved)
+        let mut actor_tables: Vec<Vec<_>> = (0..n_domains)
+            .map(|_| (0..n).map(|_| None).collect())
+            .collect();
+        for (id, slot) in parts.actors.into_iter().enumerate() {
+            if let Some(actor) = slot {
+                actor_tables[owner[id] as usize][id] = Some(actor);
+            }
+        }
+
+        // distribute already-scheduled events by destination owner
+        let mut queues: Vec<EventQueue<M>> = (0..n_domains)
+            .map(|_| EventQueue::with_capacity(kind, cap))
+            .collect();
+        let mut master_queue = parts.queue;
+        while let Some(ev) = master_queue.pop() {
+            queues[owner[ev.dst] as usize].push_keyed(ev.at, ev.seq, ev.dst, ev.msg);
+        }
+
+        let domains: Vec<Sim<M>> = actor_tables
+            .into_iter()
+            .zip(queues)
+            .enumerate()
+            .map(|(d, (actors, queue))| {
+                Sim::from_parts(
+                    SimParts {
+                        now: parts.now,
+                        actors,
+                        queue,
+                        // the master's pre-split count rides on domain 0 so
+                        // the merged total matches a serial run
+                        processed: if d == 0 { parts.processed } else { 0 },
+                        send_seq: parts.send_seq.clone(),
+                        ext_seq: 0, // external keys are minted by Partition
+                    },
+                    Some(DomainCtx {
+                        owner: Arc::clone(&owner),
+                        me: d as u32,
+                        outbox: Vec::new(),
+                    }),
+                )
+            })
+            .collect();
+
+        Partition {
+            domains,
+            owner,
+            lookahead,
+            ext_seq: parts.ext_seq,
+        }
+    }
+
+    /// Number of domains.
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// The conservative lookahead this partition synchronizes on.
+    pub fn lookahead(&self) -> Time {
+        self.lookahead
+    }
+
+    /// Total events processed across all domains.
+    pub fn processed(&self) -> u64 {
+        self.domains.iter().map(|d| d.processed()).sum()
+    }
+
+    /// Total events still pending across all domains.
+    pub fn pending(&self) -> usize {
+        self.domains.iter().map(|d| d.pending()).sum()
+    }
+
+    /// Schedule an external event, minting the same merge key the serial
+    /// run's [`Sim::schedule`] would (callers must issue their external
+    /// schedules in the same order in both modes — the fabric driver
+    /// does).
+    pub fn schedule(&mut self, at: Time, dst: ActorId, msg: M) {
+        debug_assert!(
+            self.domains.iter().all(|d| at >= d.now),
+            "scheduling into the past of a domain"
+        );
+        let key = merge_key(EXTERNAL_SRC, self.ext_seq);
+        self.ext_seq += 1;
+        let d = self.owner[dst] as usize;
+        self.domains[d].inject_keyed(at, key, dst, msg);
+    }
+
+    /// Process all events with timestamp ≤ `until` across all domains in
+    /// parallel conservative windows, then advance every domain clock to
+    /// `until`. Returns the number of events processed by this call.
+    pub fn run_until(&mut self, until: Time) -> u64 {
+        let start = self.processed();
+        if self.domains.len() == 1 {
+            self.domains[0].run_until(until);
+            return self.processed() - start;
+        }
+        let n = self.domains.len();
+        let lookahead = self.lookahead.ps();
+        assert!(until.ps() < u64::MAX - lookahead - 1, "run_until horizon too large");
+        let next_times: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let bound = AtomicU64::new(0);
+        let barrier = SpinBarrier::new(n);
+        let mailboxes: Vec<Mutex<Vec<Outgoing<M>>>> =
+            (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let owner: &[u32] = &self.owner;
+        {
+            let (next_times, bound, barrier, mailboxes) =
+                (&next_times, &bound, &barrier, &mailboxes);
+            std::thread::scope(|scope| {
+                for (i, dom) in self.domains.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        let _poison = PoisonOnPanic(barrier);
+                        loop {
+                            // 1. publish my earliest pending event time
+                            let t = dom.next_time().map_or(u64::MAX, |t| t.ps());
+                            next_times[i].store(t, Ordering::Release);
+                            if !barrier.wait() {
+                                break;
+                            }
+                            // 2. leader derives the conservative bound
+                            if i == 0 {
+                                let t_min = next_times
+                                    .iter()
+                                    .map(|a| a.load(Ordering::Acquire))
+                                    .min()
+                                    .expect("at least one domain");
+                                let b = if t_min > until.ps() {
+                                    STOP
+                                } else {
+                                    // exclusive bound: a neighbor at t_min
+                                    // can emit a message arriving exactly
+                                    // at t_min + lookahead
+                                    (t_min + lookahead).min(until.ps() + 1)
+                                };
+                                bound.store(b, Ordering::Release);
+                            }
+                            if !barrier.wait() {
+                                break;
+                            }
+                            let b = bound.load(Ordering::Acquire);
+                            if b == STOP {
+                                break;
+                            }
+                            // 3. execute my window, route cross-domain sends
+                            dom.run_before(Time::from_ps(b));
+                            for m in dom.take_outbox() {
+                                let dest = owner[m.dst] as usize;
+                                mailboxes[dest].lock().expect("mailbox").push(m);
+                            }
+                            if !barrier.wait() {
+                                break;
+                            }
+                            // 4. absorb my inbox (sorted for tidiness; the
+                            // merge keys alone already fix the pop order)
+                            let mut inbox =
+                                std::mem::take(&mut *mailboxes[i].lock().expect("mailbox"));
+                            inbox.sort_unstable_by_key(|m| (m.at, m.key));
+                            for m in inbox {
+                                // the lookahead invariant: no cross-domain
+                                // message may arrive inside the window that
+                                // produced it — a violation here means some
+                                // sub-lookahead cross-domain edge exists
+                                // (placement bug) and would silently corrupt
+                                // the trajectory in release builds
+                                debug_assert!(
+                                    m.at >= Time::from_ps(b),
+                                    "cross-domain arrival {} below window bound {b}",
+                                    m.at
+                                );
+                                dom.inject_keyed(m.at, m.key, m.dst, m.msg);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        for dom in &mut self.domains {
+            dom.advance_clock(until);
+        }
+        self.processed() - start
+    }
+
+    /// Merge the domains back into one simulation (all actors under their
+    /// global ids, leftover events requeued, clocks and counters folded),
+    /// so post-run metric collection is identical to the serial path.
+    pub fn into_sim(self) -> Sim<M> {
+        let owner = self.owner;
+        let mut parts: Vec<SimParts<M>> =
+            self.domains.into_iter().map(|d| d.into_parts()).collect();
+        let n = owner.len();
+        let now = parts.iter().map(|p| p.now).max().unwrap_or(Time::ZERO);
+        let processed = parts.iter().map(|p| p.processed).sum();
+        let kind = parts.first().map(|p| p.queue.kind()).unwrap_or_default();
+        let mut actors: Vec<_> = (0..n).map(|_| None).collect();
+        let mut send_seq = vec![0u64; n];
+        for (d, p) in parts.iter_mut().enumerate() {
+            for id in 0..n {
+                if owner[id] as usize == d {
+                    actors[id] = p.actors[id].take();
+                    send_seq[id] = p.send_seq[id];
+                }
+            }
+        }
+        let mut queue = EventQueue::with_kind(kind);
+        for p in parts.iter_mut() {
+            while let Some(ev) = p.queue.pop() {
+                queue.push_keyed(ev.at, ev.seq, ev.dst, ev.msg);
+            }
+        }
+        Sim::from_parts(
+            SimParts {
+                now,
+                actors,
+                queue,
+                processed,
+                send_seq,
+                ext_seq: self.ext_seq,
+            },
+            None,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Actor, Ctx, QueueKind};
+
+    /// Two "nodes" exchanging ping-pong with a fixed link latency, plus a
+    /// local zero-delay echo on each side — the smallest system with both
+    /// cross-domain and intra-domain traffic.
+    #[derive(Debug, Clone, PartialEq)]
+    enum M {
+        Ping(u32),
+        Echo(u32),
+    }
+
+    struct Node {
+        peer: ActorId,
+        echo: ActorId,
+        link: Time,
+        seen: Vec<(Time, u32)>,
+        limit: u32,
+    }
+
+    impl Actor<M> for Node {
+        fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>) {
+            if let M::Ping(n) = msg {
+                self.seen.push((ctx.now(), n));
+                ctx.send(self.echo, Time::ZERO, M::Echo(n));
+                if n < self.limit {
+                    ctx.send(self.peer, self.link, M::Ping(n + 1));
+                }
+            }
+        }
+
+        fn placement(&self) -> crate::sim::Placement {
+            crate::sim::Placement::Site(if self.echo % 4 < 2 { 0 } else { 1 })
+        }
+    }
+
+    struct EchoSink {
+        seen: Vec<(Time, u32)>,
+    }
+
+    impl Actor<M> for EchoSink {
+        fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>) {
+            if let M::Echo(n) = msg {
+                self.seen.push((ctx.now(), n));
+            }
+        }
+    }
+
+    /// Build the 2-node system; returns (sim, node ids, echo ids).
+    fn build(link: Time, limit: u32) -> (Sim<M>, [ActorId; 2], [ActorId; 2]) {
+        let mut sim = Sim::with_kind(QueueKind::Wheel);
+        // ids: node0=0, echo0=1, node1=2, echo1=3
+        let n0 = sim.add(Node { peer: 2, echo: 1, link, seen: vec![], limit });
+        let e0 = sim.add(EchoSink { seen: vec![] });
+        let n1 = sim.add(Node { peer: 0, echo: 3, link, seen: vec![], limit });
+        let e1 = sim.add(EchoSink { seen: vec![] });
+        sim.schedule(Time::ZERO, n0, M::Ping(0));
+        (sim, [n0, n1], [e0, e1])
+    }
+
+    fn trajectories(
+        sim: &Sim<M>,
+        nodes: [ActorId; 2],
+        echoes: [ActorId; 2],
+    ) -> Vec<Vec<(Time, u32)>> {
+        vec![
+            sim.get::<Node>(nodes[0]).seen.clone(),
+            sim.get::<Node>(nodes[1]).seen.clone(),
+            sim.get::<EchoSink>(echoes[0]).seen.clone(),
+            sim.get::<EchoSink>(echoes[1]).seen.clone(),
+        ]
+    }
+
+    #[test]
+    fn partitioned_matches_serial() {
+        let link = Time::from_ns(50);
+        let until = Time::from_us(100);
+        // serial reference
+        let (mut serial, nodes, echoes) = build(link, 500);
+        serial.run_until(until);
+        let want = trajectories(&serial, nodes, echoes);
+        assert!(!want[0].is_empty());
+
+        // partitioned: node0+echo0 in domain 0, node1+echo1 in domain 1
+        let (sim, nodes, echoes) = build(link, 500);
+        let owner = vec![0u32, 0, 1, 1];
+        let mut part = Partition::split(sim, owner, 2, link);
+        part.run_until(until);
+        let total = part.processed();
+        let merged = part.into_sim();
+        assert_eq!(merged.processed(), total);
+        assert_eq!(merged.now, until);
+        assert_eq!(trajectories(&merged, nodes, echoes), want);
+    }
+
+    #[test]
+    fn single_domain_partition_matches_serial() {
+        let link = Time::from_ns(10);
+        let until = Time::from_us(10);
+        let (mut serial, nodes, echoes) = build(link, 100);
+        serial.run_until(until);
+        let want = trajectories(&serial, nodes, echoes);
+
+        let (sim, nodes, echoes) = build(link, 100);
+        let mut part = Partition::split(sim, vec![0, 0, 0, 0], 1, link);
+        part.run_until(until);
+        let merged = part.into_sim();
+        assert_eq!(trajectories(&merged, nodes, echoes), want);
+    }
+
+    #[test]
+    fn external_schedules_keep_serial_keys() {
+        // scheduling through the partition mid-run must mint the same
+        // keys (and thus the same trajectory) as the serial Sim
+        let link = Time::from_ns(20);
+        let t_mid = Time::from_ns(500);
+        let until = Time::from_us(5);
+
+        let (mut serial, nodes, echoes) = build(link, 30);
+        serial.run_until(t_mid);
+        serial.schedule(t_mid, nodes[1], M::Ping(1000));
+        serial.run_until(until);
+        let want = trajectories(&serial, nodes, echoes);
+
+        let (sim, nodes, echoes) = build(link, 30);
+        let mut part = Partition::split(sim, vec![0, 0, 1, 1], 2, link);
+        part.run_until(t_mid);
+        part.schedule(t_mid, nodes[1], M::Ping(1000));
+        part.run_until(until);
+        let merged = part.into_sim();
+        assert_eq!(trajectories(&merged, nodes, echoes), want);
+    }
+
+    #[test]
+    fn run_until_is_resumable() {
+        let link = Time::from_ns(40);
+        let (sim, nodes, echoes) = build(link, 200);
+        let mut part = Partition::split(sim, vec![0, 0, 1, 1], 2, link);
+        let mut total = 0;
+        for k in 1..=5u64 {
+            total += part.run_until(Time::from_us(4 * k));
+        }
+        assert_eq!(total, part.processed());
+
+        let (mut serial, n2, e2) = build(link, 200);
+        serial.run_until(Time::from_us(20));
+        assert_eq!(
+            trajectories(&part.into_sim(), nodes, echoes),
+            trajectories(&serial, n2, e2)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "positive lookahead")]
+    fn zero_lookahead_rejected() {
+        let (sim, _, _) = build(Time::from_ns(1), 1);
+        let _ = Partition::split(sim, vec![0, 0, 1, 1], 2, Time::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "owner map")]
+    fn incomplete_owner_map_rejected() {
+        let (sim, _, _) = build(Time::from_ns(1), 1);
+        let _ = Partition::split(sim, vec![0, 0], 2, Time::from_ns(1));
+    }
+}

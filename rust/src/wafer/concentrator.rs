@@ -132,6 +132,16 @@ impl Actor<Msg> for Concentrator {
     fn name(&self) -> String {
         "concentrator".to_string()
     }
+
+    /// Lives with its Tourmalet: concentrator↔NIC messages are local-port
+    /// traffic (mux latency < any torus-link latency), so both must share
+    /// a PDES domain.
+    fn placement(&self) -> crate::sim::Placement {
+        match self.nic {
+            Some(nic) => crate::sim::Placement::With(nic),
+            None => crate::sim::Placement::Free,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -7,6 +7,12 @@
 //! plus optional host nodes. The concentrators-per-wafer fan-in is a
 //! parameter so `bench_topology` can sweep the alternatives the paper's
 //! Fig. 1 implicitly compares against.
+//!
+//! Wafers occupy consecutive torus node addresses, which is what lets
+//! the contiguous-address PDES domain split
+//! (`extoll::torus::DomainMap`) keep whole wafers inside one domain —
+//! see `docs/ARCHITECTURE.md` §1 for the layer map and §3 for a spike's
+//! path through this assembly.
 
 use crate::extoll::network::Fabric;
 use crate::extoll::nic::{Nic, NicConfig};
@@ -313,11 +319,20 @@ impl System {
         r
     }
 
+    /// Actors receiving the external flush barrier, in schedule order.
+    /// Shared by [`System::flush_all`] and the partitioned run loop in
+    /// `coordinator/traffic.rs`: both must issue the same schedules in
+    /// the same order so they mint identical merge keys (the engine's
+    /// determinism contract, `docs/ARCHITECTURE.md` §2.3).
+    pub fn flush_targets(&self) -> impl Iterator<Item = ActorId> + '_ {
+        self.fpgas().map(|(_, _, id, _)| id)
+    }
+
     /// Flush every FPGA's buckets (experiment barrier) by scheduling the
     /// external-flush timer at the current simulation time.
     pub fn flush_all(&self, sim: &mut Sim<Msg>) {
         let now = sim.now;
-        for (_, _, id, _) in self.fpgas().collect::<Vec<_>>() {
+        for id in self.flush_targets().collect::<Vec<_>>() {
             sim.schedule(now, id, Msg::Timer(crate::fpga::fpga::TIMER_FLUSH_ALL));
         }
     }

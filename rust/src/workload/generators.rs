@@ -214,6 +214,11 @@ impl Actor<Msg> for PoissonGen {
     fn name(&self) -> String {
         "poisson-gen".to_string()
     }
+
+    /// Rides with the FPGA it feeds (zero-latency `HicannEvent`s).
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::With(self.fpga)
+    }
 }
 
 /// Deterministic fixed-interval generator (saturation/ceiling workloads).
@@ -287,6 +292,11 @@ impl Actor<Msg> for RegularGen {
 
     fn name(&self) -> String {
         "regular-gen".to_string()
+    }
+
+    /// Rides with the FPGA it feeds (zero-latency `HicannEvent`s).
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::With(self.fpga)
     }
 }
 
@@ -398,6 +408,11 @@ impl Actor<Msg> for BurstGen {
 
     fn name(&self) -> String {
         "burst-gen".to_string()
+    }
+
+    /// Rides with the FPGA it feeds (zero-latency `HicannEvent`s).
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::With(self.fpga)
     }
 }
 

@@ -136,6 +136,11 @@ impl Actor<Msg> for TraceReplay {
     fn name(&self) -> String {
         "trace-replay".to_string()
     }
+
+    /// Rides with the FPGA it replays into (zero-latency events).
+    fn placement(&self) -> crate::sim::Placement {
+        crate::sim::Placement::With(self.fpga)
+    }
 }
 
 #[cfg(test)]

@@ -1,10 +1,13 @@
-//! Cross-backend and cross-job-count determinism.
+//! Cross-backend, cross-job-count and cross-domain-count determinism.
 //!
-//! The calendar-wheel event queue (`QueueKind::Wheel`) and the parallel
-//! sweep runner (`--jobs N`) are performance features only: they must be
-//! observationally identical to the reference heap backend and the
-//! serial runner. These tests pin that contract at the artifact level —
-//! byte-identical report JSON and sweep CSV.
+//! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
+//! sweep runner (`--jobs N`) and the partitioned conservative PDES
+//! (`domains=N`) are performance features only: they must be
+//! observationally identical to the reference heap backend, the serial
+//! runner and the single-domain event loop. These tests pin that
+//! contract at the artifact level — byte-identical report JSON and sweep
+//! CSV (the determinism bar set in PR 2, extended to PDES in PR 3; see
+//! docs/ARCHITECTURE.md for why the merge-key design makes this hold).
 
 use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::sweep::SweepRunner;
@@ -120,6 +123,80 @@ fn sweep_csv_identical_across_backends() {
     let heap = run(QueueKind::Heap);
     assert_eq!(heap.lines().count(), 5, "header + 4 points");
     assert_eq!(heap, run(QueueKind::Wheel));
+}
+
+/// Run `scenario` partitioned into `domains` PDES domains; pretty JSON.
+fn report_json_domains(scenario: &str, domains: usize) -> String {
+    let mut cfg = small();
+    cfg.domains = domains;
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(&cfg)
+        .unwrap_or_else(|e| panic!("{scenario} domains={domains} run failed: {e:#}"))
+        .to_json()
+        .pretty()
+}
+
+#[test]
+fn traffic_report_identical_across_domain_counts() {
+    let serial = report_json_domains("traffic", 1);
+    assert!(serial.contains("rx_events"));
+    for d in [2usize, 4] {
+        assert_eq!(serial, report_json_domains("traffic", d), "domains={d}");
+    }
+}
+
+#[test]
+fn burst_report_identical_across_domain_counts() {
+    let serial = report_json_domains("burst", 1);
+    for d in [2usize, 4] {
+        assert_eq!(serial, report_json_domains("burst", d), "domains={d}");
+    }
+}
+
+#[test]
+fn hotspot_report_identical_across_domain_counts() {
+    let serial = report_json_domains("hotspot", 1);
+    for d in [2usize, 4] {
+        assert_eq!(serial, report_json_domains("hotspot", d), "domains={d}");
+    }
+}
+
+/// Domains and queue backend compose: heap × 4 domains must equal
+/// wheel × 1 domain.
+#[test]
+fn domains_and_queue_backend_compose() {
+    let mut a = small();
+    a.queue = QueueKind::Heap;
+    a.domains = 4;
+    let mut b = small();
+    b.queue = QueueKind::Wheel;
+    b.domains = 1;
+    let scenario = find("traffic").unwrap();
+    assert_eq!(
+        scenario.run(&a).unwrap().to_json().pretty(),
+        scenario.run(&b).unwrap().to_json().pretty()
+    );
+}
+
+#[test]
+fn sweep_csv_identical_across_domain_counts() {
+    let scenario = find("traffic").unwrap();
+    let grid = "rate_hz=1e6,4e6;fan_out=1,2";
+    let run = |domains: usize| {
+        let mut base = small();
+        base.domains = domains;
+        SweepRunner::from_grid(base, grid)
+            .unwrap()
+            .run(scenario.as_ref())
+            .unwrap()
+            .to_csv()
+    };
+    let serial = run(1);
+    assert_eq!(serial.lines().count(), 5, "header + 4 points");
+    for d in [2usize, 4] {
+        assert_eq!(serial, run(d), "sweep CSV diverged at domains={d}");
+    }
 }
 
 #[test]

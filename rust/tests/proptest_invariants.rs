@@ -261,3 +261,88 @@ fn prop_json_roundtrip() {
         assert_eq!(Json::parse(&pretty).unwrap(), v, "case {case} (pretty)");
     }
 }
+
+/// Random torus shapes × random domain counts: the PDES domain map is a
+/// true partition (every node in exactly one domain, near-equal block
+/// sizes), its inter-domain edge set is symmetric and complete, and the
+/// lookahead `extoll::network::pdes_lookahead` derives equals the true
+/// minimum message latency over those edges.
+#[test]
+fn prop_domain_partition_invariants() {
+    use bss_extoll::extoll::network::pdes_lookahead;
+    use bss_extoll::extoll::nic::NicConfig;
+    use bss_extoll::extoll::torus::{DomainMap, DIRS};
+
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xD0_17 + case);
+        let spec = TorusSpec::new(
+            rng.range(1, 7) as u16,
+            rng.range(1, 7) as u16,
+            rng.range(1, 5) as u16,
+        );
+        let requested = rng.range(1, 9) as usize;
+        let dm = DomainMap::new(spec, requested);
+        let n_domains = dm.n_domains();
+        assert!(n_domains >= 1 && n_domains <= spec.n_nodes().min(requested.max(1)));
+
+        // every node lands in exactly one domain; blocks near-equal
+        let mut counts = vec![0usize; n_domains];
+        for a in spec.nodes() {
+            let d = dm.domain_of(a) as usize;
+            assert!(d < n_domains, "case {case}: node {a} -> domain {d}");
+            counts[d] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), spec.n_nodes(), "case {case}");
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(min >= 1, "case {case}: empty domain");
+        assert!(max - min <= 1, "case {case}: unbalanced {min}..{max}");
+
+        // inter-domain edges: exactly the cross-domain neighbor pairs,
+        // and symmetric under direction reversal
+        let edges = dm.inter_domain_edges();
+        for &(a, d, b) in &edges {
+            assert_eq!(spec.neighbor(a, d), b, "case {case}");
+            assert_ne!(dm.domain_of(a), dm.domain_of(b), "case {case}");
+            assert!(
+                edges.contains(&(b, d.opposite(), a)),
+                "case {case}: asymmetric edge ({a}, {d:?}, {b})"
+            );
+        }
+        let expected: usize = spec
+            .nodes()
+            .map(|a| {
+                DIRS.iter()
+                    .filter(|&&d| dm.domain_of(a) != dm.domain_of(spec.neighbor(a, d)))
+                    .count()
+            })
+            .sum();
+        assert_eq!(edges.len(), expected, "case {case}: edge set incomplete");
+
+        // lookahead == true minimum message latency over inter-domain
+        // links, derived here independently of min_link_latency's
+        // implementation: a credit return pays cable + hop on the reverse
+        // link; a packet pays at least one byte of serialization on top
+        let nic = NicConfig {
+            cable_latency: Time::from_ps(rng.range(100, 20_000)),
+            hop_latency: Time::from_ps(rng.range(1_000, 200_000)),
+            ..NicConfig::default()
+        };
+        let lookahead = pdes_lookahead(&dm, &nic);
+        if edges.is_empty() {
+            assert_eq!(n_domains, 1, "case {case}");
+            assert!(lookahead.is_none(), "case {case}");
+        } else {
+            let credit = nic.cable_latency + nic.hop_latency;
+            let min_packet = nic.ser_time(1) + nic.cable_latency + nic.hop_latency;
+            let want = credit.min(min_packet);
+            let la = lookahead.unwrap_or_else(|| panic!("case {case}: no lookahead"));
+            assert_eq!(la, want, "case {case}: lookahead != true min latency");
+            assert!(la > Time::ZERO, "case {case}: zero lookahead");
+            // the conservative bound must lower-bound BOTH message kinds
+            assert!(la <= credit && la <= min_packet, "case {case}");
+        }
+    }
+}
