@@ -12,11 +12,11 @@ test:
 bench:
 	BSS_BENCH_FAST=1 cargo bench
 
-# Perf-trajectory artifact: heap-vs-wheel event engine, sweep scaling and
-# PDES domain scaling. Writes BENCH_PR3.json at the repo root (see
-# PERF.md). Honors BSS_BENCH_FAST=1 (CI smoke); override the output with
-# BSS_BENCH_JSON.
-BSS_BENCH_JSON ?= BENCH_PR3.json
+# Perf-trajectory artifact: heap-vs-wheel event engine, sweep scaling,
+# PDES domain scaling, sweep resource cache and packet pooling. Writes
+# BENCH_PR4.json at the repo root (see PERF.md). Honors BSS_BENCH_FAST=1
+# (CI smoke); override the output with BSS_BENCH_JSON.
+BSS_BENCH_JSON ?= BENCH_PR4.json
 bench-json:
 	BSS_BENCH_JSON=$(BSS_BENCH_JSON) cargo bench --bench bench_events
 

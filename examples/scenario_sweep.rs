@@ -1,5 +1,6 @@
 //! Scenario-API tour: dispatch experiments generically through the
-//! registry, then run a 2×2 parameter sweep and print its artifacts.
+//! registry, drive the two-phase prepare/execute lifecycle by hand, then
+//! run a 2×2 parameter sweep and inspect its artifacts + cache counters.
 //!
 //! Adding a scenario to the system is one type implementing
 //! `coordinator::Scenario` plus one line in `scenario::registry()` —
@@ -28,24 +29,54 @@ fn main() -> anyhow::Result<()> {
     cfg.workload.sources_per_fpga = 16;
     cfg.workload.duration = Time::from_us(500);
 
-    // 1. the registry: every experiment behind one trait
+    // 1. the registry: every experiment behind one static trait table,
+    //    each declaring its metric schema up front
     println!("registered scenarios:");
     for s in scenario::registry() {
-        println!("  {:<14} {}", s.name(), s.about());
+        println!(
+            "  {:<14} {} ({} metrics)",
+            s.name(),
+            s.about(),
+            s.metrics().len()
+        );
     }
 
-    // 2. generic dispatch — same call shape for every scenario
+    // 2. generic dispatch — run() = prepare + execute in one call
     let report = scenario::find("hotspot").expect("registered").run(&cfg)?;
     report.print();
 
-    // 3. a 2×2 sweep: rate × generator kind, one report row per point
+    // 3. the two-phase lifecycle by hand: prepare once (routes, seeds),
+    //    execute at several operating points against the same resources
+    let traffic = scenario::find("traffic").expect("registered");
+    println!("\ncache key: {}", traffic.cache_key(&cfg));
+    let prepared = traffic.prepare(&cfg)?;
+    for rate in [1e6, 8e6] {
+        let mut point = cfg.clone();
+        point.workload.rate_hz = rate;
+        let r = traffic.execute(prepared.as_ref(), &point)?;
+        println!(
+            "rate {:>9.0}: mean_batch {:.2} events/packet",
+            rate,
+            r.get_f64("mean_batch").unwrap_or(f64::NAN)
+        );
+    }
+
+    // 4. a 2×2 sweep: rate × generator kind, one report row per point.
+    //    Neither axis is a plan input — and burst shares traffic's plan
+    //    family — so the runner's resource cache prepares exactly once.
     let runner = SweepRunner::new(cfg)
         .axis("rate_hz", &["1e6", "8e6"])
         .axis("generator", &["poisson", "burst"]);
-    let result = runner.run(scenario::find("traffic").unwrap().as_ref())?;
+    let result = runner.run(traffic)?;
     result.table().print();
     println!("\nCSV artifact:\n{}", result.to_csv());
+    println!(
+        "resource cache: {} prepared, {} reused",
+        result.cache.misses, result.cache.hits
+    );
     anyhow::ensure!(result.points.len() == 4, "expected a 2×2 grid");
+    anyhow::ensure!(result.cache.misses == 1, "expected one shared plan");
+    anyhow::ensure!(result.cache.hits == 3, "expected three cache hits");
     println!("scenario_sweep OK");
     Ok(())
 }

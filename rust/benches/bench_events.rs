@@ -1,22 +1,26 @@
 //! Perf-trajectory benchmark (see PERF.md): A/B of the event-queue
 //! backends (binary heap vs calendar wheel), serial-vs-parallel sweep
-//! execution, and PDES domain scaling within one scenario.
+//! execution, PDES domain scaling, the sweep-level resource cache
+//! (prepare-once vs per-point cold runs), and packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR3.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR4.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
-//! and speedup for `sweep --jobs {1,2,4}`, and events/s at
-//! `domains=1/2/4` with a report-identity check against the serial run.
-//! The CI `bench-smoke` job re-runs it with `BSS_BENCH_FAST=1` and fails
-//! on any `SKIPPED` row, so this artifact cannot silently rot.
+//! and speedup for `sweep --jobs {1,2,4}`, events/s at `domains=1/2/4`
+//! with a report-identity check against the serial run, cached-sweep
+//! speedup + hit/miss counters for traffic and microcircuit, and
+//! pool-on/off events/s with a byte-identity check. The CI `bench-smoke`
+//! job re-runs it with `BSS_BENCH_FAST=1` and fails on any `SKIPPED`
+//! row, so this artifact cannot silently rot.
 
 use std::time::Instant;
 
-use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::scenario::{find, Scenario};
 use bss_extoll::coordinator::sweep::SweepRunner;
 use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
 use bss_extoll::sim::{EventQueue, QueueKind, Time};
 use bss_extoll::util::bench::{eng, fast_mode, BenchSuite, Table};
@@ -162,7 +166,7 @@ fn main() {
             .expect("sweep grid")
             .jobs(jobs);
         let t0 = Instant::now();
-        let result = runner.run(scenario.as_ref()).expect("sweep run failed");
+        let result = runner.run(scenario).expect("sweep run failed");
         let wall = t0.elapsed().as_secs_f64();
         let csv = result.to_csv();
         if jobs == 1 {
@@ -261,13 +265,142 @@ fn main() {
     );
     assert!(pdes_deterministic, "PDES report diverged from serial");
 
+    // ---- 5. sweep resource cache: prepare-once vs per-point cold runs ------
+    // A/B the PR 4 two-phase lifecycle: "uncached" evaluates every grid
+    // point with scenario.run() (prepare per point — the pre-redesign
+    // behaviour); "cached" runs the same grid through SweepRunner, whose
+    // ResourceCache shares one prepare across points with equal cache
+    // keys. Byte-identity of cached vs cold point data is pinned in
+    // rust/tests/determinism_queue.rs; here we only track wall-clock.
+    fn cache_bench(
+        table: &mut Table,
+        scenario: &'static dyn Scenario,
+        base: &ExperimentConfig,
+        axis_key: &str,
+        axis_vals: &[&str],
+    ) -> Json {
+        use bss_extoll::coordinator::sweep::apply_override;
+        let t0 = Instant::now();
+        let mut cold_reports = Vec::new();
+        for v in axis_vals {
+            let mut cfg = base.clone();
+            apply_override(&mut cfg, axis_key, v).expect("axis override");
+            cold_reports.push(scenario.run(&cfg).expect("uncached run failed"));
+        }
+        let wall_uncached = t0.elapsed().as_secs_f64();
+
+        let runner = SweepRunner::new(base.clone()).axis(axis_key, axis_vals);
+        let t0 = Instant::now();
+        let result = runner.run(scenario).expect("cached sweep failed");
+        let wall_cached = t0.elapsed().as_secs_f64();
+        for (cold, point) in cold_reports.iter().zip(&result.points) {
+            assert_eq!(
+                cold.scenario(),
+                point.report.scenario(),
+                "cache A/B compared different scenarios"
+            );
+        }
+        let speedup = wall_uncached / wall_cached;
+        table.row(vec![
+            scenario.name().to_string(),
+            result.points.len().to_string(),
+            format!("{wall_uncached:.3}"),
+            format!("{wall_cached:.3}"),
+            format!("{speedup:.2}"),
+            format!("{}/{}", result.cache.misses, result.cache.hits),
+        ]);
+        Json::obj()
+            .set("n_points", result.points.len())
+            .set("wall_uncached_s", wall_uncached)
+            .set("wall_cached_s", wall_cached)
+            .set("speedup", speedup)
+            .set("cache_misses", result.cache.misses)
+            .set("cache_hits", result.cache.hits)
+    }
+    let mut cache_section = Json::obj();
+    let mut cache_table = Table::new(
+        "sweep resource cache (uncached = per-point run())",
+        &["scenario", "points", "uncached_s", "cached_s", "speedup", "miss/hit"],
+    );
+    let traffic_cache = cache_bench(
+        &mut cache_table,
+        scenario,
+        &sweep_base(fast),
+        "rate_hz",
+        &["1e7", "1.5e7", "2e7", "2.5e7"],
+    );
+    cache_section.insert("traffic", traffic_cache);
+    if bss_extoll::runtime::artifacts_available() {
+        let mc = find("microcircuit").expect("microcircuit registered");
+        let mc_base = mc.default_config();
+        let steps: &[&str] = if fast {
+            &["2", "3", "4", "5"]
+        } else {
+            &["5", "10", "15", "20"]
+        };
+        let mc_cache = cache_bench(&mut cache_table, mc, &mc_base, "steps", steps);
+        cache_section.insert("microcircuit", mc_cache);
+    } else {
+        println!("  sweep-cache/microcircuit SKIPPED: artifacts not built (make artifacts)");
+    }
+    cache_table.print();
+
+    // ---- 6. packet-payload pooling: free-list reuse A/B ---------------------
+    // extoll::packet::pool closes the flush→RX allocation loop; reports
+    // must be byte-identical with the pool off (the determinism gate in
+    // rust/tests/determinism_queue.rs pins the same invariant).
+    let pool_base = traffic_base(fast);
+    let pool_scenario = find("traffic").expect("traffic registered");
+    let mut pool_table = Table::new(
+        "packet-payload pooling (traffic scenario)",
+        &["pool", "des_events", "wall_s", "events/s"],
+    );
+    let mut pool_eps = [0.0f64; 2];
+    let mut pool_json = [String::new(), String::new()];
+    let mut pool_counts = (0u64, 0u64);
+    for (pi, enabled) in [false, true].into_iter().enumerate() {
+        pool::set_enabled(enabled);
+        pool::reset_stats();
+        let mut best_wall = f64::INFINITY;
+        let mut events = 0u64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let report = pool_scenario.run(&pool_base).expect("pool A/B run failed");
+            let wall = t0.elapsed().as_secs_f64();
+            events = report
+                .get_count("des_events")
+                .expect("des_events metric missing");
+            pool_json[pi] = report.to_json().pretty();
+            if wall < best_wall {
+                best_wall = wall;
+            }
+        }
+        if enabled {
+            pool_counts = pool::stats();
+        }
+        let eps = events as f64 / best_wall;
+        pool_eps[pi] = eps;
+        pool_table.row(vec![
+            if enabled { "on" } else { "off" }.to_string(),
+            events.to_string(),
+            format!("{best_wall:.3}"),
+            eng(eps),
+        ]);
+    }
+    pool::set_enabled(true);
+    let pool_deterministic = pool_json[0] == pool_json[1];
+    let pool_speedup = pool_eps[1] / pool_eps[0];
+    pool_table.print();
+    println!("pool on vs off: {pool_speedup:.2}x events/s\n");
+    assert!(pool_deterministic, "packet pooling changed observable results");
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR3")
+        .set("artifact", "BENCH_PR4")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -293,6 +426,17 @@ fn main() {
                     multi_domain_best_eps / serial_eps,
                 )
                 .set("runs", pdes_runs),
+        )
+        .set("sweep_cache", cache_section)
+        .set(
+            "packet_pooling",
+            Json::obj()
+                .set("deterministic_pool_on_off", pool_deterministic)
+                .set("events_per_s_pool_off", pool_eps[0])
+                .set("events_per_s_pool_on", pool_eps[1])
+                .set("speedup", pool_speedup)
+                .set("buffers_recycled", pool_counts.0)
+                .set("buffers_fresh", pool_counts.1),
         );
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the

@@ -4,6 +4,18 @@
 //! Extoll fabric — FPGA aggregation buckets, concentrators, torus routing —
 //! with full accounting.
 //!
+//! The scenario follows the two-phase [`Scenario`] lifecycle:
+//!
+//! - **prepare** loads the shard artifact **once** (manifest parse +
+//!   shape checks) and builds every shard's synaptic weight matrix — the
+//!   dominant setup cost (O(n_local × n_global) RNG draws per shard).
+//!   The result depends only on `(artifact, seed, w_exc, w_inh,
+//!   k_scale)`, which is exactly its cache key, so a sweep over e.g.
+//!   `steps` or `dt_s` loads the artifact a single time.
+//! - **execute** instantiates per-run [`ShardSim`] state from the shared
+//!   weights (memcpy, not regeneration), builds the fabric, programs
+//!   routes and runs the co-simulation loop.
+//!
 //! Co-simulation scheme (one neural timestep = `dt` of hardware time):
 //!
 //! 1. every shard executes its compiled step with the spike-count vector
@@ -16,26 +28,47 @@
 //!    global source-neuron id) into the next spike-count vectors;
 //!    intra-shard spikes short-circuit locally (on-wafer routing).
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
+use crate::extoll::torus::TorusSpec;
 use crate::fpga::event::{systime_of, SpikeEvent, TS_MASK};
 use crate::fpga::fpga::Fpga;
 use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
 use crate::neuro::shard::{pulse_of_neuron, ShardSim};
 use crate::neuro::weights::build_weights;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, ShardModel};
 use crate::sim::{EventQueue, Sim, Time};
 use crate::util::json::Json;
-use crate::util::report::Report;
+use crate::util::report::{MetricDecl, Report};
 use crate::util::rng::Rng;
-use crate::extoll::torus::TorusSpec;
 use crate::util::stats::Histogram;
 use crate::wafer::system::{System, SystemConfig};
 use crate::workload::microcircuit::{Microcircuit, FULL_SCALE_NEURONS};
 
 use super::config::ExperimentConfig;
-use super::scenario::Scenario;
+use super::scenario::{downcast_prepared, CacheKey, Prepared, Scenario};
+
+/// Declared metric schema of [`MicrocircuitScenario`]
+/// (`pjrt_seconds`/`des_seconds` are wall-clock and therefore excluded
+/// from byte-identity gates — see `rust/tests/determinism_queue.rs`).
+pub const MICROCIRCUIT_METRICS: &[MetricDecl] = &[
+    MetricDecl::count("steps", "steps"),
+    MetricDecl::count("n_neurons", "neurons"),
+    MetricDecl::count("n_shards", "shards"),
+    MetricDecl::count("spikes_total", "spikes"),
+    MetricDecl::count("fabric_events", "events"),
+    MetricDecl::count("delivered_events", "events"),
+    MetricDecl::real("mean_rate", "spikes/neuron/step"),
+    MetricDecl::real("mean_batch", "events/packet"),
+    MetricDecl::count("deadline_misses", "events"),
+    MetricDecl::real("latency_p50", "ns"),
+    MetricDecl::real("latency_p99", "ns"),
+    MetricDecl::real("pjrt_seconds", "s"),
+    MetricDecl::real("des_seconds", "s"),
+];
 
 /// Result of a microcircuit co-simulation.
 #[derive(Clone, Debug)]
@@ -91,10 +124,11 @@ impl NeuroReport {
             )
     }
 
-    /// Convert into the unified metric-keyed [`Report`] (the per-step
-    /// spike curve stays on the struct / full JSON form).
-    pub fn to_report(&self, scenario: &str) -> Report {
-        let mut r = Report::new(scenario);
+    /// Convert into the unified metric-keyed [`Report`], validated
+    /// against `schema` (the per-step spike curve stays on the struct /
+    /// full JSON form).
+    pub fn to_report(&self, scenario: &str, schema: &'static [MetricDecl]) -> Report {
+        let mut r = Report::with_schema(scenario, schema);
         r.push_unit("steps", self.steps, "steps");
         r.push_unit("n_neurons", self.n_neurons, "neurons");
         r.push_unit("n_shards", self.n_shards, "shards");
@@ -109,6 +143,25 @@ impl NeuroReport {
         r.push_unit("pjrt_seconds", self.pjrt_seconds, "s");
         r.push_unit("des_seconds", self.des_seconds, "s");
         r
+    }
+}
+
+/// Prepared resources of the microcircuit scenario: the loaded shard
+/// artifact and every shard's synaptic weight matrix. Immutable and
+/// shared across sweep points; per-run neuron state is built from it in
+/// execute.
+pub struct MicrocircuitPrepared {
+    model: ShardModel,
+    /// Row-major `[n_local, n_global]` weights, one matrix per shard.
+    weights: Vec<Vec<f32>>,
+    n_shards: usize,
+    n_local: usize,
+    n_global: usize,
+}
+
+impl Prepared for MicrocircuitPrepared {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 
@@ -139,8 +192,26 @@ impl Scenario for MicrocircuitScenario {
         cfg
     }
 
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
-        Ok(microcircuit_experiment(cfg)?.to_report(self.name()))
+    fn metrics(&self) -> &'static [MetricDecl] {
+        MICROCIRCUIT_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        CacheKey::new("microcircuit_shards")
+            .field("artifact", &cfg.neuro.artifact)
+            .field("seed", cfg.seed)
+            .field("w_exc", cfg.neuro.w_exc)
+            .field("w_inh", cfg.neuro.w_inh)
+            .field("k_scale", cfg.neuro.k_scale)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(mc_prepare(cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let prep: &MicrocircuitPrepared = downcast_prepared(prepared, self.name())?;
+        Ok(mc_execute(prep, cfg)?.to_report(self.name(), self.metrics()))
     }
 }
 
@@ -179,19 +250,56 @@ pub fn run_microcircuit(cfg: &ExperimentConfig) -> Result<NeuroReport> {
     microcircuit_experiment(cfg)
 }
 
-/// The co-simulation driver behind [`MicrocircuitScenario`].
+/// One-shot prepare + execute (the old monolithic driver's shape).
 pub(crate) fn microcircuit_experiment(cfg: &ExperimentConfig) -> Result<NeuroReport> {
+    let prep = mc_prepare(cfg)?;
+    mc_execute(&prep, cfg)
+}
+
+/// Phase 1: load the artifact once and build every shard's weights.
+fn mc_prepare(cfg: &ExperimentConfig) -> Result<MicrocircuitPrepared> {
     let rt = Runtime::cpu()?;
     let dir = crate::runtime::artifacts_dir();
-
-    // probe the artifact to size the system
-    let probe = rt
+    let model = rt
         .load_shard_model(&dir, &cfg.neuro.artifact)
         .context("loading shard artifact")?;
-    let n_local = probe.n_local();
-    let n_global = probe.n_global();
+    let n_local = model.n_local();
+    let n_global = model.n_global();
     anyhow::ensure!(n_global % n_local == 0, "artifact global/local mismatch");
     let n_shards = n_global / n_local;
+
+    let slices = shard_slices(n_shards, n_local as u32);
+    let mc = Microcircuit::new(
+        (n_shards as u32 * n_local as u32) as f64 / FULL_SCALE_NEURONS as f64,
+    );
+    // each shard's weights come from an independent, seed-derived RNG
+    // stream (see build_weights), so the matrices are position-independent
+    // of whatever the run RNG does at execute time
+    let weights = (0..n_shards)
+        .map(|f| {
+            build_weights(
+                &mc,
+                &slices,
+                f,
+                cfg.neuro.w_exc,
+                cfg.neuro.w_inh,
+                cfg.neuro.k_scale,
+                cfg.seed,
+            )
+        })
+        .collect();
+    Ok(MicrocircuitPrepared {
+        model,
+        weights,
+        n_shards,
+        n_local,
+        n_global,
+    })
+}
+
+/// Phase 2: the co-simulation driver behind [`MicrocircuitScenario`].
+fn mc_execute(prep: &MicrocircuitPrepared, cfg: &ExperimentConfig) -> Result<NeuroReport> {
+    let (n_shards, n_local, n_global) = (prep.n_shards, prep.n_local, prep.n_global);
 
     // the system must expose exactly n_shards FPGAs
     let sys_cfg = cfg.system;
@@ -207,25 +315,15 @@ pub(crate) fn microcircuit_experiment(cfg: &ExperimentConfig) -> Result<NeuroRep
     let sys = System::build(&mut sim, sys_cfg);
     let fpgas: Vec<_> = sys.fpgas().collect();
 
-    // --- neural substrate -------------------------------------------------
-    let slices = shard_slices(n_shards, n_local as u32);
-    let mc = Microcircuit::new(
-        (n_shards as u32 * n_local as u32) as f64 / FULL_SCALE_NEURONS as f64,
-    );
+    // --- neural substrate: per-run state over the shared weights ----------
     let mut rng = Rng::new(cfg.seed);
     let mut shards: Vec<ShardSim> = Vec::with_capacity(n_shards);
     for f in 0..n_shards {
-        let model = rt.load_shard_model(&dir, &cfg.neuro.artifact)?;
-        let w = build_weights(
-            &mc,
-            &slices,
-            f,
-            cfg.neuro.w_exc,
-            cfg.neuro.w_inh,
-            cfg.neuro.k_scale,
-            cfg.seed,
+        let mut shard = ShardSim::new(
+            prep.model.clone(),
+            prep.weights[f].clone(),
+            (f * n_local) as u32,
         );
-        let mut shard = ShardSim::new(model, w, (f * n_local) as u32);
         shard.randomize_v(&mut rng, cfg.neuro.v_init.0, cfg.neuro.v_init.1);
         shards.push(shard);
     }
@@ -385,12 +483,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn microcircuit_e2e_small() {
-        if !crate::runtime::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
+    fn small_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         cfg.system = SystemConfig {
             n_wafers: 2,
@@ -401,6 +494,16 @@ mod tests {
         };
         cfg.neuro.artifact = "shard_256x1024".to_string();
         cfg.neuro.steps = 30;
+        cfg
+    }
+
+    #[test]
+    fn microcircuit_e2e_small() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = small_cfg();
         let r = microcircuit_experiment(&cfg).unwrap();
         assert_eq!(r.n_neurons, 1024);
         assert_eq!(r.n_shards, 4);
@@ -410,5 +513,41 @@ mod tests {
         // nothing may be lost in the fabric
         assert_eq!(r.delivered_events, r.fabric_events, "event loss");
         assert_eq!(r.spikes_per_step.len(), 30);
+    }
+
+    #[test]
+    fn prepared_shards_are_reusable_across_executes() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut cfg = small_cfg();
+        cfg.neuro.steps = 10;
+        let prep = mc_prepare(&cfg).unwrap();
+        let a = mc_execute(&prep, &cfg).unwrap();
+        let b = mc_execute(&prep, &cfg).unwrap();
+        // same prepared weights, fresh per-run state: identical physics
+        assert_eq!(a.spikes_per_step, b.spikes_per_step);
+        assert_eq!(a.delivered_events, b.delivered_events);
+        // and identical to a cold one-shot run
+        let cold = microcircuit_experiment(&cfg).unwrap();
+        assert_eq!(a.spikes_per_step, cold.spikes_per_step);
+        assert_eq!(a.fabric_events, cold.fabric_events);
+    }
+
+    #[test]
+    fn cache_key_tracks_weight_inputs_only() {
+        let s = MicrocircuitScenario;
+        let base = small_cfg();
+        let mut steps = small_cfg();
+        steps.neuro.steps = 99;
+        steps.workload.rate_hz = 1.0; // irrelevant to the shards
+        assert_eq!(s.cache_key(&base), s.cache_key(&steps));
+        let mut w = small_cfg();
+        w.neuro.w_exc += 1.0;
+        assert_ne!(s.cache_key(&base), s.cache_key(&w));
+        let mut seed = small_cfg();
+        seed.seed ^= 1;
+        assert_ne!(s.cache_key(&base), s.cache_key(&seed));
     }
 }

@@ -1,5 +1,5 @@
-//! Experiment coordination: configuration, the `Scenario` API, the sweep
-//! runner, and unified result reporting.
+//! Experiment coordination: configuration, the two-phase `Scenario` API,
+//! the resource cache, the sweep runner, and unified result reporting.
 //!
 //! ## The `Scenario` API
 //!
@@ -7,36 +7,50 @@
 //!
 //! ```text
 //! trait Scenario {
-//!     fn name(&self)  -> &'static str;            // CLI id + report tag
-//!     fn about(&self) -> &'static str;            // one-line description
-//!     fn run(&self, cfg: &ExperimentConfig) -> Result<Report>;
+//!     fn name(&self)      -> &'static str;             // CLI id + report tag
+//!     fn about(&self)     -> &'static str;             // one-line description
+//!     fn metrics(&self)   -> &'static [MetricDecl];    // declared report schema
+//!     fn cache_key(&self, cfg) -> CacheKey;            // what prepare depends on
+//!     fn prepare(&self, cfg)   -> Result<Arc<dyn Prepared>>; // expensive, immutable
+//!     fn execute(&self, prepared, cfg) -> Result<Report>;    // the simulation
+//!     fn run(&self, cfg)  -> Result<Report> { /* prepare + execute */ }
 //! }
 //! ```
 //!
 //! **Contract.** `name()` is the stable identifier used by
-//! `bss-extoll run <scenario>` and stamped into the report. `run()`
-//! must be deterministic for a fixed config (derive all randomness from
-//! `cfg.seed`) and collect every result into the metric-keyed
+//! `bss-extoll run <scenario>` and stamped into the report. `prepare()`
+//! builds the expensive immutable resources (artifact loads, weight
+//! matrices, route plans, flow tables) and must depend only on the
+//! config fields named by `cache_key()`; `execute()` runs the
+//! simulation against them. Both must be deterministic for a fixed
+//! config (derive all randomness from `cfg.seed`) and collect every
+//! result into the schema-validated, metric-keyed
 //! [`Report`](crate::util::report::Report) so the CLI table renderer,
 //! the JSON emitter and the [`sweep::SweepRunner`] can handle any
-//! scenario generically.
+//! scenario generically. The full lifecycle contract (cache-key
+//! discipline, determinism rules) is documented in
+//! `docs/ARCHITECTURE.md` §4 and the [`scenario`] module docs, which
+//! also carry the migration note from the old single-phase `run` API.
 //!
 //! Scenarios that drive the packet-level simulator implement the
-//! build/run/collect split of [`traffic::FabricScenario`] instead and get
-//! the simulation loop plus the standard communication metrics from
-//! [`traffic::run_fabric_scenario`].
+//! plan/collect split of [`traffic::FabricScenario`] instead and get the
+//! prepare/execute machinery plus the standard communication metrics
+//! from the shared driver ([`traffic::plan_fabric`] /
+//! [`traffic::execute_fabric_plan`]).
 //!
-//! **Registry.** [`scenario::registry`] lists every scenario; adding one
-//! is a single type implementing the trait plus one registry line.
-//! Registered today: `traffic`, `microcircuit`, `burst`, `hotspot`,
-//! `analyze`.
+//! **Registry.** [`scenario::registry`] is one static table
+//! (`&'static [&'static dyn Scenario]`); adding a scenario is a single
+//! type implementing the trait plus one registry line. Registered
+//! today: `traffic`, `microcircuit`, `burst`, `hotspot`, `analyze`.
 //!
 //! **Sweeps.** [`sweep::SweepRunner`] runs one scenario over a cartesian
 //! grid of config overrides (`rate_hz=1e6,5e6 × n_wafers=2,4 × ...`) and
-//! aggregates one report row per point into JSON/CSV artifacts. Grid
-//! points are independent simulations: `SweepRunner::jobs(n)` (CLI:
-//! `sweep --jobs N`) evaluates them on a scoped worker pool with result
-//! ordering — and therefore artifacts — identical to the serial run.
+//! aggregates one report row per point into JSON/CSV artifacts. Points
+//! share prepared resources through a [`scenario::ResourceCache`] keyed
+//! by `cache_key()` — N points over one artifact load it once, also
+//! under `sweep --jobs N`, whose scoped worker pool keeps result
+//! ordering (and artifacts, including the surfaced cache hit/miss
+//! counters) identical to the serial run.
 //!
 //! The pre-scenario entry points [`run_traffic`] / [`run_microcircuit`]
 //! remain as deprecated thin wrappers for one release.
@@ -48,12 +62,19 @@ pub mod sweep;
 pub mod traffic;
 
 pub use config::{ExperimentConfig, NeuroConfig, WorkloadConfig};
-pub use microcircuit::{shard_slices, MicrocircuitScenario, NeuroReport};
-pub use scenario::{find, names, registry, AnalyzeScenario, Scenario};
+pub use microcircuit::{
+    shard_slices, MicrocircuitPrepared, MicrocircuitScenario, NeuroReport,
+    MICROCIRCUIT_METRICS,
+};
+pub use scenario::{
+    downcast_prepared, find, machine_shape_fields, names, registry, AnalyzeScenario,
+    CacheKey, CacheStats, Prepared, ResourceCache, Scenario,
+};
 pub use sweep::{apply_override, parse_grid, SweepResult, SweepRunner};
 pub use traffic::{
-    run_fabric_scenario, BurstScenario, FabricScenario, HotspotScenario, TrafficReport,
-    TrafficScenario,
+    execute_fabric_plan, plan_fabric, BurstScenario, FabricPlan, FabricScenario,
+    FpgaPlan, HotspotScenario, TrafficReport, TrafficScenario, BURST_METRICS,
+    HOTSPOT_METRICS, TRAFFIC_METRICS,
 };
 
 #[allow(deprecated)]

@@ -1,4 +1,5 @@
-//! The `Scenario` experiment API: trait, registry, generic dispatch.
+//! The `Scenario` experiment API: two-phase lifecycle, resource cache,
+//! metric schemas, registry, generic dispatch.
 //!
 //! A scenario is one self-contained experiment: it consumes an
 //! [`ExperimentConfig`], drives whatever machinery it needs (packet-level
@@ -7,37 +8,190 @@
 //! sweep runner and tests all dispatch through the [`registry`], so adding
 //! a scenario is one type + one registry line.
 //!
+//! ## The two-phase lifecycle
+//!
+//! Experiment execution is split along the expensive/cheap boundary:
+//!
+//! - [`Scenario::prepare`] builds the **immutable, config-subset-keyed
+//!   resources**: loaded shard artifacts + LIF weight matrices, the
+//!   microcircuit structure, placement/flow tables, route programs. The
+//!   result is an `Arc<dyn Prepared>` that depends *only* on the config
+//!   fields named by [`Scenario::cache_key`].
+//! - [`Scenario::execute`] runs the simulation against those resources
+//!   and collects the report. Everything mutable (the `Sim`, actor
+//!   state, RNG streams beyond the prepare-owned ones) is created here,
+//!   so one `Prepared` can back any number of concurrent executes.
+//!
+//! [`Scenario::run`] survives as a default-impl convenience that calls
+//! `prepare` + `execute` — one-shot callers keep the old single-call
+//! shape and, by construction, the old byte-identical results.
+//!
+//! The payoff is the [`ResourceCache`]: the sweep runner keys prepared
+//! resources by [`Scenario::cache_key`], so N sweep points that share an
+//! artifact load it once — including under `sweep --jobs N`, where the
+//! cache serializes each key's first build behind a per-key latch (so
+//! hit/miss counts, and therefore sweep artifacts, are identical to the
+//! serial run's).
+//!
+//! ## Cache-key discipline
+//!
+//! `cache_key(cfg)` must name **every** config field the prepared
+//! resources read — equal keys promise interchangeable resources
+//! (property-tested in `rust/tests/proptest_invariants.rs`). Listing a
+//! field the resources ignore only costs sharing; omitting one the
+//! resources read is a correctness bug (two configs would share state
+//! they must not). When in doubt, include the field.
+//!
+//! ## Declared metric schemas
+//!
+//! [`Scenario::metrics`] declares the report schema (name, unit, kind)
+//! as a static slice. Reports built with [`Report::with_schema`]
+//! validate every push against it, `run --list` prints it, and the sweep
+//! CSV orders its metric columns by it instead of by insertion order.
+//!
+//! ## Migration note (PR 4)
+//!
+//! Before this redesign the trait was a single opaque
+//! `run(&cfg) -> Report`. Migrating a scenario:
+//!
+//! 1. move the expensive, config-subset-derived setup into `prepare`,
+//!    returning it as an `Arc<dyn Prepared>` (a plain struct + a one-line
+//!    [`Prepared::as_any`] impl);
+//! 2. keep the simulation + collection in `execute`, reading the setup
+//!    back via [`downcast_prepared`];
+//! 3. declare `cache_key` over exactly the fields step 1 read;
+//! 4. declare `metrics` and build the report with [`Report::with_schema`];
+//! 5. delete the hand-written `run` — the default impl replaces it.
+//!
+//! Fabric-driven scenarios implement [`super::traffic::FabricScenario`]
+//! (a plan/collect split) instead and inherit all of the above from the
+//! shared driver in `coordinator/traffic.rs`.
+//!
 //! ## Contract
 //!
 //! - [`Scenario::name`] is the stable CLI identifier (lowercase, no
 //!   spaces) and the `scenario` field of the resulting [`Report`].
-//! - [`Scenario::run`] must be **deterministic**: the same config
-//!   (including `seed`) must produce the same report. Draw all randomness
-//!   from an [`crate::util::rng::Rng`] seeded with `cfg.seed`.
-//! - Fabric-driven scenarios should implement
-//!   [`super::traffic::FabricScenario`] (a build/collect split) and let
-//!   [`super::traffic::run_fabric_scenario`] own the simulation loop, so
-//!   every scenario reports the same standard communication metrics.
+//! - `prepare` and `execute` must be **deterministic**: the same config
+//!   (including `seed`) must produce the same report, and executing
+//!   against a cached `Prepared` must be byte-identical to executing
+//!   against a freshly prepared one (gated in
+//!   `rust/tests/determinism_queue.rs`). Draw all randomness from
+//!   [`crate::util::rng::Rng`] streams seeded with `cfg.seed`.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::extoll::analysis::FlowAnalysis;
+use crate::extoll::analysis::{Flow, FlowAnalysis};
 use crate::msg::Msg;
 use crate::sim::Sim;
 use crate::util::report::Report;
 use crate::wafer::system::System;
 use crate::workload::microcircuit::{Microcircuit, Placement};
 
+pub use crate::util::report::{MetricDecl, MetricKind};
+
 use super::config::ExperimentConfig;
 use super::microcircuit::MicrocircuitScenario;
 use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 
+/// Immutable resources produced by [`Scenario::prepare`] and shared
+/// (via `Arc`) across executes. `Send + Sync` is part of the contract:
+/// the parallel sweep runner hands one `Prepared` to several worker
+/// threads at once.
+pub trait Prepared: Send + Sync + 'static {
+    /// Concrete-type escape hatch for [`downcast_prepared`].
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Recover the concrete prepared type inside [`Scenario::execute`].
+pub fn downcast_prepared<'a, T: Prepared>(
+    prepared: &'a dyn Prepared,
+    scenario: &str,
+) -> Result<&'a T> {
+    prepared.as_any().downcast_ref::<T>().ok_or_else(|| {
+        anyhow::anyhow!(
+            "scenario '{scenario}': prepared resources have the wrong concrete \
+             type — execute() was handed resources prepared by an incompatible \
+             scenario (cache-key family collision?)"
+        )
+    })
+}
+
+/// Identity of a prepared-resource set: a family name plus the rendered
+/// values of every config field the resources depend on. Equal keys
+/// promise interchangeable [`Prepared`] values (the cache-key
+/// discipline in the module docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    family: &'static str,
+    fields: Vec<(&'static str, String)>,
+}
+
+impl CacheKey {
+    /// Start a key. `family` names the resource kind; scenarios whose
+    /// prepare is identical (e.g. `traffic` and `burst` share one route
+    /// plan) use the same family on purpose so sweeps across them share
+    /// cache entries.
+    pub fn new(family: &'static str) -> CacheKey {
+        CacheKey {
+            family,
+            fields: Vec::new(),
+        }
+    }
+
+    /// Append one config field this resource set depends on.
+    pub fn field(mut self, name: &'static str, value: impl std::fmt::Display) -> CacheKey {
+        self.fields.push((name, value.to_string()));
+        self
+    }
+
+    /// The resource-family name.
+    pub fn family(&self) -> &'static str {
+        self.family
+    }
+}
+
+impl std::fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.family)?;
+        for (name, value) in &self.fields {
+            write!(f, ";{name}={value}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Append the machine-shape fields (wafers, torus dimensions,
+/// FPGA/concentrator layout) that determine [`System::build`]'s actor
+/// and endpoint layout. Every cache key whose prepare reads the built
+/// system must include these — one shared helper so a new shape field
+/// only has to be added here (used by the fabric plans and `analyze`).
+pub fn machine_shape_fields(key: CacheKey, cfg: &ExperimentConfig) -> CacheKey {
+    key.field("n_wafers", cfg.system.n_wafers)
+        .field(
+            "torus",
+            format!(
+                "{}x{}x{}",
+                cfg.system.torus.nx, cfg.system.torus.ny, cfg.system.torus.nz
+            ),
+        )
+        .field("fpgas_per_wafer", cfg.system.fpgas_per_wafer)
+        .field(
+            "concentrators_per_wafer",
+            cfg.system.concentrators_per_wafer,
+        )
+}
+
 /// One registered experiment.
 ///
 /// `Send + Sync` is part of the contract: the parallel sweep runner
-/// (`sweep --jobs N`) calls [`Scenario::run`] concurrently from worker
-/// threads, so scenarios must keep all run state local to `run` (every
-/// registered scenario is a stateless unit struct).
+/// (`sweep --jobs N`) calls [`Scenario::execute`] concurrently from
+/// worker threads, so scenarios must keep all run state local to
+/// `execute` (every registered scenario is a stateless unit struct).
 pub trait Scenario: Send + Sync {
     /// Stable identifier used by the CLI and the report.
     fn name(&self) -> &'static str;
@@ -52,26 +206,235 @@ pub trait Scenario: Send + Sync {
         ExperimentConfig::default()
     }
 
-    /// Execute the experiment and collect its metrics.
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report>;
+    /// The declared metric schema: every metric `execute` will push,
+    /// in report/CSV column order. Validated on push, printed by
+    /// `run --list`.
+    fn metrics(&self) -> &'static [MetricDecl];
+
+    /// The config fields [`Scenario::prepare`]'s resources depend on
+    /// (see the cache-key discipline in the module docs).
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey;
+
+    /// Phase 1: build the expensive immutable resources for `cfg`.
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>>;
+
+    /// Phase 2: run the experiment against `prepared` and collect its
+    /// metrics. `prepared` must have come from [`Scenario::prepare`] on
+    /// a config with the same [`Scenario::cache_key`] as `cfg`.
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report>;
+
+    /// One-shot convenience: prepare + execute. This is the whole old
+    /// single-phase API, kept as a default impl — do not override it.
+    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+        let prepared = self.prepare(cfg)?;
+        self.execute(prepared.as_ref(), cfg)
+    }
 }
 
-/// All registered scenarios, in listing order.
+// ---- resource cache ------------------------------------------------------
+
+/// Cache hit/miss counters of a [`ResourceCache`] (or a delta between
+/// two snapshots — see [`CacheStats::since`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `get_or_prepare` calls served from an existing (or in-flight)
+    /// prepared entry.
+    pub hits: u64,
+    /// Calls that had to run [`Scenario::prepare`].
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// The counter delta since an `earlier` snapshot of the same cache.
+    pub fn since(self, earlier: CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+        }
+    }
+}
+
+/// State of one cache entry: prepared exactly once, then shared.
+enum SlotState {
+    Pending,
+    Ready(Arc<dyn Prepared>),
+    Failed(String),
+}
+
+/// Per-key latch: the first claimant prepares, everyone else waits on
+/// the condvar. This is what makes hit/miss counts — and therefore sweep
+/// artifacts — deterministic under `--jobs N`: concurrent requests for
+/// one key are exactly one miss plus hits, never racing duplicate
+/// prepares.
+struct Slot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: Mutex::new(SlotState::Pending),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn fulfill(&self, state: SlotState) {
+        *self.state.lock().expect("cache slot poisoned") = state;
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Result<Arc<dyn Prepared>> {
+        let mut state = self.state.lock().expect("cache slot poisoned");
+        loop {
+            match &*state {
+                SlotState::Pending => {
+                    state = self.ready.wait(state).expect("cache slot poisoned");
+                }
+                SlotState::Ready(prepared) => return Ok(prepared.clone()),
+                SlotState::Failed(e) => {
+                    anyhow::bail!("shared prepare failed: {e}")
+                }
+            }
+        }
+    }
+}
+
+/// Shared cache of prepared scenario resources, keyed by
+/// [`Scenario::cache_key`]. Contention-safe: callers on any number of
+/// threads get one prepare per distinct key (see [`Slot`]).
+#[derive(Default)]
+pub struct ResourceCache {
+    slots: Mutex<HashMap<CacheKey, Arc<Slot>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResourceCache {
+    pub fn new() -> ResourceCache {
+        ResourceCache::default()
+    }
+
+    /// Prepared resources for `cfg`, building them via
+    /// `scenario.prepare` on first use of the key. On a prepare error
+    /// the key is vacated (so a later call can retry) and the error
+    /// propagates to the owner and every waiter.
+    pub fn get_or_prepare(
+        &self,
+        scenario: &dyn Scenario,
+        cfg: &ExperimentConfig,
+    ) -> Result<Arc<dyn Prepared>> {
+        let key = scenario.cache_key(cfg);
+        let (slot, owner) = {
+            let mut slots = self.slots.lock().expect("cache map poisoned");
+            match slots.get(&key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    let slot = Arc::new(Slot::new());
+                    slots.insert(key.clone(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !owner {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return slot.wait();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+
+        // A panic inside prepare (e.g. a machine-shape assert in
+        // System::build) must not strand waiters on a Pending slot
+        // forever: this guard fails the slot and vacates the key on
+        // unwind. It stays panic-tolerant itself (no lock().expect()
+        // while already unwinding — a poisoned lock would turn the
+        // panic into an abort).
+        struct PrepareGuard<'a> {
+            cache: &'a ResourceCache,
+            key: &'a CacheKey,
+            slot: &'a Slot,
+            armed: bool,
+        }
+        impl Drop for PrepareGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                if let Ok(mut state) = self.slot.state.lock() {
+                    *state = SlotState::Failed("prepare panicked".to_string());
+                }
+                self.slot.ready.notify_all();
+                if let Ok(mut slots) = self.cache.slots.lock() {
+                    slots.remove(self.key);
+                }
+            }
+        }
+        let mut guard = PrepareGuard {
+            cache: self,
+            key: &key,
+            slot: &slot,
+            armed: true,
+        };
+        let prepared = scenario.prepare(cfg);
+        guard.armed = false;
+        drop(guard);
+
+        match prepared {
+            Ok(prepared) => {
+                slot.fulfill(SlotState::Ready(prepared.clone()));
+                Ok(prepared)
+            }
+            Err(e) => {
+                slot.fulfill(SlotState::Failed(format!("{e:#}")));
+                self.slots
+                    .lock()
+                    .expect("cache map poisoned")
+                    .remove(&key);
+                Err(e)
+            }
+        }
+    }
+
+    /// Cumulative hit/miss counters (snapshot).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of resident prepared entries.
+    pub fn len(&self) -> usize {
+        self.slots.lock().expect("cache map poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---- registry ------------------------------------------------------------
+
+/// All registered scenarios, in listing order — one static table, no
+/// per-call boxing (`find`/`names` and per-sweep-point lookups all
+/// borrow from it).
 ///
 /// Adding a scenario = implement [`Scenario`] + add one line here.
-pub fn registry() -> Vec<Box<dyn Scenario>> {
-    vec![
-        Box::new(TrafficScenario),
-        Box::new(MicrocircuitScenario),
-        Box::new(BurstScenario),
-        Box::new(HotspotScenario),
-        Box::new(AnalyzeScenario),
-    ]
+static REGISTRY: [&dyn Scenario; 5] = [
+    &TrafficScenario,
+    &MicrocircuitScenario,
+    &BurstScenario,
+    &HotspotScenario,
+    &AnalyzeScenario,
+];
+
+/// All registered scenarios, in listing order.
+pub fn registry() -> &'static [&'static dyn Scenario] {
+    &REGISTRY
 }
 
 /// Look up a scenario by name.
-pub fn find(name: &str) -> Option<Box<dyn Scenario>> {
-    registry().into_iter().find(|s| s.name() == name)
+pub fn find(name: &str) -> Option<&'static dyn Scenario> {
+    registry().iter().copied().find(|s| s.name() == name)
 }
 
 /// Registered scenario names, in listing order.
@@ -80,6 +443,36 @@ pub fn names() -> Vec<&'static str> {
 }
 
 // ---- analyze -------------------------------------------------------------
+
+/// Declared metric schema of [`AnalyzeScenario`].
+pub const ANALYZE_METRICS: &[MetricDecl] = &[
+    MetricDecl::count("n_wafers", "wafers"),
+    MetricDecl::text("torus"),
+    MetricDecl::count("neurons", "neurons"),
+    MetricDecl::real("total_spike_rate", "events/s"),
+    MetricDecl::count("fabric_flows", "flows"),
+    MetricDecl::real("offered_load", "Gbit/s"),
+    MetricDecl::real("max_link_util", "1"),
+    MetricDecl::real("mean_active_link_util", "1"),
+    MetricDecl::real("sustainable_fraction", "1"),
+    MetricDecl::text("bottleneck"),
+];
+
+/// Prepared resources of [`AnalyzeScenario`]: the microcircuit-derived
+/// fabric flow table (placement + traffic matrix), which depends only on
+/// the machine shape and `mc_scale` — not on the NIC link rate the
+/// analysis itself sweeps.
+pub struct AnalyzePrepared {
+    flows: Vec<Flow>,
+    n_neurons: u32,
+    total_spike_rate_hz: f64,
+}
+
+impl Prepared for AnalyzePrepared {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
 
 /// Flow-level topology bandwidth analysis (paper Fig. 1): route the
 /// cortical-microcircuit traffic matrix over the configured torus and
@@ -96,15 +489,38 @@ impl Scenario for AnalyzeScenario {
         "flow-level torus bandwidth analysis of microcircuit traffic"
     }
 
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
+    fn metrics(&self) -> &'static [MetricDecl] {
+        ANALYZE_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        machine_shape_fields(
+            CacheKey::new("analyze_flows").field("mc_scale", cfg.workload.mc_scale),
+            cfg,
+        )
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        // a throwaway system instance: only its endpoint layout feeds the
+        // placement; nothing is simulated
         let mut sim: Sim<Msg> = Sim::new();
         let sys = System::build(&mut sim, cfg.system);
         let mc = Microcircuit::new(cfg.workload.mc_scale);
         let placement = Placement::spread(&mc, &sys);
         let flows = placement.flows(&mc, 32.0);
-        let analysis = FlowAnalysis::run(&cfg.system.torus, &flows, cfg.system.nic.link_gbps());
+        Ok(Arc::new(AnalyzePrepared {
+            flows,
+            n_neurons: mc.total_neurons(),
+            total_spike_rate_hz: mc.total_rate_hz(),
+        }))
+    }
 
-        let mut r = Report::new(self.name());
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let prep: &AnalyzePrepared = downcast_prepared(prepared, self.name())?;
+        let analysis =
+            FlowAnalysis::run(&cfg.system.torus, &prep.flows, cfg.system.nic.link_gbps());
+
+        let mut r = Report::with_schema(self.name(), self.metrics());
         r.push_unit("n_wafers", cfg.system.n_wafers, "wafers");
         r.push(
             "torus",
@@ -113,9 +529,9 @@ impl Scenario for AnalyzeScenario {
                 cfg.system.torus.nx, cfg.system.torus.ny, cfg.system.torus.nz
             ),
         );
-        r.push_unit("neurons", mc.total_neurons(), "neurons");
-        r.push_unit("total_spike_rate", mc.total_rate_hz(), "events/s");
-        r.push_unit("fabric_flows", flows.len(), "flows");
+        r.push_unit("neurons", prep.n_neurons, "neurons");
+        r.push_unit("total_spike_rate", prep.total_spike_rate_hz, "events/s");
+        r.push_unit("fabric_flows", prep.flows.len(), "flows");
         r.push_unit("offered_load", analysis.total_offered_gbps, "Gbit/s");
         r.push_unit("max_link_util", analysis.max_utilization(), "1");
         r.push_unit(
@@ -163,10 +579,26 @@ mod tests {
     #[test]
     fn registry_contains_required_scenarios() {
         let names = names();
-        for required in ["traffic", "microcircuit", "burst", "hotspot"] {
+        for required in ["traffic", "microcircuit", "burst", "hotspot", "analyze"] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
-        assert!(names.len() >= 4);
+        assert!(names.len() >= 5);
+    }
+
+    #[test]
+    fn registry_is_static_and_stable() {
+        // the registry is one static table: repeated calls hand out the
+        // same trait objects (no re-boxing per lookup)
+        let a = registry();
+        let b = registry();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            // compare data addresses (not vtable pointers, which may be
+            // duplicated across codegen units)
+            let xa = *x as *const dyn Scenario as *const ();
+            let ya = *y as *const dyn Scenario as *const ();
+            assert!(std::ptr::eq(xa, ya));
+        }
     }
 
     #[test]
@@ -176,6 +608,23 @@ mod tests {
         let before = names.len();
         names.dedup();
         assert_eq!(names.len(), before, "duplicate scenario names");
+    }
+
+    #[test]
+    fn every_scenario_declares_a_coherent_schema() {
+        for s in registry() {
+            let schema = s.metrics();
+            assert!(!schema.is_empty(), "{}: empty metric schema", s.name());
+            let mut seen = std::collections::BTreeSet::new();
+            for d in schema {
+                assert!(
+                    seen.insert(d.name),
+                    "{}: duplicate metric declaration '{}'",
+                    s.name(),
+                    d.name
+                );
+            }
+        }
     }
 
     #[test]
@@ -200,6 +649,142 @@ mod tests {
         let a = find("burst").unwrap().run(&cfg).unwrap();
         let b = find("burst").unwrap().run(&cfg).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn run_equals_prepare_plus_execute() {
+        // for every packetless-prepare scenario: the default-impl run()
+        // and an explicit two-phase call are byte-identical
+        let cfg = small();
+        for name in ["traffic", "burst", "hotspot", "analyze"] {
+            let s = find(name).unwrap();
+            let one_shot = s.run(&cfg).unwrap();
+            let prepared = s.prepare(&cfg).unwrap();
+            let two_phase = s.execute(prepared.as_ref(), &cfg).unwrap();
+            assert_eq!(
+                one_shot.to_json().to_string(),
+                two_phase.to_json().to_string(),
+                "{name}: run() diverged from prepare+execute"
+            );
+        }
+    }
+
+    #[test]
+    fn prepared_resources_are_reusable() {
+        // one prepare, many executes: all byte-identical
+        let cfg = small();
+        let s = find("traffic").unwrap();
+        let prepared = s.prepare(&cfg).unwrap();
+        let first = s.execute(prepared.as_ref(), &cfg).unwrap();
+        for _ in 0..2 {
+            let again = s.execute(prepared.as_ref(), &cfg).unwrap();
+            assert_eq!(first.to_json().to_string(), again.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn cache_key_ignores_execute_only_knobs() {
+        let s = find("traffic").unwrap();
+        let a = small();
+        let mut b = small();
+        b.workload.rate_hz *= 4.0;
+        b.workload.duration = Time::from_us(400);
+        b.domains = 2;
+        assert_eq!(s.cache_key(&a), s.cache_key(&b));
+        let mut c = small();
+        c.workload.fan_out = 2;
+        assert_ne!(s.cache_key(&a), s.cache_key(&c));
+        let mut d = small();
+        d.seed ^= 1;
+        assert_ne!(s.cache_key(&a), s.cache_key(&d));
+    }
+
+    #[test]
+    fn resource_cache_shares_prepared_entries() {
+        let s = find("traffic").unwrap();
+        let cache = ResourceCache::new();
+        let a = small();
+        let mut b = small();
+        b.workload.rate_hz *= 2.0; // same cache key as `a`
+        let pa = cache.get_or_prepare(s, &a).unwrap();
+        let pb = cache.get_or_prepare(s, &b).unwrap();
+        assert!(Arc::ptr_eq(&pa, &pb), "same key must share one Prepared");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+
+        let mut c = small();
+        c.workload.fan_out = 2; // key changes
+        let pc = cache.get_or_prepare(s, &c).unwrap();
+        assert!(!Arc::ptr_eq(&pa, &pc));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn resource_cache_is_contention_safe() {
+        // many threads, one key: exactly one miss, one shared Arc
+        let s = find("traffic").unwrap();
+        let cache = ResourceCache::new();
+        let cfg = small();
+        let prepared: Vec<Arc<dyn Prepared>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| cache.get_or_prepare(s, &cfg).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &prepared[1..] {
+            assert!(Arc::ptr_eq(&prepared[0], p));
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "duplicate prepare under contention");
+        assert_eq!(stats.hits, 7);
+    }
+
+    #[test]
+    fn failed_prepare_vacates_the_key() {
+        let s = find("microcircuit").unwrap();
+        let cache = ResourceCache::new();
+        let mut cfg = ExperimentConfig::default();
+        cfg.neuro.artifact = "no_such_artifact".to_string();
+        assert!(cache.get_or_prepare(s, &cfg).is_err());
+        assert!(cache.is_empty(), "failed key must not stay resident");
+        // a retry runs prepare again (another miss, not a poisoned hit)
+        assert!(cache.get_or_prepare(s, &cfg).is_err());
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn panicking_prepare_fails_waiters_instead_of_deadlocking() {
+        let s = find("traffic").unwrap();
+        let cache = ResourceCache::new();
+        let mut cfg = small();
+        // 5 FPGAs per wafer cannot divide over 2 concentrators: the
+        // throwaway System::build inside prepare panics
+        cfg.system.fpgas_per_wafer = 5;
+        let outcomes: Vec<Result<(), ()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            cache.get_or_prepare(s, &cfg).map(|_| ()).map_err(|_| ())
+                        }))
+                        .unwrap_or(Err(()))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // nobody deadlocks: every call ends in a caught panic (owners)
+        // or a "shared prepare failed" error (waiters)
+        assert!(outcomes.iter().all(|o| o.is_err()));
+        assert!(cache.is_empty(), "panicked key must be vacated");
+    }
+
+    #[test]
+    fn cache_key_display_is_stable() {
+        let k = CacheKey::new("fam").field("a", 1).field("b", "x");
+        assert_eq!(k.to_string(), "fam;a=1;b=x");
+        assert_eq!(k.family(), "fam");
     }
 
     #[test]

@@ -14,6 +14,18 @@
 //! them on a [`std::thread::scope`] worker pool (`sweep --jobs N`); the
 //! result order — and therefore every JSON/CSV artifact — is identical
 //! to the serial run's, regardless of worker scheduling.
+//!
+//! ## Shared prepared resources
+//!
+//! Every point is evaluated through the runner's [`ResourceCache`]:
+//! `prepare` runs once per distinct [`Scenario::cache_key`], and points
+//! that share a key (e.g. a `rate_hz` sweep that never touches the route
+//! plan, or a microcircuit `steps` sweep that never touches the
+//! artifact) share one `Prepared`. The per-key latch in the cache makes
+//! hit/miss counts deterministic under `--jobs N`, so the aggregate JSON
+//! (which surfaces them under `"cache"`) stays byte-identical to the
+//! serial run's. Point reports themselves carry no cache metrics — their
+//! bytes are exactly the pre-cache output.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -23,11 +35,11 @@ use anyhow::{bail, Result};
 use crate::sim::Time;
 use crate::util::bench::Table;
 use crate::util::json::Json;
-use crate::util::report::{Report, Value};
+use crate::util::report::{MetricDecl, Report, Value};
 use crate::workload::generators::GeneratorKind;
 
 use super::config::ExperimentConfig;
-use super::scenario::Scenario;
+use super::scenario::{CacheStats, ResourceCache, Scenario};
 
 /// Apply one `key=value` override onto a config. Shared by the sweep
 /// axes and the CLI `--set` flag.
@@ -158,12 +170,18 @@ pub struct SweepPoint {
 #[derive(Clone, Debug)]
 pub struct SweepResult {
     pub scenario: String,
+    /// The scenario's declared metric schema (stable CSV column order).
+    pub schema: &'static [MetricDecl],
     pub points: Vec<SweepPoint>,
+    /// Resource-cache hit/miss counters of this run (deterministic
+    /// across `--jobs N` — see the module docs).
+    pub cache: CacheStats,
 }
 
 impl SweepResult {
     /// Aggregate JSON artifact:
-    /// `{"scenario":.., "n_points":.., "points":[{"params":{..},"metrics":{..}},..]}`.
+    /// `{"scenario":.., "n_points":.., "cache":{"hits":..,"misses":..},
+    ///   "points":[{"params":{..},"metrics":{..}},..]}`.
     pub fn to_json(&self) -> Json {
         let mut pts = Json::arr();
         for p in &self.points {
@@ -183,14 +201,26 @@ impl SweepResult {
         Json::obj()
             .set("scenario", self.scenario.as_str())
             .set("n_points", self.points.len())
+            .set(
+                "cache",
+                Json::obj()
+                    .set("hits", self.cache.hits)
+                    .set("misses", self.cache.misses),
+            )
             .set("points", pts)
     }
 
-    /// Metric columns: union over every point's report, first-seen order
-    /// (scenarios may emit conditional metrics, e.g. `bottleneck` only
-    /// when saturated — no point's data is dropped).
+    /// Metric columns: the declared schema order first (restricted to
+    /// metrics some point actually reported — conditional metrics like
+    /// `bottleneck` only appear when emitted), then any undeclared
+    /// stragglers in first-seen order so no point's data is dropped.
     fn metric_columns(&self) -> Vec<String> {
         let mut keys: Vec<String> = Vec::new();
+        for d in self.schema {
+            if self.points.iter().any(|p| p.report.get(d.name).is_some()) {
+                keys.push(d.name.to_string());
+            }
+        }
         for p in &self.points {
             for k in p.report.keys() {
                 if !keys.iter().any(|e| e == k) {
@@ -287,10 +317,15 @@ fn push_csv_row(out: &mut String, cells: &[String]) {
 type PointSlot = Mutex<Option<Result<SweepPoint>>>;
 
 /// Config grid × scenario → one report per point.
+///
+/// Prepared resources are shared across points (and across repeated
+/// `run` calls on the same runner) through the embedded
+/// [`ResourceCache`] — see the module docs.
 pub struct SweepRunner {
     base: ExperimentConfig,
     axes: Vec<(String, Vec<String>)>,
     jobs: usize,
+    cache: ResourceCache,
 }
 
 impl SweepRunner {
@@ -299,6 +334,7 @@ impl SweepRunner {
             base,
             axes: Vec::new(),
             jobs: 1,
+            cache: ResourceCache::new(),
         }
     }
 
@@ -308,7 +344,13 @@ impl SweepRunner {
             base,
             axes: parse_grid(spec)?,
             jobs: 1,
+            cache: ResourceCache::new(),
         })
+    }
+
+    /// Cumulative cache counters of this runner (across all `run` calls).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Add one sweep axis (builder style).
@@ -364,7 +406,8 @@ impl SweepRunner {
         Ok(points)
     }
 
-    /// Evaluate one grid point: base config + overrides → report.
+    /// Evaluate one grid point: base config + overrides → prepared
+    /// resources (cached by [`Scenario::cache_key`]) → execute → report.
     fn eval_point(
         &self,
         scenario: &dyn Scenario,
@@ -374,7 +417,8 @@ impl SweepRunner {
         for (key, value) in params {
             apply_override(&mut cfg, key, value)?;
         }
-        let report = scenario.run(&cfg)?;
+        let prepared = self.cache.get_or_prepare(scenario, &cfg)?;
+        let report = scenario.execute(prepared.as_ref(), &cfg)?;
         Ok(SweepPoint {
             params: params.to_vec(),
             report,
@@ -389,6 +433,7 @@ impl SweepRunner {
         scenario: &dyn Scenario,
         mut progress: impl FnMut(usize, usize),
     ) -> Result<SweepResult> {
+        let cache_before = self.cache.stats();
         let grid = self.grid_points()?;
         let n = grid.len();
         let mut points = Vec::with_capacity(n);
@@ -398,7 +443,9 @@ impl SweepRunner {
         }
         Ok(SweepResult {
             scenario: scenario.name().to_string(),
+            schema: scenario.metrics(),
             points,
+            cache: self.cache.stats().since(cache_before),
         })
     }
 
@@ -416,6 +463,7 @@ impl SweepRunner {
         scenario: &dyn Scenario,
         progress: impl Fn(usize, usize) + Sync,
     ) -> Result<SweepResult> {
+        let cache_before = self.cache.stats();
         let grid = self.grid_points()?;
         let n = grid.len();
         let workers = self.jobs.min(n).max(1);
@@ -461,7 +509,9 @@ impl SweepRunner {
         }
         Ok(SweepResult {
             scenario: scenario.name().to_string(),
+            schema: scenario.metrics(),
             points,
+            cache: self.cache.stats().since(cache_before),
         })
     }
 
@@ -535,7 +585,7 @@ mod tests {
             .axis("fan_out", &["1", "2"]);
         assert_eq!(runner.n_points(), 4);
         let scenario = find("traffic").unwrap();
-        let a = runner.run(scenario.as_ref()).unwrap();
+        let a = runner.run(scenario).unwrap();
         assert_eq!(a.points.len(), 4);
         for p in &a.points {
             assert_eq!(p.params.len(), 2);
@@ -555,9 +605,72 @@ mod tests {
                 "point {pi}: fan-out accounting"
             );
         }
-        // deterministic end to end
-        let b = runner.run(scenario.as_ref()).unwrap();
+        // deterministic end to end: a fresh runner (cold cache) produces
+        // the identical artifact ...
+        let b = SweepRunner::new(small())
+            .axis("rate_hz", &["1e6", "4e6"])
+            .axis("fan_out", &["1", "2"])
+            .run(scenario)
+            .unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // ... and a warm re-run on the same runner reuses every plan:
+        // same points, all hits
+        let warm = runner.run(scenario).unwrap();
+        assert_eq!(a.to_csv(), warm.to_csv());
+        assert_eq!(warm.cache.misses, 0);
+        assert_eq!(warm.cache.hits, 4);
+    }
+
+    #[test]
+    fn sweep_shares_plans_across_points() {
+        // rate_hz is an execute-time knob: 3 points, one route plan
+        let runner = SweepRunner::new(small()).axis("rate_hz", &["1e6", "2e6", "4e6"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        assert_eq!(result.cache.misses, 1, "route plan rebuilt per point");
+        assert_eq!(result.cache.hits, 2);
+        assert_eq!(runner.cache_stats().misses, 1);
+        // fan_out is a plan input: a fan_out axis forces one plan per value
+        let runner = SweepRunner::new(small()).axis("fan_out", &["1", "2"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        assert_eq!(result.cache.misses, 2);
+        assert_eq!(result.cache.hits, 0);
+    }
+
+    #[test]
+    fn sweep_json_surfaces_cache_counters() {
+        let runner = SweepRunner::new(small()).axis("rate_hz", &["1e6", "2e6"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        let j = result.to_json();
+        assert_eq!(j.at(&["cache", "misses"]).unwrap().as_u64(), Some(1));
+        assert_eq!(j.at(&["cache", "hits"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn csv_columns_follow_declared_schema_order() {
+        // build a result whose reports insert metrics in scrambled order;
+        // the CSV must follow the declared schema, not insertion order
+        const SCHEMA: &[crate::util::report::MetricDecl] = &[
+            crate::util::report::MetricDecl::count("alpha", "x"),
+            crate::util::report::MetricDecl::count("beta", "x"),
+            crate::util::report::MetricDecl::count("gamma", "x"),
+        ];
+        let mut report = Report::with_schema("unit", SCHEMA);
+        report.push_unit("gamma", 3u64, "x");
+        report.push_unit("alpha", 1u64, "x");
+        let result = SweepResult {
+            scenario: "unit".to_string(),
+            schema: SCHEMA,
+            points: vec![SweepPoint {
+                params: vec![("p".to_string(), "0".to_string())],
+                report,
+            }],
+            cache: CacheStats::default(),
+        };
+        let csv = result.to_csv();
+        let header = csv.lines().next().unwrap();
+        // beta was never reported → dropped; alpha precedes gamma even
+        // though gamma was pushed first
+        assert_eq!(header, "p,alpha,gamma");
     }
 
     #[test]
@@ -566,12 +679,12 @@ mod tests {
             .axis("rate_hz", &["1e6", "2e6", "4e6"])
             .axis("fan_out", &["1", "2"]);
         let scenario = find("traffic").unwrap();
-        let serial = runner.run(scenario.as_ref()).unwrap();
+        let serial = runner.run(scenario).unwrap();
         let parallel = SweepRunner::new(small())
             .axis("rate_hz", &["1e6", "2e6", "4e6"])
             .axis("fan_out", &["1", "2"])
             .jobs(4)
-            .run(scenario.as_ref())
+            .run(scenario)
             .unwrap();
         assert_eq!(serial.points.len(), 6);
         assert_eq!(serial.to_csv(), parallel.to_csv());
@@ -589,7 +702,7 @@ mod tests {
             .jobs(3);
         let calls = AtomicUsize::new(0);
         let result = runner
-            .run_parallel(find("traffic").unwrap().as_ref(), |done, n| {
+            .run_parallel(find("traffic").unwrap(), |done, n| {
                 assert!((1..=n).contains(&done));
                 calls.fetch_add(1, Ordering::Relaxed);
             })
@@ -603,14 +716,14 @@ mod tests {
         let runner = SweepRunner::new(small())
             .axis("rate_hz", &["1e6", "not_a_number"])
             .jobs(2);
-        let err = runner.run(find("traffic").unwrap().as_ref()).unwrap_err();
+        let err = runner.run(find("traffic").unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("rate_hz"), "{err:#}");
     }
 
     #[test]
     fn queue_override_sweeps_backends_identically() {
         let runner = SweepRunner::new(small()).axis("queue", &["heap", "wheel"]);
-        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        let result = runner.run(find("traffic").unwrap()).unwrap();
         assert_eq!(result.points.len(), 2);
         // same physics on both backends: every metric column agrees
         let a = result.points[0].report.to_flat_json().to_string();
@@ -624,7 +737,7 @@ mod tests {
     fn domains_override_sweeps_identically() {
         // domain count is a perf knob: every metric must agree at 1/2/4
         let runner = SweepRunner::new(small()).axis("domains", &["1", "2", "4"]);
-        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        let result = runner.run(find("traffic").unwrap()).unwrap();
         assert_eq!(result.points.len(), 3);
         let a = result.points[0].report.to_flat_json().to_string();
         for p in &result.points[1..] {
@@ -639,7 +752,7 @@ mod tests {
     #[test]
     fn csv_and_json_artifacts_cover_every_point() {
         let runner = SweepRunner::new(small()).axis("rate_hz", &["1e6", "2e6"]);
-        let result = runner.run(find("traffic").unwrap().as_ref()).unwrap();
+        let result = runner.run(find("traffic").unwrap()).unwrap();
         let csv = result.to_csv();
         let lines: Vec<&str> = csv.trim_end().lines().collect();
         assert_eq!(lines.len(), 3, "header + 2 rows");

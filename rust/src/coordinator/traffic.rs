@@ -3,19 +3,34 @@
 //! aggregation efficiency, end-to-end latency, deadline misses, link
 //! utilization, flush-reason breakdown.
 //!
-//! The shared driver [`run_fabric_scenario`] implements the
-//! build → run → collect split of the [`Scenario`] contract for every
-//! scenario that drives the packet-level simulator: it builds the
-//! [`System`], delegates route programming + generator spawning to the
-//! scenario's [`FabricScenario::build`], runs the workload window plus a
-//! drain tail, collects the standard [`TrafficReport`], and lets the
-//! scenario append extra metrics via [`FabricScenario::collect`].
+//! The shared driver implements the two-phase [`Scenario`] lifecycle for
+//! every scenario that drives the packet-level simulator:
+//!
+//! - **prepare** ([`plan_fabric`]): the scenario's
+//!   [`FabricScenario::plan`] computes an immutable [`FabricPlan`] —
+//!   route tables (TX/RX entries), generator source lists and generator
+//!   seeds — from the machine shape and the experiment seed. This is the
+//!   config-subset-keyed resource the sweep cache shares across points.
+//! - **execute** ([`execute_fabric_plan`]): builds the [`System`] inside
+//!   a fresh `Sim`, applies the plan (programs routes, spawns
+//!   generators), runs the workload window plus a drain tail (serial or
+//!   partitioned PDES), collects the standard fabric metrics, and lets
+//!   the scenario append extras via [`FabricScenario::collect`].
+//!
+//! The plan captures the RNG draws the old single-phase `build` made
+//! (route fan-out picks, then one generator seed per FPGA, in FPGA
+//! order), so executing a cached plan is byte-identical to the
+//! pre-redesign monolithic run — gated in
+//! `rust/tests/determinism_queue.rs`.
 //!
 //! Scenarios in this module:
 //! - [`TrafficScenario`] — Poisson/Zipf fan-out load (port of the seed
 //!   `run_traffic` driver; identical metrics for identical seed/config).
-//! - [`BurstScenario`] — same routes, bursty generators.
+//! - [`BurstScenario`] — same routes, bursty generators (it shares the
+//!   traffic plan's cache family on purpose).
 //! - [`HotspotScenario`] — every FPGA fires at one hot FPGA.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -26,7 +41,7 @@ use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
 use crate::sim::{EventQueue, Partition, Placement, Sim, Time};
 use crate::util::json::Json;
-use crate::util::report::Report;
+use crate::util::report::{MetricDecl, Report};
 use crate::util::rng::{Rng, Zipf};
 use crate::util::stats::Histogram;
 use crate::wafer::system::System;
@@ -35,7 +50,49 @@ use crate::workload::generators::{
 };
 
 use super::config::ExperimentConfig;
-use super::scenario::Scenario;
+use super::scenario::{
+    downcast_prepared, machine_shape_fields, CacheKey, Prepared, Scenario,
+};
+
+/// The common fabric metric declarations (the order
+/// [`System::fill_fabric_report`] pushes them) plus per-scenario extras.
+macro_rules! fabric_schema {
+    ($($extra:expr),* $(,)?) => {
+        &[
+            MetricDecl::real("duration", "s"),
+            MetricDecl::count("events_in", "events"),
+            MetricDecl::count("events_out", "events"),
+            MetricDecl::count("packets_out", "packets"),
+            MetricDecl::count("rx_events", "events"),
+            MetricDecl::count("dropped", "events"),
+            MetricDecl::count("unrouted", "events"),
+            MetricDecl::real("mean_batch", "events/packet"),
+            MetricDecl::count("flush_deadline", "flushes"),
+            MetricDecl::count("flush_full", "flushes"),
+            MetricDecl::count("flush_evict", "flushes"),
+            MetricDecl::count("flush_external", "flushes"),
+            MetricDecl::count("evictions", "evictions"),
+            MetricDecl::count("deadline_misses", "events"),
+            MetricDecl::real("latency_p50", "ns"),
+            MetricDecl::real("latency_p99", "ns"),
+            MetricDecl::real("max_link_util", "1"),
+            MetricDecl::real("delivered_events_per_s", "events/s"),
+            MetricDecl::count("events_generated", "events"),
+            MetricDecl::count("des_events", "events"),
+            $($extra,)*
+        ]
+    };
+}
+
+/// Declared metric schema of [`TrafficScenario`].
+pub const TRAFFIC_METRICS: &[MetricDecl] = fabric_schema![];
+/// Declared metric schema of [`BurstScenario`].
+pub const BURST_METRICS: &[MetricDecl] = fabric_schema![MetricDecl::count("bursts", "bursts")];
+/// Declared metric schema of [`HotspotScenario`].
+pub const HOTSPOT_METRICS: &[MetricDecl] = fabric_schema![
+    MetricDecl::count("hot_rx_events", "events"),
+    MetricDecl::count("hot_rx_packets", "packets"),
+];
 
 /// Aggregated result of one fabric-driven run.
 ///
@@ -90,20 +147,56 @@ impl TrafficReport {
 
 }
 
-/// The build/collect half of a fabric-driven scenario. Implementors
-/// program routes and spawn generators into the freshly built system;
-/// the shared driver owns the simulation loop and the common collect.
+/// One FPGA's slice of a [`FabricPlan`]: its generator sources + seed
+/// and its TX lookup entries, in programming order.
+#[derive(Clone, Debug)]
+pub struct FpgaPlan {
+    /// (hicann, pulse) sources fed to this FPGA's generator.
+    pub sources: Vec<(u8, u16)>,
+    /// Seed of this FPGA's generator; `None` = no generator (e.g. the
+    /// hotspot scenario's hot FPGA only receives).
+    pub gen_seed: Option<u64>,
+    /// TX entries: (hicann, pulse, entry), in `TxLookup::add` order.
+    pub tx: Vec<(u8, u16, TxEntry)>,
+}
+
+/// The immutable prepared resource of a fabric scenario: everything the
+/// old monolithic `build` derived from the seed and the machine shape,
+/// with the mutable `Sim` state factored out. Indexed by the
+/// [`System::fpgas`] iteration order of the (deterministically rebuilt)
+/// system.
+#[derive(Clone, Debug)]
+pub struct FabricPlan {
+    pub per_fpga: Vec<FpgaPlan>,
+    /// RX entries: (destination FPGA index, guid, entry).
+    pub rx: Vec<(usize, u16, RxEntry)>,
+}
+
+impl Prepared for FabricPlan {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// The planning half of a fabric-driven scenario. Implementors compute
+/// routes and generator seeds from the (throwaway) built system and the
+/// experiment-seeded `rng`; the shared driver owns the simulation loop
+/// and the common collect.
 pub trait FabricScenario {
-    /// Program routes + spawn workload generators. `rng` is the
-    /// experiment-seeded generator; draw all randomness from it so runs
-    /// are reproducible.
-    fn build(
+    /// Compute the immutable route + generator plan. `rng` is seeded
+    /// with `cfg.seed`; draw all randomness from it so plans are
+    /// reproducible (and cacheable by the config fields that feed it).
+    fn plan(
         &self,
-        sim: &mut Sim<Msg>,
         sys: &System,
         cfg: &ExperimentConfig,
         rng: &mut Rng,
-    ) -> Result<()>;
+    ) -> Result<FabricPlan>;
+
+    /// Generator kind spawned at execute time (default: the config's).
+    fn generator(&self, cfg: &ExperimentConfig) -> GeneratorKind {
+        cfg.workload.generator
+    }
 
     /// Append scenario-specific metrics after the common collect.
     fn collect(&self, _sim: &Sim<Msg>, _sys: &System, _report: &mut Report) {}
@@ -118,16 +211,80 @@ fn expected_pending_events(cfg: &ExperimentConfig) -> usize {
     (n_fpgas * (8 + 4 * cfg.workload.sources_per_fpga)).min(1 << 20)
 }
 
-/// Shared driver: build system → scenario build → run workload window +
-/// drain tail → collect. Returns the simulation for post-hoc inspection.
+/// Phase 1 for fabric scenarios: build a throwaway system (only its
+/// endpoint layout is read) and let the scenario plan against it.
+pub fn plan_fabric(scn: &dyn FabricScenario, cfg: &ExperimentConfig) -> Result<FabricPlan> {
+    let mut sim: Sim<Msg> = Sim::new();
+    let sys = System::build(&mut sim, cfg.system);
+    let mut rng = Rng::new(cfg.seed);
+    scn.plan(&sys, cfg, &mut rng)
+}
+
+/// Program a plan into a freshly built system: TX/RX lookup tables, then
+/// the generators (spawned in FPGA order, exactly the actor-creation and
+/// external-schedule order of the old monolithic build — the engine's
+/// merge keys, and therefore the whole trajectory, match).
+fn apply_plan(
+    sim: &mut Sim<Msg>,
+    sys: &System,
+    plan: &FabricPlan,
+    kind: GeneratorKind,
+    cfg: &ExperimentConfig,
+) -> Result<()> {
+    let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
+    anyhow::ensure!(
+        plan.per_fpga.len() == fpgas.len(),
+        "plan covers {} FPGAs but the system has {} — cache key must include \
+         the machine shape",
+        plan.per_fpga.len(),
+        fpgas.len()
+    );
+    for (fi, fp) in plan.per_fpga.iter().enumerate() {
+        let actor = fpgas[fi].2;
+        for &(hicann, pulse, entry) in &fp.tx {
+            sim.get_mut::<Fpga>(actor).tx_lut.add(hicann, pulse, entry);
+        }
+    }
+    for &(fi, guid, entry) in &plan.rx {
+        sim.get_mut::<Fpga>(fpgas[fi].2).rx_lut.set(guid, entry);
+    }
+    for (fi, fp) in plan.per_fpga.iter().enumerate() {
+        let Some(seed) = fp.gen_seed else {
+            continue;
+        };
+        let gen_id = spawn_generator(
+            sim,
+            kind,
+            gen_config(cfg, fp.sources.clone()),
+            fpgas[fi].2,
+            seed,
+        );
+        sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+    }
+    Ok(())
+}
+
+/// One-shot plan + run (the old single-phase experiment entry point,
+/// used by the deprecated wrappers and unit tests).
+pub(crate) fn run_fabric_experiment(
+    scn: &dyn FabricScenario,
+    cfg: &ExperimentConfig,
+) -> Result<(Sim<Msg>, System, TrafficReport)> {
+    let plan = plan_fabric(scn, cfg)?;
+    run_fabric_experiment_with(scn, &plan, cfg)
+}
+
+/// Phase 2: build system → apply plan → run workload window + drain
+/// tail → collect. Returns the simulation for post-hoc inspection.
 ///
 /// With `cfg.domains > 1` the run loop executes as partitioned
 /// conservative PDES ([`crate::sim::Partition`]): same build, same
 /// external schedules, same collect — and, by the engine's merge-key
 /// contract, byte-identical reports (gated in
 /// `rust/tests/determinism_queue.rs`).
-pub(crate) fn run_fabric_experiment(
+pub(crate) fn run_fabric_experiment_with(
     scn: &dyn FabricScenario,
+    plan: &FabricPlan,
     cfg: &ExperimentConfig,
 ) -> Result<(Sim<Msg>, System, TrafficReport)> {
     let mut sim: Sim<Msg> = Sim::with_queue(EventQueue::with_capacity(
@@ -135,8 +292,7 @@ pub(crate) fn run_fabric_experiment(
         expected_pending_events(cfg),
     ));
     let sys = System::build(&mut sim, cfg.system);
-    let mut rng = Rng::new(cfg.seed);
-    scn.build(&mut sim, &sys, cfg, &mut rng)?;
+    apply_plan(&mut sim, &sys, plan, scn.generator(cfg), cfg)?;
 
     let dm = DomainMap::new(cfg.system.torus, cfg.domains);
     let sim = if dm.n_domains() > 1 {
@@ -213,16 +369,20 @@ fn resolve_owners(sim: &Sim<Msg>, dm: &DomainMap) -> Result<Vec<u32>> {
     Ok(owner)
 }
 
-/// Drive `scn` and return the unified [`Report`]: the standard fabric
-/// metrics come from [`System::fabric_report`] (single source of truth),
-/// plus the generator-side count and the scenario's extra metrics.
-pub fn run_fabric_scenario(
+/// Drive `scn` against a prepared `plan` and return the unified,
+/// schema-validated [`Report`]: the standard fabric metrics come from
+/// [`System::fill_fabric_report`] (single source of truth), plus the
+/// generator-side count and the scenario's extra metrics.
+pub fn execute_fabric_plan(
     scn: &dyn FabricScenario,
     name: &str,
+    schema: &'static [MetricDecl],
+    plan: &FabricPlan,
     cfg: &ExperimentConfig,
 ) -> Result<Report> {
-    let (sim, sys, _tr) = run_fabric_experiment(scn, cfg)?;
-    let mut report = sys.fabric_report(&sim, name, cfg.workload.duration);
+    let (sim, sys, _tr) = run_fabric_experiment_with(scn, plan, cfg)?;
+    let mut report = Report::with_schema(name, schema);
+    sys.fill_fabric_report(&sim, &mut report, cfg.workload.duration);
     report.push_unit("events_generated", total_generated(&sim), "events");
     // DES bookkeeping for the perf trajectory (benches/bench_events.rs):
     // total simulator events dispatched while producing this report.
@@ -271,6 +431,24 @@ fn gen_config(cfg: &ExperimentConfig, sources: Vec<(u8, u16)>) -> GenConfig {
     }
 }
 
+/// Machine-shape + seed fields shared by every fabric plan key (the
+/// shape rendering itself is the cross-scenario
+/// [`machine_shape_fields`] helper).
+fn fabric_key_base(family: &'static str, cfg: &ExperimentConfig) -> CacheKey {
+    machine_shape_fields(CacheKey::new(family), cfg)
+        .field("seed", cfg.seed)
+        .field("sources_per_fpga", cfg.workload.sources_per_fpga)
+}
+
+/// Cache key of the Zipf fan-out plan — shared by `traffic` and `burst`
+/// (their plans are identical; only the generator kind spawned at
+/// execute time differs).
+fn zipf_plan_key(cfg: &ExperimentConfig) -> CacheKey {
+    fabric_key_base("fabric_zipf_plan", cfg)
+        .field("fan_out", cfg.workload.fan_out)
+        .field("zipf_s", cfg.workload.zipf_s)
+}
+
 // ---- traffic -------------------------------------------------------------
 
 /// Poisson/Zipf fan-out load (port of the seed `run_traffic` driver).
@@ -282,22 +460,24 @@ fn gen_config(cfg: &ExperimentConfig, sources: Vec<(u8, u16)>) -> GenConfig {
 pub struct TrafficScenario;
 
 impl FabricScenario for TrafficScenario {
-    fn build(
+    fn plan(
         &self,
-        sim: &mut Sim<Msg>,
         sys: &System,
         cfg: &ExperimentConfig,
         rng: &mut Rng,
-    ) -> Result<()> {
+    ) -> Result<FabricPlan> {
         let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
         let n = fpgas.len();
         anyhow::ensure!(n >= 2, "traffic scenario needs at least 2 FPGAs");
         let zipf = Zipf::new(n - 1, cfg.workload.zipf_s);
 
-        // program routes + spawn generators
+        // routes + generator seeds, in exactly the old build's draw order
         let mut guid_next = vec![0u16; n]; // per-destination GUID allocator
-        for (fi, &(_, _, actor, _ep)) in fpgas.iter().enumerate() {
+        let mut per_fpga = Vec::with_capacity(n);
+        let mut rx = Vec::new();
+        for fi in 0..n {
             let mut sources = Vec::new();
+            let mut tx = Vec::new();
             for s in 0..cfg.workload.sources_per_fpga {
                 let hicann = (s % 8) as u8;
                 let pulse = (s / 8) as u16;
@@ -315,28 +495,24 @@ impl FabricScenario for TrafficScenario {
                     let dest = fpgas[d].3;
                     let guid = guid_next[d];
                     guid_next[d] = guid_next[d].wrapping_add(1) & 0x7FFF;
-                    sim.get_mut::<Fpga>(actor)
-                        .tx_lut
-                        .add(hicann, pulse, TxEntry { dest, guid });
-                    sim.get_mut::<Fpga>(fpgas[d].2).rx_lut.set(
+                    tx.push((hicann, pulse, TxEntry { dest, guid }));
+                    rx.push((
+                        d,
                         guid,
                         RxEntry {
                             hicann_mask: 0xFF,
                             pulse_addr: pulse,
                         },
-                    );
+                    ));
                 }
             }
-            let gen_id = spawn_generator(
-                sim,
-                cfg.workload.generator,
-                gen_config(cfg, sources),
-                actor,
-                rng.next_u64(),
-            );
-            sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+            per_fpga.push(FpgaPlan {
+                sources,
+                gen_seed: Some(rng.next_u64()),
+                tx,
+            });
         }
-        Ok(())
+        Ok(FabricPlan { per_fpga, rx })
     }
 }
 
@@ -349,8 +525,21 @@ impl Scenario for TrafficScenario {
         "multi-wafer Poisson spike traffic with Zipf fan-out destinations"
     }
 
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
-        run_fabric_scenario(self, Scenario::name(self), cfg)
+    fn metrics(&self) -> &'static [MetricDecl] {
+        TRAFFIC_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        zipf_plan_key(cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), TRAFFIC_METRICS, plan, cfg)
     }
 }
 
@@ -362,16 +551,17 @@ impl Scenario for TrafficScenario {
 pub struct BurstScenario;
 
 impl FabricScenario for BurstScenario {
-    fn build(
+    fn plan(
         &self,
-        sim: &mut Sim<Msg>,
         sys: &System,
         cfg: &ExperimentConfig,
         rng: &mut Rng,
-    ) -> Result<()> {
-        let mut cfg = cfg.clone();
-        cfg.workload.generator = GeneratorKind::Burst;
-        TrafficScenario.build(sim, sys, &cfg, rng)
+    ) -> Result<FabricPlan> {
+        TrafficScenario.plan(sys, cfg, rng)
+    }
+
+    fn generator(&self, _cfg: &ExperimentConfig) -> GeneratorKind {
+        GeneratorKind::Burst
     }
 
     fn collect(&self, sim: &Sim<Msg>, _sys: &System, report: &mut Report) {
@@ -394,8 +584,24 @@ impl Scenario for BurstScenario {
         "traffic routes under bursty (synchronized-population) load"
     }
 
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
-        run_fabric_scenario(self, Scenario::name(self), cfg)
+    fn metrics(&self) -> &'static [MetricDecl] {
+        BURST_METRICS
+    }
+
+    /// Burst shares the traffic plan family: a sweep across
+    /// `generator=poisson,burst` (or across both scenarios) reuses one
+    /// cached plan.
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        zipf_plan_key(cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), BURST_METRICS, plan, cfg)
     }
 }
 
@@ -407,13 +613,12 @@ impl Scenario for BurstScenario {
 pub struct HotspotScenario;
 
 impl FabricScenario for HotspotScenario {
-    fn build(
+    fn plan(
         &self,
-        sim: &mut Sim<Msg>,
         sys: &System,
         cfg: &ExperimentConfig,
         rng: &mut Rng,
-    ) -> Result<()> {
+    ) -> Result<FabricPlan> {
         let fpgas: Vec<_> = sys.fpgas().collect();
         let n = fpgas.len();
         anyhow::ensure!(n >= 2, "hotspot scenario needs at least 2 FPGAs");
@@ -424,42 +629,45 @@ impl FabricScenario for HotspotScenario {
             n - 1
         );
         let hot = 0usize;
-        let (_, _, hot_actor, hot_ep) = fpgas[hot];
+        let hot_ep = fpgas[hot].3;
         let mut guid_next: u16 = 0;
-        for (fi, &(_, _, actor, _)) in fpgas.iter().enumerate() {
+        let mut per_fpga = Vec::with_capacity(n);
+        let mut rx = Vec::new();
+        for fi in 0..n {
             if fi == hot {
-                continue; // the hot FPGA only receives
+                // the hot FPGA only receives
+                per_fpga.push(FpgaPlan {
+                    sources: Vec::new(),
+                    gen_seed: None,
+                    tx: Vec::new(),
+                });
+                continue;
             }
             let mut sources = Vec::new();
+            let mut tx = Vec::new();
             for s in 0..cfg.workload.sources_per_fpga {
                 let hicann = (s % 8) as u8;
                 let pulse = (s / 8) as u16;
                 sources.push((hicann, pulse));
                 let guid = guid_next;
                 guid_next = guid_next.wrapping_add(1) & 0x7FFF;
-                sim.get_mut::<Fpga>(actor).tx_lut.add(
-                    hicann,
-                    pulse,
-                    TxEntry { dest: hot_ep, guid },
-                );
-                sim.get_mut::<Fpga>(hot_actor).rx_lut.set(
+                tx.push((hicann, pulse, TxEntry { dest: hot_ep, guid }));
+                rx.push((
+                    hot,
                     guid,
                     RxEntry {
                         hicann_mask: 0xFF,
                         pulse_addr: pulse,
                     },
-                );
+                ));
             }
-            let gen_id = spawn_generator(
-                sim,
-                cfg.workload.generator,
-                gen_config(cfg, sources),
-                actor,
-                rng.next_u64(),
-            );
-            sim.schedule(Time::ZERO, gen_id, Msg::Timer(0));
+            per_fpga.push(FpgaPlan {
+                sources,
+                gen_seed: Some(rng.next_u64()),
+                tx,
+            });
         }
-        Ok(())
+        Ok(FabricPlan { per_fpga, rx })
     }
 
     fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
@@ -479,8 +687,21 @@ impl Scenario for HotspotScenario {
         "all traffic converges on one hot FPGA (worst-case convergence)"
     }
 
-    fn run(&self, cfg: &ExperimentConfig) -> Result<Report> {
-        run_fabric_scenario(self, Scenario::name(self), cfg)
+    fn metrics(&self) -> &'static [MetricDecl] {
+        HOTSPOT_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        fabric_key_base("hotspot_plan", cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), HOTSPOT_METRICS, plan, cfg)
     }
 }
 
@@ -572,6 +793,33 @@ mod tests {
     }
 
     #[test]
+    fn one_plan_many_executes_share_resources() {
+        // a plan prepared once backs executes at different operating
+        // points (rate is an execute-time knob, not a plan input)
+        let base = small();
+        let plan = plan_fabric(&TrafficScenario, &base).unwrap();
+        let mut fast = base.clone();
+        fast.workload.rate_hz = 8e6;
+        let from_plan =
+            run_fabric_experiment_with(&TrafficScenario, &plan, &fast).unwrap().2;
+        let from_scratch = run(&fast);
+        assert_eq!(from_plan.to_json().to_string(), from_scratch.to_json().to_string());
+    }
+
+    #[test]
+    fn plan_rejects_mismatched_machine_shape() {
+        let base = small();
+        let plan = plan_fabric(&TrafficScenario, &base).unwrap();
+        let mut other = small();
+        other.system.fpgas_per_wafer = 8; // more FPGAs than the plan covers
+        let err = match run_fabric_experiment_with(&TrafficScenario, &plan, &other) {
+            Ok(_) => panic!("shape mismatch must be rejected"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("machine shape"), "{err:#}");
+    }
+
+    #[test]
     fn backend_choice_does_not_change_physics() {
         let mut heap_cfg = small();
         heap_cfg.queue = QueueKind::Heap;
@@ -585,7 +833,7 @@ mod tests {
 
     #[test]
     fn domain_count_does_not_change_physics() {
-        // the tentpole invariant: partitioned conservative PDES is a perf
+        // the PR 3 invariant: partitioned conservative PDES is a perf
         // knob only — byte-identical reports at any domain count
         let mut base = small();
         base.workload.fan_out = 2;
@@ -633,6 +881,24 @@ mod tests {
         assert!(r.get_count("rx_events").unwrap() > 0);
         assert!(r.get_count("bursts").unwrap() > 0, "no bursts recorded");
         assert_eq!(r.get_count("unrouted"), Some(0));
+    }
+
+    #[test]
+    fn burst_shares_traffic_plan_cache_family() {
+        let cfg = small();
+        assert_eq!(
+            Scenario::cache_key(&TrafficScenario, &cfg),
+            Scenario::cache_key(&BurstScenario, &cfg)
+        );
+        // and the prepared plan really is interchangeable: execute burst
+        // against a plan prepared by traffic
+        let prepared = TrafficScenario.prepare(&cfg).unwrap();
+        let via_traffic_plan = BurstScenario.execute(prepared.as_ref(), &cfg).unwrap();
+        let direct = BurstScenario.run(&cfg).unwrap();
+        assert_eq!(
+            via_traffic_plan.to_json().to_string(),
+            direct.to_json().to_string()
+        );
     }
 
     #[test]

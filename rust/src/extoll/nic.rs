@@ -16,6 +16,13 @@
 //! with dimension-order routing this keeps the channel-dependency graph
 //! acyclic, i.e. deadlock-free with finite input buffers.
 //! `credits_per_vc = 0` disables flow control (infinite buffers).
+//!
+//! Allocation discipline on the hot path: transit is allocation-free —
+//! packets move through the port queues by value and their spike payload
+//! `Vec` is never touched. The payload's birth (bucket flush) and death
+//! (FPGA RX) sites are closed into a free-list loop by
+//! [`super::packet::pool`] (packet-object pooling; A/B'd in
+//! `benches/bench_events.rs`).
 
 use std::collections::VecDeque;
 

@@ -13,6 +13,108 @@ use crate::sim::{ActorId, Time};
 
 use super::torus::NodeAddr;
 
+/// Free-list pooling of spike-batch payload buffers — the packet-object
+/// pooling of the DES hot path (ROADMAP perf target; A/B'd in
+/// `benches/bench_events.rs`).
+///
+/// A `SpikeBatch` packet's only heap allocation is its
+/// `Vec<RoutedEvent>` payload. That vector is born when an aggregation
+/// bucket cuts a flush batch (`fpga/bucket.rs`), rides the packet
+/// through concentrators and NICs by move (transit never reallocates —
+/// see `extoll/nic.rs`), and dies when the destination FPGA's RX path
+/// consumes it. Under load that is one allocation + one free per packet,
+/// the next-largest allocator load after the slab-pooled event queue.
+///
+/// This pool closes the loop: the RX path [`pool::recycle`]s the spent
+/// buffer and the bucket layer [`pool::take`]s it for the next flush.
+/// Free lists are **thread-local**, so partitioned PDES workers never
+/// contend, and pooling is invisible to the simulation: buffers are
+/// cleared on reuse and carry no identity, so reports are byte-identical
+/// with the pool on or off (gated in `rust/tests/determinism_queue.rs`).
+/// [`pool::set_enabled`] exists for exactly that A/B.
+pub mod pool {
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    use crate::fpga::event::RoutedEvent;
+
+    /// Cap on pooled buffers per thread (a full list is ~124 events ×
+    /// 4096 buffers ≈ 8 MB of f32-sized cells — generous for any
+    /// machine size we simulate; beyond it, recycled buffers just drop).
+    const MAX_FREE_PER_THREAD: usize = 4096;
+
+    static ENABLED: AtomicBool = AtomicBool::new(true);
+    static RECYCLED: AtomicU64 = AtomicU64::new(0);
+    static FRESH: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static FREE: RefCell<Vec<Vec<RoutedEvent>>> = RefCell::new(Vec::new());
+    }
+
+    /// Turn pooling off/on (process-wide). Only intended for the
+    /// bench A/B; the default is on.
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// An empty event buffer with at least `capacity` reserved —
+    /// recycled when the thread-local free list has one, fresh otherwise.
+    ///
+    /// Disabled, it returns an **unreserved** `Vec` — exactly the
+    /// pre-pooling behaviour (`std::mem::take` of a bucket accumulator),
+    /// so the bench A/B measures pooling against the true old baseline
+    /// rather than a pre-reserved one.
+    pub fn take(capacity: usize) -> Vec<RoutedEvent> {
+        if !enabled() {
+            return Vec::new();
+        }
+        let recycled = FREE.with(|f| f.borrow_mut().pop());
+        if let Some(mut buf) = recycled {
+            RECYCLED.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(buf.is_empty());
+            if buf.capacity() < capacity {
+                // buf is empty, so this guarantees capacity() ≥ capacity
+                buf.reserve(capacity);
+            }
+            return buf;
+        }
+        FRESH.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(capacity)
+    }
+
+    /// Return a spent payload buffer to the current thread's free list.
+    pub fn recycle(mut buf: Vec<RoutedEvent>) {
+        if !enabled() || buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        FREE.with(|f| {
+            let mut free = f.borrow_mut();
+            if free.len() < MAX_FREE_PER_THREAD {
+                free.push(buf);
+            }
+        });
+    }
+
+    /// `(recycled, fresh)` buffer counts since the last
+    /// [`reset_stats`] (process-wide, for the bench artifact).
+    pub fn stats() -> (u64, u64) {
+        (
+            RECYCLED.load(Ordering::Relaxed),
+            FRESH.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn reset_stats() {
+        RECYCLED.store(0, Ordering::Relaxed);
+        FRESH.store(0, Ordering::Relaxed);
+    }
+}
+
 /// Maximum payload per Extoll packet (paper: 496 B = 124 events).
 pub const MAX_PAYLOAD_BYTES: u32 = 496;
 /// Maximum events per packet (paper: 124).
@@ -284,6 +386,35 @@ mod tests {
     fn notification_is_small() {
         let p = Packet::notification(NodeAddr(0), NodeAddr(1), 42, Time::ZERO, 0);
         assert!(p.wire_bytes() <= 32);
+    }
+
+    /// One test covers take/recycle/disable: the enable flag is
+    /// process-wide, so splitting these into parallel-running tests
+    /// would race on it. (Free lists themselves are thread-local.)
+    #[test]
+    fn pool_roundtrip_and_disable() {
+        let spent = {
+            let mut v = pool::take(124);
+            assert!(v.capacity() >= 124);
+            v.push(RoutedEvent::new(1, 2, Time::ZERO));
+            v
+        };
+        pool::recycle(spent);
+        let reused = pool::take(124);
+        assert!(reused.is_empty(), "recycled buffer must come back cleared");
+        assert!(reused.capacity() >= 124);
+        // a zero-capacity buffer is not worth pooling
+        pool::recycle(Vec::new());
+        let (recycled, fresh) = pool::stats();
+        assert!(recycled >= 1);
+        assert!(fresh >= 1);
+        // disabled: take reverts to the pre-pooling baseline — an
+        // unreserved buffer that regrows on demand
+        pool::set_enabled(false);
+        assert!(!pool::enabled());
+        let v = pool::take(16);
+        assert_eq!(v.capacity(), 0);
+        pool::set_enabled(true);
     }
 
     #[test]

@@ -225,7 +225,14 @@ impl Bucket {
             return None;
         }
         let dest = self.dest.expect("flush of unbound bucket");
-        let events = std::mem::take(&mut self.accum);
+        // swap in a pooled replacement buffer instead of an empty Vec:
+        // the flushed payload travels in the packet and is recycled by
+        // the RX path (`extoll::packet::pool`), so steady-state flushing
+        // allocates nothing and never regrows the accumulation side
+        let events = std::mem::replace(
+            &mut self.accum,
+            crate::extoll::packet::pool::take(self.cfg.capacity),
+        );
         let oldest = self.oldest_ingress;
         self.draining = true;
         self.total_flushes += 1;

@@ -264,12 +264,14 @@ impl Fpga {
     }
 
     /// RX path: distribute a delivered spike batch to the HICANN chips.
+    /// The spent payload buffer goes back to the packet pool
+    /// (`extoll::packet::pool`) for the next bucket flush.
     fn receive_batch(&mut self, events: Vec<RoutedEvent>, ctx: &mut Ctx<'_, Msg>) {
         let now = ctx.now();
         // model the RX lookup pipeline latency once per packet
         let _ = self.cfg.lookup_cycles;
         self.stats.rx_packets += 1;
-        for ev in events {
+        for ev in events.iter().copied() {
             self.stats.rx_events += 1;
             match self.rx_lut.lookup(ev.guid) {
                 None => {
@@ -296,6 +298,7 @@ impl Fpga {
                 }
             }
         }
+        crate::extoll::packet::pool::recycle(events);
     }
 
     /// Total events currently inside the FPGA (buckets + stall FIFO +

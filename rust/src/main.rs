@@ -105,14 +105,34 @@ fn apply_set(cfg: &mut ExperimentConfig, spec: &str) -> Result<()> {
 }
 
 fn list_scenarios() {
-    let mut t = Table::new("registered scenarios", &["scenario", "about"]);
+    let mut t = Table::new("registered scenarios", &["scenario", "about", "metrics"]);
     for s in scenario::registry() {
-        t.row(vec![s.name().to_string(), s.about().to_string()]);
+        t.row(vec![
+            s.name().to_string(),
+            s.about().to_string(),
+            s.metrics().len().to_string(),
+        ]);
     }
     t.print();
+    // the declared metric schema of every scenario (validated on push,
+    // and the sweep CSV's column order)
+    for s in scenario::registry() {
+        let mut mt = Table::new(
+            &format!("{} metrics", s.name()),
+            &["metric", "kind", "unit"],
+        );
+        for d in s.metrics() {
+            mt.row(vec![
+                d.name.to_string(),
+                d.kind.as_str().to_string(),
+                d.unit.to_string(),
+            ]);
+        }
+        mt.print();
+    }
 }
 
-fn find_scenario(name: &str) -> Result<Box<dyn scenario::Scenario>> {
+fn find_scenario(name: &str) -> Result<&'static dyn scenario::Scenario> {
     scenario::find(name).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown scenario '{name}' (registered: {})",
@@ -134,7 +154,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
     let name = p.positional("scenario").expect("required positional");
     let s = find_scenario(name)?;
-    let mut cfg = load_config(&p, s.as_ref())?;
+    let mut cfg = load_config(&p, s)?;
     apply_set(&mut cfg, p.get("set"))?;
     let report = s.run(&cfg)?;
     if p.flag("json") {
@@ -165,20 +185,24 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         "--grid is required, e.g. --grid \"rate_hz=1e6,5e6;fan_out=1,2\""
     );
     let s = find_scenario(p.get("scenario"))?;
-    let mut cfg = load_config(&p, s.as_ref())?;
+    let mut cfg = load_config(&p, s)?;
     apply_set(&mut cfg, p.get("set"))?;
     let jobs = p.try_u64("jobs").map_err(|e| anyhow::anyhow!("{}", e.0))? as usize;
     let runner = SweepRunner::from_grid(cfg, p.get("grid"))?.jobs(jobs);
     let result = if jobs > 1 {
         // completion order is nondeterministic; result order is not
-        runner.run_parallel(s.as_ref(), |done, n| {
+        runner.run_parallel(s, |done, n| {
             eprintln!("sweep: {done}/{n} points done ({jobs} jobs)");
         })?
     } else {
-        runner.run_with_progress(s.as_ref(), |i, n| {
+        runner.run_with_progress(s, |i, n| {
             eprintln!("sweep: point {}/{n}", i + 1);
         })?
     };
+    eprintln!(
+        "sweep cache: {} prepared, {} reused",
+        result.cache.misses, result.cache.hits
+    );
     if !p.get("out").is_empty() {
         std::fs::write(p.get("out"), result.to_json().pretty())?;
         eprintln!("wrote {}", p.get("out"));
@@ -204,7 +228,7 @@ fn cmd_traffic(args: &[String]) -> Result<()> {
         .flag("json", "emit the full report as JSON");
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
     let s = find_scenario("traffic")?;
-    let mut cfg = load_config(&p, s.as_ref())?;
+    let mut cfg = load_config(&p, s)?;
     if p.get_f64("rate") > 0.0 {
         cfg.workload.rate_hz = p.get_f64("rate");
     }
@@ -234,7 +258,7 @@ fn cmd_microcircuit(args: &[String]) -> Result<()> {
     .flag("json", "emit the full report as JSON");
     let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
     let s = find_scenario("microcircuit")?;
-    let mut cfg = load_config(&p, s.as_ref())?;
+    let mut cfg = load_config(&p, s)?;
     if p.get_u64("steps") > 0 {
         cfg.neuro.steps = p.get_usize("steps");
     }

@@ -131,6 +131,11 @@ impl WeightBuffer {
 /// Signature (see `python/compile/model.py`):
 /// `state f32[3, n_local] × spikes_in f32[n_global] × w f32[n_local, n_global]
 ///  → state' f32[3, n_local]` — row 2 of the output holds this step's spikes.
+///
+/// `Clone` is cheap (manifest + path, no tensors): the two-phase
+/// `Scenario` lifecycle loads an artifact once in `prepare` and clones
+/// the handle per [`crate::neuro::shard::ShardSim`] in `execute`.
+#[derive(Clone)]
 pub struct ShardModel {
     pub manifest: Manifest,
     pub path: PathBuf,

@@ -11,9 +11,81 @@
 //! round-trips through [`Report::to_json`] / [`Report::from_json`] up to
 //! numeric normalization (JSON cannot distinguish `17.0` from `17`, so
 //! integral non-negative numbers parse back as [`Value::Count`]).
+//!
+//! ## Declared metric schemas
+//!
+//! Scenarios declare what they will report as a static
+//! `&'static [MetricDecl]` (name, unit, kind — see
+//! `coordinator::scenario::Scenario::metrics`). A report built with
+//! [`Report::with_schema`] **validates every push** against that
+//! declaration: pushing an undeclared metric, the wrong [`MetricKind`],
+//! or a mismatched unit panics — declaring the schema and then drifting
+//! from it is a programming error, not a data condition. The sweep
+//! runner uses the same declarations for stable CSV column ordering.
 
 use crate::util::bench::{eng, Table};
 use crate::util::json::Json;
+
+/// The value shape a declared metric must be pushed with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Exact counter ([`Value::Count`]).
+    Count,
+    /// Real-valued measurement ([`Value::Real`]).
+    Real,
+    /// Non-numeric metric ([`Value::Text`]).
+    Text,
+}
+
+impl MetricKind {
+    /// Lowercase label for listings (`run --list`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Count => "count",
+            MetricKind::Real => "real",
+            MetricKind::Text => "text",
+        }
+    }
+}
+
+/// One declared metric of a scenario's schema.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricDecl {
+    /// Stable metric key (report entry / CSV column name).
+    pub name: &'static str,
+    /// Unit label; empty when unitless.
+    pub unit: &'static str,
+    pub kind: MetricKind,
+}
+
+impl MetricDecl {
+    /// Declare an exact counter.
+    pub const fn count(name: &'static str, unit: &'static str) -> MetricDecl {
+        MetricDecl {
+            name,
+            unit,
+            kind: MetricKind::Count,
+        }
+    }
+
+    /// Declare a real-valued measurement.
+    pub const fn real(name: &'static str, unit: &'static str) -> MetricDecl {
+        MetricDecl {
+            name,
+            unit,
+            kind: MetricKind::Real,
+        }
+    }
+
+    /// Declare a non-numeric (text) metric.
+    pub const fn text(name: &'static str) -> MetricDecl {
+        MetricDecl {
+            name,
+            unit: "",
+            kind: MetricKind::Text,
+        }
+    }
+}
 
 /// One metric value.
 #[derive(Clone, Debug, PartialEq)]
@@ -112,10 +184,21 @@ pub struct Entry {
 }
 
 /// An insertion-ordered, metric-keyed experiment report.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default)]
 pub struct Report {
     scenario: String,
     entries: Vec<Entry>,
+    /// Declared schema; every push is validated against it when present.
+    schema: Option<&'static [MetricDecl]>,
+}
+
+/// Schema is a validation aid, not data: two reports are equal when their
+/// scenario and entries agree, regardless of how they were validated
+/// (e.g. a [`Report::from_json`] round-trip carries no schema).
+impl PartialEq for Report {
+    fn eq(&self, other: &Report) -> bool {
+        self.scenario == other.scenario && self.entries == other.entries
+    }
 }
 
 impl Report {
@@ -123,6 +206,18 @@ impl Report {
         Report {
             scenario: scenario.to_string(),
             entries: Vec::new(),
+            schema: None,
+        }
+    }
+
+    /// A report that validates every push against `schema` (see the
+    /// module docs): undeclared keys, kind mismatches and unit mismatches
+    /// panic at push time.
+    pub fn with_schema(scenario: &str, schema: &'static [MetricDecl]) -> Report {
+        Report {
+            scenario: scenario.to_string(),
+            entries: Vec::new(),
+            schema: Some(schema),
         }
     }
 
@@ -131,15 +226,50 @@ impl Report {
         &self.scenario
     }
 
+    /// The schema this report validates against (None = unvalidated).
+    pub fn schema(&self) -> Option<&'static [MetricDecl]> {
+        self.schema
+    }
+
     /// Insert (or replace) a unitless metric. Insertion order is kept;
     /// replacing keeps the original position.
     pub fn push(&mut self, key: &str, value: impl Into<Value>) {
         self.push_unit(key, value, "");
     }
 
+    fn validate(&self, key: &str, value: &Value, unit: &str) {
+        let Some(schema) = self.schema else {
+            return;
+        };
+        let Some(decl) = schema.iter().find(|d| d.name == key) else {
+            panic!(
+                "scenario '{}' pushed undeclared metric '{key}' — declare it \
+                 in the scenario's metrics() schema",
+                self.scenario
+            );
+        };
+        let kind_ok = matches!(
+            (value, decl.kind),
+            (Value::Count(_), MetricKind::Count)
+                | (Value::Real(_), MetricKind::Real)
+                | (Value::Text(_), MetricKind::Text)
+        );
+        assert!(
+            kind_ok,
+            "scenario '{}', metric '{key}': declared kind {:?}, pushed {value:?}",
+            self.scenario, decl.kind
+        );
+        assert!(
+            decl.unit == unit,
+            "scenario '{}', metric '{key}': declared unit '{}', pushed '{unit}'",
+            self.scenario, decl.unit
+        );
+    }
+
     /// Insert (or replace) a metric with a unit label.
     pub fn push_unit(&mut self, key: &str, value: impl Into<Value>, unit: &str) {
         let value = value.into();
+        self.validate(key, &value, unit);
         if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
             e.value = value;
             e.unit = unit.to_string();
@@ -329,6 +459,49 @@ mod tests {
         assert!(s.contains("events_generated"));
         assert!(s.contains("12345"));
         assert!(s.contains("events/packet"));
+    }
+
+    const SCHEMA: &[MetricDecl] = &[
+        MetricDecl::count("events", "events"),
+        MetricDecl::real("rate", "events/s"),
+        MetricDecl::text("policy"),
+    ];
+
+    #[test]
+    fn schema_accepts_declared_pushes() {
+        let mut r = Report::with_schema("unit", SCHEMA);
+        r.push_unit("events", 7u64, "events");
+        r.push_unit("rate", 2.5, "events/s");
+        r.push("policy", "fullest");
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.schema().unwrap().len(), 3);
+        // a schema-validated report equals its schemaless twin
+        let mut plain = Report::new("unit");
+        plain.push_unit("events", 7u64, "events");
+        plain.push_unit("rate", 2.5, "events/s");
+        plain.push("policy", "fullest");
+        assert_eq!(r, plain);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared metric")]
+    fn schema_rejects_undeclared_metric() {
+        let mut r = Report::with_schema("unit", SCHEMA);
+        r.push_unit("surprise", 1u64, "events");
+    }
+
+    #[test]
+    #[should_panic(expected = "declared kind")]
+    fn schema_rejects_kind_mismatch() {
+        let mut r = Report::with_schema("unit", SCHEMA);
+        r.push_unit("events", 1.5, "events");
+    }
+
+    #[test]
+    #[should_panic(expected = "declared unit")]
+    fn schema_rejects_unit_mismatch() {
+        let mut r = Report::with_schema("unit", SCHEMA);
+        r.push_unit("events", 1u64, "packets");
     }
 
     #[test]

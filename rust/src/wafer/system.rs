@@ -286,10 +286,20 @@ impl System {
     /// flush-reason breakdown). Scenario drivers start from this and
     /// append their scenario-specific metrics.
     pub fn fabric_report(&self, sim: &Sim<Msg>, scenario: &str, duration: Time) -> Report {
+        let mut r = Report::new(scenario);
+        self.fill_fabric_report(sim, &mut r, duration);
+        r
+    }
+
+    /// Push the standard fabric metrics into an existing report — the
+    /// schema-validated path: scenario drivers pass a
+    /// [`Report::with_schema`] report so every push is checked against
+    /// the scenario's declared metrics (the fabric declarations live in
+    /// `coordinator/traffic.rs` and mirror this push order).
+    pub fn fill_fabric_report(&self, sim: &Sim<Msg>, r: &mut Report, duration: Time) {
         let totals = self.manager_totals(sim);
         let latency = self.latency_histogram(sim);
         let rx_events = self.total_rx_events(sim);
-        let mut r = Report::new(scenario);
         r.push_unit("duration", duration.secs_f64(), "s");
         r.push_unit("events_in", self.total_events_in(sim), "events");
         r.push_unit("events_out", self.total_events_out(sim), "events");
@@ -316,7 +326,6 @@ impl System {
             rx_events as f64 / duration.secs_f64(),
             "events/s",
         );
-        r
     }
 
     /// Actors receiving the external flush barrier, in schedule order.

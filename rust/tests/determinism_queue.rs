@@ -1,17 +1,21 @@
-//! Cross-backend, cross-job-count and cross-domain-count determinism.
+//! Cross-backend, cross-job-count, cross-domain-count and cross-cache
+//! determinism.
 //!
 //! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
-//! sweep runner (`--jobs N`) and the partitioned conservative PDES
-//! (`domains=N`) are performance features only: they must be
+//! sweep runner (`--jobs N`), the partitioned conservative PDES
+//! (`domains=N`), the sweep-level resource cache (PR 4) and packet-
+//! payload pooling (PR 4) are performance features only: they must be
 //! observationally identical to the reference heap backend, the serial
-//! runner and the single-domain event loop. These tests pin that
-//! contract at the artifact level — byte-identical report JSON and sweep
-//! CSV (the determinism bar set in PR 2, extended to PDES in PR 3; see
-//! docs/ARCHITECTURE.md for why the merge-key design makes this hold).
+//! runner, the single-domain event loop, a cold per-point prepare and
+//! unpooled allocation. These tests pin that contract at the artifact
+//! level — byte-identical report JSON and sweep CSV (the determinism bar
+//! set in PR 2, extended in PR 3/PR 4; see docs/ARCHITECTURE.md for why
+//! the merge-key and cache-key designs make this hold).
 
 use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::sweep::SweepRunner;
 use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
 use bss_extoll::sim::{QueueKind, Time};
 use bss_extoll::util::report::Report;
@@ -116,7 +120,7 @@ fn sweep_csv_identical_across_backends() {
         base.queue = kind;
         SweepRunner::from_grid(base, grid)
             .unwrap()
-            .run(scenario.as_ref())
+            .run(scenario)
             .unwrap()
             .to_csv()
     };
@@ -188,7 +192,7 @@ fn sweep_csv_identical_across_domain_counts() {
         base.domains = domains;
         SweepRunner::from_grid(base, grid)
             .unwrap()
-            .run(scenario.as_ref())
+            .run(scenario)
             .unwrap()
             .to_csv()
     };
@@ -205,17 +209,175 @@ fn sweep_jobs4_artifacts_identical_to_serial() {
     let grid = "eviction=most_urgent,fullest,oldest,round_robin;fan_out=1,2";
     let serial = SweepRunner::from_grid(small(), grid)
         .unwrap()
-        .run(scenario.as_ref())
+        .run(scenario)
         .unwrap();
     let parallel = SweepRunner::from_grid(small(), grid)
         .unwrap()
         .jobs(4)
-        .run(scenario.as_ref())
+        .run(scenario)
         .unwrap();
     assert_eq!(serial.points.len(), 8);
     assert_eq!(serial.to_csv(), parallel.to_csv());
+    // full artifact identity includes the surfaced cache counters: the
+    // per-key latch makes hit/miss deterministic across job counts
+    // (fan_out is the only plan input among the axes → 2 misses, 6 hits)
+    assert_eq!(serial.cache.misses, 2);
+    assert_eq!(serial.cache.hits, 6);
     assert_eq!(
         serial.to_json().pretty(),
         parallel.to_json().pretty()
     );
+}
+
+// ---- PR 4: sweep resource cache + packet pooling -------------------------
+
+/// Cold vs warm cache: re-running a sweep on the same runner serves every
+/// point from cached plans; points and CSV stay byte-identical.
+#[test]
+fn sweep_cache_cold_vs_warm_byte_identical() {
+    let scenario = find("traffic").unwrap();
+    let grid = "rate_hz=1e6,2e6,4e6;eviction=most_urgent,fullest";
+    let runner = SweepRunner::from_grid(small(), grid).unwrap();
+    let cold = runner.run(scenario).unwrap();
+    // neither axis feeds the route plan: one prepare, five reuses
+    assert_eq!(cold.points.len(), 6);
+    assert_eq!(cold.cache.misses, 1);
+    assert_eq!(cold.cache.hits, 5);
+    let warm = runner.run(scenario).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.cache.hits, 6);
+    assert_eq!(cold.to_csv(), warm.to_csv());
+    // point data identical (the top-level cache counters legitimately
+    // differ between a cold and a warm run)
+    assert_eq!(
+        cold.to_json().get("points").unwrap().to_string(),
+        warm.to_json().get("points").unwrap().to_string()
+    );
+}
+
+/// The cached sweep is byte-identical to per-point `run()` (the
+/// pre-redesign serial behaviour: every point prepares from scratch).
+#[test]
+fn sweep_cache_matches_uncached_per_point_runs() {
+    use bss_extoll::coordinator::sweep::apply_override;
+    let scenario = find("traffic").unwrap();
+    let runner = SweepRunner::new(small()).axis("rate_hz", &["1e6", "4e6"]);
+    let cached = runner.run(scenario).unwrap();
+    for point in &cached.points {
+        let mut cfg = small();
+        for (k, v) in &point.params {
+            apply_override(&mut cfg, k, v).unwrap();
+        }
+        let cold = scenario.run(&cfg).unwrap();
+        assert_eq!(
+            cold.to_json().pretty(),
+            point.report.to_json().pretty(),
+            "cached sweep point diverged from a cold run at {:?}",
+            point.params
+        );
+    }
+}
+
+/// Cache counters — and therefore the whole aggregate JSON — are
+/// identical at `--jobs 1/2/4`, even when all points share one key and
+/// the workers race for it.
+#[test]
+fn sweep_cache_counters_identical_across_jobs() {
+    let scenario = find("traffic").unwrap();
+    let grid = "rate_hz=1e6,2e6,3e6,4e6";
+    let serial = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.cache.misses, 1);
+    assert_eq!(serial.cache.hits, 3);
+    for jobs in [2usize, 4] {
+        let parallel = SweepRunner::from_grid(small(), grid)
+            .unwrap()
+            .jobs(jobs)
+            .run(scenario)
+            .unwrap();
+        assert_eq!(
+            serial.to_json().pretty(),
+            parallel.to_json().pretty(),
+            "sweep artifact diverged at jobs={jobs}"
+        );
+    }
+}
+
+/// The acceptance gate: a microcircuit sweep over ≥4 points loads its
+/// artifact exactly once (one cache miss), and the sweep's simulated
+/// metrics are identical at `--jobs 1/2/4` and equal to cold per-point
+/// runs. (Wall-clock metrics are stripped, as for every microcircuit
+/// determinism gate.)
+#[test]
+fn microcircuit_sweep_loads_artifact_once_and_matches_serial() {
+    if !bss_extoll::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let scenario = find("microcircuit").unwrap();
+    let base = scenario.default_config();
+    let grid = "steps=4,6,8,10";
+    let canon = |result: &bss_extoll::coordinator::SweepResult| -> String {
+        result
+            .points
+            .iter()
+            .map(|p| format!("{:?}|{}", p.params, canonical_without_wallclock(&p.report)))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = SweepRunner::from_grid(base.clone(), grid)
+        .unwrap()
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.points.len(), 4);
+    assert_eq!(
+        serial.cache.misses, 1,
+        "artifact + weights must be prepared exactly once across the sweep"
+    );
+    assert_eq!(serial.cache.hits, 3);
+    let serial_canon = canon(&serial);
+    for jobs in [2usize, 4] {
+        let parallel = SweepRunner::from_grid(base.clone(), grid)
+            .unwrap()
+            .jobs(jobs)
+            .run(scenario)
+            .unwrap();
+        assert_eq!(parallel.cache.misses, 1, "jobs={jobs}");
+        assert_eq!(
+            serial_canon,
+            canon(&parallel),
+            "microcircuit sweep diverged at jobs={jobs}"
+        );
+    }
+    // cold per-point runs (pre-redesign behaviour) agree too
+    use bss_extoll::coordinator::sweep::apply_override;
+    for point in &serial.points {
+        let mut cfg = base.clone();
+        for (k, v) in &point.params {
+            apply_override(&mut cfg, k, v).unwrap();
+        }
+        let cold = scenario.run(&cfg).unwrap();
+        assert_eq!(
+            canonical_without_wallclock(&cold),
+            canonical_without_wallclock(&point.report),
+            "cached microcircuit point diverged at {:?}",
+            point.params
+        );
+    }
+}
+
+/// Packet-payload pooling is a perf knob only: reports are byte-identical
+/// with the pool disabled.
+#[test]
+fn packet_pool_does_not_change_physics() {
+    let scenario = find("traffic").unwrap();
+    let mut cfg = small();
+    cfg.workload.fan_out = 2;
+    pool::set_enabled(false);
+    let unpooled = scenario.run(&cfg).unwrap().to_json().pretty();
+    pool::set_enabled(true);
+    let pooled = scenario.run(&cfg).unwrap().to_json().pretty();
+    assert_eq!(unpooled, pooled, "packet pooling changed observable results");
 }

