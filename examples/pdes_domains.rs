@@ -1,13 +1,15 @@
 //! Partitioned conservative PDES from the library API: run the same
-//! traffic scenario at `domains = 1, 2, 4`, verify the reports are
-//! byte-identical (domain count is a perf knob, not physics — see
-//! docs/ARCHITECTURE.md §2.3), and print the wall-clock scaling.
+//! traffic scenario at `domains = 1, 2, 4` under both synchronization
+//! protocols (windowed global minimum and per-neighbor channel clocks),
+//! verify the reports are byte-identical (domain count and sync protocol
+//! are perf knobs, not physics — see docs/ARCHITECTURE.md §2.3), and
+//! print the wall-clock scaling.
 //!
 //! Run: `cargo run --release --example pdes_domains`
 //!
 //! The CLI spelling of the same thing:
-//! `bss-extoll run traffic --set "domains=4"` — every knob is documented
-//! in docs/TUNING.md.
+//! `bss-extoll run traffic --set "domains=4;sync=channel"` — every knob
+//! is documented in docs/TUNING.md.
 
 use std::time::Instant;
 
@@ -15,7 +17,7 @@ use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::network::pdes_lookahead;
 use bss_extoll::extoll::torus::{DomainMap, TorusSpec};
-use bss_extoll::sim::Time;
+use bss_extoll::sim::{SyncMode, Time};
 use bss_extoll::util::bench::{eng, Table};
 use bss_extoll::wafer::system::SystemConfig;
 
@@ -46,11 +48,18 @@ fn main() {
     let scenario = find("traffic").expect("traffic registered");
     let mut table = Table::new(
         "PDES domain scaling — traffic scenario",
-        &["domains", "des_events", "wall_s", "events/s", "speedup"],
+        &["sync", "domains", "des_events", "wall_s", "events/s", "speedup"],
     );
     let mut reference: Option<(String, f64)> = None;
-    for domains in [1usize, 2, 4] {
+    for (sync, domains) in [
+        (SyncMode::Window, 1usize),
+        (SyncMode::Window, 2),
+        (SyncMode::Window, 4),
+        (SyncMode::Channel, 2),
+        (SyncMode::Channel, 4),
+    ] {
         let mut c = cfg.clone();
+        c.sync = sync;
         c.domains = domains;
         let t0 = Instant::now();
         let report = scenario.run(&c).expect("run failed");
@@ -61,7 +70,8 @@ fn main() {
         let speedup = if let Some((serial_json, serial_eps)) = &reference {
             assert_eq!(
                 serial_json, &json,
-                "report diverged at domains={domains} — determinism bug"
+                "report diverged at sync={} domains={domains} — determinism bug",
+                sync.as_str()
             );
             eps / *serial_eps
         } else {
@@ -71,6 +81,10 @@ fn main() {
             reference = Some((json, eps));
         }
         table.row(vec![
+            // domains=1 takes the serial path regardless of sync mode;
+            // label it like the bench artifact does to avoid implying a
+            // windowed barrier ran
+            if domains == 1 { "serial" } else { sync.as_str() }.to_string(),
             domains.to_string(),
             events.to_string(),
             format!("{wall:.3}"),
@@ -79,5 +93,5 @@ fn main() {
         ]);
     }
     table.print();
-    println!("\nreports byte-identical across domain counts ✓");
+    println!("\nreports byte-identical across sync modes and domain counts ✓");
 }

@@ -1,19 +1,23 @@
 //! Perf-trajectory benchmark (see PERF.md): A/B of the event-queue
 //! backends (binary heap vs calendar wheel), serial-vs-parallel sweep
-//! execution, PDES domain scaling, the sweep-level resource cache
-//! (prepare-once vs per-point cold runs), and packet-payload pooling.
+//! execution, PDES domain scaling, PDES sync-protocol scaling (windowed
+//! global-minimum vs per-neighbor channel clocks), the sweep-level
+//! resource cache (prepare-once vs per-point cold runs), and
+//! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR4.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR5.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
 //! and speedup for `sweep --jobs {1,2,4}`, events/s at `domains=1/2/4`
-//! with a report-identity check against the serial run, cached-sweep
-//! speedup + hit/miss counters for traffic and microcircuit, and
-//! pool-on/off events/s with a byte-identity check. The CI `bench-smoke`
-//! job re-runs it with `BSS_BENCH_FAST=1` and fails on any `SKIPPED`
-//! row, so this artifact cannot silently rot.
+//! with a report-identity check against the serial run, window-vs-channel
+//! events/s at `domains=2/4/8` on a 16-node torus, cached-sweep speedup +
+//! hit/miss counters for traffic and microcircuit, and pool-on/off
+//! events/s with a byte-identity check. The CI `bench-smoke` job re-runs
+//! it with `BSS_BENCH_FAST=1`, fails on any `SKIPPED` row, and validates
+//! the artifact shape with `scripts/validate_bench.py`, so this artifact
+//! cannot silently rot.
 
 use std::time::Instant;
 
@@ -22,7 +26,7 @@ use bss_extoll::coordinator::sweep::SweepRunner;
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
-use bss_extoll::sim::{EventQueue, QueueKind, Time};
+use bss_extoll::sim::{EventQueue, QueueKind, SyncMode, Time};
 use bss_extoll::util::bench::{eng, fast_mode, BenchSuite, Table};
 use bss_extoll::util::json::Json;
 use bss_extoll::util::rng::Rng;
@@ -68,18 +72,29 @@ fn traffic_base(fast: bool) -> ExperimentConfig {
     cfg
 }
 
-/// One traffic run on `kind`: (DES events dispatched, wall seconds).
-fn traffic_run(kind: QueueKind, base: &ExperimentConfig) -> (u64, f64) {
-    let mut cfg = base.clone();
-    cfg.queue = kind;
-    let scenario = find("traffic").expect("traffic registered");
-    let t0 = Instant::now();
-    let report = scenario.run(&cfg).expect("traffic run failed");
-    let wall = t0.elapsed().as_secs_f64();
-    let events = report
-        .get_count("des_events")
-        .expect("des_events metric missing");
-    (events, wall)
+/// Best-of-`reps` measurement of one scenario config: (DES events
+/// dispatched, best wall seconds, pretty report JSON of the last rep).
+/// Every event-loop section (heap/wheel A/B, PDES domain and sync
+/// scaling, packet pooling) measures through this one helper so the
+/// protocol (rep count, best-of selection) can never drift apart
+/// between sections.
+fn timed_runs(scenario: &dyn Scenario, cfg: &ExperimentConfig, reps: u32) -> (u64, f64, String) {
+    let mut best_wall = f64::INFINITY;
+    let mut events = 0u64;
+    let mut json = String::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let report = scenario.run(cfg).expect("bench scenario run failed");
+        let wall = t0.elapsed().as_secs_f64();
+        events = report
+            .get_count("des_events")
+            .expect("des_events metric missing");
+        json = report.to_json().pretty();
+        if wall < best_wall {
+            best_wall = wall;
+        }
+    }
+    (events, best_wall, json)
 }
 
 /// The `eviction_ablation` base config, trimmed so a grid point stays
@@ -113,6 +128,7 @@ fn main() {
 
     // ---- 2. traffic-scenario event loop: heap vs wheel --------------------
     let base = traffic_base(fast);
+    let traffic = find("traffic").expect("traffic registered");
     let mut loop_runs = Json::arr();
     let mut loop_table = Table::new(
         "traffic-scenario event loop",
@@ -120,15 +136,9 @@ fn main() {
     );
     let mut events_per_s = [0.0f64; 2];
     for (ki, kind) in [QueueKind::Heap, QueueKind::Wheel].into_iter().enumerate() {
-        let mut best_wall = f64::INFINITY;
-        let mut events = 0u64;
-        for _ in 0..reps {
-            let (e, wall) = traffic_run(kind, &base);
-            events = e;
-            if wall < best_wall {
-                best_wall = wall;
-            }
-        }
+        let mut cfg = base.clone();
+        cfg.queue = kind;
+        let (events, best_wall, _) = timed_runs(traffic, &cfg, reps);
         let eps = events as f64 / best_wall;
         events_per_s[ki] = eps;
         loop_table.row(vec![
@@ -151,7 +161,6 @@ fn main() {
 
     // ---- 3. sweep scaling: serial vs parallel -----------------------------
     let grid = "eviction=most_urgent,fullest,oldest,round_robin";
-    let scenario = find("traffic").expect("traffic registered");
     let sweep_cfg = sweep_base(fast);
     let mut sweep_runs = Json::arr();
     let mut sweep_table = Table::new(
@@ -166,7 +175,7 @@ fn main() {
             .expect("sweep grid")
             .jobs(jobs);
         let t0 = Instant::now();
-        let result = runner.run(scenario).expect("sweep run failed");
+        let result = runner.run(traffic).expect("sweep run failed");
         let wall = t0.elapsed().as_secs_f64();
         let csv = result.to_csv();
         if jobs == 1 {
@@ -213,22 +222,7 @@ fn main() {
     for domains in [1usize, 2, 4] {
         let mut cfg = pdes_cfg.clone();
         cfg.domains = domains;
-        let scenario = find("traffic").expect("traffic registered");
-        let mut best_wall = f64::INFINITY;
-        let mut events = 0u64;
-        let mut json = String::new();
-        for _ in 0..reps {
-            let t0 = Instant::now();
-            let report = scenario.run(&cfg).expect("pdes traffic run failed");
-            let wall = t0.elapsed().as_secs_f64();
-            events = report
-                .get_count("des_events")
-                .expect("des_events metric missing");
-            json = report.to_json().pretty();
-            if wall < best_wall {
-                best_wall = wall;
-            }
-        }
+        let (events, best_wall, json) = timed_runs(traffic, &cfg, reps);
         let eps = events as f64 / best_wall;
         if domains == 1 {
             serial_eps = eps;
@@ -264,6 +258,91 @@ fn main() {
         multi_domain_best_eps / serial_eps
     );
     assert!(pdes_deterministic, "PDES report diverged from serial");
+
+    // ---- 4b. PDES sync-protocol scaling: window vs channel clocks ----------
+    // A larger torus than the domain-scaling section (16 nodes, 8 wafers)
+    // so the domain adjacency graph has real diameter at domains >= 4 —
+    // that is where channel clocks discount far-apart domains by several
+    // hops of accumulated lookahead and the global-minimum window pays.
+    let mut sync_cfg = traffic_base(fast);
+    sync_cfg.system.n_wafers = 8;
+    sync_cfg.system.torus = TorusSpec::new(4, 2, 2);
+    sync_cfg.system.fpgas_per_wafer = 8;
+    sync_cfg.system.concentrators_per_wafer = 2;
+    let mut sync_runs = Json::arr();
+    let mut sync_table = Table::new(
+        "PDES sync scaling (traffic scenario, 4x2x2 torus, wheel queue)",
+        &["sync", "domains", "des_events", "wall_s", "events/s", "speedup"],
+    );
+    let mut sync_deterministic = true;
+    // events/s per (sync, domains) cell
+    let mut cell_eps: Vec<((SyncMode, usize), f64)> = Vec::new();
+    let (sync_serial_eps, sync_serial_json) = {
+        let mut cfg = sync_cfg.clone();
+        cfg.domains = 1;
+        let (events, best_wall, json) = timed_runs(traffic, &cfg, reps);
+        let eps = events as f64 / best_wall;
+        sync_table.row(vec![
+            "serial".to_string(),
+            "1".to_string(),
+            events.to_string(),
+            format!("{best_wall:.3}"),
+            eng(eps),
+            "1.00".to_string(),
+        ]);
+        sync_runs.push(
+            Json::obj()
+                .set("sync", "serial")
+                .set("domains", 1u64)
+                .set("des_events", events)
+                .set("wall_s", best_wall)
+                .set("events_per_s", eps)
+                .set("speedup_vs_serial", 1.0),
+        );
+        (eps, json)
+    };
+    for sync in [SyncMode::Window, SyncMode::Channel] {
+        for domains in [2usize, 4, 8] {
+            let mut cfg = sync_cfg.clone();
+            cfg.sync = sync;
+            cfg.domains = domains;
+            let (events, best_wall, json) = timed_runs(traffic, &cfg, reps);
+            if json != sync_serial_json {
+                sync_deterministic = false;
+            }
+            let eps = events as f64 / best_wall;
+            cell_eps.push(((sync, domains), eps));
+            let speedup = eps / sync_serial_eps;
+            sync_table.row(vec![
+                sync.as_str().to_string(),
+                domains.to_string(),
+                events.to_string(),
+                format!("{best_wall:.3}"),
+                eng(eps),
+                format!("{speedup:.2}"),
+            ]);
+            sync_runs.push(
+                Json::obj()
+                    .set("sync", sync.as_str())
+                    .set("domains", domains as u64)
+                    .set("des_events", events)
+                    .set("wall_s", best_wall)
+                    .set("events_per_s", eps)
+                    .set("speedup_vs_serial", speedup),
+            );
+        }
+    }
+    let cell = |sync: SyncMode, domains: usize| -> f64 {
+        cell_eps
+            .iter()
+            .find(|(k, _)| *k == (sync, domains))
+            .map(|&(_, eps)| eps)
+            .expect("sync cell recorded")
+    };
+    let channel_vs_window_4 = cell(SyncMode::Channel, 4) / cell(SyncMode::Window, 4);
+    sync_table.print();
+    println!("channel vs window at 4 domains: {channel_vs_window_4:.2}x events/s\n");
+    assert!(sync_deterministic, "PDES sync report diverged from serial");
 
     // ---- 5. sweep resource cache: prepare-once vs per-point cold runs ------
     // A/B the PR 4 two-phase lifecycle: "uncached" evaluates every grid
@@ -324,7 +403,7 @@ fn main() {
     );
     let traffic_cache = cache_bench(
         &mut cache_table,
-        scenario,
+        traffic,
         &sweep_base(fast),
         "rate_hz",
         &["1e7", "1.5e7", "2e7", "2.5e7"],
@@ -350,7 +429,6 @@ fn main() {
     // must be byte-identical with the pool off (the determinism gate in
     // rust/tests/determinism_queue.rs pins the same invariant).
     let pool_base = traffic_base(fast);
-    let pool_scenario = find("traffic").expect("traffic registered");
     let mut pool_table = Table::new(
         "packet-payload pooling (traffic scenario)",
         &["pool", "des_events", "wall_s", "events/s"],
@@ -361,20 +439,8 @@ fn main() {
     for (pi, enabled) in [false, true].into_iter().enumerate() {
         pool::set_enabled(enabled);
         pool::reset_stats();
-        let mut best_wall = f64::INFINITY;
-        let mut events = 0u64;
-        for _ in 0..reps {
-            let t0 = Instant::now();
-            let report = pool_scenario.run(&pool_base).expect("pool A/B run failed");
-            let wall = t0.elapsed().as_secs_f64();
-            events = report
-                .get_count("des_events")
-                .expect("des_events metric missing");
-            pool_json[pi] = report.to_json().pretty();
-            if wall < best_wall {
-                best_wall = wall;
-            }
-        }
+        let (events, best_wall, json) = timed_runs(traffic, &pool_base, reps);
+        pool_json[pi] = json;
         if enabled {
             pool_counts = pool::stats();
         }
@@ -400,7 +466,7 @@ fn main() {
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR4")
+        .set("artifact", "BENCH_PR5")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -426,6 +492,13 @@ fn main() {
                     multi_domain_best_eps / serial_eps,
                 )
                 .set("runs", pdes_runs),
+        )
+        .set(
+            "pdes_sync_scaling",
+            Json::obj()
+                .set("deterministic_across_modes", sync_deterministic)
+                .set("channel_vs_window_at_4_domains", channel_vs_window_4)
+                .set("runs", sync_runs),
         )
         .set("sweep_cache", cache_section)
         .set(

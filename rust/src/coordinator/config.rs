@@ -11,7 +11,7 @@ use crate::extoll::nic::NicConfig;
 use crate::extoll::torus::TorusSpec;
 use crate::fpga::bucket::BucketConfig;
 use crate::fpga::manager::{EvictionPolicy, ManagerConfig};
-use crate::sim::{QueueKind, Time};
+use crate::sim::{QueueKind, SyncMode, Time};
 use crate::util::json::Json;
 use crate::wafer::system::SystemConfig;
 use crate::workload::generators::GeneratorKind;
@@ -36,6 +36,13 @@ pub struct ExperimentConfig {
     /// (clamped to the node count; reports are byte-identical either
     /// way — see docs/TUNING.md and docs/ARCHITECTURE.md).
     pub domains: usize,
+    /// PDES synchronization protocol for partitioned runs (`domains > 1`):
+    /// `channel` (default) bounds each domain by the per-neighbor CMB
+    /// channel clocks of every domain that can reach it (accumulated
+    /// path lookahead); `window` is the lock-step global-minimum
+    /// reference protocol. Byte-identical reports either way
+    /// (docs/ARCHITECTURE.md §2.3); no effect at `domains = 1`.
+    pub sync: SyncMode,
 }
 
 /// Spike-traffic workload knobs.
@@ -119,6 +126,7 @@ impl Default for ExperimentConfig {
             seed: 0xB55,
             queue: QueueKind::default(),
             domains: 1,
+            sync: SyncMode::default(),
         }
     }
 }
@@ -137,6 +145,11 @@ impl ExperimentConfig {
                 let d = j.u64_or("domains", 1) as usize;
                 anyhow::ensure!(d >= 1, "domains must be >= 1");
                 d
+            },
+            sync: {
+                let name = j.str_or("sync", SyncMode::default().as_str());
+                SyncMode::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{name}' (window|channel)"))?
             },
             ..ExperimentConfig::default()
         };
@@ -269,6 +282,18 @@ mod tests {
         let j = Json::parse(r#"{"domains": 4}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().domains, 4);
         let j = Json::parse(r#"{"domains": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sync_knob_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.sync, SyncMode::Channel);
+        let j = Json::parse(r#"{"sync": "window"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().sync, SyncMode::Window);
+        let j = Json::parse(r#"{"sync": "channel"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().sync, SyncMode::Channel);
+        let j = Json::parse(r#"{"sync": "global"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 

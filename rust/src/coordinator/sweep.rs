@@ -69,6 +69,10 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
             }
             cfg.domains = d;
         }
+        "sync" => {
+            cfg.sync = crate::sim::SyncMode::parse(value)
+                .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{value}' (window|channel)"))?
+        }
         // workload
         "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
         "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
@@ -120,12 +124,12 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "w_inh" => cfg.neuro.w_inh = num(key, value)? as f32,
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
-            "unknown parameter '{other}' (known: seed, queue, domains, rate_hz, \
-             sources_per_fpga, fan_out, zipf_s, deadline_offset, duration_s, \
-             generator, burst_len, mc_scale, n_wafers, fpgas_per_wafer, \
-             concentrators_per_wafer, torus, buckets, bucket_capacity, \
-             deadline_margin, eviction, steps, artifact, dt_s, w_exc, w_inh, \
-             k_scale — see docs/TUNING.md)"
+            "unknown parameter '{other}' (known: seed, queue, domains, sync, \
+             rate_hz, sources_per_fpga, fan_out, zipf_s, deadline_offset, \
+             duration_s, generator, burst_len, mc_scale, n_wafers, \
+             fpgas_per_wafer, concentrators_per_wafer, torus, buckets, \
+             bucket_capacity, deadline_margin, eviction, steps, artifact, \
+             dt_s, w_exc, w_inh, k_scale — see docs/TUNING.md)"
         ),
     }
     Ok(())
@@ -747,6 +751,25 @@ mod tests {
         assert!(apply_override(&mut cfg, "domains", "0").is_err());
         apply_override(&mut cfg, "domains", "2").unwrap();
         assert_eq!(cfg.domains, 2);
+    }
+
+    #[test]
+    fn sync_override_sweeps_identically() {
+        // the sync protocol is a perf knob: window × channel × any domain
+        // count must agree on every metric
+        let runner = SweepRunner::new(small())
+            .axis("sync", &["window", "channel"])
+            .axis("domains", &["1", "4"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        assert_eq!(result.points.len(), 4);
+        let a = result.points[0].report.to_flat_json().to_string();
+        for p in &result.points[1..] {
+            assert_eq!(a, p.report.to_flat_json().to_string());
+        }
+        let mut cfg = small();
+        assert!(apply_override(&mut cfg, "sync", "global").is_err());
+        apply_override(&mut cfg, "sync", "window").unwrap();
+        assert_eq!(cfg.sync, crate::sim::SyncMode::Window);
     }
 
     #[test]

@@ -34,12 +34,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::extoll::network::pdes_lookahead;
+use crate::extoll::network::{pdes_channel_graph, pdes_lookahead};
 use crate::extoll::torus::{DomainMap, NodeAddr};
 use crate::fpga::fpga::{Fpga, TIMER_FLUSH_ALL};
 use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
-use crate::sim::{EventQueue, Partition, Placement, Sim, Time};
+use crate::sim::{EventQueue, Partition, Placement, Sim, SyncMode, Time};
 use crate::util::json::Json;
 use crate::util::report::{MetricDecl, Report};
 use crate::util::rng::{Rng, Zipf};
@@ -316,16 +316,32 @@ fn run_loop_serial(mut sim: Sim<Msg>, sys: &System, cfg: &ExperimentConfig) -> S
 /// The same run loop over a torus-partitioned [`Partition`]: identical
 /// phases, identical external-schedule order (so the merge keys match the
 /// serial run), merged back into one `Sim` for collection.
+/// `cfg.sync` picks the synchronization protocol: per-neighbor channel
+/// clocks over the inter-domain edge graph (default), or the windowed
+/// global-minimum reference — byte-identical reports either way.
 fn run_loop_partitioned(
     sim: Sim<Msg>,
     sys: &System,
     cfg: &ExperimentConfig,
     dm: &DomainMap,
 ) -> Result<Sim<Msg>> {
-    let lookahead = pdes_lookahead(dm, &cfg.system.nic)
-        .ok_or_else(|| anyhow::anyhow!("partition has no inter-domain links"))?;
     let owner = resolve_owners(&sim, dm)?;
+    // one inter-domain edge enumeration either way: the channel graph's
+    // cheapest channel IS the windowed lookahead (a closure sum is never
+    // smaller than its cheapest edge)
+    let no_links = || anyhow::anyhow!("partition has no inter-domain links");
+    let (lookahead, channels) = match cfg.sync {
+        SyncMode::Channel => {
+            let graph = pdes_channel_graph(dm, &cfg.system.nic);
+            let la = graph.min_lookahead().ok_or_else(no_links)?;
+            (la, Some(graph))
+        }
+        SyncMode::Window => (pdes_lookahead(dm, &cfg.system.nic).ok_or_else(no_links)?, None),
+    };
     let mut part = Partition::split(sim, owner, dm.n_domains(), lookahead);
+    if let Some(graph) = channels {
+        part = part.with_channels(graph);
+    }
     part.run_until(cfg.workload.duration);
     // experiment barrier: same targets, same order as System::flush_all,
     // so the external-schedule merge keys match the serial run's
@@ -847,6 +863,29 @@ mod tests {
                 r.to_json().to_string(),
                 "report diverged at domains={d}"
             );
+        }
+    }
+
+    #[test]
+    fn sync_mode_does_not_change_physics() {
+        // the PR 5 invariant: window vs channel clocks is a perf knob
+        // only — byte-identical reports at any domain count
+        let mut base = small();
+        base.workload.fan_out = 2;
+        let serial = TrafficScenario.run(&base).unwrap();
+        for sync in [SyncMode::Window, SyncMode::Channel] {
+            for d in [2usize, 4] {
+                let mut cfg = base.clone();
+                cfg.sync = sync;
+                cfg.domains = d;
+                let r = TrafficScenario.run(&cfg).unwrap();
+                assert_eq!(
+                    serial.to_json().to_string(),
+                    r.to_json().to_string(),
+                    "report diverged at sync={} domains={d}",
+                    sync.as_str()
+                );
+            }
         }
     }
 

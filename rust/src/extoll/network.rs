@@ -6,10 +6,10 @@
 //! of node `a` is `base + a.0`, and neighbor wiring needs no second pass.
 
 use crate::msg::Msg;
-use crate::sim::{ActorId, Sim, Time};
+use crate::sim::{ActorId, ChannelGraph, Sim, Time};
 
 use super::nic::{Nic, NicConfig};
-use super::torus::{DomainMap, TorusSpec, DIRS};
+use super::torus::{Dir, DomainMap, NodeAddr, TorusSpec, DIRS, TORUS_PORTS};
 
 /// Build a full torus of NICs; returns the actor ids in node-address order.
 ///
@@ -31,24 +31,48 @@ pub fn build_torus(sim: &mut Sim<Msg>, spec: &TorusSpec, cfg: NicConfig) -> Vec<
     ids
 }
 
-/// Conservative-PDES lookahead for a partitioned fabric: the minimum
-/// latency any message can incur on any **inter-domain** torus link
-/// (packets pay serialization + cable + router pipeline; credit returns
-/// pay cable + pipeline — see [`NicConfig::min_link_latency`]). A domain
-/// may therefore execute up to `min(domain clocks) + lookahead`,
-/// exclusive, without risking a causality violation
-/// (`docs/ARCHITECTURE.md` has the full invariant).
-///
-/// All torus links share one [`NicConfig`], so the minimum over the
-/// inter-domain edge set degenerates to that config's per-link minimum;
-/// a multi-domain partition of a (connected) torus always has crossing
-/// edges, so no enumeration is needed. Returns `None` for a single
-/// domain — nothing to synchronize on.
+/// The smallest latency any message can incur on the directed torus link
+/// `a --dir--> b` — that link's contribution to the conservative-PDES
+/// lookahead. Today every link shares one [`NicConfig`], so this is the
+/// config's per-link minimum ([`NicConfig::min_link_latency`]:
+/// credit returns pay cable + pipeline; packets pay serialization on
+/// top); a heterogeneous fabric (per-cable lengths, mixed lane counts)
+/// only needs to specialize this one function — every lookahead below is
+/// folded over it, edge by edge.
+pub fn edge_min_latency(cfg: &NicConfig, _from: NodeAddr, _dir: Dir, _to: NodeAddr) -> Time {
+    cfg.min_link_latency()
+}
+
+/// Conservative-PDES lookahead for a partitioned fabric: the minimum of
+/// [`edge_min_latency`] over every **inter-domain** torus link
+/// ([`DomainMap::inter_domain_edges`]). A domain may therefore execute up
+/// to `min(domain clocks) + lookahead`, exclusive, without risking a
+/// causality violation (`docs/ARCHITECTURE.md` has the full invariant).
+/// Returns `None` when no inter-domain links exist (single domain) —
+/// nothing to synchronize on.
 pub fn pdes_lookahead(dm: &DomainMap, cfg: &NicConfig) -> Option<Time> {
-    if dm.n_domains() <= 1 {
-        return None;
-    }
-    Some(cfg.min_link_latency())
+    dm.inter_domain_edges()
+        .into_iter()
+        .map(|(a, d, b)| edge_min_latency(cfg, a, d, b))
+        .min()
+}
+
+/// Per-neighbor channel-clock topology for a partitioned fabric
+/// ([`crate::sim::SyncMode::Channel`]): one direct edge per ordered pair
+/// of adjacent domains, with lookahead = the minimum
+/// [`edge_min_latency`] over that pair's physical links;
+/// [`ChannelGraph::from_edges`] then closes the edge set under path
+/// composition (min-plus distances, minimum cycles on the diagonal).
+/// This is the full Chandy–Misra–Bryant bound [`pdes_lookahead`] is the
+/// global-minimum collapse of: with channel clocks, a domain constrains
+/// another only through the accumulated lookahead of a real route
+/// between them.
+pub fn pdes_channel_graph(dm: &DomainMap, cfg: &NicConfig) -> ChannelGraph {
+    let edges = dm
+        .inter_domain_edges()
+        .into_iter()
+        .map(|(a, d, b)| (dm.domain_of(a), dm.domain_of(b), edge_min_latency(cfg, a, d, b)));
+    ChannelGraph::from_edges(dm.n_domains(), edges)
 }
 
 /// A handle to a built fabric (spec + NIC actor ids), with convenience
@@ -90,12 +114,14 @@ impl Fabric {
         h
     }
 
-    /// Peak utilization over all torus ports, given the observation window.
+    /// Peak utilization over all torus ports, given the observation
+    /// window (the local port is deliberately excluded — it is not a
+    /// torus link; `TORUS_PORTS` keeps it out by construction).
     pub fn max_link_utilization(&self, sim: &Sim<Msg>, window: crate::sim::Time) -> f64 {
         let mut max = 0.0f64;
         for &id in &self.nics {
             let nic = sim.get::<Nic>(id);
-            for port in 0..6 {
+            for port in 0..TORUS_PORTS {
                 max = max.max(nic.port_utilization(port, window));
             }
         }
@@ -108,7 +134,7 @@ impl Fabric {
         let mut n = 0u32;
         for &id in &self.nics {
             let nic = sim.get::<Nic>(id);
-            for port in 0..6 {
+            for port in 0..TORUS_PORTS {
                 if nic.port_tx_packets(port) > 0 {
                     sum += nic.port_utilization(port, window);
                     n += 1;
@@ -148,5 +174,33 @@ mod tests {
         assert_eq!(fabric.total_delivered(&sim), 0);
         assert_eq!(fabric.total_delivered_events(&sim), 0);
         assert_eq!(fabric.max_link_utilization(&sim, crate::sim::Time::from_us(1)), 0.0);
+    }
+
+    #[test]
+    fn lookahead_folds_over_inter_domain_edges() {
+        let spec = TorusSpec::new(4, 2, 2);
+        let cfg = NicConfig::default();
+        // uniform link config: the fold over the edge set equals the
+        // per-link minimum
+        let dm = DomainMap::new(spec, 4);
+        assert!(!dm.inter_domain_edges().is_empty());
+        assert_eq!(pdes_lookahead(&dm, &cfg), Some(cfg.min_link_latency()));
+        // single domain: no inter-domain edges, nothing to synchronize on
+        assert_eq!(pdes_lookahead(&DomainMap::new(spec, 1), &cfg), None);
+    }
+
+    #[test]
+    fn channel_graph_closure_covers_all_domain_pairs() {
+        let spec = TorusSpec::new(4, 2, 2);
+        let cfg = NicConfig::default();
+        let dm = DomainMap::new(spec, 4);
+        let g = pdes_channel_graph(&dm, &cfg);
+        assert_eq!(g.n_domains(), 4);
+        // the cheapest channel is a single inter-domain hop
+        assert_eq!(g.min_lookahead(), Some(cfg.min_link_latency()));
+        // a torus is strongly connected, so its domain quotient is too:
+        // the closure has a channel for every ordered pair, diagonal
+        // (cycle) channels included
+        assert_eq!(g.n_channels(), 4 * 4);
     }
 }

@@ -159,8 +159,9 @@ pub struct NicStats {
     pub credit_stalls: u64,
 }
 
-/// The NIC actor. Port indices 0..6 are the torus directions in
-/// [`super::torus::DIRS`] order; port 6 is the local link.
+/// The NIC actor. Port indices `0..TORUS_PORTS` are the torus directions
+/// in [`super::torus::DIRS`] order ([`super::torus::TORUS_PORTS`]); port
+/// [`LOCAL_PORT`] is the local link.
 pub struct Nic {
     pub addr: NodeAddr,
     torus: TorusSpec,
@@ -371,6 +372,7 @@ mod tests {
     use super::*;
     use crate::extoll::network::build_torus;
     use crate::extoll::packet::Packet;
+    use crate::extoll::torus::TORUS_PORTS;
     use crate::sim::Sim;
 
     /// Local unit that records deliveries.
@@ -496,9 +498,9 @@ mod tests {
         }
         sim.run_to_completion();
         let nic: &Nic = sim.get(nics[0]);
-        let tx: u64 = (0..6).map(|p| nic.port_tx_packets(p)).sum();
+        let tx: u64 = (0..TORUS_PORTS).map(|p| nic.port_tx_packets(p)).sum();
         assert_eq!(tx, 100);
-        let bytes: u64 = (0..6).map(|p| nic.port_tx_bytes(p)).sum();
+        let bytes: u64 = (0..TORUS_PORTS).map(|p| nic.port_tx_bytes(p)).sum();
         assert_eq!(bytes, 52_000);
         // the egress port was busy for 100 serializations
         let busy: Time = nic.ports.iter().map(|p| p.busy_time).fold(Time::ZERO, |a, b| a + b);

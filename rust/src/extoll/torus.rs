@@ -41,8 +41,14 @@ pub const DIRS: [Dir; 6] = [
     Dir::ZMinus,
 ];
 
+/// Number of torus ports on a Tourmalet — the valid torus port indices
+/// are `0..TORUS_PORTS`, in [`DIRS`] order. Derived from `DIRS` so
+/// port-range loops (e.g. link-utilization stats) can never silently
+/// include the local port.
+pub const TORUS_PORTS: u8 = DIRS.len() as u8;
+
 /// Port index of the local (non-torus) link on a Tourmalet (the 7th link).
-pub const LOCAL_PORT: u8 = 6;
+pub const LOCAL_PORT: u8 = TORUS_PORTS;
 
 /// Number of links on a Tourmalet NIC (paper §1: "offers 7 links").
 pub const TOURMALET_LINKS: usize = 7;
@@ -368,6 +374,16 @@ mod tests {
         }
         // one domain ⇒ no inter-domain edges
         assert!(DomainMap::new(t, 1).inter_domain_edges().is_empty());
+    }
+
+    #[test]
+    fn torus_port_constants_consistent() {
+        assert_eq!(TORUS_PORTS as usize, DIRS.len());
+        assert_eq!(LOCAL_PORT, TORUS_PORTS, "local port follows the torus ports");
+        assert_eq!(TOURMALET_LINKS, TORUS_PORTS as usize + 1);
+        for d in DIRS {
+            assert!(d.port() < TORUS_PORTS);
+        }
     }
 
     #[test]

@@ -32,13 +32,16 @@ Configs are JSON files (--config); individual knobs override with
 --set \"key=v;key=v\" — the same keys sweep axes use, e.g.
   bss-extoll run traffic --set \"rate_hz=2e7;fan_out=2\"
   bss-extoll run traffic --set \"domains=4\"        # partitioned PDES
+  bss-extoll run traffic --set \"domains=4;sync=window\"  # windowed reference
   bss-extoll sweep --scenario traffic --grid \"rate_hz=1e6,1e7;n_wafers=2,4\" --csv sweep.csv
   bss-extoll sweep --scenario traffic --grid \"eviction=most_urgent,fullest\" --jobs 4
 
 Sweep grid points are independent simulations: --jobs N runs them on N
 worker threads with results (and artifacts) ordered exactly as --jobs 1.
 Within one fabric scenario, --set domains=N partitions the torus into N
-conservatively synchronized PDES domains (byte-identical reports).
+conservatively synchronized PDES domains (byte-identical reports);
+--set sync=window|channel picks the protocol (per-neighbor channel
+clocks by default, the lock-step global-minimum window as reference).
 Every knob is documented with tuning guidance in docs/TUNING.md.
 ";
 

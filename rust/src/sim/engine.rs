@@ -797,6 +797,27 @@ impl<M: 'static> Sim<M> {
         }
     }
 
+    /// The domain's **earliest output time** in picoseconds — the value a
+    /// partitioned run publishes as its channel clock (`sim/pdes.rs`):
+    /// a lower bound on the send time of any message this domain may emit
+    /// from now on, namely its earliest pending event. Every cross-domain
+    /// message therefore arrives at `eot + channel lookahead` at the
+    /// earliest, which is exactly the per-neighbor CMB bound. `u64::MAX`
+    /// when the domain is idle (it cannot send anything until a message
+    /// is injected). Only valid between windows: the outbox must be
+    /// drained ([`Sim::take_outbox`]), since undelivered outbox messages
+    /// are not covered by the pending-event minimum. One EOT serves every
+    /// out-channel — refining it per channel would require the engine to
+    /// know which domains an event's sends can reach, which only the
+    /// hardware layer does.
+    pub(crate) fn eot_ps(&self) -> u64 {
+        debug_assert!(
+            self.domain.as_ref().is_none_or(|d| d.outbox.is_empty()),
+            "EOT published with undelivered outbox messages"
+        );
+        self.queue.peek_time().map_or(u64::MAX, |t| t.ps())
+    }
+
     /// Advance the clock to at least `t` without processing events
     /// (window epilogue, mirroring [`Sim::run_until`]'s clock semantics).
     pub(crate) fn advance_clock(&mut self, t: Time) {

@@ -6,7 +6,8 @@
 //! and an actor model where components communicate exclusively through
 //! timestamped messages. [`pdes::Partition`] splits one simulation into
 //! conservatively synchronized domains that advance on parallel worker
-//! threads without changing any trajectory.
+//! threads without changing any trajectory — lock-step global windows or
+//! per-neighbor channel clocks, selected by [`pdes::SyncMode`].
 //!
 //! The core is generic over the message type `M`; the domain defines one
 //! message enum per system (see [`crate::wafer::system`]). The engine
@@ -18,5 +19,5 @@ pub mod pdes;
 pub mod time;
 
 pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Placement, QueueKind, Sim};
-pub use pdes::Partition;
+pub use pdes::{ChannelGraph, Partition, SyncMode};
 pub use time::{ps_for_bits, Time, FPGA_CLK_HZ};

@@ -4,24 +4,48 @@
 //! one domain per group of torus nodes, each owning its local actors and
 //! event queue — and advances them on parallel worker threads under a
 //! conservative synchronization protocol in the Chandy–Misra–Bryant
-//! family. The safety bound is the windowed (global-minimum) special
-//! case of CMB's per-neighbor rule: with every cross-domain link
-//! guaranteeing at least `lookahead` of latency, a domain whose earliest
-//! pending event is at `t_min_global` or later may execute everything
-//! strictly below
+//! family. Two variants are implemented, selected by [`SyncMode`]:
+//!
+//! **Windowed** (`sync=window`, the reference implementation) is the
+//! global-minimum special case of CMB's per-neighbor rule: with every
+//! cross-domain link guaranteeing at least `lookahead` of latency, a
+//! domain whose earliest pending event is at `t_min_global` or later may
+//! execute everything strictly below
 //!
 //! ```text
 //! bound = min(domain clocks) + lookahead  =  t_min_global + lookahead
 //! ```
 //!
 //! because any message another domain emits in the same window is sent at
-//! `≥ t_min_global` and therefore arrives at `≥ bound`. Instead of
-//! streaming null messages, domains run in lock-step windows on a spin
-//! barrier: publish next-event times → leader computes the bound → all
-//! domains execute their window in parallel → cross-domain messages are
-//! exchanged through per-domain mailboxes → repeat. The lookahead comes
+//! `≥ t_min_global` and therefore arrives at `≥ bound`.
+//!
+//! **Channel clocks** (`sync=channel`, the default; enabled by
+//! [`Partition::with_channels`]) is the full per-neighbor CMB rule over a
+//! [`ChannelGraph`] — the domain adjacency graph closed under path
+//! composition (min-plus shortest paths, minimum cycles on the
+//! diagonal). Each domain publishes its *earliest output time* (EOT —
+//! the timestamp of its earliest pending event, a lower bound on any
+//! future send; [`Sim`] computes it next to the outbox it feeds) and
+//! advances to
+//!
+//! ```text
+//! bound(i) = min over channels k⇝i of (EOT(k) + path-lookahead(k⇝i))
+//! ```
+//!
+//! so a domain is constrained by exactly the domains that can reach it,
+//! each discounted by the full accumulated lookahead of the cheapest
+//! route — a slow domain on the far side of the torus no longer clamps
+//! everyone to `global-min + one-hop lookahead` the way the windowed
+//! bound does.
+//!
+//! In both modes, instead of streaming null messages, domains run in
+//! lock-step rounds on a spin barrier: publish EOTs → derive bounds
+//! (leader-computed global bound, or per-domain channel bounds) → all
+//! domains execute their windows in parallel → cross-domain messages are
+//! exchanged through per-domain mailboxes → repeat. The lookaheads come
 //! from the Extoll link model (cable + router pipeline latency; see
-//! [`crate::extoll::network::pdes_lookahead`]).
+//! [`crate::extoll::network::pdes_lookahead`] and
+//! [`crate::extoll::network::pdes_channel_graph`]).
 //!
 //! ## Determinism
 //!
@@ -49,6 +73,150 @@ use super::time::Time;
 
 /// Sentinel bound value signalling "no work at or below `until` remains".
 const STOP: u64 = u64::MAX;
+
+/// Which conservative synchronization protocol a partitioned run uses.
+/// Both are determinism-gated byte-identical to the serial event loop
+/// (`rust/tests/determinism_queue.rs`); they differ only in how tightly
+/// non-neighboring domains are coupled, i.e. in wall-clock speed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Lock-step windows on the global-minimum clock plus one global
+    /// lookahead. The reference implementation: simplest possible bound,
+    /// every domain constrains every other.
+    Window,
+    /// Per-neighbor CMB channel clocks over a [`ChannelGraph`]: each
+    /// domain is bounded by the domains that can reach it, at the
+    /// accumulated path lookahead of the cheapest route. The default —
+    /// distant domains stop clamping each other to one hop of slack, so
+    /// large torii decouple.
+    #[default]
+    Channel,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s {
+            "window" => Some(SyncMode::Window),
+            "channel" => Some(SyncMode::Channel),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SyncMode::Window => "window",
+            SyncMode::Channel => "channel",
+        }
+    }
+}
+
+/// The per-neighbor channel topology of a partition, **closed under path
+/// composition**: for every ordered pair of domains `(k, i)` with a
+/// directed path of physical channels from `k` to `i`, one transitive
+/// channel whose lookahead is the min-plus shortest-path distance
+/// `D(k→i)` (the diagonal `D(i→i)` is the minimum directed *cycle*
+/// through `i` — a domain's own sends can come back). The closure is
+/// what makes `EOT + lookahead` a sound bound: a message can reach `i`
+/// through intermediate domains whose published EOTs are far in the
+/// future, so `i` must be bounded by every domain that can *reach* it,
+/// at the accumulated lookahead of the cheapest route — not only by its
+/// direct neighbors. Built by the partitioning driver from the physical
+/// link graph ([`crate::extoll::network::pdes_channel_graph`] enumerates
+/// the inter-domain torus edges), or directly via
+/// [`ChannelGraph::from_edges`].
+#[derive(Clone, Debug)]
+pub struct ChannelGraph {
+    /// `in_channels[d]` = sorted `(source domain, path lookahead ps)`
+    /// rows: exactly the (transitive) channels whose clocks bound
+    /// domain `d`.
+    in_channels: Vec<Vec<(u32, u64)>>,
+}
+
+impl ChannelGraph {
+    /// Build from the **direct** `(source domain, destination domain,
+    /// lookahead)` edges; parallel edges collapse to their minimum
+    /// lookahead (a channel is only as fast as its fastest link), and
+    /// the constructor takes the min-plus closure over paths (see the
+    /// type docs). Every lookahead must be positive — conservative
+    /// synchronization cannot make progress otherwise.
+    pub fn from_edges(
+        n_domains: usize,
+        edges: impl IntoIterator<Item = (u32, u32, Time)>,
+    ) -> ChannelGraph {
+        // direct edges, min over parallels; dist[s * n + t] = D(s→t)
+        let n = n_domains;
+        let mut dist = vec![u64::MAX; n * n];
+        for (src, dst, la) in edges {
+            assert!(
+                (src as usize) < n && (dst as usize) < n,
+                "channel {src}->{dst} references a domain >= {n}"
+            );
+            assert!(src != dst, "channel from domain {src} to itself");
+            assert!(la > Time::ZERO, "conservative PDES requires positive channel lookahead");
+            let d = &mut dist[src as usize * n + dst as usize];
+            *d = (*d).min(la.ps());
+        }
+        // Floyd–Warshall in min-plus; the diagonal starts at infinity
+        // (not 0), so it converges to the minimum directed cycle weight
+        // instead of erasing path sums.
+        for via in 0..n {
+            for s in 0..n {
+                let d_sv = dist[s * n + via];
+                if d_sv == u64::MAX {
+                    continue;
+                }
+                for t in 0..n {
+                    let d_vt = dist[via * n + t];
+                    if d_vt == u64::MAX {
+                        continue;
+                    }
+                    let through = d_sv.saturating_add(d_vt);
+                    if through < dist[s * n + t] {
+                        dist[s * n + t] = through;
+                    }
+                }
+            }
+        }
+        let in_channels = (0..n)
+            .map(|t| {
+                (0..n)
+                    .filter(|&s| dist[s * n + t] != u64::MAX)
+                    .map(|s| (s as u32, dist[s * n + t]))
+                    .collect()
+            })
+            .collect();
+        ChannelGraph { in_channels }
+    }
+
+    /// Number of domains the graph covers.
+    pub fn n_domains(&self) -> usize {
+        self.in_channels.len()
+    }
+
+    /// Total number of directed channels in the closure (reachable
+    /// ordered pairs, including `i→i` cycles).
+    pub fn n_channels(&self) -> usize {
+        self.in_channels.iter().map(Vec::len).sum()
+    }
+
+    /// The (transitive) in-channels of `dst` as `(source domain, path
+    /// lookahead in ps)`, sorted by source domain.
+    fn in_channels(&self, dst: usize) -> &[(u32, u64)] {
+        &self.in_channels[dst]
+    }
+
+    /// Minimum lookahead over all channels (closure sums are never
+    /// smaller than their constituent edges, so this equals the minimum
+    /// direct-edge lookahead — the windowed protocol's global
+    /// lookahead). `None` when the graph has no channels.
+    pub fn min_lookahead(&self) -> Option<Time> {
+        self.in_channels
+            .iter()
+            .flatten()
+            .map(|&(_, la)| Time::from_ps(la))
+            .min()
+    }
+}
 
 /// A reusable sense-counting spin barrier for the window lock-step.
 ///
@@ -135,7 +303,7 @@ impl Drop for PoisonOnPanic<'_> {
 /// global ids intact) for unchanged post-run metric collection.
 ///
 /// ```
-/// use bss_extoll::sim::{Actor, Ctx, Partition, Sim, Time};
+/// use bss_extoll::sim::{Actor, ChannelGraph, Ctx, Partition, Sim, Time};
 ///
 /// // Two actors ping-ponging a countdown over a 100 ns "link".
 /// struct Counter { n: u64, peer: usize, link: Time }
@@ -154,8 +322,11 @@ impl Drop for PoisonOnPanic<'_> {
 /// let b = sim.add(Counter { n: 0, peer: 0, link });
 /// sim.schedule(Time::ZERO, a, 64);
 ///
-/// // One domain per actor; the link latency is the lookahead.
-/// let mut part = Partition::split(sim, vec![0, 1], 2, link);
+/// // One domain per actor; the link latency is the lookahead. The
+/// // channel graph (both directions of the one link) switches run_until
+/// // to per-neighbor channel clocks — same trajectory either way.
+/// let graph = ChannelGraph::from_edges(2, [(0, 1, link), (1, 0, link)]);
+/// let mut part = Partition::split(sim, vec![0, 1], 2, link).with_channels(graph);
 /// part.run_until(Time::from_us(100));
 /// let merged = part.into_sim();
 /// assert_eq!(merged.processed(), 65);
@@ -166,6 +337,9 @@ pub struct Partition<M> {
     domains: Vec<Sim<M>>,
     owner: Arc<Vec<u32>>,
     lookahead: Time,
+    /// Per-neighbor channel topology; `Some` switches the run loop from
+    /// the windowed global bound to channel clocks ([`SyncMode`]).
+    channels: Option<ChannelGraph>,
     /// Continuation of the master sim's external-schedule counter, so
     /// `Partition::schedule` mints the same merge keys the serial run's
     /// `Sim::schedule` would.
@@ -241,8 +415,27 @@ impl<M: Send + 'static> Partition<M> {
             domains,
             owner,
             lookahead,
+            channels: None,
             ext_seq: parts.ext_seq,
         }
+    }
+
+    /// Switch this partition to per-neighbor channel clocks
+    /// ([`SyncMode::Channel`]): each domain is then bounded by the
+    /// domains that can reach it in `graph` (at the closure's path
+    /// lookaheads) instead of by the global minimum. The graph must
+    /// cover every domain and its direct edges must include **every**
+    /// pair of domains that actually exchanges messages — a missing edge
+    /// makes the receiving domain run ahead of the sender's traffic (the
+    /// run loop debug-asserts against it).
+    pub fn with_channels(mut self, graph: ChannelGraph) -> Partition<M> {
+        assert_eq!(
+            graph.n_domains(),
+            self.domains.len(),
+            "channel graph does not cover every domain"
+        );
+        self.channels = Some(graph);
+        self
     }
 
     /// Number of domains.
@@ -253,6 +446,15 @@ impl<M: Send + 'static> Partition<M> {
     /// The conservative lookahead this partition synchronizes on.
     pub fn lookahead(&self) -> Time {
         self.lookahead
+    }
+
+    /// Which synchronization protocol [`Partition::run_until`] uses.
+    pub fn sync_mode(&self) -> SyncMode {
+        if self.channels.is_some() {
+            SyncMode::Channel
+        } else {
+            SyncMode::Window
+        }
     }
 
     /// Total events processed across all domains.
@@ -270,25 +472,48 @@ impl<M: Send + 'static> Partition<M> {
     /// schedules in the same order in both modes — the fabric driver
     /// does).
     pub fn schedule(&mut self, at: Time, dst: ActorId, msg: M) {
+        let d = self.owner[dst] as usize;
+        // Only the destination domain's clock bounds an external
+        // schedule: channel clocks legitimately let other domains run
+        // ahead of `at`, and their pasts are not this event's past.
         debug_assert!(
-            self.domains.iter().all(|d| at >= d.now),
-            "scheduling into the past of a domain"
+            at >= self.domains[d].now,
+            "scheduling into the past of domain {d}"
         );
         let key = merge_key(EXTERNAL_SRC, self.ext_seq);
         self.ext_seq += 1;
-        let d = self.owner[dst] as usize;
         self.domains[d].inject_keyed(at, key, dst, msg);
     }
 
     /// Process all events with timestamp ≤ `until` across all domains in
     /// parallel conservative windows, then advance every domain clock to
     /// `until`. Returns the number of events processed by this call.
+    ///
+    /// The window bounds come from the [`SyncMode`]: the global-minimum
+    /// window (reference), or per-neighbor channel clocks when a
+    /// [`ChannelGraph`] was attached via [`Partition::with_channels`].
+    /// Either way the trajectory — and thus every report — is identical.
     pub fn run_until(&mut self, until: Time) -> u64 {
         let start = self.processed();
         if self.domains.len() == 1 {
             self.domains[0].run_until(until);
             return self.processed() - start;
         }
+        if self.channels.is_some() {
+            self.run_windows_channel(until);
+        } else {
+            self.run_windows_global(until);
+        }
+        for dom in &mut self.domains {
+            dom.advance_clock(until);
+        }
+        self.processed() - start
+    }
+
+    /// The windowed (global-minimum) protocol: one leader-computed bound
+    /// per round, three barriers. Kept verbatim as the reference
+    /// implementation `sync=channel` must match byte-for-byte.
+    fn run_windows_global(&mut self, until: Time) {
         let n = self.domains.len();
         let lookahead = self.lookahead.ps();
         assert!(until.ps() < u64::MAX - lookahead - 1, "run_until horizon too large");
@@ -306,9 +531,8 @@ impl<M: Send + 'static> Partition<M> {
                     scope.spawn(move || {
                         let _poison = PoisonOnPanic(barrier);
                         loop {
-                            // 1. publish my earliest pending event time
-                            let t = dom.next_time().map_or(u64::MAX, |t| t.ps());
-                            next_times[i].store(t, Ordering::Release);
+                            // 1. publish my earliest output time
+                            next_times[i].store(dom.eot_ps(), Ordering::Release);
                             if !barrier.wait() {
                                 break;
                             }
@@ -369,10 +593,105 @@ impl<M: Send + 'static> Partition<M> {
                 }
             });
         }
-        for dom in &mut self.domains {
-            dom.advance_clock(until);
+    }
+
+    /// The per-neighbor channel-clock protocol ([`SyncMode::Channel`]):
+    /// every domain derives its **own** bound from the closure channels
+    /// that end at it (published EOT of each domain that can reach it,
+    /// plus that route's accumulated lookahead), so distant domains only
+    /// constrain it through real path latency, and each round needs only
+    /// two barriers (no leader step — every worker reads the same
+    /// published snapshot).
+    ///
+    /// Safety (the per-channel CMB invariant, `docs/ARCHITECTURE.md`
+    /// §2.3): any message that ever arrives at domain `i` materializes
+    /// through a causal chain of events that starts at some event
+    /// pending *now* in some domain `k` (at `t ≥ EOT(k)`) and crosses,
+    /// hop by hop, a directed path of physical channels `k ⇝ i` — so it
+    /// arrives at `t' ≥ EOT(k) + D(k⇝i) ≥ bound(i)`, where `D` is the
+    /// closure distance ([`ChannelGraph`]), never inside the window `i`
+    /// executes this round (the diagonal `D(i⇝i)` covers `i`'s own sends
+    /// bouncing back). The bound is monotone across rounds: a domain's
+    /// post-round EOT is at least `min(EOT, bound)`, and composing a
+    /// `k ⇝ j` route with a `j ⇝ i` route never beats `D(k⇝i)`, so
+    /// next round's bounds only grow — the argument covers every later
+    /// round by induction.
+    fn run_windows_channel(&mut self, until: Time) {
+        let n = self.domains.len();
+        assert!(until.ps() < u64::MAX - 1, "run_until horizon too large");
+        let graph = self.channels.as_ref().expect("channel sync without a graph");
+        let next_times: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let barrier = SpinBarrier::new(n);
+        let mailboxes: Vec<Mutex<Vec<Outgoing<M>>>> =
+            (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let owner: &[u32] = &self.owner;
+        {
+            let (next_times, barrier, mailboxes) = (&next_times, &barrier, &mailboxes);
+            std::thread::scope(|scope| {
+                for (i, dom) in self.domains.iter_mut().enumerate() {
+                    let in_ch = graph.in_channels(i);
+                    scope.spawn(move || {
+                        let _poison = PoisonOnPanic(barrier);
+                        loop {
+                            // 1. publish my earliest output time: nothing
+                            // I send from here on departs below it
+                            next_times[i].store(dom.eot_ps(), Ordering::Release);
+                            if !barrier.wait() {
+                                break;
+                            }
+                            // 2. consistent termination check — every
+                            // worker reads the same barrier-separated
+                            // snapshot, so all break in the same round
+                            let t_min = next_times
+                                .iter()
+                                .map(|a| a.load(Ordering::Acquire))
+                                .min()
+                                .expect("at least one domain");
+                            if t_min > until.ps() {
+                                break;
+                            }
+                            // 3. my own bound: only the closure channels
+                            // ending at me constrain me (exclusive, like
+                            // the windowed bound; `until + 1` caps the
+                            // last window)
+                            let mut b = until.ps() + 1;
+                            for &(src, la) in in_ch {
+                                let eot = next_times[src as usize].load(Ordering::Acquire);
+                                b = b.min(eot.saturating_add(la));
+                            }
+                            // execute my window, route cross-domain sends
+                            dom.run_before(Time::from_ps(b));
+                            for m in dom.take_outbox() {
+                                let dest = owner[m.dst] as usize;
+                                mailboxes[dest].lock().expect("mailbox").push(m);
+                            }
+                            if !barrier.wait() {
+                                break;
+                            }
+                            // 4. absorb my inbox (sorted for tidiness; the
+                            // merge keys alone already fix the pop order)
+                            let mut inbox =
+                                std::mem::take(&mut *mailboxes[i].lock().expect("mailbox"));
+                            inbox.sort_unstable_by_key(|m| (m.at, m.key));
+                            for m in inbox {
+                                // the channel invariant: an arrival below
+                                // my bound means some physical j→i link is
+                                // faster than the channel graph's
+                                // lookahead(j→i), or the j→i channel is
+                                // missing — either silently corrupts the
+                                // trajectory in release builds
+                                debug_assert!(
+                                    m.at >= Time::from_ps(b),
+                                    "cross-domain arrival {} below channel bound {b}",
+                                    m.at
+                                );
+                                dom.inject_keyed(m.at, m.key, m.dst, m.msg);
+                            }
+                        }
+                    });
+                }
+            });
         }
-        self.processed() - start
     }
 
     /// Merge the domains back into one simulation (all actors under their
@@ -582,5 +901,287 @@ mod tests {
     fn incomplete_owner_map_rejected() {
         let (sim, _, _) = build(Time::from_ns(1), 1);
         let _ = Partition::split(sim, vec![0, 0], 2, Time::from_ns(1));
+    }
+
+    // ---- per-neighbor channel clocks (PR 5) ------------------------------
+
+    /// The two-domain channel graph of the `build` fixture: one link,
+    /// both directions.
+    fn two_domain_graph(link: Time) -> ChannelGraph {
+        ChannelGraph::from_edges(2, [(0u32, 1u32, link), (1, 0, link)])
+    }
+
+    #[test]
+    fn channel_clocks_match_serial() {
+        let link = Time::from_ns(50);
+        let until = Time::from_us(100);
+        let (mut serial, nodes, echoes) = build(link, 500);
+        serial.run_until(until);
+        let want = trajectories(&serial, nodes, echoes);
+        assert!(!want[0].is_empty());
+
+        let (sim, nodes, echoes) = build(link, 500);
+        let mut part = Partition::split(sim, vec![0, 0, 1, 1], 2, link)
+            .with_channels(two_domain_graph(link));
+        assert_eq!(part.sync_mode(), SyncMode::Channel);
+        part.run_until(until);
+        let total = part.processed();
+        let merged = part.into_sim();
+        assert_eq!(merged.processed(), total);
+        assert_eq!(merged.now, until);
+        assert_eq!(trajectories(&merged, nodes, echoes), want);
+    }
+
+    #[test]
+    fn channel_clocks_resumable_with_external_schedules() {
+        let link = Time::from_ns(20);
+        let t_mid = Time::from_ns(500);
+        let until = Time::from_us(5);
+
+        let (mut serial, nodes, echoes) = build(link, 30);
+        serial.run_until(t_mid);
+        serial.schedule(t_mid, nodes[1], M::Ping(1000));
+        serial.run_until(until);
+        let want = trajectories(&serial, nodes, echoes);
+
+        let (sim, nodes, echoes) = build(link, 30);
+        let mut part = Partition::split(sim, vec![0, 0, 1, 1], 2, link)
+            .with_channels(two_domain_graph(link));
+        part.run_until(t_mid);
+        part.schedule(t_mid, nodes[1], M::Ping(1000));
+        part.run_until(until);
+        let merged = part.into_sim();
+        assert_eq!(trajectories(&merged, nodes, echoes), want);
+    }
+
+    /// A forwarding chain actor: on Ping(n), record and pass n+1 on.
+    struct Relay {
+        next: Option<ActorId>,
+        delay: Time,
+        seen: Vec<(Time, u32)>,
+    }
+
+    impl Actor<M> for Relay {
+        fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>) {
+            if let M::Ping(n) = msg {
+                self.seen.push((ctx.now(), n));
+                if let Some(next) = self.next {
+                    ctx.send(next, self.delay, M::Ping(n + 1));
+                }
+            }
+        }
+    }
+
+    /// Chain per-hop latencies for the heterogeneous-lookahead test.
+    const CHAIN_DELAYS: [Time; 3] = [Time::from_ns(10), Time::from_ns(200), Time::from_ns(35)];
+
+    fn build_chain(mut edges: Option<&mut Vec<(u32, u32, Time)>>) -> Sim<M> {
+        let mut sim: Sim<M> = Sim::with_kind(QueueKind::Wheel);
+        for (i, &d) in CHAIN_DELAYS.iter().enumerate() {
+            sim.add(Relay { next: Some(i + 1), delay: d, seen: vec![] });
+            if let Some(edges) = edges.as_deref_mut() {
+                edges.push((i as u32, i as u32 + 1, d));
+            }
+        }
+        sim.add(Relay { next: None, delay: Time::ZERO, seen: vec![] });
+        for k in 0..40u64 {
+            sim.schedule(Time::from_ns(3 * k), 0, M::Ping(0));
+        }
+        sim
+    }
+
+    /// Four relays in a chain, one domain each, heterogeneous link
+    /// latencies: only chain-adjacent domains share a channel, so
+    /// non-neighbors are fully decoupled — and the trajectory still
+    /// matches the serial run exactly.
+    #[test]
+    fn channel_chain_with_heterogeneous_lookaheads_matches_serial() {
+        let until = Time::from_us(50);
+        let mut serial = build_chain(None);
+        serial.run_until(until);
+        let want: Vec<Vec<(Time, u32)>> =
+            (0..4).map(|id| serial.get::<Relay>(id).seen.clone()).collect();
+        assert!(!want[3].is_empty());
+
+        let mut edges = Vec::new();
+        let sim = build_chain(Some(&mut edges));
+        let graph = ChannelGraph::from_edges(4, edges);
+        // closure of a 4-chain: every upstream domain reaches every
+        // downstream one (3 + 2 + 1 ordered pairs), no cycles
+        assert_eq!(graph.n_channels(), 6, "chain closure covers upstream pairs");
+        assert_eq!(graph.min_lookahead(), Some(Time::from_ns(10)));
+        let want_in_3 = [
+            (0u32, (CHAIN_DELAYS[0] + CHAIN_DELAYS[1] + CHAIN_DELAYS[2]).ps()),
+            (1, (CHAIN_DELAYS[1] + CHAIN_DELAYS[2]).ps()),
+            (2, CHAIN_DELAYS[2].ps()),
+        ];
+        assert_eq!(graph.in_channels(3), &want_in_3, "path distances accumulate");
+        let mut part = Partition::split(sim, vec![0, 1, 2, 3], 4, Time::from_ns(10))
+            .with_channels(graph);
+        part.run_until(until);
+        let merged = part.into_sim();
+        let got: Vec<Vec<(Time, u32)>> =
+            (0..4).map(|id| merged.get::<Relay>(id).seen.clone()).collect();
+        assert_eq!(got, want);
+    }
+
+    /// Regression: a chain `0 → 1 → 2` whose *middle* domain is idle.
+    /// Domain 2 must not run ahead of a message still routing through
+    /// domain 1 — the closure channel `0 ⇝ 2` (distance `2·la`) bounds
+    /// it even though domain 1's own EOT is far in the future. A bound
+    /// built from direct in-neighbors only would execute domain 2's
+    /// far-future local event first and corrupt the trajectory.
+    #[test]
+    fn channel_transitive_chain_bounds_through_idle_middle() {
+        let la = Time::from_ns(10);
+        let build3 = || {
+            let mut sim: Sim<M> = Sim::with_kind(QueueKind::Wheel);
+            sim.add(Relay { next: Some(1), delay: la, seen: vec![] });
+            sim.add(Relay { next: Some(2), delay: la, seen: vec![] });
+            sim.add(Relay { next: None, delay: Time::ZERO, seen: vec![] });
+            sim.schedule(Time::ZERO, 0, M::Ping(0));
+            // far-future local event on the last domain: an unsound
+            // bound would execute it before the chain message arrives
+            sim.schedule(Time::from_us(10), 2, M::Ping(100));
+            sim
+        };
+        let until = Time::from_us(20);
+        let mut serial = build3();
+        serial.run_until(until);
+        let want: Vec<Vec<(Time, u32)>> =
+            (0..3).map(|id| serial.get::<Relay>(id).seen.clone()).collect();
+        assert_eq!(want[2], vec![(la + la, 2), (Time::from_us(10), 100)]);
+
+        let sim = build3();
+        let graph = ChannelGraph::from_edges(3, [(0u32, 1u32, la), (1, 2, la)]);
+        let mut part = Partition::split(sim, vec![0, 1, 2], 3, la).with_channels(graph);
+        part.run_until(until);
+        let merged = part.into_sim();
+        let got: Vec<Vec<(Time, u32)>> =
+            (0..3).map(|id| merged.get::<Relay>(id).seen.clone()).collect();
+        assert_eq!(got, want);
+    }
+
+    /// The closure's diagonal: a domain's own sends can bounce back, so
+    /// each domain carries a self-channel at the minimum cycle weight.
+    #[test]
+    fn channel_graph_closure_includes_cycles() {
+        let link = Time::from_ns(10);
+        let g = two_domain_graph(link);
+        assert_eq!(g.n_channels(), 4, "two direct edges + two diagonal cycles");
+        let want0 = [(0u32, Time::from_ns(20).ps()), (1, Time::from_ns(10).ps())];
+        assert_eq!(g.in_channels(0), &want0);
+        let want1 = [(0u32, Time::from_ns(10).ps()), (1, Time::from_ns(20).ps())];
+        assert_eq!(g.in_channels(1), &want1);
+        assert_eq!(g.min_lookahead(), Some(link));
+    }
+
+    /// Regression (PR 5): `Partition::schedule` must compare `at` against
+    /// the **destination** domain's clock only. Channel clocks let other
+    /// domains run ahead; their pasts are not this event's past.
+    #[test]
+    fn schedule_checks_only_destination_domain_clock() {
+        let link = Time::from_ns(20);
+        let (sim, nodes, _) = build(link, 10);
+        let mut part = Partition::split(sim, vec![0, 0, 1, 1], 2, link);
+        let pending_before = part.pending();
+        // domain 1 has drifted ahead; scheduling into domain 0's present
+        // is still valid even though it is domain 1's past
+        part.domains[1].now = Time::from_us(10);
+        part.schedule(Time::from_ns(5), nodes[0], M::Ping(7));
+        assert_eq!(part.pending(), pending_before + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover every domain")]
+    fn channel_graph_must_cover_every_domain() {
+        let link = Time::from_ns(10);
+        let (sim, _, _) = build(link, 1);
+        let _ = Partition::split(sim, vec![0, 0, 1, 1], 2, link)
+            .with_channels(ChannelGraph::from_edges(3, [(0u32, 1u32, link)]));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive channel lookahead")]
+    fn channel_graph_rejects_zero_lookahead() {
+        let _ = ChannelGraph::from_edges(2, [(0u32, 1u32, Time::ZERO)]);
+    }
+
+    #[test]
+    fn channel_graph_takes_min_over_parallel_edges() {
+        let g = ChannelGraph::from_edges(
+            3,
+            [
+                (0u32, 1u32, Time::from_ns(40)),
+                (0, 1, Time::from_ns(15)),
+                (2, 1, Time::from_ns(25)),
+            ],
+        );
+        assert_eq!(g.n_domains(), 3);
+        assert_eq!(g.n_channels(), 2, "parallel edges collapse into one channel");
+        let want = [(0u32, Time::from_ns(15).ps()), (2, Time::from_ns(25).ps())];
+        assert_eq!(g.in_channels(1), &want);
+        assert_eq!(g.min_lookahead(), Some(Time::from_ns(15)));
+        assert_eq!(ChannelGraph::from_edges(2, []).min_lookahead(), None);
+    }
+
+    #[test]
+    fn sync_mode_parse_roundtrip() {
+        assert_eq!(SyncMode::parse("window"), Some(SyncMode::Window));
+        assert_eq!(SyncMode::parse("channel"), Some(SyncMode::Channel));
+        assert_eq!(SyncMode::parse("global"), None);
+        for m in [SyncMode::Window, SyncMode::Channel] {
+            assert_eq!(SyncMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(SyncMode::default(), SyncMode::Channel);
+    }
+
+    // ---- barrier poisoning -----------------------------------------------
+
+    /// A poisoned barrier releases spinning waiters with `false` instead
+    /// of deadlocking them, and stays poisoned for later arrivals.
+    #[test]
+    fn poisoned_barrier_releases_waiters() {
+        let barrier = SpinBarrier::new(2);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| barrier.wait());
+            // give the waiter time to park in its spin loop
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            barrier.poison();
+            assert!(!waiter.join().expect("waiter must not panic"));
+        });
+        assert!(!barrier.wait(), "poison must be sticky");
+    }
+
+    /// An actor that unwinds mid-run: the owning worker must poison the
+    /// barrier so its siblings exit instead of spinning forever, and the
+    /// panic must propagate out of `run_until` (for both sync modes).
+    struct Bomb;
+
+    impl Actor<M> for Bomb {
+        fn handle(&mut self, _msg: M, _ctx: &mut Ctx<'_, M>) {
+            panic!("bomb actor detonated");
+        }
+    }
+
+    #[test]
+    fn panicking_worker_releases_siblings() {
+        for channel in [false, true] {
+            let link = Time::from_ns(30);
+            let mut sim: Sim<M> = Sim::new();
+            let feeder = sim.add(Relay { next: Some(1), delay: link, seen: vec![] });
+            let _bomb = sim.add(Bomb);
+            for k in 0..10u64 {
+                sim.schedule(Time::from_ns(10 * k), feeder, M::Ping(0));
+            }
+            let mut part = Partition::split(sim, vec![0, 1], 2, link);
+            if channel {
+                part = part.with_channels(two_domain_graph(link));
+            }
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                part.run_until(Time::from_us(1));
+            }));
+            assert!(result.is_err(), "panic must propagate (channel={channel})");
+        }
     }
 }

@@ -3,21 +3,22 @@
 //!
 //! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
 //! sweep runner (`--jobs N`), the partitioned conservative PDES
-//! (`domains=N`), the sweep-level resource cache (PR 4) and packet-
-//! payload pooling (PR 4) are performance features only: they must be
-//! observationally identical to the reference heap backend, the serial
-//! runner, the single-domain event loop, a cold per-point prepare and
+//! (`domains=N`, `sync=window|channel`), the sweep-level resource cache
+//! (PR 4) and packet-payload pooling (PR 4) are performance features
+//! only: they must be observationally identical to the reference heap
+//! backend, the serial runner, the single-domain event loop, the
+//! windowed synchronization protocol, a cold per-point prepare and
 //! unpooled allocation. These tests pin that contract at the artifact
 //! level — byte-identical report JSON and sweep CSV (the determinism bar
-//! set in PR 2, extended in PR 3/PR 4; see docs/ARCHITECTURE.md for why
-//! the merge-key and cache-key designs make this hold).
+//! set in PR 2, extended in PR 3/PR 4/PR 5; see docs/ARCHITECTURE.md for
+//! why the merge-key and cache-key designs make this hold).
 
 use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::sweep::SweepRunner;
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
-use bss_extoll::sim::{QueueKind, Time};
+use bss_extoll::sim::{QueueKind, SyncMode, Time};
 use bss_extoll::util::report::Report;
 use bss_extoll::wafer::system::SystemConfig;
 
@@ -164,6 +165,74 @@ fn hotspot_report_identical_across_domain_counts() {
     for d in [2usize, 4] {
         assert_eq!(serial, report_json_domains("hotspot", d), "domains={d}");
     }
+}
+
+/// Run `scenario` partitioned with an explicit sync protocol and queue
+/// backend; pretty JSON.
+fn report_json_full(scenario: &str, sync: SyncMode, domains: usize, kind: QueueKind) -> String {
+    let mut cfg = small();
+    cfg.sync = sync;
+    cfg.domains = domains;
+    cfg.queue = kind;
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(&cfg)
+        .unwrap_or_else(|e| {
+            panic!("{scenario} sync={} domains={domains} run failed: {e:#}", sync.as_str())
+        })
+        .to_json()
+        .pretty()
+}
+
+/// The PR 5 acceptance gate: reports are byte-identical across
+/// `sync=window/channel × domains=1/2/4` (per-neighbor channel clocks
+/// are a perf knob, not physics).
+#[test]
+fn traffic_report_identical_across_sync_modes_and_domain_counts() {
+    let serial = report_json_domains("traffic", 1);
+    assert!(serial.contains("rx_events"));
+    for sync in [SyncMode::Window, SyncMode::Channel] {
+        for d in [1usize, 2, 4] {
+            assert_eq!(
+                serial,
+                report_json_full("traffic", sync, d, QueueKind::Wheel),
+                "sync={} domains={d}",
+                sync.as_str()
+            );
+        }
+    }
+}
+
+#[test]
+fn burst_and_hotspot_reports_identical_across_sync_modes() {
+    for scenario in ["burst", "hotspot"] {
+        let serial = report_json_domains(scenario, 1);
+        for sync in [SyncMode::Window, SyncMode::Channel] {
+            assert_eq!(
+                serial,
+                report_json_full(scenario, sync, 4, QueueKind::Wheel),
+                "{scenario} sync={}",
+                sync.as_str()
+            );
+        }
+    }
+}
+
+/// Sync protocol and queue backend compose: heap × channel × 4 domains
+/// must equal wheel × window × 2 domains must equal the serial run.
+#[test]
+fn sync_modes_and_queue_backends_compose() {
+    let serial = report_json("traffic", QueueKind::Wheel);
+    assert_eq!(
+        serial,
+        report_json_full("traffic", SyncMode::Channel, 4, QueueKind::Heap),
+        "heap × channel × 4"
+    );
+    assert_eq!(
+        serial,
+        report_json_full("traffic", SyncMode::Window, 2, QueueKind::Heap),
+        "heap × window × 2"
+    );
 }
 
 /// Domains and queue backend compose: heap × 4 domains must equal

@@ -347,6 +347,175 @@ fn prop_domain_partition_invariants() {
     }
 }
 
+/// Property (PR 5, conservative synchronization): **any partitioning
+/// under either sync protocol reproduces the serial trajectory.**
+/// Random rings of relay actors (random size, random per-edge latencies,
+/// random hop budgets, a zero-delay sink per node) are run serially, then
+/// partitioned into random contiguous domain blocks under both the
+/// windowed protocol and per-neighbor channel clocks built from the
+/// actual cross-domain edges — every sink must record the identical
+/// `(time, value)` sequence, and the processed-event counts must match.
+#[test]
+fn prop_partition_sync_modes_match_serial() {
+    use bss_extoll::sim::{Actor, ActorId, ChannelGraph, Ctx, Partition, QueueKind, Sim};
+
+    #[derive(Clone, Debug, PartialEq)]
+    enum M {
+        Hop(u32),
+        Echo(u32),
+    }
+
+    /// A ring node: records each Hop at its sink (zero delay, same
+    /// domain), then forwards Hop(n-1) to a randomly chosen neighbor
+    /// over that edge's latency. The RNG is actor-local state, so the
+    /// draw sequence is a function of the per-actor delivery order —
+    /// which the engine contract makes partition-independent.
+    struct RingNode {
+        rng: Rng,
+        right: ActorId,
+        left: ActorId,
+        d_right: Time,
+        d_left: Time,
+        sink: ActorId,
+    }
+
+    impl Actor<M> for RingNode {
+        fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>) {
+            if let M::Hop(n) = msg {
+                ctx.send(self.sink, Time::ZERO, M::Echo(n));
+                if n > 0 {
+                    let (peer, delay) = if self.rng.chance(0.5) {
+                        (self.right, self.d_right)
+                    } else {
+                        (self.left, self.d_left)
+                    };
+                    ctx.send(peer, delay, M::Hop(n - 1));
+                }
+            }
+        }
+    }
+
+    struct Sink {
+        seen: Vec<(Time, u32)>,
+    }
+
+    impl Actor<M> for Sink {
+        fn handle(&mut self, msg: M, ctx: &mut Ctx<'_, M>) {
+            if let M::Echo(n) = msg {
+                self.seen.push((ctx.now(), n));
+            }
+        }
+    }
+
+    /// Ring shape drawn per case (latencies in ps, ≥ 1 ns each).
+    struct Shape {
+        n: usize,
+        d_right: Vec<Time>, // edge i -> i+1 (mod n)
+        d_left: Vec<Time>,  // edge i -> i-1 (mod n)
+        starts: Vec<(Time, usize, u32)>,
+    }
+
+    fn draw_shape(rng: &mut Rng) -> Shape {
+        let n = rng.range(2, 11) as usize;
+        let edge = |rng: &mut Rng| Time::from_ps(rng.range(1_000, 500_000));
+        let d_right: Vec<Time> = (0..n).map(|_| edge(rng)).collect();
+        let d_left: Vec<Time> = (0..n).map(|_| edge(rng)).collect();
+        let starts = (0..rng.range(1, 6) as usize)
+            .map(|_| {
+                (
+                    Time::from_ps(rng.below(100_000)),
+                    rng.index(n),
+                    rng.range(3, 30) as u32,
+                )
+            })
+            .collect();
+        Shape { n, d_right, d_left, starts }
+    }
+
+    /// Build the ring; node i = actor 2i, its sink = actor 2i + 1.
+    fn build(shape: &Shape, seed: u64, kind: QueueKind) -> Sim<M> {
+        let mut sim: Sim<M> = Sim::with_kind(kind);
+        let n = shape.n;
+        for i in 0..n {
+            let node = sim.add(RingNode {
+                rng: Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9)),
+                right: 2 * ((i + 1) % n),
+                left: 2 * ((i + n - 1) % n),
+                d_right: shape.d_right[i],
+                d_left: shape.d_left[i],
+                sink: 2 * i + 1,
+            });
+            let sink = sim.add(Sink { seen: vec![] });
+            assert_eq!((node, sink), (2 * i, 2 * i + 1));
+        }
+        for &(at, node, hops) in &shape.starts {
+            sim.schedule(at, 2 * node, M::Hop(hops));
+        }
+        sim
+    }
+
+    fn sink_trajectories(sim: &Sim<M>, n: usize) -> Vec<Vec<(Time, u32)>> {
+        (0..n).map(|i| sim.get::<Sink>(2 * i + 1).seen.clone()).collect()
+    }
+
+    const UNTIL: Time = Time::from_ms(100);
+
+    for case in 0..24u64 {
+        let mut rng = Rng::new(0x5EC5 + case);
+        let shape = draw_shape(&mut rng);
+        let seed = rng.next_u64();
+        let kind = *rng.choose(&[QueueKind::Heap, QueueKind::Wheel]);
+
+        let mut serial = build(&shape, seed, kind);
+        serial.run_until(UNTIL);
+        let want = sink_trajectories(&serial, shape.n);
+        let want_processed = serial.processed();
+        assert!(want.iter().any(|t| !t.is_empty()), "case {case}: no traffic");
+
+        // Rng::range is inclusive: domain counts in 1..=n
+        let n_domains = rng.range(1, shape.n as u64) as usize;
+        // contiguous blocks: node i (and its sink) -> domain i*D/n
+        let dom_of = |i: usize| (i * n_domains / shape.n) as u32;
+        let owner: Vec<u32> = (0..2 * shape.n).map(|a| dom_of(a / 2)).collect();
+
+        // the cross-domain edge set of this ring, with true latencies
+        let mut edges: Vec<(u32, u32, Time)> = Vec::new();
+        let mut lookahead = Time::MAX;
+        for i in 0..shape.n {
+            let hops = [
+                ((i + 1) % shape.n, shape.d_right[i]),
+                ((i + shape.n - 1) % shape.n, shape.d_left[i]),
+            ];
+            for (peer, d) in hops {
+                if dom_of(i) != dom_of(peer) {
+                    edges.push((dom_of(i), dom_of(peer), d));
+                    lookahead = lookahead.min(d);
+                }
+            }
+        }
+
+        for channel in [false, true] {
+            if n_domains == 1 && channel {
+                continue; // single domain has no channels to attach
+            }
+            let sim = build(&shape, seed, kind);
+            let la = if n_domains == 1 { Time::from_ns(1) } else { lookahead };
+            let mut part = Partition::split(sim, owner.clone(), n_domains, la);
+            if channel {
+                part = part.with_channels(ChannelGraph::from_edges(n_domains, edges.clone()));
+            }
+            part.run_until(UNTIL);
+            assert_eq!(part.processed(), want_processed, "case {case} channel={channel}");
+            let merged = part.into_sim();
+            assert_eq!(
+                sink_trajectories(&merged, shape.n),
+                want,
+                "case {case}: trajectory diverged (D={n_domains}, channel={channel})"
+            );
+        }
+    }
+}
+
 /// Property (PR 4, cache-key discipline): **CacheKey equality implies
 /// Prepared interchangeability.** For random config pairs, whenever a
 /// scenario reports equal cache keys, executing one config against the

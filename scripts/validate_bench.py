@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Bench-artifact policy + shape validation (CI `bench-smoke`).
+
+Two subcommands:
+
+  committed <file...>   Police the *committed* BENCH_PR*.json files: a
+                        placeholder (any file carrying a
+                        "pending_regeneration" note) FAILS the build
+                        unless it also carries an explicit "waiver"
+                        string saying why regeneration was impossible.
+                        Waived placeholders print a loud warning so the
+                        debt stays visible on every run instead of
+                        rotting silently.
+
+  artifact <file>       Structural validation of a freshly regenerated
+                        artifact (the fast-mode `make bench-json` output):
+                        every section present, determinism bits true,
+                        cache counters exact. Placeholders are rejected
+                        outright here — a regenerated artifact can never
+                        be pending.
+
+Exit code 0 = pass, 1 = policy or shape violation.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"::error::{msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: unreadable bench artifact: {e}")
+
+
+def check_committed(paths):
+    """Placeholders must carry an explicit waiver; real artifacts pass."""
+    if not paths:
+        fail("no committed bench artifacts to check (expected BENCH_PR*.json)")
+    waived = 0
+    for path in paths:
+        j = load(path)
+        if "pending_regeneration" not in j:
+            print(f"{path}: real artifact (fast={j.get('fast')}) — ok")
+            continue
+        waiver = j.get("waiver")
+        if not isinstance(waiver, str) or not waiver.strip():
+            fail(
+                f"{path} is a pending_regeneration placeholder with no "
+                f'explicit "waiver" — regenerate it with `make bench-json` '
+                f"on a host with a Rust toolchain, or record why that is "
+                f'impossible in a "waiver" field'
+            )
+        waived += 1
+        print(f"::warning::{path}: placeholder WAIVED — {waiver.strip()}")
+    if waived:
+        print(
+            f"{waived} placeholder(s) waived; full-mode numbers are still "
+            f"owed (see PERF.md)"
+        )
+
+
+def check_artifact(path):
+    """Shape checks for a regenerated BENCH_PR5 artifact."""
+    j = load(path)
+    if "pending_regeneration" in j:
+        fail(f"{path}: regenerated artifact is still a placeholder")
+    assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
+    assert j["artifact"] == "BENCH_PR5", j.get("artifact")
+    assert j["queue_transit"]["results"], "no queue benches recorded"
+    assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
+    assert j["sweep_scaling"]["deterministic_across_jobs"] is True
+
+    p = j["pdes_domain_scaling"]
+    assert p["deterministic_across_domains"] is True
+    assert len(p["runs"]) == 3, p["runs"]
+
+    s = j["pdes_sync_scaling"]
+    assert s["deterministic_across_modes"] is True
+    # serial baseline + {window,channel} x {2,4,8}
+    assert len(s["runs"]) == 7, s["runs"]
+    modes = {(r["sync"], r["domains"]) for r in s["runs"]}
+    for domains in (2, 4, 8):
+        assert ("window", domains) in modes, f"missing window run at {domains}"
+        assert ("channel", domains) in modes, f"missing channel run at {domains}"
+    ratio = s["channel_vs_window_at_4_domains"]
+    assert ratio > 0, s
+    # The PR 5 acceptance bar: channel clocks must not lose to the
+    # windowed protocol at domains=4. Only enforced for full-mode
+    # artifacts — fast-mode CI runners are 2-core and oversubscribed, so
+    # their wall-clock ratios are noise. An explained regression is
+    # recorded as a "regression_note" (mirrored in PERF.md) and demotes
+    # the failure to a loud warning.
+    if j.get("fast") is False and ratio < 1.0:
+        note = s.get("regression_note")
+        if isinstance(note, str) and note.strip():
+            print(f"::warning::channel_vs_window_at_4_domains = {ratio:.2f} "
+                  f"< 1.0 — explained regression: {note.strip()}")
+        else:
+            raise AssertionError(
+                f"channel clocks slower than windowed at 4 domains "
+                f"({ratio:.2f}x < 1.0) with no regression_note/PERF.md "
+                f"explanation"
+            )
+
+    c = j["sweep_cache"]
+    for scn in ("traffic", "microcircuit"):
+        assert scn in c, f"sweep_cache missing {scn} section"
+        assert c[scn]["n_points"] >= 4, c[scn]
+        assert c[scn]["cache_misses"] == 1, f"{scn}: prepare ran more than once"
+        assert c[scn]["cache_hits"] == c[scn]["n_points"] - 1, c[scn]
+
+    pp = j["packet_pooling"]
+    assert pp["deterministic_pool_on_off"] is True
+    assert pp["buffers_recycled"] > 0, "pool never recycled a buffer"
+
+    print(
+        f"{path} ok:",
+        f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
+        f"pdes={p['multi_domain_vs_serial_speedup']:.2f}x",
+        f"channel_vs_window@4={s['channel_vs_window_at_4_domains']:.2f}x",
+        f"cache(mc)={c['microcircuit']['speedup']:.2f}x",
+        f"pool={pp['speedup']:.2f}x",
+    )
+
+
+def main():
+    if len(sys.argv) < 3:
+        fail(f"usage: {sys.argv[0]} committed <file...> | artifact <file>")
+    cmd = sys.argv[1]
+    if cmd == "committed":
+        check_committed(sys.argv[2:])
+    elif cmd == "artifact":
+        check_artifact(sys.argv[2])
+    else:
+        fail(f"unknown subcommand '{cmd}'")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except AssertionError as e:
+        fail(f"bench artifact validation failed: {e}")
+    except KeyError as e:
+        fail(f"bench artifact missing section/field: {e}")
