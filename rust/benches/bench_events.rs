@@ -6,15 +6,17 @@
 //! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR5.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR6.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
 //! and speedup for `sweep --jobs {1,2,4}`, events/s at `domains=1/2/4`
 //! with a report-identity check against the serial run, window-vs-channel
 //! events/s at `domains=2/4/8` on a 16-node torus, cached-sweep speedup +
-//! hit/miss counters for traffic and microcircuit, and pool-on/off
-//! events/s with a byte-identity check. The CI `bench-smoke` job re-runs
+//! hit/miss counters for traffic and microcircuit, pool-on/off events/s
+//! with a byte-identity check, and the degraded-fabric deliverability
+//! curve (`fault_sweep` over rising failed-cable fractions, with a
+//! cross-domain identity check under faults). The CI `bench-smoke` job re-runs
 //! it with `BSS_BENCH_FAST=1`, fails on any `SKIPPED` row, and validates
 //! the artifact shape with `scripts/validate_bench.py`, so this artifact
 //! cannot silently rot.
@@ -22,7 +24,7 @@
 use std::time::Instant;
 
 use bss_extoll::coordinator::scenario::{find, Scenario};
-use bss_extoll::coordinator::sweep::SweepRunner;
+use bss_extoll::coordinator::sweep::{apply_override, SweepRunner};
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
@@ -460,13 +462,70 @@ fn main() {
     println!("pool on vs off: {pool_speedup:.2}x events/s\n");
     assert!(pool_deterministic, "packet pooling changed observable results");
 
+    // ---- 7. fault sweep: degraded-fabric deliverability curve ---------------
+    // Deliverability is exactly 1.0 on the healthy fabric and monotone
+    // non-increasing in the failed-cable fraction (the curve's shape is
+    // policed by scripts/validate_bench.py), and faulted reports stay
+    // byte-identical across PDES domain counts (the PR 6 determinism
+    // gate in rust/tests/determinism_queue.rs pins the same invariant).
+    let fault_scn = find("fault_sweep").expect("fault_sweep registered");
+    let fault_base = traffic_base(fast);
+    let mut fault_runs = Json::arr();
+    let mut fault_table = Table::new(
+        "fault sweep (traffic workload, degraded fabric)",
+        &["fault", "failed_cables", "deliverability", "hop_inflation", "wall_s"],
+    );
+    let mut prev_deliv = f64::INFINITY;
+    for spec in ["none", "fail:0.2", "fail:0.45"] {
+        let mut cfg = fault_base.clone();
+        apply_override(&mut cfg, "fault", spec).expect("fault spec");
+        let t0 = Instant::now();
+        let report = fault_scn.run(&cfg).expect("fault_sweep run failed");
+        let wall = t0.elapsed().as_secs_f64();
+        let deliv = report.get_f64("deliverability").expect("deliverability");
+        let inflation = report.get_f64("hop_inflation").expect("hop_inflation");
+        let failed = report.get_count("failed_cables").expect("failed_cables");
+        assert!(
+            deliv <= prev_deliv,
+            "deliverability rose as the failed-cable fraction grew"
+        );
+        prev_deliv = deliv;
+        fault_table.row(vec![
+            spec.to_string(),
+            failed.to_string(),
+            format!("{deliv:.4}"),
+            format!("{inflation:.3}"),
+            format!("{wall:.3}"),
+        ]);
+        fault_runs.push(
+            Json::obj()
+                .set("fault", spec)
+                .set("failed_cables", failed)
+                .set("deliverability", deliv)
+                .set("hop_inflation", inflation)
+                .set("wall_s", wall),
+        );
+    }
+    let mut faulted = fault_base.clone();
+    apply_override(&mut faulted, "fault", "fail:0.2|loss:0.01|jitter_ns:25")
+        .expect("fault spec");
+    let fault_serial = fault_scn.run(&faulted).expect("faulted run").to_json().pretty();
+    faulted.domains = 2;
+    let fault_partitioned = fault_scn.run(&faulted).expect("faulted run").to_json().pretty();
+    let fault_deterministic = fault_serial == fault_partitioned;
+    fault_table.print();
+    assert!(
+        fault_deterministic,
+        "faulted reports diverged across PDES domain counts"
+    );
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR5")
+        .set("artifact", "BENCH_PR6")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -510,6 +569,12 @@ fn main() {
                 .set("speedup", pool_speedup)
                 .set("buffers_recycled", pool_counts.0)
                 .set("buffers_fresh", pool_counts.1),
+        )
+        .set(
+            "fault_sweep",
+            Json::obj()
+                .set("deterministic_across_domains", fault_deterministic)
+                .set("runs", fault_runs),
         );
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the

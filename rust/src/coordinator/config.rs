@@ -9,6 +9,7 @@ use anyhow::{Context, Result};
 
 use crate::extoll::nic::NicConfig;
 use crate::extoll::torus::TorusSpec;
+use crate::fault::FaultConfig;
 use crate::fpga::bucket::BucketConfig;
 use crate::fpga::manager::{EvictionPolicy, ManagerConfig};
 use crate::sim::{QueueKind, SyncMode, Time};
@@ -43,6 +44,12 @@ pub struct ExperimentConfig {
     /// reference protocol. Byte-identical reports either way
     /// (docs/ARCHITECTURE.md §2.3); no effect at `domains = 1`.
     pub sync: SyncMode,
+    /// Fault injection: link failure/degradation schedules plus
+    /// stochastic packet loss and latency jitter (default: none — the
+    /// build is then byte-identical to the pre-fault fabric). Set from a
+    /// config `"fault"` object or the `--set fault=` spec string
+    /// (`docs/TUNING.md`).
+    pub fault: FaultConfig,
 }
 
 /// Spike-traffic workload knobs.
@@ -127,6 +134,7 @@ impl Default for ExperimentConfig {
             queue: QueueKind::default(),
             domains: 1,
             sync: SyncMode::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -210,6 +218,9 @@ impl ExperimentConfig {
                 burst_len: w.u64_or("burst_len", d.burst_len as u64) as u32,
                 mc_scale: w.f64_or("mc_scale", d.mc_scale),
             };
+        }
+        if let Some(f) = j.get("fault") {
+            cfg.fault = FaultConfig::from_json(f).map_err(|e| anyhow::anyhow!(e))?;
         }
         if let Some(n) = j.get("neuro") {
             let d = NeuroConfig::default();
@@ -307,6 +318,21 @@ mod tests {
             QueueKind::Heap
         );
         let j = Json::parse(r#"{"queue": "splay"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fault_knob_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.fault.is_default());
+        let j = Json::parse(r#"{"fault": {"fail": 0.25, "loss": 0.01, "jitter_ns": 50}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.fault.fail, 0.25);
+        assert_eq!(cfg.fault.loss, 0.01);
+        assert_eq!(cfg.fault.jitter_ns, 50.0);
+        let j = Json::parse(r#"{"fault": {"fail": 1.5}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fault": {"bogus": 1}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 

@@ -1,0 +1,246 @@
+//! Degraded-fabric scenarios: the fault-injection counterparts of the
+//! `traffic` scenario (`docs/ARCHITECTURE.md`, "Fault model & adaptive
+//! routing").
+//!
+//! - [`FaultSweepScenario`] (`fault_sweep`) — the traffic workload over a
+//!   fabric with injected faults, reporting deliverability (delivered /
+//!   injected spike events) and re-route hop inflation (mean hops over
+//!   mean fault-free shortest-path hops). Swept over `fault=` specs it
+//!   produces the degraded-fabric curves: deliverability is exactly 1.0
+//!   at zero faults and monotone non-increasing in the failed-link
+//!   fraction (gated by `scripts/validate_bench.py`).
+//! - [`LatencyDistScenario`] (`latency_dist`) — the same workload
+//!   reporting full latency *distributions* as
+//!   [`MetricKind::Histogram`](crate::util::report::MetricKind) metrics
+//!   (bucketed counts + p50/p95/p99) instead of two scalar percentiles:
+//!   end-to-end event latency and fabric transit latency.
+//!
+//! Both reuse [`TrafficScenario`]'s plan and cache family: the fault
+//! model is an execute-time resource built from the experiment seed
+//! (`run_fabric_experiment_with`), so a fault sweep shares one cached
+//! plan across every point — and the plan RNG draw sequence is untouched,
+//! keeping fault-free reports byte-identical to `traffic`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::msg::Msg;
+use crate::sim::Sim;
+use crate::util::report::{MetricDecl, Report};
+use crate::util::rng::Rng;
+use crate::wafer::system::System;
+use crate::workload::generators::GeneratorKind;
+
+use super::config::ExperimentConfig;
+use super::scenario::{downcast_prepared, CacheKey, Prepared, Scenario};
+use super::traffic::{
+    execute_fabric_plan, fabric_schema, plan_fabric, zipf_plan_key, FabricPlan, FabricScenario,
+    TrafficScenario,
+};
+
+/// Declared metric schema of [`FaultSweepScenario`].
+pub const FAULT_SWEEP_METRICS: &[MetricDecl] = fabric_schema![
+    MetricDecl::count("failed_cables", "cables"),
+    MetricDecl::count("injected_events", "events"),
+    MetricDecl::count("lost_packets", "packets"),
+    MetricDecl::count("lost_events", "events"),
+    MetricDecl::count("undeliverable_packets", "packets"),
+    MetricDecl::count("undeliverable_events", "events"),
+    MetricDecl::count("detour_hops", "hops"),
+    MetricDecl::real("deliverability", "1"),
+    MetricDecl::real("mean_hops", "hops"),
+    MetricDecl::real("hop_inflation", "1"),
+];
+
+/// Declared metric schema of [`LatencyDistScenario`].
+pub const LATENCY_DIST_METRICS: &[MetricDecl] = fabric_schema![
+    MetricDecl::real("latency_p95", "ns"),
+    MetricDecl::histogram("latency_hist", "ps"),
+    MetricDecl::histogram("transit_hist", "ps"),
+];
+
+// ---- fault_sweep ---------------------------------------------------------
+
+/// The `traffic` workload over a degraded fabric: deliverability and
+/// re-route hop inflation versus the configured fault set.
+pub struct FaultSweepScenario;
+
+impl FabricScenario for FaultSweepScenario {
+    fn plan(&self, sys: &System, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<FabricPlan> {
+        TrafficScenario.plan(sys, cfg, rng)
+    }
+
+    fn generator(&self, cfg: &ExperimentConfig) -> GeneratorKind {
+        cfg.workload.generator
+    }
+
+    fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
+        let t = sys.fault_totals(sim);
+        let failed = sys.fault.as_ref().map_or(0, |m| m.failed_cables());
+        report.push_unit("failed_cables", failed as u64, "cables");
+        report.push_unit("injected_events", t.injected_events, "events");
+        report.push_unit("lost_packets", t.lost_packets, "packets");
+        report.push_unit("lost_events", t.lost_events, "events");
+        report.push_unit("undeliverable_packets", t.undeliverable_packets, "packets");
+        report.push_unit("undeliverable_events", t.undeliverable_events, "events");
+        report.push_unit("detour_hops", t.detour_hops, "hops");
+        report.push_unit("deliverability", t.deliverability(), "1");
+        let mean_hops = if t.hops.is_empty() { 0.0 } else { t.hops.mean() };
+        report.push_unit("mean_hops", mean_hops, "hops");
+        report.push_unit("hop_inflation", t.hop_inflation(), "1");
+    }
+}
+
+impl Scenario for FaultSweepScenario {
+    fn name(&self) -> &'static str {
+        "fault_sweep"
+    }
+
+    fn about(&self) -> &'static str {
+        "traffic workload on a degraded fabric: deliverability + hop inflation vs faults"
+    }
+
+    fn metrics(&self) -> &'static [MetricDecl] {
+        FAULT_SWEEP_METRICS
+    }
+
+    /// Shares the traffic plan family: the fault model is built at
+    /// execute time from the seed, so sweeping `fault=` reuses one plan.
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        zipf_plan_key(cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), FAULT_SWEEP_METRICS, plan, cfg)
+    }
+}
+
+// ---- latency_dist --------------------------------------------------------
+
+/// The `traffic` workload reporting latency *distributions*: bucketed
+/// histograms with p50/p95/p99 summaries, for the tail analysis two
+/// scalar percentiles cannot support (and the natural companion to
+/// `fault_sweep` — jitter and detours move the tail first).
+pub struct LatencyDistScenario;
+
+impl FabricScenario for LatencyDistScenario {
+    fn plan(&self, sys: &System, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<FabricPlan> {
+        TrafficScenario.plan(sys, cfg, rng)
+    }
+
+    fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
+        let latency = sys.latency_histogram(sim);
+        let transit = sys.fabric.transit_histogram(sim);
+        report.push_unit("latency_p95", latency.quantile(0.95) as f64 / 1e3, "ns");
+        report.push_unit("latency_hist", &latency, "ps");
+        report.push_unit("transit_hist", &transit, "ps");
+    }
+}
+
+impl Scenario for LatencyDistScenario {
+    fn name(&self) -> &'static str {
+        "latency_dist"
+    }
+
+    fn about(&self) -> &'static str {
+        "traffic workload with full latency histograms (p50/p95/p99 + buckets)"
+    }
+
+    fn metrics(&self) -> &'static [MetricDecl] {
+        LATENCY_DIST_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        zipf_plan_key(cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), LATENCY_DIST_METRICS, plan, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::TorusSpec;
+    use crate::fault::FaultConfig;
+    use crate::sim::Time;
+    use crate::util::report::{MetricKind, Value};
+    use crate::wafer::system::SystemConfig;
+
+    fn small(fault: FaultConfig) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig {
+            system: SystemConfig {
+                n_wafers: 2,
+                torus: TorusSpec::new(2, 2, 1),
+                fpgas_per_wafer: 4,
+                concentrators_per_wafer: 2,
+                ..SystemConfig::default()
+            },
+            fault,
+            ..ExperimentConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 16;
+        cfg.workload.duration = Time::from_us(500);
+        cfg
+    }
+
+    #[test]
+    fn fault_sweep_is_perfect_on_a_healthy_fabric() {
+        let cfg = small(FaultConfig::default());
+        let r = FaultSweepScenario.run(&cfg).unwrap();
+        assert_eq!(r.get_f64("deliverability"), Some(1.0));
+        assert_eq!(r.get_f64("hop_inflation"), Some(1.0));
+        assert_eq!(r.get_count("failed_cables"), Some(0));
+        assert_eq!(r.get_count("lost_packets"), Some(0));
+        assert_eq!(r.get_count("undeliverable_packets"), Some(0));
+        assert_eq!(r.get_count("detour_hops"), Some(0));
+    }
+
+    #[test]
+    fn fault_sweep_loses_events_under_loss() {
+        let cfg = small(FaultConfig {
+            loss: 0.05,
+            ..FaultConfig::default()
+        });
+        let r = FaultSweepScenario.run(&cfg).unwrap();
+        let deliv = r.get_f64("deliverability").unwrap();
+        assert!(deliv < 1.0, "5% loss must lose something, got {deliv}");
+        assert!(r.get_count("lost_packets").unwrap() > 0);
+    }
+
+    #[test]
+    fn latency_dist_reports_histograms() {
+        let cfg = small(FaultConfig::default());
+        let r = LatencyDistScenario.run(&cfg).unwrap();
+        match r.get("latency_hist") {
+            Some(Value::Hist(h)) => assert!(h.n > 0, "no latency samples"),
+            other => panic!("latency_hist is not a histogram: {other:?}"),
+        }
+        assert!(r.get_f64("latency_p95").unwrap() > 0.0);
+        let p50 = r.get_f64("latency_p50").unwrap();
+        let p95 = r.get_f64("latency_p95").unwrap();
+        let p99 = r.get_f64("latency_p99").unwrap();
+        assert!(p50 <= p95 && p95 <= p99, "percentiles out of order");
+    }
+
+    #[test]
+    fn schemas_declare_the_new_kinds() {
+        assert!(FAULT_SWEEP_METRICS.iter().any(|d| d.name == "deliverability"));
+        assert!(LATENCY_DIST_METRICS
+            .iter()
+            .any(|d| d.name == "latency_hist" && d.kind == MetricKind::Histogram));
+    }
+}

@@ -41,7 +41,8 @@
 //! **Registry.** [`scenario::registry`] is one static table
 //! (`&'static [&'static dyn Scenario]`); adding a scenario is a single
 //! type implementing the trait plus one registry line. Registered
-//! today: `traffic`, `microcircuit`, `burst`, `hotspot`, `analyze`.
+//! today: `traffic`, `microcircuit`, `burst`, `hotspot`, `analyze`,
+//! `fault_sweep`, `latency_dist`.
 //!
 //! **Sweeps.** [`sweep::SweepRunner`] runs one scenario over a cartesian
 //! grid of config overrides (`rate_hz=1e6,5e6 × n_wafers=2,4 × ...`) and
@@ -56,12 +57,16 @@
 //! remain as deprecated thin wrappers for one release.
 
 pub mod config;
+pub mod faults;
 pub mod microcircuit;
 pub mod scenario;
 pub mod sweep;
 pub mod traffic;
 
 pub use config::{ExperimentConfig, NeuroConfig, WorkloadConfig};
+pub use faults::{
+    FaultSweepScenario, LatencyDistScenario, FAULT_SWEEP_METRICS, LATENCY_DIST_METRICS,
+};
 pub use microcircuit::{
     shard_slices, MicrocircuitPrepared, MicrocircuitScenario, NeuroReport,
     MICROCIRCUIT_METRICS,

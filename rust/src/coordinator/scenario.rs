@@ -95,6 +95,7 @@ use crate::workload::microcircuit::{Microcircuit, Placement};
 pub use crate::util::report::{MetricDecl, MetricKind};
 
 use super::config::ExperimentConfig;
+use super::faults::{FaultSweepScenario, LatencyDistScenario};
 use super::microcircuit::MicrocircuitScenario;
 use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 
@@ -419,12 +420,14 @@ impl ResourceCache {
 /// borrow from it).
 ///
 /// Adding a scenario = implement [`Scenario`] + add one line here.
-static REGISTRY: [&dyn Scenario; 5] = [
+static REGISTRY: [&dyn Scenario; 7] = [
     &TrafficScenario,
     &MicrocircuitScenario,
     &BurstScenario,
     &HotspotScenario,
     &AnalyzeScenario,
+    &FaultSweepScenario,
+    &LatencyDistScenario,
 ];
 
 /// All registered scenarios, in listing order.
@@ -579,10 +582,18 @@ mod tests {
     #[test]
     fn registry_contains_required_scenarios() {
         let names = names();
-        for required in ["traffic", "microcircuit", "burst", "hotspot", "analyze"] {
+        for required in [
+            "traffic",
+            "microcircuit",
+            "burst",
+            "hotspot",
+            "analyze",
+            "fault_sweep",
+            "latency_dist",
+        ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
-        assert!(names.len() >= 5);
+        assert!(names.len() >= 7);
     }
 
     #[test]

@@ -73,6 +73,13 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
             cfg.sync = crate::sim::SyncMode::parse(value)
                 .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{value}' (window|channel)"))?
         }
+        // fault injection: "none", "fail:0.25|loss:0.01", or a JSON object
+        // (the compact form is comma-free so it survives as a sweep-axis
+        // value — axis values split on ',')
+        "fault" => {
+            cfg.fault = crate::fault::FaultConfig::parse_spec(value)
+                .map_err(|e| anyhow::anyhow!("--fault: {e}"))?
+        }
         // workload
         "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
         "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
@@ -125,11 +132,11 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
             "unknown parameter '{other}' (known: seed, queue, domains, sync, \
-             rate_hz, sources_per_fpga, fan_out, zipf_s, deadline_offset, \
-             duration_s, generator, burst_len, mc_scale, n_wafers, \
-             fpgas_per_wafer, concentrators_per_wafer, torus, buckets, \
-             bucket_capacity, deadline_margin, eviction, steps, artifact, \
-             dt_s, w_exc, w_inh, k_scale — see docs/TUNING.md)"
+             fault, rate_hz, sources_per_fpga, fan_out, zipf_s, \
+             deadline_offset, duration_s, generator, burst_len, mc_scale, \
+             n_wafers, fpgas_per_wafer, concentrators_per_wafer, torus, \
+             buckets, bucket_capacity, deadline_margin, eviction, steps, \
+             artifact, dt_s, w_exc, w_inh, k_scale — see docs/TUNING.md)"
         ),
     }
     Ok(())
@@ -258,6 +265,9 @@ impl SweepResult {
                     Some(Value::Count(c)) => c.to_string(),
                     Some(Value::Real(x)) => format!("{x}"),
                     Some(Value::Text(s)) => s.clone(),
+                    // comma-free percentile summary (HistSummary::render);
+                    // the full buckets live in the JSON artifact
+                    Some(Value::Hist(h)) => h.render(),
                     None => String::new(),
                 }))
                 .collect();
@@ -675,6 +685,50 @@ mod tests {
         // beta was never reported → dropped; alpha precedes gamma even
         // though gamma was pushed first
         assert_eq!(header, "p,alpha,gamma");
+    }
+
+    #[test]
+    fn fault_override_parses_both_spec_forms() {
+        let mut cfg = ExperimentConfig::default();
+        apply_override(&mut cfg, "fault", "fail:0.25|loss:0.01").unwrap();
+        assert_eq!(cfg.fault.fail, 0.25);
+        assert_eq!(cfg.fault.loss, 0.01);
+        apply_override(&mut cfg, "fault", r#"{"jitter_ns": 50}"#).unwrap();
+        assert_eq!(cfg.fault.jitter_ns, 50.0);
+        assert_eq!(cfg.fault.fail, 0.0, "each spec replaces the whole config");
+        apply_override(&mut cfg, "fault", "none").unwrap();
+        assert!(cfg.fault.is_default());
+        assert!(apply_override(&mut cfg, "fault", "fail:2.0").is_err());
+        assert!(apply_override(&mut cfg, "fault", "bogus:1").is_err());
+    }
+
+    #[test]
+    fn csv_renders_histogram_metrics_comma_free() {
+        const SCHEMA: &[crate::util::report::MetricDecl] = &[
+            crate::util::report::MetricDecl::histogram("lat", "ps"),
+        ];
+        let mut h = crate::util::stats::Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        let mut report = Report::with_schema("unit", SCHEMA);
+        report.push_unit("lat", &h, "ps");
+        let result = SweepResult {
+            scenario: "unit".to_string(),
+            schema: SCHEMA,
+            points: vec![SweepPoint {
+                params: vec![("p".to_string(), "0".to_string())],
+                report,
+            }],
+            cache: CacheStats::default(),
+        };
+        let csv = result.to_csv();
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines[0], "p,lat");
+        assert!(lines[1].contains("n=5"), "{}", lines[1]);
+        assert!(lines[1].contains("p95="), "{}", lines[1]);
+        // the summary must not force CSV quoting
+        assert!(!lines[1].contains('"'), "{}", lines[1]);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::extoll::network::{pdes_channel_graph, pdes_lookahead};
+use crate::extoll::network::{pdes_channel_graph_with, pdes_lookahead_with};
 use crate::extoll::torus::{DomainMap, NodeAddr};
 use crate::fpga::fpga::{Fpga, TIMER_FLUSH_ALL};
 use crate::fpga::lookup::{RxEntry, TxEntry};
@@ -83,6 +83,7 @@ macro_rules! fabric_schema {
         ]
     };
 }
+pub(crate) use fabric_schema;
 
 /// Declared metric schema of [`TrafficScenario`].
 pub const TRAFFIC_METRICS: &[MetricDecl] = fabric_schema![];
@@ -291,12 +292,19 @@ pub(crate) fn run_fabric_experiment_with(
         cfg.queue,
         expected_pending_events(cfg),
     ));
-    let sys = System::build(&mut sim, cfg.system);
+    // The fault model is an execute-time resource, built here (never in
+    // prepare) from the experiment seed: plans stay fault-agnostic, so a
+    // fault sweep shares one cached plan across every point. The default
+    // (fault-free) config builds no model at all — byte-identical to the
+    // pre-fault simulator.
+    let fault = (!cfg.fault.is_default())
+        .then(|| Arc::new(crate::fault::FaultModel::build(&cfg.fault, cfg.system.torus, cfg.seed)));
+    let sys = System::build_with(&mut sim, cfg.system, fault.as_ref());
     apply_plan(&mut sim, &sys, plan, scn.generator(cfg), cfg)?;
 
     let dm = DomainMap::new(cfg.system.torus, cfg.domains);
     let sim = if dm.n_domains() > 1 {
-        run_loop_partitioned(sim, &sys, cfg, &dm)?
+        run_loop_partitioned(sim, &sys, cfg, &dm, fault.as_deref())?
     } else {
         run_loop_serial(sim, &sys, cfg)
     };
@@ -324,19 +332,25 @@ fn run_loop_partitioned(
     sys: &System,
     cfg: &ExperimentConfig,
     dm: &DomainMap,
+    fault: Option<&crate::fault::FaultModel>,
 ) -> Result<Sim<Msg>> {
     let owner = resolve_owners(&sim, dm)?;
     // one inter-domain edge enumeration either way: the channel graph's
     // cheapest channel IS the windowed lookahead (a closure sum is never
-    // smaller than its cheapest edge)
+    // smaller than its cheapest edge). Links dead from t=0 never carry a
+    // message, so the fault-aware folds exclude them from the channel
+    // bounds (`pdes_lookahead_with`).
     let no_links = || anyhow::anyhow!("partition has no inter-domain links");
     let (lookahead, channels) = match cfg.sync {
         SyncMode::Channel => {
-            let graph = pdes_channel_graph(dm, &cfg.system.nic);
+            let graph = pdes_channel_graph_with(dm, &cfg.system.nic, fault);
             let la = graph.min_lookahead().ok_or_else(no_links)?;
             (la, Some(graph))
         }
-        SyncMode::Window => (pdes_lookahead(dm, &cfg.system.nic).ok_or_else(no_links)?, None),
+        SyncMode::Window => (
+            pdes_lookahead_with(dm, &cfg.system.nic, fault).ok_or_else(no_links)?,
+            None,
+        ),
     };
     let mut part = Partition::split(sim, owner, dm.n_domains(), lookahead);
     if let Some(graph) = channels {
@@ -459,7 +473,7 @@ fn fabric_key_base(family: &'static str, cfg: &ExperimentConfig) -> CacheKey {
 /// Cache key of the Zipf fan-out plan — shared by `traffic` and `burst`
 /// (their plans are identical; only the generator kind spawned at
 /// execute time differs).
-fn zipf_plan_key(cfg: &ExperimentConfig) -> CacheKey {
+pub(crate) fn zipf_plan_key(cfg: &ExperimentConfig) -> CacheKey {
     fabric_key_base("fabric_zipf_plan", cfg)
         .field("fan_out", cfg.workload.fan_out)
         .field("zipf_s", cfg.workload.zipf_s)

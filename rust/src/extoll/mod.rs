@@ -15,9 +15,12 @@ pub mod torus;
 
 pub use analysis::{Flow, FlowAnalysis};
 pub use baseline::{GbeConfig, GbeLink};
-pub use network::{build_torus, Fabric};
+pub use network::{build_torus, build_torus_with, Fabric};
 pub use nic::{Nic, NicConfig, NicStats};
 pub use packet::{Packet, PacketKind, HEADER_BYTES, MAX_EVENTS_PER_PACKET, MAX_PAYLOAD_BYTES};
 pub use rma::{fragment_put, Notification};
-pub use routing::{links_on_route, next_hop, route};
+pub use routing::{
+    links_on_route, links_on_route_with, next_hop, next_hop_with, route, route_with, FaultFree,
+    Hop, LinkStatus,
+};
 pub use torus::{Dir, NodeAddr, TorusSpec, DIRS, LOCAL_PORT, TOURMALET_LINKS};

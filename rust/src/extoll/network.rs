@@ -5,6 +5,9 @@
 //! consecutive actor ids: NICs are added in node-address order, so the id
 //! of node `a` is `base + a.0`, and neighbor wiring needs no second pass.
 
+use std::sync::Arc;
+
+use crate::fault::FaultModel;
 use crate::msg::Msg;
 use crate::sim::{ActorId, ChannelGraph, Sim, Time};
 
@@ -15,6 +18,16 @@ use super::torus::{Dir, DomainMap, NodeAddr, TorusSpec, DIRS, TORUS_PORTS};
 ///
 /// Local units are attached afterwards via [`Nic::attach_local`].
 pub fn build_torus(sim: &mut Sim<Msg>, spec: &TorusSpec, cfg: NicConfig) -> Vec<ActorId> {
+    build_torus_with(sim, spec, cfg, None)
+}
+
+/// [`build_torus`] with an optional fault model installed on every NIC.
+pub fn build_torus_with(
+    sim: &mut Sim<Msg>,
+    spec: &TorusSpec,
+    cfg: NicConfig,
+    fault: Option<&Arc<FaultModel>>,
+) -> Vec<ActorId> {
     let base = sim.n_actors();
     let ids: Vec<ActorId> = spec
         .nodes()
@@ -26,6 +39,11 @@ pub fn build_torus(sim: &mut Sim<Msg>, spec: &TorusSpec, cfg: NicConfig) -> Vec<
             let n = spec.neighbor(addr, dir);
             let id = ids[addr.0 as usize];
             sim.get_mut::<Nic>(id).set_neighbor(dir, base + n.0 as usize);
+        }
+    }
+    if let Some(model) = fault {
+        for &id in &ids {
+            sim.get_mut::<Nic>(id).set_fault_model(Arc::clone(model));
         }
     }
     ids
@@ -51,10 +69,51 @@ pub fn edge_min_latency(cfg: &NicConfig, _from: NodeAddr, _dir: Dir, _to: NodeAd
 /// Returns `None` when no inter-domain links exist (single domain) —
 /// nothing to synchronize on.
 pub fn pdes_lookahead(dm: &DomainMap, cfg: &NicConfig) -> Option<Time> {
-    dm.inter_domain_edges()
+    pdes_lookahead_with(dm, cfg, None)
+}
+
+/// [`pdes_lookahead`] aware of a fault model: links dead from t = 0
+/// (`link_ever_alive == false`) never carry a message — adaptive routing
+/// never selects them, and credits only travel on links packets arrived
+/// over — so they are excluded from the fold. Links that fail mid-run
+/// still count: packets enqueued just before the cutover may cross after
+/// it. With today's uniform link config the exclusion only matters when a
+/// domain pair loses *all* its physical links (the channel graph then
+/// bounds that pair through real multi-hop routes instead); if every
+/// inter-domain link is dead we fall back to the unfiltered edge set —
+/// the bound stays conservative and partitioned setup keeps working.
+pub fn pdes_lookahead_with(
+    dm: &DomainMap,
+    cfg: &NicConfig,
+    fault: Option<&FaultModel>,
+) -> Option<Time> {
+    live_inter_domain_edges(dm, fault)
         .into_iter()
         .map(|(a, d, b)| edge_min_latency(cfg, a, d, b))
         .min()
+}
+
+/// The inter-domain edge set restricted to links the fault model ever
+/// brings up, falling back to the full set when the filter would empty it
+/// (see [`pdes_lookahead_with`] for why both halves are sound).
+fn live_inter_domain_edges(
+    dm: &DomainMap,
+    fault: Option<&FaultModel>,
+) -> Vec<(NodeAddr, Dir, NodeAddr)> {
+    let all = dm.inter_domain_edges();
+    let Some(model) = fault else {
+        return all;
+    };
+    let live: Vec<_> = all
+        .iter()
+        .copied()
+        .filter(|&(a, d, _)| model.link_ever_alive(a, d))
+        .collect();
+    if live.is_empty() {
+        all
+    } else {
+        live
+    }
 }
 
 /// Per-neighbor channel-clock topology for a partitioned fabric
@@ -68,8 +127,21 @@ pub fn pdes_lookahead(dm: &DomainMap, cfg: &NicConfig) -> Option<Time> {
 /// another only through the accumulated lookahead of a real route
 /// between them.
 pub fn pdes_channel_graph(dm: &DomainMap, cfg: &NicConfig) -> ChannelGraph {
-    let edges = dm
-        .inter_domain_edges()
+    pdes_channel_graph_with(dm, cfg, None)
+}
+
+/// [`pdes_channel_graph`] aware of a fault model: never-alive links are
+/// dropped before the closure, so a domain pair whose only direct cables
+/// are dead is bounded through its surviving multi-hop routes (or not at
+/// all, if routing cannot reach it — `ChannelGraph::from_edges` tolerates
+/// disconnected pairs). Same filter and fallback as
+/// [`pdes_lookahead_with`].
+pub fn pdes_channel_graph_with(
+    dm: &DomainMap,
+    cfg: &NicConfig,
+    fault: Option<&FaultModel>,
+) -> ChannelGraph {
+    let edges = live_inter_domain_edges(dm, fault)
         .into_iter()
         .map(|(a, d, b)| (dm.domain_of(a), dm.domain_of(b), edge_min_latency(cfg, a, d, b)));
     ChannelGraph::from_edges(dm.n_domains(), edges)
@@ -85,7 +157,18 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn build(sim: &mut Sim<Msg>, spec: TorusSpec, cfg: NicConfig) -> Fabric {
-        let nics = build_torus(sim, &spec, cfg);
+        Fabric::build_with(sim, spec, cfg, None)
+    }
+
+    /// [`Fabric::build`] with an optional fault model installed on every
+    /// NIC before the run starts.
+    pub fn build_with(
+        sim: &mut Sim<Msg>,
+        spec: TorusSpec,
+        cfg: NicConfig,
+        fault: Option<&Arc<FaultModel>>,
+    ) -> Fabric {
+        let nics = build_torus_with(sim, &spec, cfg, fault);
         Fabric { spec, cfg, nics }
     }
 
@@ -187,6 +270,35 @@ mod tests {
         assert_eq!(pdes_lookahead(&dm, &cfg), Some(cfg.min_link_latency()));
         // single domain: no inter-domain edges, nothing to synchronize on
         assert_eq!(pdes_lookahead(&DomainMap::new(spec, 1), &cfg), None);
+    }
+
+    #[test]
+    fn dead_links_are_excluded_from_lookahead_until_none_remain() {
+        use crate::fault::{FaultConfig, FaultModel};
+        let spec = TorusSpec::new(4, 2, 2);
+        let cfg = NicConfig::default();
+        let dm = DomainMap::new(spec, 4);
+        // no model / zero-fault model: identical to the unfiltered fold
+        assert_eq!(pdes_lookahead_with(&dm, &cfg, None), Some(cfg.min_link_latency()));
+        let healthy = FaultModel::build(&FaultConfig::default(), spec, 1);
+        assert_eq!(
+            pdes_lookahead_with(&dm, &cfg, Some(&healthy)),
+            Some(cfg.min_link_latency())
+        );
+        // every cable dead from t=0: the filter would empty the edge set,
+        // so the fold falls back to the unfiltered (still conservative)
+        // bound rather than losing the partitioned setup invariants
+        let all_dead = FaultModel::build(
+            &FaultConfig { fail: 1.0, ..FaultConfig::default() },
+            spec,
+            1,
+        );
+        assert_eq!(
+            pdes_lookahead_with(&dm, &cfg, Some(&all_dead)),
+            Some(cfg.min_link_latency())
+        );
+        let g = pdes_channel_graph_with(&dm, &cfg, Some(&all_dead));
+        assert_eq!(g.min_lookahead(), Some(cfg.min_link_latency()));
     }
 
     #[test]

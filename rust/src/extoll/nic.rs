@@ -25,13 +25,16 @@
 //! `benches/bench_events.rs`).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
+use crate::fault::FaultModel;
 use crate::msg::Msg;
 use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
 use super::packet::Packet;
-use super::routing::next_hop;
+use super::routing::{next_hop, next_hop_with, Hop};
 use super::torus::{Dir, NodeAddr, TorusSpec, LOCAL_PORT};
 
 /// Physical/protocol parameters of a Tourmalet NIC and its links.
@@ -151,12 +154,47 @@ pub struct NicStats {
     pub delivered: u64,
     pub injected: u64,
     pub delivered_events: u64,
+    /// Spike events injected at this NIC (sum of `n_events` over injects).
+    pub injected_events: u64,
     /// Fabric transit latency (inject → deliver), picoseconds.
     pub transit_ps: Histogram,
     /// Hops of delivered packets (torus hops, local link excluded).
     pub hops: Histogram,
+    /// Fault-free shortest-path hop distance src→dst of delivered packets —
+    /// the baseline against which detour hop inflation is measured.
+    pub min_hops: Histogram,
     /// Credit-stall occurrences (head-of-line packet without credit).
     pub credit_stalls: u64,
+    /// Packets dropped by stochastic link loss (receiver side).
+    pub lost_packets: u64,
+    /// Spike events inside lost packets.
+    pub lost_events: u64,
+    /// Packets dropped because no live route to the destination existed.
+    pub undeliverable_packets: u64,
+    /// Spike events inside undeliverable packets.
+    pub undeliverable_events: u64,
+    /// Hops taken off the dimension-order path to route around faults.
+    pub detour_hops: u64,
+}
+
+/// Per-NIC fault-injection state: a shared handle on the fabric-wide
+/// [`FaultModel`] plus this NIC's private packet-level RNG (loss draws,
+/// latency jitter). The RNG is seeded from the model and the NIC address
+/// only, so its draw sequence is a pure function of this actor's event
+/// order — which the engine keeps partition-independent (determinism
+/// contract, `docs/ARCHITECTURE.md`).
+struct FaultHandle {
+    model: Arc<FaultModel>,
+    rng: Rng,
+}
+
+/// Outcome of the egress decision for one packet at one NIC.
+enum Egress {
+    /// Forward out `port`; `wraps` = crosses the ring's wrap edge,
+    /// `detour` = adaptive step off the dimension-order path.
+    Port { port: u8, wraps: bool, detour: bool },
+    /// No live path to the destination exists right now.
+    Undeliverable,
 }
 
 /// The NIC actor. Port indices `0..TORUS_PORTS` are the torus directions
@@ -170,6 +208,7 @@ pub struct Nic {
     neighbors: [Option<ActorId>; 7],
     ports: [Port; 7],
     pub stats: NicStats,
+    fault: Option<FaultHandle>,
 }
 
 impl Nic {
@@ -182,7 +221,16 @@ impl Nic {
             neighbors: [None; 7],
             ports: std::array::from_fn(|_| Port::new(credits)),
             stats: NicStats::default(),
+            fault: None,
         }
+    }
+
+    /// Install a fault model (done by the network builder before the run
+    /// starts). Without one the NIC routes pure dimension-order with no
+    /// loss, jitter, or degradation — bit-identical to the pre-fault code.
+    pub fn set_fault_model(&mut self, model: Arc<FaultModel>) {
+        let rng = model.nic_rng(self.addr);
+        self.fault = Some(FaultHandle { model, rng });
     }
 
     /// Wire a torus neighbor (done by the network builder).
@@ -219,17 +267,44 @@ impl Nic {
         self.ports.iter().map(|p| p.queued()).sum()
     }
 
-    /// Egress port for `p`, plus whether the hop crosses the wrap edge.
-    fn egress_for(&self, p: &Packet) -> (u8, bool) {
-        match next_hop(&self.torus, self.addr, p.dst) {
-            None => (LOCAL_PORT, false),
-            Some(dir) => {
+    /// Egress decision for `p` at simulation time `now`.
+    fn egress_for(&self, p: &Packet, now: Time) -> Egress {
+        let hop = match &self.fault {
+            None => match next_hop(&self.torus, self.addr, p.dst) {
+                None => Hop::Deliver,
+                Some(dir) => Hop::Via(dir),
+            },
+            Some(f) => next_hop_with(&self.torus, &f.model.view(now), self.addr, p.dst),
+        };
+        match hop {
+            Hop::Deliver => Egress::Port { port: LOCAL_PORT, wraps: false, detour: false },
+            Hop::Unreachable => Egress::Undeliverable,
+            Hop::Via(dir) => {
                 let (x, y, z) = self.torus.coords_of(self.addr);
                 let coord = [x, y, z][dir.axis()];
                 let n = self.torus.dims(dir.axis());
                 let wraps = if dir.sign() > 0 { coord + 1 == n } else { coord == 0 };
-                (dir.port(), wraps)
+                let detour = self.fault.is_some()
+                    && next_hop(&self.torus, self.addr, p.dst) != Some(dir);
+                Egress::Port { port: dir.port(), wraps, detour }
             }
+        }
+    }
+
+    /// Return the upstream flow-control credit for a packet that is being
+    /// removed from our input buffer without being forwarded (lost or
+    /// undeliverable). Dropping a packet must never leak its credit, or
+    /// the upstream (port, vc) slot would throttle forever.
+    fn release_ingress(&self, p: &mut Packet, ctx: &mut Ctx<'_, Msg>) {
+        if let Some((up_actor, up_port, up_vc)) = p.ingress.take() {
+            ctx.send(
+                up_actor,
+                self.cfg.credit_return_latency(),
+                Msg::Credit {
+                    port: up_port,
+                    vc: up_vc,
+                },
+            );
         }
     }
 
@@ -237,17 +312,32 @@ impl Nic {
     ///
     /// VC discipline (dateline): entering a new dimension resets to VC0;
     /// traversing the wrap edge of a ring promotes to VC1 for the rest of
-    /// that ring.
+    /// that ring. Detour hops (adaptive steps off the dimension-order
+    /// path, taken only under faults) also ride VC1: VC1 queues drain in
+    /// dimension-order like everything else, and promoting the detoured
+    /// packet to the escape channel means it can never close a VC0 cycle
+    /// that dimension-order routing itself would not create.
     fn enqueue(&mut self, mut p: Packet, ctx: &mut Ctx<'_, Msg>) {
-        let (port, wraps) = self.egress_for(&p);
+        let (port, wraps, detour) = match self.egress_for(&p, ctx.now()) {
+            Egress::Port { port, wraps, detour } => (port, wraps, detour),
+            Egress::Undeliverable => {
+                self.stats.undeliverable_packets += 1;
+                self.stats.undeliverable_events += p.n_events() as u64;
+                self.release_ingress(&mut p, ctx);
+                return;
+            }
+        };
         if port != LOCAL_PORT {
             let axis = Dir::from_port(port).axis() as u8;
             if axis != p.axis {
                 p.vc = 0;
                 p.axis = axis;
             }
-            if wraps {
+            if wraps || detour {
                 p.vc = 1;
+            }
+            if detour {
+                self.stats.detour_hops += 1;
             }
         }
         let port_state = &mut self.ports[port as usize];
@@ -286,7 +376,16 @@ impl Nic {
         if limited {
             port_state.credits[vc as usize] -= 1;
         }
-        let ser = self.cfg.ser_time(p.wire_bytes());
+        let mut ser = self.cfg.ser_time(p.wire_bytes());
+        if port != LOCAL_PORT {
+            if let Some(f) = &self.fault {
+                // A degraded cable serializes slower (fewer live lanes).
+                let scale = f.model.ser_scale(self.addr, Dir::from_port(port));
+                if scale != 1.0 {
+                    ser = Time::from_ps((ser.ps() as f64 * scale).round() as u64);
+                }
+            }
+        }
         port_state.busy = true;
         port_state.busy_time += ser;
         port_state.tx_packets += 1;
@@ -308,12 +407,27 @@ impl Nic {
         }
 
         p.hops += 1;
-        let arrival = ser + self.cfg.cable_latency + self.cfg.hop_latency;
+        let mut arrival = ser + self.cfg.cable_latency + self.cfg.hop_latency;
+        if port != LOCAL_PORT {
+            if let Some(f) = &mut self.fault {
+                if f.model.jitter_ns() > 0.0 {
+                    // Exponential latency jitter with mean `jitter_ns`
+                    // (Rng::exponential takes a *rate*). Additive only, so
+                    // the healthy `min_link_latency` stays a sound PDES
+                    // lookahead bound.
+                    let jitter_ns = f.rng.exponential(1.0 / f.model.jitter_ns());
+                    arrival += Time::from_ps((jitter_ns * 1e3).round() as u64);
+                }
+            }
+        }
         if port == LOCAL_PORT {
             // Delivery over the 7th link to the attached unit.
             self.stats.delivered += 1;
             self.stats.delivered_events += p.n_events() as u64;
             self.stats.hops.record(p.hops as u64 - 1);
+            self.stats
+                .min_hops
+                .record(self.torus.hop_distance(p.src, p.dst) as u64);
             let transit = (ctx.now() + arrival).saturating_sub(p.injected);
             self.stats.transit_ps.record(transit.ps());
             ctx.send(dst_actor, arrival, Msg::Deliver(p));
@@ -329,9 +443,26 @@ impl Nic {
 impl Actor<Msg> for Nic {
     fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
         match msg {
-            Msg::Packet(p) => self.enqueue(p, ctx),
+            Msg::Packet(mut p) => {
+                // Stochastic link loss is modeled at the receiver: the
+                // packet already paid serialization + wire time, and the
+                // upstream credit must still come back (a real lost flit
+                // frees its buffer slot too — credits never leak).
+                let lost = match &mut self.fault {
+                    Some(f) if f.model.loss() > 0.0 => f.rng.chance(f.model.loss()),
+                    _ => false,
+                };
+                if lost {
+                    self.stats.lost_packets += 1;
+                    self.stats.lost_events += p.n_events() as u64;
+                    self.release_ingress(&mut p, ctx);
+                } else {
+                    self.enqueue(p, ctx);
+                }
+            }
             Msg::Inject(mut p) => {
                 self.stats.injected += 1;
+                self.stats.injected_events += p.n_events() as u64;
                 p.injected = ctx.now();
                 p.ingress = None;
                 p.vc = 0;
@@ -373,6 +504,7 @@ mod tests {
     use crate::extoll::network::build_torus;
     use crate::extoll::packet::Packet;
     use crate::extoll::torus::TORUS_PORTS;
+    use crate::fault::FaultConfig;
     use crate::sim::Sim;
 
     /// Local unit that records deliveries.
@@ -588,6 +720,162 @@ mod tests {
             .map(|&s| sim.get::<Sink>(s).received.len())
             .sum();
         assert_eq!(total as u64, sent);
+    }
+
+    fn install_fault(sim: &mut Sim<Msg>, nics: &[ActorId], model: &Arc<FaultModel>) {
+        for &id in nics {
+            sim.get_mut::<Nic>(id).set_fault_model(Arc::clone(model));
+        }
+    }
+
+    #[test]
+    fn zero_fault_model_is_transparent() {
+        // An installed model with nothing configured must not change
+        // delivery or hop counts versus no model at all.
+        let cfg = NicConfig::default();
+        let (mut sim, spec, nics, sinks) = setup((3, 3, 2), cfg);
+        let model = Arc::new(FaultModel::build(&FaultConfig::default(), spec, 7));
+        install_fault(&mut sim, &nics, &model);
+        let mut seq = 0u64;
+        for s in spec.nodes() {
+            for d in spec.nodes() {
+                seq += 1;
+                let p = Packet::raw(s, d, 128, Time::ZERO, seq);
+                sim.schedule(Time::from_ns(seq), nics[s.0 as usize], Msg::Inject(p));
+            }
+        }
+        sim.run_to_completion();
+        for d in spec.nodes() {
+            let sink: &Sink = sim.get(sinks[d.0 as usize]);
+            assert_eq!(sink.received.len(), spec.n_nodes());
+            for (_, p) in &sink.received {
+                assert_eq!(p.hops as u32, spec.hop_distance(p.src, p.dst) + 1);
+            }
+        }
+        let detours: u64 = nics.iter().map(|&n| sim.get::<Nic>(n).stats.detour_hops).sum();
+        assert_eq!(detours, 0);
+    }
+
+    #[test]
+    fn detour_around_failed_cable_still_delivers_all_pairs() {
+        // One dead cable in a 4x4 torus (degree 4) cannot disconnect it:
+        // every packet must still arrive, some via detour hops.
+        let cfg = NicConfig::default();
+        let (mut sim, spec, nics, sinks) = setup((4, 4, 1), cfg);
+        let fcfg = FaultConfig {
+            fail: 1.0 / 32.0, // 32 cables in 4x4x1 → exactly one fails
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 42));
+        assert_eq!(model.failed_cables(), 1);
+        install_fault(&mut sim, &nics, &model);
+        let mut seq = 0u64;
+        for s in spec.nodes() {
+            for d in spec.nodes() {
+                seq += 1;
+                let p = Packet::raw(s, d, 128, Time::ZERO, seq);
+                sim.schedule(Time::from_ns(seq), nics[s.0 as usize], Msg::Inject(p));
+            }
+        }
+        sim.run_to_completion();
+        let total: usize = sinks.iter().map(|&s| sim.get::<Sink>(s).received.len()).sum();
+        assert_eq!(total, spec.n_nodes() * spec.n_nodes(), "lost packets under detour");
+        let (mut hops, mut min_hops) = (0u128, 0u128);
+        let (mut detours, mut undeliverable) = (0u64, 0u64);
+        for &n in &nics {
+            let st = &sim.get::<Nic>(n).stats;
+            hops += st.hops.sum();
+            min_hops += st.min_hops.sum();
+            detours += st.detour_hops;
+            undeliverable += st.undeliverable_packets;
+        }
+        assert_eq!(undeliverable, 0);
+        assert!(detours > 0, "some dimension-order route must cross the dead cable");
+        assert!(hops > min_hops, "detours must inflate hop counts");
+    }
+
+    #[test]
+    fn loss_drops_packets_but_credits_flow() {
+        // Heavy receiver-side loss with 1-credit links: lost + received
+        // must equal sent, and the run must terminate (credits returned
+        // for dropped packets — no leak, no deadlock).
+        let cfg = NicConfig {
+            credits_per_vc: 1,
+            ..NicConfig::default()
+        };
+        let (mut sim, spec, nics, sinks) = setup((2, 1, 1), cfg);
+        let fcfg = FaultConfig {
+            loss: 0.5,
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 3));
+        install_fault(&mut sim, &nics, &model);
+        let sent = 200u64;
+        for seq in 0..sent {
+            let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, seq);
+            sim.schedule(Time::ZERO, nics[0], Msg::Inject(p));
+        }
+        sim.run_to_completion();
+        let received = sim.get::<Sink>(sinks[1]).received.len() as u64;
+        let lost: u64 = nics.iter().map(|&n| sim.get::<Nic>(n).stats.lost_packets).sum();
+        assert_eq!(received + lost, sent);
+        assert!(lost > 0, "0.5 loss over 200 packets losing nothing is astronomically unlikely");
+        assert!(received > 0, "0.5 loss over 200 packets losing everything is astronomically unlikely");
+    }
+
+    #[test]
+    fn undeliverable_when_destination_is_cut_off() {
+        // 2x1x1 has exactly two cables (the two directed rings between the
+        // pair); fail=1.0 kills both, isolating each node. Cross-node
+        // packets must be counted undeliverable — not panic, not hang —
+        // while self-delivery over the local link still works.
+        let cfg = NicConfig::default();
+        let (mut sim, spec, nics, sinks) = setup((2, 1, 1), cfg);
+        let fcfg = FaultConfig {
+            fail: 1.0,
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 5));
+        install_fault(&mut sim, &nics, &model);
+        sim.schedule(
+            Time::ZERO,
+            nics[0],
+            Msg::Inject(Packet::raw(NodeAddr(0), NodeAddr(1), 64, Time::ZERO, 1)),
+        );
+        sim.schedule(
+            Time::ZERO,
+            nics[0],
+            Msg::Inject(Packet::raw(NodeAddr(0), NodeAddr(0), 64, Time::ZERO, 2)),
+        );
+        sim.run_to_completion();
+        assert_eq!(sim.get::<Sink>(sinks[1]).received.len(), 0);
+        assert_eq!(sim.get::<Sink>(sinks[0]).received.len(), 1);
+        let st = &sim.get::<Nic>(nics[0]).stats;
+        assert_eq!(st.undeliverable_packets, 1);
+        assert_eq!(st.undeliverable_events, 1);
+    }
+
+    #[test]
+    fn jitter_and_degradation_only_add_latency() {
+        // With jitter + a degraded cable the packet can only be later than
+        // the healthy schedule — never earlier (PDES lookahead soundness).
+        let cfg = NicConfig::default();
+        let (mut sim, spec, nics, sinks) = setup((2, 1, 1), cfg);
+        let fcfg = FaultConfig {
+            degrade: 1.0,
+            degrade_factor: 2.0,
+            jitter_ns: 20.0,
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 11));
+        install_fault(&mut sim, &nics, &model);
+        let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, 1);
+        sim.schedule(Time::ZERO, nics[0], Msg::Inject(p));
+        sim.run_to_completion();
+        let sink: &Sink = sim.get(sinks[1]);
+        assert_eq!(sink.received.len(), 1);
+        let healthy = (cfg.ser_time(520) + cfg.cable_latency + cfg.hop_latency) * 2;
+        assert!(sink.received[0].0 > healthy, "faults must only slow packets down");
     }
 
     #[test]

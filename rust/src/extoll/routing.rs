@@ -1,4 +1,5 @@
-//! Dimension-order routing on the 3D torus (paper §1).
+//! Dimension-order routing on the 3D torus (paper §1), with fault-aware
+//! adaptive fallback.
 //!
 //! "Routing of messages through the network is entirely done by the
 //! Tourmalet network chips and is based on a given 16 bit destination
@@ -6,11 +7,74 @@
 //! dimension-order (X → Y → Z) routing with wrap-aware shortest direction
 //! per axis — the standard deadlock-free scheme for torus networks and the
 //! default in Extoll deployments.
+//!
+//! ## Fault awareness
+//!
+//! Every routing query can be evaluated against a [`LinkStatus`] view of
+//! the fabric (see [`crate::fault`]). On a fault-free view the decision is
+//! exactly classic dimension-order routing. When links are down,
+//! [`next_hop_with`] falls back to an **adaptive shortest-path detour**:
+//! it computes hop distances to the destination over the live links only
+//! and steps to any live neighbor strictly closer to the destination —
+//! preferring the dimension-order direction whenever it still lies on a
+//! shortest live path, so the detour perturbs as little as possible.
+//! Because every hop strictly decreases a finite distance, adaptive routes
+//! are loop-free and reach the destination whenever the live graph keeps
+//! it connected; when it does not, the query reports
+//! [`Hop::Unreachable`] instead of panicking, and the caller accounts the
+//! packet as undeliverable. (Deadlock safety of detours is argued in
+//! `docs/ARCHITECTURE.md`: detour hops ride the VC1 escape channel.)
 
-use super::torus::{Dir, NodeAddr, TorusSpec};
+use super::torus::{Dir, NodeAddr, TorusSpec, DIRS};
+
+/// A view of which torus links are usable, threaded through the routing
+/// queries. Implemented by [`FaultFree`] (the perfect fabric) and by
+/// [`crate::fault::FaultView`] (a [`crate::fault::FaultModel`] at a
+/// specific simulation time).
+pub trait LinkStatus {
+    /// Is the directed link leaving `from` towards `dir` usable?
+    fn alive(&self, from: NodeAddr, dir: Dir) -> bool;
+
+    /// Fast-path hint: `true` promises `alive` returns `true` for every
+    /// link, letting the router skip the live-graph search entirely and
+    /// make the classic dimension-order decision.
+    fn fault_free(&self) -> bool {
+        false
+    }
+}
+
+/// The perfect fabric: every link is up. Routing under this view is
+/// byte-identical to the pre-fault-model dimension-order router.
+pub struct FaultFree;
+
+impl LinkStatus for FaultFree {
+    #[inline]
+    fn alive(&self, _from: NodeAddr, _dir: Dir) -> bool {
+        true
+    }
+
+    #[inline]
+    fn fault_free(&self) -> bool {
+        true
+    }
+}
+
+/// One routing decision under a [`LinkStatus`] view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hop {
+    /// `here == dst`: deliver to the local port.
+    Deliver,
+    /// Forward out of this direction's port.
+    Via(Dir),
+    /// The live graph does not connect `here` to `dst`.
+    Unreachable,
+}
 
 /// Compute the egress direction at `here` for a packet addressed to `dst`.
 /// Returns `None` when `here == dst` (deliver locally).
+///
+/// This is the pure dimension-order decision on the perfect fabric; the
+/// fault-aware variant is [`next_hop_with`].
 pub fn next_hop(torus: &TorusSpec, here: NodeAddr, dst: NodeAddr) -> Option<Dir> {
     if here == dst {
         return None;
@@ -35,36 +99,153 @@ pub fn next_hop(torus: &TorusSpec, here: NodeAddr, dst: NodeAddr) -> Option<Dir>
     None
 }
 
-/// Full path (sequence of directions) from `src` to `dst`.
-pub fn route(torus: &TorusSpec, src: NodeAddr, dst: NodeAddr) -> Vec<Dir> {
-    let mut path = Vec::new();
-    let mut here = src;
-    while let Some(d) = next_hop(torus, here, dst) {
-        path.push(d);
-        here = torus.neighbor(here, d);
-        assert!(
-            path.len() <= torus.n_nodes(),
-            "routing loop from {src} to {dst}"
-        );
+/// Hop distances to `dst` over the live links only: `dist[a]` is the
+/// minimum number of usable links from node `a` to `dst`, or `u32::MAX`
+/// when the live graph does not connect them. Reverse BFS from `dst`
+/// (edge `(x, dir)` is traversable iff `status.alive(x, dir)`).
+pub fn live_distances<S: LinkStatus + ?Sized>(
+    torus: &TorusSpec,
+    status: &S,
+    dst: NodeAddr,
+) -> Vec<u32> {
+    let n = torus.n_nodes();
+    let mut dist = vec![u32::MAX; n];
+    dist[dst.0 as usize] = 0;
+    let mut frontier = std::collections::VecDeque::with_capacity(n);
+    frontier.push_back(dst);
+    while let Some(y) = frontier.pop_front() {
+        let dy = dist[y.0 as usize];
+        for d in DIRS {
+            // the forward edge (x, d) lands on y
+            let x = torus.neighbor(y, d.opposite());
+            if x == y {
+                continue; // size-1 dimension self-loop; never routed over
+            }
+            if dist[x.0 as usize] == u32::MAX && status.alive(x, d) {
+                dist[x.0 as usize] = dy + 1;
+                frontier.push_back(x);
+            }
+        }
     }
-    path
+    dist
 }
 
-/// Every (node, direction) link crossed on the path from `src` to `dst`.
-/// Used by the flow-level analysis to accumulate per-link loads.
-pub fn links_on_route(torus: &TorusSpec, src: NodeAddr, dst: NodeAddr) -> Vec<(NodeAddr, Dir)> {
-    let mut links = Vec::new();
-    let mut here = src;
-    while let Some(d) = next_hop(torus, here, dst) {
-        links.push((here, d));
-        here = torus.neighbor(here, d);
+/// The routing decision at `here` for `dst` under `status`.
+///
+/// On a fault-free view this is exactly [`next_hop`]. Otherwise: step to
+/// a live neighbor strictly closer to `dst` in the live graph, preferring
+/// the dimension-order direction when it qualifies (so zero-fault and
+/// far-from-fault decisions are unchanged), breaking remaining ties by
+/// the fixed [`DIRS`] port order — deterministic, no RNG involved.
+pub fn next_hop_with<S: LinkStatus + ?Sized>(
+    torus: &TorusSpec,
+    status: &S,
+    here: NodeAddr,
+    dst: NodeAddr,
+) -> Hop {
+    if here == dst {
+        return Hop::Deliver;
     }
-    links
+    let preferred = next_hop(torus, here, dst)
+        .expect("distinct nodes always have a dimension-order direction");
+    if status.fault_free() {
+        return Hop::Via(preferred);
+    }
+    let dist = live_distances(torus, status, dst);
+    let dh = dist[here.0 as usize];
+    if dh == u32::MAX {
+        return Hop::Unreachable;
+    }
+    let closes_in = |dir: Dir| {
+        let n = torus.neighbor(here, dir);
+        n != here
+            && status.alive(here, dir)
+            && dist[n.0 as usize] != u32::MAX
+            && dist[n.0 as usize] + 1 == dh
+    };
+    if closes_in(preferred) {
+        return Hop::Via(preferred);
+    }
+    for dir in DIRS {
+        if closes_in(dir) {
+            return Hop::Via(dir);
+        }
+    }
+    unreachable!("finite live distance {dh} at {here} without a closer live neighbor");
+}
+
+/// Walk the full path from `src` to `dst` under `status`, calling
+/// `visit(node, dir)` for every link crossed, in order. Returns the hop
+/// count, or `None` when the live graph does not connect the endpoints.
+///
+/// This is the single shared walker behind [`route`] /
+/// [`links_on_route`] and their fault-aware variants, so the
+/// `path.len() <= n_nodes` loop guard covers adaptive detours too. (The
+/// guard is defense in depth: strictly-decreasing live distance already
+/// forbids loops.)
+pub fn walk_route_with<S: LinkStatus + ?Sized>(
+    torus: &TorusSpec,
+    status: &S,
+    src: NodeAddr,
+    dst: NodeAddr,
+    mut visit: impl FnMut(NodeAddr, Dir),
+) -> Option<usize> {
+    let mut here = src;
+    let mut hops = 0usize;
+    loop {
+        match next_hop_with(torus, status, here, dst) {
+            Hop::Deliver => return Some(hops),
+            Hop::Unreachable => return None,
+            Hop::Via(d) => {
+                visit(here, d);
+                here = torus.neighbor(here, d);
+                hops += 1;
+                assert!(hops <= torus.n_nodes(), "routing loop from {src} to {dst}");
+            }
+        }
+    }
+}
+
+/// Full path (sequence of directions) from `src` to `dst` on the perfect
+/// fabric.
+pub fn route(torus: &TorusSpec, src: NodeAddr, dst: NodeAddr) -> Vec<Dir> {
+    route_with(torus, &FaultFree, src, dst).expect("fault-free torus is connected")
+}
+
+/// Full path from `src` to `dst` under `status`; `None` when unreachable.
+pub fn route_with<S: LinkStatus + ?Sized>(
+    torus: &TorusSpec,
+    status: &S,
+    src: NodeAddr,
+    dst: NodeAddr,
+) -> Option<Vec<Dir>> {
+    let mut path = Vec::new();
+    walk_route_with(torus, status, src, dst, |_, d| path.push(d)).map(|_| path)
+}
+
+/// Every (node, direction) link crossed on the path from `src` to `dst`
+/// on the perfect fabric. Used by the flow-level analysis to accumulate
+/// per-link loads.
+pub fn links_on_route(torus: &TorusSpec, src: NodeAddr, dst: NodeAddr) -> Vec<(NodeAddr, Dir)> {
+    links_on_route_with(torus, &FaultFree, src, dst).expect("fault-free torus is connected")
+}
+
+/// Every (node, direction) link crossed under `status`; `None` when
+/// unreachable.
+pub fn links_on_route_with<S: LinkStatus + ?Sized>(
+    torus: &TorusSpec,
+    status: &S,
+    src: NodeAddr,
+    dst: NodeAddr,
+) -> Option<Vec<(NodeAddr, Dir)>> {
+    let mut links = Vec::new();
+    walk_route_with(torus, status, src, dst, |node, d| links.push((node, d))).map(|_| links)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
 
     #[test]
     fn routes_reach_destination_minimally() {
@@ -151,5 +332,103 @@ mod tests {
             }
         }
         assert!(checked > 1000);
+    }
+
+    /// A LinkStatus over an explicit set of dead directed links.
+    struct DeadSet(BTreeSet<(u16, u8)>);
+
+    impl LinkStatus for DeadSet {
+        fn alive(&self, from: NodeAddr, dir: Dir) -> bool {
+            !self.0.contains(&(from.0, dir.port()))
+        }
+    }
+
+    /// Kill both directions of the cable leaving `a` towards `d`.
+    fn kill_cable(dead: &mut BTreeSet<(u16, u8)>, t: &TorusSpec, a: NodeAddr, d: Dir) {
+        let b = t.neighbor(a, d);
+        dead.insert((a.0, d.port()));
+        dead.insert((b.0, d.opposite().port()));
+    }
+
+    #[test]
+    fn fault_free_view_matches_next_hop_exactly() {
+        let t = TorusSpec::new(4, 3, 2);
+        for src in t.nodes() {
+            for dst in t.nodes() {
+                let expected = match next_hop(&t, src, dst) {
+                    None => Hop::Deliver,
+                    Some(d) => Hop::Via(d),
+                };
+                assert_eq!(next_hop_with(&t, &FaultFree, src, dst), expected);
+                // and an all-alive explicit view takes the same decisions
+                let empty = DeadSet(BTreeSet::new());
+                assert_eq!(next_hop_with(&t, &empty, src, dst), expected);
+            }
+        }
+    }
+
+    #[test]
+    fn detour_routes_around_a_dead_cable() {
+        let t = TorusSpec::new(4, 4, 1);
+        let src = t.addr_of(0, 0, 0);
+        let dst = t.addr_of(2, 0, 0);
+        // kill the first X+ link on the dimension-order path
+        let mut dead = BTreeSet::new();
+        kill_cable(&mut dead, &t, src, Dir::XPlus);
+        let status = DeadSet(dead);
+        let p = route_with(&t, &status, src, dst).expect("still connected");
+        // the path must avoid the dead link and still arrive
+        let mut here = src;
+        for d in &p {
+            assert!(status.alive(here, *d), "route used dead link at {here}");
+            here = t.neighbor(here, *d);
+        }
+        assert_eq!(here, dst);
+        // the live shortest path is still length >= the fault-free one
+        assert!(p.len() as u32 >= t.hop_distance(src, dst));
+    }
+
+    #[test]
+    fn disconnected_destination_is_unreachable_not_a_panic() {
+        let t = TorusSpec::new(3, 1, 1);
+        let dst = NodeAddr(1);
+        // sever node 1 from the ring entirely (both cables, both ways)
+        let mut dead = BTreeSet::new();
+        kill_cable(&mut dead, &t, NodeAddr(0), Dir::XPlus); // 0 <-> 1
+        kill_cable(&mut dead, &t, NodeAddr(1), Dir::XPlus); // 1 <-> 2
+        let status = DeadSet(dead);
+        assert_eq!(next_hop_with(&t, &status, NodeAddr(0), dst), Hop::Unreachable);
+        assert_eq!(route_with(&t, &status, NodeAddr(0), dst), None);
+        assert_eq!(links_on_route_with(&t, &status, NodeAddr(0), dst), None);
+        // the severed node can still deliver to itself
+        assert_eq!(next_hop_with(&t, &status, dst, dst), Hop::Deliver);
+    }
+
+    #[test]
+    fn adaptive_prefers_dimension_order_when_possible() {
+        let t = TorusSpec::new(4, 4, 4);
+        // a dead cable far away from the src->dst corridor must not
+        // change the decision
+        let src = t.addr_of(0, 0, 0);
+        let dst = t.addr_of(2, 2, 0);
+        let mut dead = BTreeSet::new();
+        kill_cable(&mut dead, &t, t.addr_of(0, 0, 3), Dir::ZPlus);
+        let status = DeadSet(dead);
+        assert_eq!(
+            route_with(&t, &status, src, dst).unwrap(),
+            route(&t, src, dst),
+            "distant fault perturbed a dimension-order route"
+        );
+    }
+
+    #[test]
+    fn live_distances_match_hop_distance_when_fault_free() {
+        let t = TorusSpec::new(3, 4, 2);
+        for dst in t.nodes() {
+            let dist = live_distances(&t, &FaultFree, dst);
+            for a in t.nodes() {
+                assert_eq!(dist[a.0 as usize], t.hop_distance(a, dst), "{a}->{dst}");
+            }
+        }
     }
 }

@@ -192,6 +192,24 @@ impl TorusSpec {
     pub fn nodes(&self) -> impl Iterator<Item = NodeAddr> {
         (0..self.n_nodes() as u16).map(NodeAddr)
     }
+
+    /// Enumerate every physical cable exactly once, in deterministic
+    /// order, as its canonical directed form `(node, positive_dir)`. The
+    /// cable `(a, d)` carries the directed links `(a, d)` and
+    /// `(neighbor(a, d), d.opposite())`. Size-1 dimensions (self-loops,
+    /// never routed over) are skipped. The fault model samples failures
+    /// over this set so both directions of a cable always fail together.
+    pub fn cables(&self) -> Vec<(NodeAddr, Dir)> {
+        let mut cables = Vec::new();
+        for a in self.nodes() {
+            for d in [Dir::XPlus, Dir::YPlus, Dir::ZPlus] {
+                if self.neighbor(a, d) != a {
+                    cables.push((a, d));
+                }
+            }
+        }
+        cables
+    }
 }
 
 /// Partition of the torus nodes into PDES domains (see `sim/pdes.rs` and
@@ -374,6 +392,34 @@ mod tests {
         }
         // one domain ⇒ no inter-domain edges
         assert!(DomainMap::new(t, 1).inter_domain_edges().is_empty());
+    }
+
+    #[test]
+    fn cables_cover_every_directed_link_once() {
+        for spec in [
+            TorusSpec::new(4, 2, 2),
+            TorusSpec::new(2, 2, 1),
+            TorusSpec::new(3, 1, 1),
+            TorusSpec::new(1, 1, 1),
+        ] {
+            let cables = spec.cables();
+            let mut directed = std::collections::BTreeSet::new();
+            for &(a, d) in &cables {
+                assert_eq!(d.sign(), 1, "canonical form uses positive dirs");
+                let b = spec.neighbor(a, d);
+                assert_ne!(a, b, "self-loop cable listed");
+                assert!(directed.insert((a, d.port())), "duplicate link");
+                assert!(directed.insert((b, d.opposite().port())), "duplicate link");
+            }
+            // every non-self-loop directed link is covered
+            for a in spec.nodes() {
+                for d in DIRS {
+                    if spec.neighbor(a, d) != a {
+                        assert!(directed.contains(&(a, d.port())), "missing ({a}, {d:?})");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,584 @@
+//! Fault-injection subsystem: degraded-fabric modeling for the Extoll
+//! torus.
+//!
+//! Real BrainScaleS deployments fight dead links, flaky cables and pulse
+//! loss/jitter (the commissioning and off-wafer characterization papers
+//! document exactly these failure modes). This module models them on top
+//! of the perfect-fabric simulator:
+//!
+//! - **Link failure** — a sampled fraction of physical cables fails, either
+//!   permanently from t=0 or at a scheduled instant (`fail_at_s`). Both
+//!   directions of a cable always fail together, so credit returns on the
+//!   reverse direction stay consistent with forwarding.
+//! - **Bandwidth degradation** — a disjoint sampled fraction of cables
+//!   serializes packets `degrade_factor`× slower (lower effective lane
+//!   count), in both directions.
+//! - **Stochastic packet loss** — every torus-link traversal is dropped
+//!   with probability `loss` at the receiver (the "link CRC failed"
+//!   model); credits are still returned upstream so flow control never
+//!   leaks.
+//! - **Latency jitter** — every torus-link traversal adds an
+//!   exponentially distributed latency with mean `jitter_ns`.
+//!
+//! ## Determinism contract
+//!
+//! Everything is seeded from the experiment RNG: the cable sample is a
+//! single Fisher–Yates shuffle of the canonical [`TorusSpec::cables`]
+//! order under a salt of `cfg.seed`, and each NIC draws loss/jitter from
+//! its own [`FaultModel::nic_rng`] stream (derived from the model seed and
+//! the node address, never from simulation scheduling). Per-NIC event
+//! delivery order is partition-independent by the engine's merge-key
+//! contract, so reports stay **byte-identical** across `domains`, `sync`
+//! modes, queue backends and `--jobs` for a fixed config — gated in
+//! `rust/tests/determinism_queue.rs`.
+//!
+//! Degradation and jitter only ever *add* latency and loss only removes
+//! packets, so the healthy per-link minimum latency remains a sound
+//! conservative-PDES lookahead bound; links that are dead from t=0 carry
+//! no messages at all and are excluded from the channel-clock bounds
+//! entirely (see `extoll::network::pdes_lookahead_with`).
+
+use crate::extoll::routing::LinkStatus;
+use crate::extoll::torus::{Dir, NodeAddr, TorusSpec, TORUS_PORTS};
+use crate::sim::Time;
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Salt mixed into the experiment seed for the fault-sampling stream, so
+/// fault draws never alias workload-generator draws.
+const FAULT_SEED_SALT: u64 = 0xFA17_1D3A_5EED_C0DE;
+
+/// User-facing fault specification (the `ExperimentConfig.fault` block /
+/// `--set fault=` knob). All fields default to "no faults"; see
+/// `docs/TUNING.md` for the knob reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Fraction of physical cables that fail (both directions), in [0,1].
+    pub fail: f64,
+    /// Simulated time (seconds) at which the sampled cables fail; `None`
+    /// means they are dead from t=0.
+    pub fail_at_s: Option<f64>,
+    /// Fraction of cables (disjoint from the failed set) degraded to
+    /// `degrade_factor`× serialization time, in [0,1].
+    pub degrade: f64,
+    /// Serialization-time multiplier on degraded cables (≥ 1).
+    pub degrade_factor: f64,
+    /// Per-link-traversal packet loss probability, in [0,1).
+    pub loss: f64,
+    /// Mean of the additive exponential per-link latency jitter, ns (≥ 0).
+    pub jitter_ns: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            fail: 0.0,
+            fail_at_s: None,
+            degrade: 0.0,
+            degrade_factor: 1.0,
+            loss: 0.0,
+            jitter_ns: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when this config models a perfect fabric (the default): no
+    /// fault machinery is instantiated at all, so zero-fault runs are
+    /// byte-identical to the pre-fault-model simulator.
+    pub fn is_default(&self) -> bool {
+        *self == FaultConfig::default()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        fn frac(name: &str, v: f64) -> Result<(), String> {
+            if (0.0..=1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("fault.{name} must be in [0,1], got {v}"))
+            }
+        }
+        frac("fail", self.fail)?;
+        frac("degrade", self.degrade)?;
+        if !(0.0..1.0).contains(&self.loss) {
+            return Err(format!("fault.loss must be in [0,1), got {}", self.loss));
+        }
+        if !(self.degrade_factor >= 1.0) {
+            return Err(format!(
+                "fault.degrade_factor must be >= 1, got {}",
+                self.degrade_factor
+            ));
+        }
+        if !(self.jitter_ns >= 0.0) {
+            return Err(format!(
+                "fault.jitter_ns must be >= 0, got {}",
+                self.jitter_ns
+            ));
+        }
+        if let Some(t) = self.fail_at_s {
+            if !(t >= 0.0) {
+                return Err(format!("fault.fail_at_s must be >= 0, got {t}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the JSON object form (`"fault": {"fail": 0.25, ...}`).
+    pub fn from_json(j: &Json) -> Result<FaultConfig, String> {
+        let mut cfg = FaultConfig::default();
+        let Json::Obj(map) = j else {
+            return Err(format!("fault config must be an object, got {j:?}"));
+        };
+        for key in map.keys() {
+            if !matches!(
+                key.as_str(),
+                "fail" | "fail_at_s" | "degrade" | "degrade_factor" | "loss" | "jitter_ns"
+            ) {
+                return Err(format!("unknown fault config key '{key}'"));
+            }
+        }
+        cfg.fail = j.f64_or("fail", cfg.fail);
+        if let Some(Json::Num(t)) = j.get("fail_at_s") {
+            cfg.fail_at_s = Some(*t);
+        }
+        cfg.degrade = j.f64_or("degrade", cfg.degrade);
+        cfg.degrade_factor = j.f64_or("degrade_factor", cfg.degrade_factor);
+        cfg.loss = j.f64_or("loss", cfg.loss);
+        cfg.jitter_ns = j.f64_or("jitter_ns", cfg.jitter_ns);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse either form of the `--set fault=` / sweep-axis value:
+    /// a JSON object (`{"fail": 0.25}`) or the compact comma-free spec
+    /// (`fail:0.25|loss:0.01`, `none`) that survives the sweep grammar's
+    /// `,`-splitting of axis values.
+    pub fn parse_spec(s: &str) -> Result<FaultConfig, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(FaultConfig::default());
+        }
+        if s.starts_with('{') {
+            let j = Json::parse(s).map_err(|e| format!("fault spec JSON: {e}"))?;
+            return FaultConfig::from_json(&j);
+        }
+        let mut cfg = FaultConfig::default();
+        for part in s.split('|') {
+            let (key, value) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec '{part}': expected key:value"))?;
+            let num = || -> Result<f64, String> {
+                value
+                    .parse::<f64>()
+                    .map_err(|_| format!("fault spec '{part}': bad number '{value}'"))
+            };
+            match key {
+                "fail" => cfg.fail = num()?,
+                "fail_at_s" => cfg.fail_at_s = Some(num()?),
+                "degrade" => cfg.degrade = num()?,
+                "degrade_factor" => cfg.degrade_factor = num()?,
+                "loss" => cfg.loss = num()?,
+                "jitter_ns" => cfg.jitter_ns = num()?,
+                other => {
+                    return Err(format!(
+                        "unknown fault spec key '{other}' (expected fail, fail_at_s, \
+                         degrade, degrade_factor, loss, jitter_ns)"
+                    ))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Canonical compact rendering (the inverse of [`parse_spec`]'s
+    /// compact form, `"none"` for the default). Stable for a given
+    /// config, so it is safe inside cache keys and report text.
+    pub fn to_spec(&self) -> String {
+        if self.is_default() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.fail > 0.0 {
+            parts.push(format!("fail:{}", self.fail));
+        }
+        if let Some(t) = self.fail_at_s {
+            parts.push(format!("fail_at_s:{t}"));
+        }
+        if self.degrade > 0.0 {
+            parts.push(format!("degrade:{}", self.degrade));
+        }
+        if self.degrade_factor != 1.0 {
+            parts.push(format!("degrade_factor:{}", self.degrade_factor));
+        }
+        if self.loss > 0.0 {
+            parts.push(format!("loss:{}", self.loss));
+        }
+        if self.jitter_ns > 0.0 {
+            parts.push(format!("jitter_ns:{}", self.jitter_ns));
+        }
+        parts.join("|")
+    }
+}
+
+/// The instantiated fault state of one experiment: per-directed-link
+/// failure schedules and degradation factors plus the stochastic
+/// loss/jitter parameters, all precomputed at build time from
+/// `(FaultConfig, TorusSpec, seed)` — partition-independent by
+/// construction.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    spec: TorusSpec,
+    /// Per directed link (`node * TORUS_PORTS + port`): the instant (ps)
+    /// at/after which the link is dead. `0` = dead from t=0,
+    /// `u64::MAX` = never fails.
+    fail_at_ps: Vec<u64>,
+    /// Per directed link: serialization-time multiplier (1.0 = healthy).
+    ser_scale: Vec<f64>,
+    /// Earliest failure instant over all links (`u64::MAX` when no link
+    /// ever fails) — the fast fault-free cutoff for [`FaultView`].
+    min_fail_at_ps: u64,
+    loss: f64,
+    jitter_ns: f64,
+    /// Base of the per-NIC loss/jitter streams ([`FaultModel::nic_rng`]).
+    packet_seed: u64,
+    failed_cables: usize,
+    degraded_cables: usize,
+}
+
+impl FaultModel {
+    /// Sample the fault state for `spec` under `cfg`, deterministically
+    /// from `seed` (the experiment seed; a salt keeps this stream
+    /// independent of every other consumer of the seed).
+    pub fn build(cfg: &FaultConfig, spec: TorusSpec, seed: u64) -> FaultModel {
+        let n_links = spec.n_nodes() * TORUS_PORTS as usize;
+        let mut rng = Rng::new(seed ^ FAULT_SEED_SALT);
+
+        let mut cables = spec.cables();
+        rng.shuffle(&mut cables);
+        let n_cables = cables.len();
+        let n_fail = ((cfg.fail * n_cables as f64).round() as usize).min(n_cables);
+        let n_degrade =
+            ((cfg.degrade * n_cables as f64).round() as usize).min(n_cables - n_fail);
+
+        let fail_at = match cfg.fail_at_s {
+            None => 0u64,
+            Some(t) => (t * 1e12).round() as u64,
+        };
+        let mut fail_at_ps = vec![u64::MAX; n_links];
+        let mut ser_scale = vec![1.0f64; n_links];
+        for &(a, d) in &cables[..n_fail] {
+            let b = spec.neighbor(a, d);
+            fail_at_ps[Self::idx(a, d)] = fail_at;
+            fail_at_ps[Self::idx(b, d.opposite())] = fail_at;
+        }
+        for &(a, d) in &cables[n_fail..n_fail + n_degrade] {
+            let b = spec.neighbor(a, d);
+            ser_scale[Self::idx(a, d)] = cfg.degrade_factor;
+            ser_scale[Self::idx(b, d.opposite())] = cfg.degrade_factor;
+        }
+        let min_fail_at_ps = if n_fail == 0 { u64::MAX } else { fail_at };
+
+        FaultModel {
+            spec,
+            fail_at_ps,
+            ser_scale,
+            min_fail_at_ps,
+            loss: cfg.loss,
+            jitter_ns: cfg.jitter_ns,
+            packet_seed: rng.next_u64(),
+            failed_cables: n_fail,
+            degraded_cables: n_degrade,
+        }
+    }
+
+    #[inline]
+    fn idx(a: NodeAddr, d: Dir) -> usize {
+        a.0 as usize * TORUS_PORTS as usize + d.port() as usize
+    }
+
+    pub fn spec(&self) -> &TorusSpec {
+        &self.spec
+    }
+
+    /// Number of physical cables failed by the schedule.
+    pub fn failed_cables(&self) -> usize {
+        self.failed_cables
+    }
+
+    /// Number of physical cables degraded to a slower serialization rate.
+    pub fn degraded_cables(&self) -> usize {
+        self.degraded_cables
+    }
+
+    /// Is the directed link usable at simulated time `now`?
+    #[inline]
+    pub fn link_alive_at(&self, from: NodeAddr, dir: Dir, now: Time) -> bool {
+        now.ps() < self.fail_at_ps[Self::idx(from, dir)]
+    }
+
+    /// Does the directed link carry traffic at *any* point of the run?
+    /// `false` exactly for links dead from t=0 — those never enter the
+    /// PDES channel-clock bounds (`extoll::network::pdes_lookahead_with`).
+    #[inline]
+    pub fn link_ever_alive(&self, from: NodeAddr, dir: Dir) -> bool {
+        self.fail_at_ps[Self::idx(from, dir)] > 0
+    }
+
+    /// Serialization-time multiplier of the directed link (1.0 = healthy).
+    #[inline]
+    pub fn ser_scale(&self, from: NodeAddr, dir: Dir) -> f64 {
+        self.ser_scale[Self::idx(from, dir)]
+    }
+
+    /// Per-link-traversal loss probability.
+    pub fn loss(&self) -> f64 {
+        self.loss
+    }
+
+    /// Mean additive per-link latency jitter, ns (0 = none).
+    pub fn jitter_ns(&self) -> f64 {
+        self.jitter_ns
+    }
+
+    /// Does any NIC need an RNG stream (loss or jitter draws)?
+    pub fn has_stochastic(&self) -> bool {
+        self.loss > 0.0 || self.jitter_ns > 0.0
+    }
+
+    /// The loss/jitter stream of the NIC at `addr`: a fixed function of
+    /// the model seed and the node address, so per-NIC draw sequences are
+    /// identical however the simulation is partitioned.
+    pub fn nic_rng(&self, addr: NodeAddr) -> Rng {
+        let mut s = self
+            .packet_seed
+            .wrapping_add((addr.0 as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Rng::new(splitmix64(&mut s))
+    }
+
+    /// The [`LinkStatus`] view of this model at simulated time `now`.
+    pub fn view(&self, now: Time) -> FaultView<'_> {
+        FaultView {
+            model: self,
+            now_ps: now.ps(),
+        }
+    }
+}
+
+/// A [`FaultModel`] frozen at one simulation instant — the [`LinkStatus`]
+/// the adaptive router evaluates.
+#[derive(Clone, Copy)]
+pub struct FaultView<'a> {
+    model: &'a FaultModel,
+    now_ps: u64,
+}
+
+impl LinkStatus for FaultView<'_> {
+    #[inline]
+    fn alive(&self, from: NodeAddr, dir: Dir) -> bool {
+        self.now_ps < self.model.fail_at_ps[FaultModel::idx(from, dir)]
+    }
+
+    #[inline]
+    fn fault_free(&self) -> bool {
+        self.now_ps < self.model.min_fail_at_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::routing::{live_distances, next_hop, next_hop_with, Hop};
+    use crate::extoll::torus::DIRS;
+
+    #[test]
+    fn default_config_is_no_faults() {
+        let cfg = FaultConfig::default();
+        assert!(cfg.is_default());
+        assert_eq!(cfg.to_spec(), "none");
+        assert_eq!(FaultConfig::parse_spec("none").unwrap(), cfg);
+        assert_eq!(FaultConfig::parse_spec("").unwrap(), cfg);
+    }
+
+    #[test]
+    fn compact_spec_roundtrips() {
+        let cfg = FaultConfig::parse_spec(
+            "fail:0.25|fail_at_s:0.0001|degrade:0.1|degrade_factor:4|loss:0.01|jitter_ns:5",
+        )
+        .unwrap();
+        assert_eq!(cfg.fail, 0.25);
+        assert_eq!(cfg.fail_at_s, Some(0.0001));
+        assert_eq!(cfg.degrade, 0.1);
+        assert_eq!(cfg.degrade_factor, 4.0);
+        assert_eq!(cfg.loss, 0.01);
+        assert_eq!(cfg.jitter_ns, 5.0);
+        assert_eq!(FaultConfig::parse_spec(&cfg.to_spec()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn json_spec_matches_compact_spec() {
+        let compact = FaultConfig::parse_spec("fail:0.5|loss:0.02").unwrap();
+        let json =
+            FaultConfig::parse_spec(r#"{"fail": 0.5, "loss": 0.02}"#).unwrap();
+        assert_eq!(compact, json);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(FaultConfig::parse_spec("fail:1.5").is_err());
+        assert!(FaultConfig::parse_spec("loss:1.0").is_err());
+        assert!(FaultConfig::parse_spec("degrade_factor:0.5").is_err());
+        assert!(FaultConfig::parse_spec("jitter_ns:-1").is_err());
+        assert!(FaultConfig::parse_spec("frobnicate:1").is_err());
+        assert!(FaultConfig::parse_spec("fail=0.5").is_err());
+        assert!(FaultConfig::from_json(&Json::parse(r#"{"frobnicate": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn build_is_deterministic_and_counts_match() {
+        let spec = TorusSpec::new(4, 4, 4);
+        let cfg = FaultConfig::parse_spec("fail:0.25|degrade:0.25|degrade_factor:2").unwrap();
+        let a = FaultModel::build(&cfg, spec, 0xB55);
+        let b = FaultModel::build(&cfg, spec, 0xB55);
+        assert_eq!(a.fail_at_ps, b.fail_at_ps);
+        assert_eq!(a.ser_scale, b.ser_scale);
+        assert_eq!(a.packet_seed, b.packet_seed);
+
+        let n_cables = spec.cables().len();
+        assert_eq!(a.failed_cables(), (0.25 * n_cables as f64).round() as usize);
+        assert_eq!(a.degraded_cables(), (0.25 * n_cables as f64).round() as usize);
+
+        // a different seed samples a different fault set
+        let c = FaultModel::build(&cfg, spec, 0xB56);
+        assert_ne!(a.fail_at_ps, c.fail_at_ps);
+    }
+
+    #[test]
+    fn cable_failures_are_symmetric() {
+        let spec = TorusSpec::new(4, 2, 2);
+        let cfg = FaultConfig::parse_spec("fail:0.5").unwrap();
+        let m = FaultModel::build(&cfg, spec, 7);
+        let now = Time::ZERO;
+        for a in spec.nodes() {
+            for d in DIRS {
+                let b = spec.neighbor(a, d);
+                if b == a {
+                    continue;
+                }
+                assert_eq!(
+                    m.link_alive_at(a, d, now),
+                    m.link_alive_at(b, d.opposite(), now),
+                    "cable ({a}, {d:?}) failed asymmetrically"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fail_at_schedules_the_cutover() {
+        let spec = TorusSpec::new(4, 1, 1);
+        let cfg = FaultConfig::parse_spec("fail:1|fail_at_s:0.000001").unwrap(); // 1 µs
+        let m = FaultModel::build(&cfg, spec, 1);
+        assert_eq!(m.failed_cables(), spec.cables().len());
+        let (a, d) = spec.cables()[0];
+        assert!(m.link_alive_at(a, d, Time::ZERO));
+        assert!(m.link_alive_at(a, d, Time::from_ns(999)));
+        assert!(!m.link_alive_at(a, d, Time::from_us(1)));
+        // scheduled-failure links did carry traffic before the cutover
+        assert!(m.link_ever_alive(a, d));
+        // the early view is still fault-free (fast path stays exact)
+        assert!(m.view(Time::ZERO).fault_free());
+        assert!(!m.view(Time::from_us(1)).fault_free());
+    }
+
+    #[test]
+    fn zero_fault_model_is_fault_free_forever() {
+        let spec = TorusSpec::new(2, 2, 2);
+        let m = FaultModel::build(&FaultConfig::default(), spec, 3);
+        assert_eq!(m.failed_cables(), 0);
+        assert!(m.view(Time::from_ms(100)).fault_free());
+        assert!(!m.has_stochastic());
+        for a in spec.nodes() {
+            for d in DIRS {
+                assert!(m.link_ever_alive(a, d));
+                assert_eq!(m.ser_scale(a, d), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_cables_scale_but_stay_alive() {
+        let spec = TorusSpec::new(4, 1, 1);
+        let cfg = FaultConfig::parse_spec("degrade:1|degrade_factor:3").unwrap();
+        let m = FaultModel::build(&cfg, spec, 5);
+        assert_eq!(m.failed_cables(), 0);
+        assert_eq!(m.degraded_cables(), spec.cables().len());
+        for (a, d) in spec.cables() {
+            assert_eq!(m.ser_scale(a, d), 3.0);
+            assert!(m.link_alive_at(a, d, Time::from_ms(10)));
+        }
+        // degradation alone keeps the fast routing path
+        assert!(m.view(Time::from_ms(10)).fault_free());
+    }
+
+    #[test]
+    fn nic_rng_streams_are_deterministic_and_distinct() {
+        let spec = TorusSpec::new(2, 2, 1);
+        let cfg = FaultConfig::parse_spec("loss:0.1").unwrap();
+        let m = FaultModel::build(&cfg, spec, 9);
+        assert!(m.has_stochastic());
+        let mut a1 = m.nic_rng(NodeAddr(0));
+        let mut a2 = m.nic_rng(NodeAddr(0));
+        let mut b = m.nic_rng(NodeAddr(1));
+        let mut same = 0;
+        for _ in 0..64 {
+            let x = a1.next_u64();
+            assert_eq!(x, a2.next_u64());
+            if x == b.next_u64() {
+                same += 1;
+            }
+        }
+        assert_eq!(same, 0, "per-NIC streams must be independent");
+    }
+
+    #[test]
+    fn routing_detours_under_a_built_model() {
+        // moderate failure rate on a well-connected torus: every pair
+        // that remains connected must still route, loop-free
+        let spec = TorusSpec::new(4, 4, 1);
+        let cfg = FaultConfig::parse_spec("fail:0.2").unwrap();
+        let m = FaultModel::build(&cfg, spec, 0xB55);
+        assert!(m.failed_cables() > 0);
+        let view = m.view(Time::ZERO);
+        for dst in spec.nodes() {
+            let dist = live_distances(&spec, &view, dst);
+            for src in spec.nodes() {
+                match next_hop_with(&spec, &view, src, dst) {
+                    Hop::Deliver => assert_eq!(src, dst),
+                    Hop::Unreachable => {
+                        assert_eq!(dist[src.0 as usize], u32::MAX)
+                    }
+                    Hop::Via(d) => {
+                        assert!(view.alive(src, d), "routed over a dead link");
+                        let n = spec.neighbor(src, d);
+                        assert_eq!(
+                            dist[n.0 as usize] + 1,
+                            dist[src.0 as usize],
+                            "hop does not close in on {dst}"
+                        );
+                        // dimension-order preference: if the preferred dir
+                        // closes in, it is the one chosen
+                        let pref = next_hop(&spec, src, dst).unwrap();
+                        let pn = spec.neighbor(src, pref);
+                        if view.alive(src, pref)
+                            && dist[pn.0 as usize] != u32::MAX
+                            && dist[pn.0 as usize] + 1 == dist[src.0 as usize]
+                        {
+                            assert_eq!(d, pref);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -35,6 +35,7 @@
 //! | [`util`] | zero-dependency substrates: args, json, rng, stats, report, bench |
 //! | [`sim`] | discrete-event simulation engine (ps clock, actors) |
 //! | [`extoll`] | Tourmalet NIC, links, 3D torus, routing, RMA, baselines |
+//! | [`fault`] | fault injection: link failure/degradation schedules, loss, jitter |
 //! | [`fpga`] | spike events, lookup tables, aggregation buckets, manager |
 //! | [`host`] | ring-buffer host communication and driver model |
 //! | [`wafer`] | wafer modules, concentrators, system builder + fabric reports |
@@ -45,6 +46,7 @@
 
 pub mod coordinator;
 pub mod extoll;
+pub mod fault;
 pub mod msg;
 pub mod fpga;
 pub mod host;

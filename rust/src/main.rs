@@ -33,8 +33,10 @@ Configs are JSON files (--config); individual knobs override with
   bss-extoll run traffic --set \"rate_hz=2e7;fan_out=2\"
   bss-extoll run traffic --set \"domains=4\"        # partitioned PDES
   bss-extoll run traffic --set \"domains=4;sync=window\"  # windowed reference
+  bss-extoll run fault_sweep --set \"fault=fail:0.1|loss:0.01\"  # degraded fabric
   bss-extoll sweep --scenario traffic --grid \"rate_hz=1e6,1e7;n_wafers=2,4\" --csv sweep.csv
   bss-extoll sweep --scenario traffic --grid \"eviction=most_urgent,fullest\" --jobs 4
+  bss-extoll sweep --scenario fault_sweep --grid \"fault=none,fail:0.05,fail:0.1\" --csv faults.csv
 
 Sweep grid points are independent simulations: --jobs N runs them on N
 worker threads with results (and artifacts) ordered exactly as --jobs 1.
@@ -42,6 +44,11 @@ Within one fabric scenario, --set domains=N partitions the torus into N
 conservatively synchronized PDES domains (byte-identical reports);
 --set sync=window|channel picks the protocol (per-neighbor channel
 clocks by default, the lock-step global-minimum window as reference).
+--set fault=<spec> injects deterministic, seed-derived fabric faults
+(cable failures, bandwidth degradation, packet loss, latency jitter);
+the compact '|'-separated spec form is comma-free so it works as a
+sweep axis. Histogram metrics (latency_dist) render as percentile
+summaries in CSV with full buckets in the JSON artifact.
 Every knob is documented with tuning guidance in docs/TUNING.md.
 ";
 

@@ -47,6 +47,18 @@
 //! [`crate::extoll::network::pdes_lookahead`] and
 //! [`crate::extoll::network::pdes_channel_graph`]).
 //!
+//! **Fault-aware lookahead.** Under an injected fault model
+//! ([`crate::fault::FaultModel`]) the enumerators above exclude links
+//! that are dead from `t = 0` — they can never carry a message, so they
+//! must not contribute a channel (or tighten a bound) the physical
+//! fabric will never use. Links that fail *mid-run* still count: a
+//! packet enqueued just before the cutover may cross after it.
+//! Degradation, loss and jitter only add latency or remove packets, so
+//! the healthy minimum link latency remains a sound lower bound. A
+//! domain pair left with no connecting live link simply has no channel:
+//! [`ChannelGraph::from_edges`] tolerates missing pairs, and a domain
+//! with no in-channels runs unbounded (nothing can reach it).
+//!
 //! ## Determinism
 //!
 //! Domain count is a performance knob, not physics: reports are
@@ -1123,6 +1135,19 @@ mod tests {
         assert_eq!(g.in_channels(1), &want);
         assert_eq!(g.min_lookahead(), Some(Time::from_ns(15)));
         assert_eq!(ChannelGraph::from_edges(2, []).min_lookahead(), None);
+    }
+
+    /// A domain pair with no connecting live link (e.g. severed by the
+    /// fault model's dead-from-`t=0` exclusion) simply has no channel:
+    /// the closure tolerates disconnected pairs, and a domain with no
+    /// in-channels runs unbounded — nothing can reach it.
+    #[test]
+    fn channel_graph_tolerates_disconnected_domains() {
+        let g = ChannelGraph::from_edges(3, [(0u32, 1u32, Time::from_ns(10))]);
+        assert_eq!(g.n_channels(), 1, "one edge, no cycles, nothing transitive");
+        assert!(g.in_channels(0).is_empty(), "no channel ends at domain 0");
+        assert!(g.in_channels(2).is_empty(), "unreachable domain is unbounded");
+        assert_eq!(g.min_lookahead(), Some(Time::from_ns(10)));
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use crate::util::bench::{eng, Table};
 use crate::util::json::Json;
+use crate::util::stats::Histogram;
 
 /// The value shape a declared metric must be pushed with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +36,8 @@ pub enum MetricKind {
     Real,
     /// Non-numeric metric ([`Value::Text`]).
     Text,
+    /// Bucketed distribution with percentiles ([`Value::Hist`]).
+    Histogram,
 }
 
 impl MetricKind {
@@ -44,6 +47,7 @@ impl MetricKind {
             MetricKind::Count => "count",
             MetricKind::Real => "real",
             MetricKind::Text => "text",
+            MetricKind::Histogram => "histogram",
         }
     }
 }
@@ -85,6 +89,128 @@ impl MetricDecl {
             kind: MetricKind::Text,
         }
     }
+
+    /// Declare a bucketed-distribution metric. `unit` labels the
+    /// histogram's recorded values (e.g. `"ps"`).
+    pub const fn histogram(name: &'static str, unit: &'static str) -> MetricDecl {
+        MetricDecl {
+            name,
+            unit,
+            kind: MetricKind::Histogram,
+        }
+    }
+}
+
+/// Serialized view of a [`Histogram`]: the sparse non-empty buckets plus
+/// the scalar statistics and percentiles consumers want, all computed at
+/// construction so a JSON round-trip is byte-stable (nothing is
+/// recomputed on parse).
+///
+/// Bucket indices refer to the histogram's fixed log-linear geometry;
+/// `Histogram::bucket_low(i)` maps an index back to its lower edge, and
+/// `bucket_of(bucket_low(i)) == i`, so the sparse pairs reconstruct the
+/// bucket counts exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSummary {
+    /// Non-empty buckets as `(bucket_index, count)`, ascending by index.
+    pub buckets: Vec<(u32, u64)>,
+    /// Total recorded values.
+    pub n: u64,
+    /// Smallest recorded value (0 when empty).
+    pub min: u64,
+    /// Largest recorded value (0 when empty).
+    pub max: u64,
+    /// Exact mean of recorded values (0.0 when empty — kept finite so
+    /// report equality survives a JSON round-trip).
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+impl HistSummary {
+    /// Summarize a histogram (percentiles are fixed here, at collection
+    /// time).
+    pub fn of(h: &Histogram) -> HistSummary {
+        HistSummary {
+            buckets: h.nonzero_buckets().map(|(i, c)| (i as u32, c)).collect(),
+            n: h.count(),
+            min: h.min(),
+            max: h.max(),
+            mean: if h.is_empty() { 0.0 } else { h.mean() },
+            p50: h.p50(),
+            p95: h.quantile(0.95),
+            p99: h.p99(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut buckets = Json::arr();
+        for &(i, c) in &self.buckets {
+            let mut pair = Json::arr();
+            pair.push(Json::from(i as u64));
+            pair.push(Json::from(c));
+            buckets.push(pair);
+        }
+        Json::obj()
+            .set("buckets", buckets)
+            .set("n", self.n)
+            .set("min", self.min)
+            .set("max", self.max)
+            .set("mean", Json::Num(self.mean))
+            .set("p50", self.p50)
+            .set("p95", self.p95)
+            .set("p99", self.p99)
+    }
+
+    fn from_json(j: &Json) -> Result<HistSummary, String> {
+        fn int(j: &Json, what: &str) -> Result<u64, String> {
+            match j {
+                Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= u64::MAX as f64 => {
+                    Ok(*x as u64)
+                }
+                other => Err(format!("histogram field '{what}' is not an integer: {other:?}")),
+            }
+        }
+        fn field<'a>(j: &'a Json, what: &str) -> Result<&'a Json, String> {
+            j.get(what)
+                .ok_or_else(|| format!("histogram value missing '{what}'"))
+        }
+        let rows = field(j, "buckets")?
+            .as_arr()
+            .ok_or("histogram 'buckets' is not an array")?;
+        let mut buckets = Vec::with_capacity(rows.len());
+        for row in rows {
+            let pair = row.as_arr().ok_or("histogram bucket is not a pair")?;
+            if pair.len() != 2 {
+                return Err("histogram bucket is not a pair".to_string());
+            }
+            buckets.push((int(&pair[0], "bucket index")? as u32, int(&pair[1], "bucket count")?));
+        }
+        let mean = match field(j, "mean")? {
+            Json::Num(x) => *x,
+            other => return Err(format!("histogram field 'mean' is not a number: {other:?}")),
+        };
+        Ok(HistSummary {
+            buckets,
+            n: int(field(j, "n")?, "n")?,
+            min: int(field(j, "min")?, "min")?,
+            max: int(field(j, "max")?, "max")?,
+            mean,
+            p50: int(field(j, "p50")?, "p50")?,
+            p95: int(field(j, "p95")?, "p95")?,
+            p99: int(field(j, "p99")?, "p99")?,
+        })
+    }
+
+    /// Compact one-line rendering for tables and CSV cells (no commas,
+    /// so CSV cells never need quoting).
+    pub fn render(&self) -> String {
+        format!(
+            "n={} p50={} p95={} p99={} max={}",
+            self.n, self.p50, self.p95, self.p99, self.max
+        )
+    }
 }
 
 /// One metric value.
@@ -96,15 +222,17 @@ pub enum Value {
     Real(f64),
     /// Non-numeric metric (policy name, bottleneck description, ...).
     Text(String),
+    /// Bucketed distribution with precomputed percentiles.
+    Hist(HistSummary),
 }
 
 impl Value {
-    /// Numeric view (counts widen to f64; text is `None`).
+    /// Numeric view (counts widen to f64; text and histograms are `None`).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Count(c) => Some(*c as f64),
             Value::Real(x) => Some(*x),
-            Value::Text(_) => None,
+            Value::Text(_) | Value::Hist(_) => None,
         }
     }
 
@@ -114,6 +242,7 @@ impl Value {
             Value::Count(c) => c.to_string(),
             Value::Real(x) => eng(*x),
             Value::Text(s) => s.clone(),
+            Value::Hist(h) => h.render(),
         }
     }
 
@@ -122,6 +251,7 @@ impl Value {
             Value::Count(c) => Json::from(*c),
             Value::Real(x) => Json::Num(*x),
             Value::Text(s) => Json::from(s.as_str()),
+            Value::Hist(h) => h.to_json(),
         }
     }
 
@@ -133,6 +263,9 @@ impl Value {
             Json::Num(x) => Ok(Value::Real(*x)),
             Json::Str(s) => Ok(Value::Text(s.clone())),
             Json::Null => Ok(Value::Real(f64::NAN)),
+            obj @ Json::Obj(_) if obj.get("buckets").is_some() => {
+                Ok(Value::Hist(HistSummary::from_json(obj)?))
+            }
             other => Err(format!("unsupported metric value {other:?}")),
         }
     }
@@ -171,6 +304,18 @@ impl From<&str> for Value {
 impl From<String> for Value {
     fn from(v: String) -> Value {
         Value::Text(v)
+    }
+}
+
+impl From<HistSummary> for Value {
+    fn from(v: HistSummary) -> Value {
+        Value::Hist(v)
+    }
+}
+
+impl From<&Histogram> for Value {
+    fn from(h: &Histogram) -> Value {
+        Value::Hist(HistSummary::of(h))
     }
 }
 
@@ -253,6 +398,7 @@ impl Report {
             (Value::Count(_), MetricKind::Count)
                 | (Value::Real(_), MetricKind::Real)
                 | (Value::Text(_), MetricKind::Text)
+                | (Value::Hist(_), MetricKind::Histogram)
         );
         assert!(
             kind_ok,
@@ -502,6 +648,66 @@ mod tests {
     fn schema_rejects_unit_mismatch() {
         let mut r = Report::with_schema("unit", SCHEMA);
         r.push_unit("events", 1u64, "packets");
+    }
+
+    #[test]
+    fn histogram_value_roundtrips_byte_identically() {
+        let mut h = Histogram::new();
+        for v in [70_000u64, 70_000, 120_000, 5_000_000, 5_000_000, 9_999_999] {
+            h.record(v);
+        }
+        let mut r = Report::new("latency_dist");
+        r.push_unit("latency_hist", &h, "ps");
+        let text = r.to_json().to_string();
+        let r2 = Report::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, r2);
+        assert_eq!(text, r2.to_json().to_string());
+        match r2.get("latency_hist") {
+            Some(Value::Hist(s)) => {
+                assert_eq!(s.n, 6);
+                assert_eq!(s.max, 9_999_999);
+                assert_eq!(s.p50, h.p50());
+                assert_eq!(s.p95, h.quantile(0.95));
+                assert_eq!(s.p99, h.p99());
+                assert!(!s.buckets.is_empty());
+            }
+            other => panic!("expected histogram value, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_histogram_value_roundtrips() {
+        let h = Histogram::new();
+        let mut r = Report::new("latency_dist");
+        r.push_unit("latency_hist", &h, "ps");
+        let r2 = Report::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(r, r2, "empty histogram must survive (finite mean)");
+    }
+
+    #[test]
+    fn histogram_render_is_csv_safe() {
+        let mut h = Histogram::new();
+        h.record_n(1_000, 100);
+        let s = Value::from(&h).render();
+        assert!(s.contains("p50=") && s.contains("p95=") && s.contains("p99="));
+        assert!(!s.contains(','), "histogram cells must not need CSV quoting");
+    }
+
+    #[test]
+    fn schema_accepts_histogram_kind() {
+        const H_SCHEMA: &[MetricDecl] = &[MetricDecl::histogram("latency_hist", "ps")];
+        assert_eq!(MetricKind::Histogram.as_str(), "histogram");
+        let mut r = Report::with_schema("unit", H_SCHEMA);
+        r.push_unit("latency_hist", &Histogram::new(), "ps");
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "declared kind")]
+    fn schema_rejects_scalar_for_histogram() {
+        const H_SCHEMA: &[MetricDecl] = &[MetricDecl::histogram("latency_hist", "ps")];
+        let mut r = Report::with_schema("unit", H_SCHEMA);
+        r.push_unit("latency_hist", 5u64, "ps");
     }
 
     #[test]

@@ -138,7 +138,11 @@ impl Histogram {
     }
 
     /// Lower edge of bucket `i` (representative value reported back).
-    fn bucket_low(i: usize) -> u64 {
+    ///
+    /// Public so serialized histograms ([`crate::util::report::HistSummary`])
+    /// can round-trip sparse `(bucket, count)` pairs exactly:
+    /// `bucket_of(bucket_low(i)) == i` for every valid index.
+    pub fn bucket_low(i: usize) -> u64 {
         let octave = (i / SUB as usize) as u32;
         let sub = (i % SUB as usize) as u64;
         if octave == 0 {
@@ -195,6 +199,12 @@ impl Histogram {
         }
     }
 
+    /// Exact sum of all recorded values (unlike the bucketed quantiles,
+    /// this carries no approximation).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
     /// Value at quantile `q` in `[0,1]` (bucket lower edge; ≤1.6% rel. err).
     pub fn quantile(&self, q: f64) -> u64 {
         if self.total == 0 {
@@ -225,6 +235,17 @@ impl Histogram {
 
     pub fn p999(&self) -> u64 {
         self.quantile(0.999)
+    }
+
+    /// Iterate the non-empty buckets as `(bucket_index, count)` pairs, in
+    /// ascending value order — the sparse form used when a histogram is
+    /// serialized into a report.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
     }
 
     /// Merge another histogram (same geometry by construction).
@@ -402,6 +423,35 @@ mod tests {
             prev = b;
             v = v.saturating_mul(3) / 2 + 1;
         }
+    }
+
+    #[test]
+    fn bucket_low_is_left_inverse_of_bucket_of() {
+        // the sparse (bucket, count) serialization in util::report relies
+        // on reconstructing counts via record_n(bucket_low(i), c)
+        let mut v = 0u64;
+        while v < u64::MAX / 2 {
+            let b = Histogram::bucket_of(v);
+            assert_eq!(Histogram::bucket_of(Histogram::bucket_low(b)), b, "v={v}");
+            v = v.saturating_mul(3) / 2 + 1;
+        }
+    }
+
+    #[test]
+    fn nonzero_buckets_reconstruct_counts() {
+        let mut h = Histogram::new();
+        for v in [3u64, 3, 70_000, 123_456_789, 123_456_789, 123_456_789] {
+            h.record(v);
+        }
+        let mut rebuilt = Histogram::new();
+        for (i, c) in h.nonzero_buckets() {
+            rebuilt.record_n(Histogram::bucket_low(i), c);
+        }
+        assert_eq!(rebuilt.count(), h.count());
+        assert_eq!(
+            rebuilt.nonzero_buckets().collect::<Vec<_>>(),
+            h.nonzero_buckets().collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -6,4 +6,6 @@ pub mod concentrator;
 pub mod system;
 
 pub use concentrator::{Concentrator, ConcentratorConfig, FPGAS_PER_CONCENTRATOR};
-pub use system::{System, SystemConfig, Wafer, CONCENTRATORS_PER_WAFER, FPGAS_PER_WAFER};
+pub use system::{
+    FaultTotals, System, SystemConfig, Wafer, CONCENTRATORS_PER_WAFER, FPGAS_PER_WAFER,
+};

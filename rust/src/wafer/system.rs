@@ -14,9 +14,12 @@
 //! see `docs/ARCHITECTURE.md` §1 for the layer map and §3 for a spike's
 //! path through this assembly.
 
+use std::sync::Arc;
+
 use crate::extoll::network::Fabric;
-use crate::extoll::nic::{Nic, NicConfig};
+use crate::extoll::nic::{Nic, NicConfig, NicStats};
 use crate::extoll::torus::{NodeAddr, TorusSpec};
+use crate::fault::FaultModel;
 use crate::fpga::fpga::{Fpga, FpgaConfig};
 use crate::fpga::lookup::{EndpointAddr, RxEntry, TxEntry};
 use crate::fpga::manager::ManagerConfig;
@@ -87,6 +90,10 @@ pub struct System {
     pub cfg: SystemConfig,
     pub fabric: Fabric,
     pub wafers: Vec<Wafer>,
+    /// The fault model installed on the NICs, if any — retained so
+    /// post-run collectors can report the sampled fault set (failed
+    /// cables etc.) without rebuilding it.
+    pub fault: Option<Arc<FaultModel>>,
 }
 
 /// System-wide sums of the per-FPGA bucket-manager / drop counters.
@@ -101,9 +108,61 @@ pub struct ManagerTotals {
     pub evictions: u64,
 }
 
+/// System-wide sums of the per-NIC fault counters, plus merged hop
+/// histograms for detour-inflation reporting.
+#[derive(Clone, Debug, Default)]
+pub struct FaultTotals {
+    pub injected_packets: u64,
+    pub injected_events: u64,
+    pub delivered_events: u64,
+    pub lost_packets: u64,
+    pub lost_events: u64,
+    pub undeliverable_packets: u64,
+    pub undeliverable_events: u64,
+    pub detour_hops: u64,
+    /// Torus hops actually taken by delivered packets.
+    pub hops: Histogram,
+    /// Fault-free shortest-path distances of the same packets.
+    pub min_hops: Histogram,
+}
+
+impl FaultTotals {
+    /// Delivered / injected spike events — 1.0 on a healthy fabric (and
+    /// when nothing was injected), strictly below under loss or failures.
+    pub fn deliverability(&self) -> f64 {
+        if self.injected_events == 0 {
+            1.0
+        } else {
+            self.delivered_events as f64 / self.injected_events as f64
+        }
+    }
+
+    /// Mean(hops) / mean(min-hops) over delivered packets — exactly 1.0
+    /// fault-free (dimension-order routes are minimal), above it when
+    /// detours inflate paths. 1.0 when nothing (or only self-traffic,
+    /// min-hop sum 0) was delivered.
+    pub fn hop_inflation(&self) -> f64 {
+        if self.min_hops.sum() == 0 {
+            1.0
+        } else {
+            self.hops.sum() as f64 / self.min_hops.sum() as f64
+        }
+    }
+}
+
 impl System {
     /// Build fabric, wafers, concentrators and FPGAs, and wire everything.
     pub fn build(sim: &mut Sim<Msg>, cfg: SystemConfig) -> System {
+        System::build_with(sim, cfg, None)
+    }
+
+    /// [`System::build`] with an optional fault model installed on every
+    /// NIC (the `None` path is byte-identical to a fault-free build).
+    pub fn build_with(
+        sim: &mut Sim<Msg>,
+        cfg: SystemConfig,
+        fault: Option<&Arc<FaultModel>>,
+    ) -> System {
         assert!(
             cfg.fpgas_per_wafer % cfg.concentrators_per_wafer == 0,
             "fpgas_per_wafer must divide evenly among concentrators"
@@ -116,7 +175,7 @@ impl System {
             "torus has {} nodes, need {needed}",
             cfg.torus.n_nodes()
         );
-        let fabric = Fabric::build(sim, cfg.torus, cfg.nic);
+        let fabric = Fabric::build_with(sim, cfg.torus, cfg.nic, fault);
         let mut wafers = Vec::with_capacity(cfg.n_wafers);
         for w in 0..cfg.n_wafers {
             let mut nodes = Vec::new();
@@ -157,6 +216,7 @@ impl System {
             cfg,
             fabric,
             wafers,
+            fault: fault.cloned(),
         }
     }
 
@@ -276,6 +336,27 @@ impl System {
             t.flush_external += f.mgr.stats.flush_external;
             t.flush_evict += f.mgr.stats.flush_eviction;
             t.evictions += f.mgr.stats.evictions;
+        }
+        t
+    }
+
+    /// Sum the per-NIC fault counters and merge the hop histograms over
+    /// the system — the inputs to the `fault_sweep` deliverability and
+    /// hop-inflation metrics.
+    pub fn fault_totals(&self, sim: &Sim<Msg>) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        for &id in &self.fabric.nics {
+            let st: &NicStats = &sim.get::<Nic>(id).stats;
+            t.injected_packets += st.injected;
+            t.injected_events += st.injected_events;
+            t.delivered_events += st.delivered_events;
+            t.lost_packets += st.lost_packets;
+            t.lost_events += st.lost_events;
+            t.undeliverable_packets += st.undeliverable_packets;
+            t.undeliverable_events += st.undeliverable_events;
+            t.detour_hops += st.detour_hops;
+            t.hops.merge(&st.hops);
+            t.min_hops.merge(&st.min_hops);
         }
         t
     }
@@ -459,6 +540,32 @@ mod tests {
         let totals = sys.manager_totals(&sim);
         assert_eq!(totals.dropped, 0);
         assert!(totals.flush_deadline + totals.flush_full + totals.flush_evict >= 1);
+    }
+
+    #[test]
+    fn fault_totals_aggregate_and_default_to_perfect_health() {
+        let mut sim = Sim::new();
+        let sys = System::build(&mut sim, small_cfg());
+        let t = sys.fault_totals(&sim);
+        assert_eq!(t.deliverability(), 1.0, "empty run counts as healthy");
+        assert_eq!(t.hop_inflation(), 1.0);
+        // drive one spike through and re-aggregate
+        sys.program_route(&mut sim, (0, 0), 2, 77, (1, 5), 900, 0b0000_1000, 0x155);
+        let src = sys.wafers[0].fpgas[0];
+        sim.schedule(
+            Time::from_ns(100),
+            src,
+            Msg::HicannEvent(SpikeEvent::new(2, 77, 2000)),
+        );
+        sim.run_until(Time::from_ms(1));
+        let t = sys.fault_totals(&sim);
+        assert_eq!(t.injected_events, 1);
+        assert_eq!(t.delivered_events, 1);
+        assert_eq!(t.deliverability(), 1.0);
+        assert_eq!(t.hop_inflation(), 1.0, "dimension-order routes are minimal");
+        assert_eq!(t.lost_packets, 0);
+        assert_eq!(t.undeliverable_packets, 0);
+        assert_eq!(t.detour_hops, 0);
     }
 
     #[test]

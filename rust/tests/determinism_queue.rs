@@ -4,8 +4,10 @@
 //! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
 //! sweep runner (`--jobs N`), the partitioned conservative PDES
 //! (`domains=N`, `sync=window|channel`), the sweep-level resource cache
-//! (PR 4) and packet-payload pooling (PR 4) are performance features
-//! only: they must be observationally identical to the reference heap
+//! (PR 4), packet-payload pooling (PR 4) and the fault-injection
+//! subsystem's seed-derived randomness (PR 6) are performance features
+//! (or, for faults, deterministic physics) on top of the reference:
+//! they must be observationally identical to the reference heap
 //! backend, the serial runner, the single-domain event loop, the
 //! windowed synchronization protocol, a cold per-point prepare and
 //! unpooled allocation. These tests pin that contract at the artifact
@@ -435,6 +437,92 @@ fn microcircuit_sweep_loads_artifact_once_and_matches_serial() {
             point.params
         );
     }
+}
+
+// ---- PR 6: fault injection -----------------------------------------------
+
+/// Run `scenario` with a fault spec, an explicit sync protocol and a
+/// domain count; pretty JSON.
+fn report_json_fault(scenario: &str, spec: &str, sync: SyncMode, domains: usize) -> String {
+    let mut cfg = small();
+    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec)
+        .unwrap_or_else(|e| panic!("fault spec {spec:?}: {e}"));
+    cfg.sync = sync;
+    cfg.domains = domains;
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(&cfg)
+        .unwrap_or_else(|e| {
+            panic!(
+                "{scenario} fault={spec} sync={} domains={domains} failed: {e:#}",
+                sync.as_str()
+            )
+        })
+        .to_json()
+        .pretty()
+}
+
+/// The PR 6 acceptance gate: a faulted fabric is still deterministic —
+/// reports are byte-identical across `sync=window/channel ×
+/// domains=1/2/4` for a spec exercising every fault mechanism (cable
+/// failures with re-routing, packet loss, serialization degradation and
+/// latency jitter; all randomness is seed-derived per NIC, and the
+/// merge-key contract makes per-NIC draw order partition-independent).
+#[test]
+fn fault_sweep_report_identical_across_sync_modes_and_domain_counts() {
+    let spec = "fail:0.1|loss:0.02|degrade:0.2|degrade_factor:2.0|jitter_ns:30";
+    let serial = report_json_fault("fault_sweep", spec, SyncMode::Channel, 1);
+    assert!(serial.contains("deliverability"));
+    for sync in [SyncMode::Window, SyncMode::Channel] {
+        for d in [1usize, 2, 4] {
+            assert_eq!(
+                serial,
+                report_json_fault("fault_sweep", spec, sync, d),
+                "fault_sweep sync={} domains={d}",
+                sync.as_str()
+            );
+        }
+    }
+}
+
+/// Histogram metrics survive the partitioning too: `latency_dist` under
+/// jitter is byte-identical across domain counts.
+#[test]
+fn latency_dist_report_identical_across_domain_counts() {
+    let spec = "jitter_ns:40";
+    let serial = report_json_fault("latency_dist", spec, SyncMode::Channel, 1);
+    assert!(serial.contains("latency_hist"));
+    for d in [2usize, 4] {
+        assert_eq!(
+            serial,
+            report_json_fault("latency_dist", spec, SyncMode::Channel, d),
+            "latency_dist domains={d}"
+        );
+    }
+}
+
+/// A fault axis sweeps cleanly: the compact '|' spec survives the
+/// ','-split grid grammar, all points share one cached plan (the fault
+/// model is built at execute time), and `--jobs 4` artifacts are
+/// byte-identical to serial.
+#[test]
+fn fault_axis_sweep_identical_across_jobs() {
+    let scenario = find("fault_sweep").unwrap();
+    let grid = "fault=none,fail:0.05,fail:0.1|loss:0.01";
+    let serial = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.points.len(), 3);
+    assert_eq!(serial.cache.misses, 1, "fault points must share one plan");
+    assert_eq!(serial.cache.hits, 2);
+    let parallel = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .jobs(4)
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.to_csv(), parallel.to_csv());
+    assert_eq!(serial.to_json().pretty(), parallel.to_json().pretty());
 }
 
 /// Packet-payload pooling is a perf knob only: reports are byte-identical

@@ -173,6 +173,79 @@ fn prop_routing_minimal_and_ordered() {
     }
 }
 
+/// Property (PR 6, adaptive routing): **the fault-aware router agrees
+/// exactly with live-graph reachability.** For any random cable-failure
+/// set (both directions of each cable, like `FaultModel`), every
+/// `(src, dst)` pair the live graph connects is reached on a loop-free
+/// *shortest live* path that avoids every dead link; every pair it does
+/// not connect reports `Hop::Unreachable` instead of panicking. This
+/// subsumes the "connected fault set ⇒ all destinations reached"
+/// guarantee: when the whole live graph stays connected, every pair
+/// falls into the first arm.
+#[test]
+fn prop_adaptive_routing_reaches_every_live_destination() {
+    use bss_extoll::extoll::routing::{
+        live_distances, next_hop_with, route_with, Hop, LinkStatus,
+    };
+    use bss_extoll::extoll::torus::{Dir, DIRS};
+    use std::collections::BTreeSet;
+
+    struct DeadSet(BTreeSet<(u16, u8)>);
+    impl LinkStatus for DeadSet {
+        fn alive(&self, from: NodeAddr, dir: Dir) -> bool {
+            !self.0.contains(&(from.0, dir.port()))
+        }
+    }
+
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x6666 + case);
+        let t = TorusSpec::new(
+            rng.range(2, 6) as u16,
+            rng.range(1, 6) as u16,
+            rng.range(1, 4) as u16,
+        );
+        let mut dead = BTreeSet::new();
+        for _ in 0..rng.below(1 + t.n_nodes() as u64 / 2) {
+            let a = NodeAddr(rng.below(t.n_nodes() as u64) as u16);
+            let d = DIRS[rng.below(6) as usize];
+            let b = t.neighbor(a, d);
+            if b == a {
+                continue; // size-1 axis self-loop; never a cable
+            }
+            dead.insert((a.0, d.port()));
+            dead.insert((b.0, d.opposite().port()));
+        }
+        let status = DeadSet(dead);
+        for _ in 0..30 {
+            let src = NodeAddr(rng.below(t.n_nodes() as u64) as u16);
+            let dst = NodeAddr(rng.below(t.n_nodes() as u64) as u16);
+            let dist = live_distances(&t, &status, dst);
+            match route_with(&t, &status, src, dst) {
+                // reachable: shortest in the live graph, dead links
+                // avoided, destination reached (the shared walker's loop
+                // guard asserts loop-freedom on the way)
+                Some(p) => {
+                    assert_eq!(p.len() as u32, dist[src.0 as usize], "{src}->{dst}");
+                    let mut here = src;
+                    for d in &p {
+                        assert!(status.alive(here, *d), "route used dead link at {here}");
+                        here = t.neighbor(here, *d);
+                    }
+                    assert_eq!(here, dst);
+                }
+                None => {
+                    assert_eq!(
+                        dist[src.0 as usize],
+                        u32::MAX,
+                        "{src}->{dst} is live-reachable but reported unreachable"
+                    );
+                    assert_eq!(next_hop_with(&t, &status, src, dst), Hop::Unreachable);
+                }
+            }
+        }
+    }
+}
+
 /// Wrapped 15-bit timestamps behave like a total order inside any window
 /// smaller than half the range.
 #[test]

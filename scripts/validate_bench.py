@@ -66,13 +66,39 @@ def check_committed(paths):
         )
 
 
+def check_fault_sweep(j):
+    """Shape of the PR 6 degraded-fabric section: deliverability starts
+    at exactly 1.0 on the healthy fabric and is monotone non-increasing
+    in the failed-cable fraction; the faulted cross-domain identity bit
+    must hold."""
+    f = j["fault_sweep"]
+    assert f["deterministic_across_domains"] is True
+    runs = f["runs"]
+    assert len(runs) >= 3, f"fault_sweep needs >= 3 points, got {len(runs)}"
+    assert runs[0]["fault"] == "none", runs[0]
+    assert runs[0]["failed_cables"] == 0, runs[0]
+    assert runs[0]["deliverability"] == 1.0, runs[0]
+    assert runs[0]["hop_inflation"] == 1.0, runs[0]
+    prev_cables, prev_deliv = -1, float("inf")
+    for r in runs:
+        assert 0.0 <= r["deliverability"] <= 1.0, r
+        assert r["hop_inflation"] >= 1.0, r
+        assert r["failed_cables"] > prev_cables, (
+            f"failed-cable counts must grow along the sweep: {runs}"
+        )
+        assert r["deliverability"] <= prev_deliv, (
+            f"deliverability must be monotone non-increasing: {runs}"
+        )
+        prev_cables, prev_deliv = r["failed_cables"], r["deliverability"]
+
+
 def check_artifact(path):
-    """Shape checks for a regenerated BENCH_PR5 artifact."""
+    """Shape checks for a regenerated BENCH_PR6 artifact."""
     j = load(path)
     if "pending_regeneration" in j:
         fail(f"{path}: regenerated artifact is still a placeholder")
     assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
-    assert j["artifact"] == "BENCH_PR5", j.get("artifact")
+    assert j["artifact"] == "BENCH_PR6", j.get("artifact")
     assert j["queue_transit"]["results"], "no queue benches recorded"
     assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
     assert j["sweep_scaling"]["deterministic_across_jobs"] is True
@@ -120,6 +146,9 @@ def check_artifact(path):
     assert pp["deterministic_pool_on_off"] is True
     assert pp["buffers_recycled"] > 0, "pool never recycled a buffer"
 
+    check_fault_sweep(j)
+    worst_deliv = min(r["deliverability"] for r in j["fault_sweep"]["runs"])
+
     print(
         f"{path} ok:",
         f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
@@ -127,6 +156,7 @@ def check_artifact(path):
         f"channel_vs_window@4={s['channel_vs_window_at_4_domains']:.2f}x",
         f"cache(mc)={c['microcircuit']['speedup']:.2f}x",
         f"pool={pp['speedup']:.2f}x",
+        f"fault_deliv_min={worst_deliv:.3f}",
     )
 
 
