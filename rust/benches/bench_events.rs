@@ -6,7 +6,7 @@
 //! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR6.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR7.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
@@ -16,7 +16,11 @@
 //! hit/miss counters for traffic and microcircuit, pool-on/off events/s
 //! with a byte-identity check, and the degraded-fabric deliverability
 //! curve (`fault_sweep` over rising failed-cable fractions, with a
-//! cross-domain identity check under faults). The CI `bench-smoke` job re-runs
+//! cross-domain identity check under faults), and the link-reliability
+//! recovery curve (`reliability_sweep` over loss rates × off/link, with
+//! deliverability pinned at exactly 1.0 whenever the layer is on and a
+//! cross-domain identity check with retransmission timers live). The CI
+//! `bench-smoke` job re-runs
 //! it with `BSS_BENCH_FAST=1`, fails on any `SKIPPED` row, and validates
 //! the artifact shape with `scripts/validate_bench.py`, so this artifact
 //! cannot silently rot.
@@ -519,13 +523,105 @@ fn main() {
         "faulted reports diverged across PDES domain counts"
     );
 
+    // ---- 8. reliability sweep: retransmission recovery economics ------------
+    // With reliability=link every CRC-dropped packet is recovered within
+    // the retry budget: deliverability is pinned at exactly 1.0 with zero
+    // residual loss, at a measured events/s cost; reliability=off
+    // reproduces the lossy fault_sweep curve. Reports with the layer on
+    // stay byte-identical across PDES domain counts (the PR 7 determinism
+    // gate in rust/tests/determinism_queue.rs pins the same invariant).
+    let rel_scn = find("reliability_sweep").expect("reliability_sweep registered");
+    let rel_base = traffic_base(fast);
+    let mut rel_runs = Json::arr();
+    let mut rel_table = Table::new(
+        "reliability sweep (lossy fabric, link-level ACK/NACK retransmission)",
+        &["reliability", "fault", "deliverability", "retx", "residual", "events/s", "wall_s"],
+    );
+    // events/s per (mode, spec) cell, for the zero-loss overhead ratio
+    let mut rel_eps: Vec<((String, String), f64)> = Vec::new();
+    for spec in ["none", "loss:0.01", "loss:0.03"] {
+        let mut off_deliv = 1.0f64;
+        for mode in ["off", "link"] {
+            let mut cfg = rel_base.clone();
+            apply_override(&mut cfg, "fault", spec).expect("fault spec");
+            apply_override(&mut cfg, "reliability", mode).expect("reliability mode");
+            let t0 = Instant::now();
+            let report = rel_scn.run(&cfg).expect("reliability_sweep run failed");
+            let wall = t0.elapsed().as_secs_f64();
+            let deliv = report.get_f64("deliverability").expect("deliverability");
+            let retx = report.get_count("retransmissions").expect("retransmissions");
+            let residual = report
+                .get_count("residual_loss_events")
+                .expect("residual_loss_events");
+            let events = report.get_count("des_events").expect("des_events");
+            let eps = events as f64 / wall;
+            rel_eps.push(((mode.to_string(), spec.to_string()), eps));
+            if mode == "off" {
+                off_deliv = deliv;
+                assert_eq!(retx, 0, "retransmissions without the layer ({spec})");
+            } else {
+                assert_eq!(
+                    deliv, 1.0,
+                    "reliability=link must recover every event ({spec})"
+                );
+                assert_eq!(residual, 0, "residual loss below the retry limit ({spec})");
+                assert!(
+                    deliv >= off_deliv,
+                    "link deliverability below the off curve ({spec})"
+                );
+            }
+            rel_table.row(vec![
+                mode.to_string(),
+                spec.to_string(),
+                format!("{deliv:.4}"),
+                retx.to_string(),
+                residual.to_string(),
+                eng(eps),
+                format!("{wall:.3}"),
+            ]);
+            rel_runs.push(
+                Json::obj()
+                    .set("reliability", mode)
+                    .set("fault", spec)
+                    .set("deliverability", deliv)
+                    .set("crc_failures", report.get_count("crc_failures").unwrap_or(0))
+                    .set("retransmissions", retx)
+                    .set("residual_loss_events", residual)
+                    .set("des_events", events)
+                    .set("wall_s", wall)
+                    .set("events_per_s", eps),
+            );
+        }
+    }
+    let rel_cell = |mode: &str, spec: &str| -> f64 {
+        rel_eps
+            .iter()
+            .find(|((m, s), _)| m == mode && s == spec)
+            .map(|&(_, eps)| eps)
+            .expect("reliability cell recorded")
+    };
+    let link_vs_off_at_zero_loss = rel_cell("link", "none") / rel_cell("off", "none");
+    let mut rel_det_cfg = rel_base.clone();
+    apply_override(&mut rel_det_cfg, "fault", "loss:0.02|jitter_ns:25").expect("fault spec");
+    apply_override(&mut rel_det_cfg, "reliability", "link").expect("reliability mode");
+    let rel_serial = rel_scn.run(&rel_det_cfg).expect("reliable run").to_json().pretty();
+    rel_det_cfg.domains = 2;
+    let rel_partitioned = rel_scn.run(&rel_det_cfg).expect("reliable run").to_json().pretty();
+    let rel_deterministic = rel_serial == rel_partitioned;
+    rel_table.print();
+    println!("link vs off events/s at zero loss: {link_vs_off_at_zero_loss:.2}x\n");
+    assert!(
+        rel_deterministic,
+        "reliable reports diverged across PDES domain counts"
+    );
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR6")
+        .set("artifact", "BENCH_PR7")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -575,6 +671,13 @@ fn main() {
             Json::obj()
                 .set("deterministic_across_domains", fault_deterministic)
                 .set("runs", fault_runs),
+        )
+        .set(
+            "reliability_sweep",
+            Json::obj()
+                .set("deterministic_across_domains", rel_deterministic)
+                .set("link_vs_off_at_zero_loss", link_vs_off_at_zero_loss)
+                .set("runs", rel_runs),
         );
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the

@@ -7,6 +7,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::extoll::link::{LinkReliabilityConfig, Reliability};
 use crate::extoll::nic::NicConfig;
 use crate::extoll::torus::TorusSpec;
 use crate::fault::FaultConfig;
@@ -181,6 +182,19 @@ impl ExperimentConfig {
                 nic: NicConfig {
                     lanes: sys.u64_or("nic_lanes", 12) as u32,
                     credits_per_vc: sys.u64_or("nic_credits", 8) as u32,
+                    retx: {
+                        let dr = LinkReliabilityConfig::default();
+                        LinkReliabilityConfig {
+                            window: sys.u64_or("retx_window", dr.window as u64) as u32,
+                            timeout: Time::from_ns(
+                                sys.u64_or("retx_timeout_ns", dr.timeout.ps() / 1000),
+                            ),
+                            max_retries: sys.u64_or("retx_max_retries", dr.max_retries as u64)
+                                as u32,
+                            backoff_cap: sys.u64_or("retx_backoff_cap", dr.backoff_cap as u64)
+                                as u32,
+                        }
+                    },
                     ..NicConfig::default()
                 },
                 manager: ManagerConfig {
@@ -218,6 +232,14 @@ impl ExperimentConfig {
                 burst_len: w.u64_or("burst_len", d.burst_len as u64) as u32,
                 mc_scale: w.f64_or("mc_scale", d.mc_scale),
             };
+        }
+        // Top-level like `queue`/`sync` (it selects a protocol, not a
+        // machine dimension), applied after the `system` block so it
+        // composes with `retx_*` knobs from either source.
+        {
+            let name = j.str_or("reliability", Reliability::default().as_str());
+            cfg.system.nic.reliability = Reliability::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown reliability mode '{name}' (off|link)"))?;
         }
         if let Some(f) = j.get("fault") {
             cfg.fault = FaultConfig::from_json(f).map_err(|e| anyhow::anyhow!(e))?;
@@ -337,6 +359,30 @@ mod tests {
     }
 
     #[test]
+    fn reliability_knob_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Off);
+        let j = Json::parse(r#"{"reliability": "link"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Link);
+        assert_eq!(cfg.system.nic.retx, LinkReliabilityConfig::default());
+        let j = Json::parse(
+            r#"{"reliability": "link",
+                "system": {"retx_window": 8, "retx_timeout_ns": 750,
+                           "retx_max_retries": 4, "retx_backoff_cap": 2}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Link);
+        assert_eq!(cfg.system.nic.retx.window, 8);
+        assert_eq!(cfg.system.nic.retx.timeout, Time::from_ns(750));
+        assert_eq!(cfg.system.nic.retx.max_retries, 4);
+        assert_eq!(cfg.system.nic.retx.backoff_cap, 2);
+        let j = Json::parse(r#"{"reliability": "tcp"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn bad_eviction_rejected() {
         let j = Json::parse(r#"{"system": {"eviction": "bogus"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
@@ -371,6 +417,8 @@ mod config_file_tests {
             "configs/traffic_2wafer.json",
             "configs/microcircuit_4shard.json",
             "configs/eviction_ablation.json",
+            "configs/fault_lossy.json",
+            "configs/fault_degraded.json",
         ] {
             let cfg = ExperimentConfig::from_file(name)
                 .unwrap_or_else(|e| panic!("{name}: {e:#}"));

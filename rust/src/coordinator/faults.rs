@@ -9,13 +9,21 @@
 //!   produces the degraded-fabric curves: deliverability is exactly 1.0
 //!   at zero faults and monotone non-increasing in the failed-link
 //!   fraction (gated by `scripts/validate_bench.py`).
+//! - [`ReliabilitySweepScenario`] (`reliability_sweep`) — the same
+//!   degraded fabric with the link-level retransmission layer in play
+//!   (`--set reliability=link`), reporting the recovery economics:
+//!   CRC-detected losses, retransmissions, NACKs, timeouts, recovered
+//!   events, residual loss past the retry budget, and the
+//!   recovery-latency histogram. Swept over `reliability=off,link` it
+//!   shows deliverability returning to 1.0 under loss at a measured
+//!   latency/bandwidth cost (`docs/ARCHITECTURE.md` §6).
 //! - [`LatencyDistScenario`] (`latency_dist`) — the same workload
 //!   reporting full latency *distributions* as
 //!   [`MetricKind::Histogram`](crate::util::report::MetricKind) metrics
 //!   (bucketed counts + p50/p95/p99) instead of two scalar percentiles:
 //!   end-to-end event latency and fabric transit latency.
 //!
-//! Both reuse [`TrafficScenario`]'s plan and cache family: the fault
+//! All three reuse [`TrafficScenario`]'s plan and cache family: the fault
 //! model is an execute-time resource built from the experiment seed
 //! (`run_fabric_experiment_with`), so a fault sweep shares one cached
 //! plan across every point — and the plan RNG draw sequence is untouched,
@@ -51,6 +59,24 @@ pub const FAULT_SWEEP_METRICS: &[MetricDecl] = fabric_schema![
     MetricDecl::real("deliverability", "1"),
     MetricDecl::real("mean_hops", "hops"),
     MetricDecl::real("hop_inflation", "1"),
+];
+
+/// Declared metric schema of [`ReliabilitySweepScenario`].
+pub const RELIABILITY_SWEEP_METRICS: &[MetricDecl] = fabric_schema![
+    MetricDecl::count("failed_cables", "cables"),
+    MetricDecl::count("injected_events", "events"),
+    MetricDecl::count("crc_failures", "packets"),
+    MetricDecl::count("retransmissions", "packets"),
+    MetricDecl::count("nacks", "frames"),
+    MetricDecl::count("timeouts", "timeouts"),
+    MetricDecl::count("recovered_packets", "packets"),
+    MetricDecl::count("recovered_events", "events"),
+    MetricDecl::count("duplicate_packets", "packets"),
+    MetricDecl::count("undeliverable_events", "events"),
+    MetricDecl::count("residual_loss_packets", "packets"),
+    MetricDecl::count("residual_loss_events", "events"),
+    MetricDecl::real("deliverability", "1"),
+    MetricDecl::histogram("recovery_hist", "ps"),
 ];
 
 /// Declared metric schema of [`LatencyDistScenario`].
@@ -118,6 +144,75 @@ impl Scenario for FaultSweepScenario {
     fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
         let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
         execute_fabric_plan(self, Scenario::name(self), FAULT_SWEEP_METRICS, plan, cfg)
+    }
+}
+
+// ---- reliability_sweep ---------------------------------------------------
+
+/// The `traffic` workload over a degraded fabric with the link-level
+/// reliability protocol under test: what did recovery cost, and what
+/// slipped past the retry budget?
+pub struct ReliabilitySweepScenario;
+
+impl FabricScenario for ReliabilitySweepScenario {
+    fn plan(&self, sys: &System, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<FabricPlan> {
+        TrafficScenario.plan(sys, cfg, rng)
+    }
+
+    fn generator(&self, cfg: &ExperimentConfig) -> GeneratorKind {
+        cfg.workload.generator
+    }
+
+    fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
+        let t = sys.fault_totals(sim);
+        let failed = sys.fault.as_ref().map_or(0, |m| m.failed_cables());
+        report.push_unit("failed_cables", failed as u64, "cables");
+        report.push_unit("injected_events", t.injected_events, "events");
+        // with reliability=link a CRC failure is a *detected* loss — it is
+        // counted here whether or not a retransmission later recovers it;
+        // with reliability=off it is simply a dropped packet
+        report.push_unit("crc_failures", t.lost_packets, "packets");
+        report.push_unit("retransmissions", t.retransmissions, "packets");
+        report.push_unit("nacks", t.nacks, "frames");
+        report.push_unit("timeouts", t.timeouts, "timeouts");
+        report.push_unit("recovered_packets", t.recovered_packets, "packets");
+        report.push_unit("recovered_events", t.recovered_events, "events");
+        report.push_unit("duplicate_packets", t.duplicate_packets, "packets");
+        report.push_unit("undeliverable_events", t.undeliverable_events, "events");
+        report.push_unit("residual_loss_packets", t.residual_loss_packets, "packets");
+        report.push_unit("residual_loss_events", t.residual_loss_events, "events");
+        report.push_unit("deliverability", t.deliverability(), "1");
+        report.push_unit("recovery_hist", &t.recovery_ps, "ps");
+    }
+}
+
+impl Scenario for ReliabilitySweepScenario {
+    fn name(&self) -> &'static str {
+        "reliability_sweep"
+    }
+
+    fn about(&self) -> &'static str {
+        "degraded fabric with link-level retransmission: recovery cost vs residual loss"
+    }
+
+    fn metrics(&self) -> &'static [MetricDecl] {
+        RELIABILITY_SWEEP_METRICS
+    }
+
+    /// Shares the traffic plan family: both the fault model and the
+    /// reliability layer are execute-time state, so sweeping
+    /// `reliability=off,link` (or `fault=`) reuses one cached plan.
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        zipf_plan_key(cfg)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        execute_fabric_plan(self, Scenario::name(self), RELIABILITY_SWEEP_METRICS, plan, cfg)
     }
 }
 
@@ -222,6 +317,68 @@ mod tests {
     }
 
     #[test]
+    fn reliability_link_restores_deliverability_under_loss() {
+        use crate::extoll::link::Reliability;
+        let mut cfg = small(FaultConfig {
+            loss: 0.05,
+            ..FaultConfig::default()
+        });
+        cfg.system.nic.reliability = Reliability::Link;
+        let r = ReliabilitySweepScenario.run(&cfg).unwrap();
+        // every CRC-dropped packet is recovered within the retry budget:
+        // deliverability returns to exactly 1.0 with zero residual loss
+        assert_eq!(r.get_f64("deliverability"), Some(1.0));
+        assert_eq!(r.get_count("residual_loss_packets"), Some(0));
+        assert_eq!(r.get_count("residual_loss_events"), Some(0));
+        assert_eq!(r.get_count("undeliverable_events"), Some(0));
+        // ... and the recovery machinery demonstrably did the work
+        let crc = r.get_count("crc_failures").unwrap();
+        assert!(crc > 0, "5% loss must trip CRC failures");
+        assert!(r.get_count("retransmissions").unwrap() >= crc);
+        assert!(r.get_count("nacks").unwrap() > 0);
+        assert!(r.get_count("recovered_packets").unwrap() > 0);
+        assert!(r.get_count("recovered_events").unwrap() > 0);
+        match r.get("recovery_hist") {
+            Some(Value::Hist(h)) => assert!(h.n > 0, "no recovery samples"),
+            other => panic!("recovery_hist is not a histogram: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reliability_off_matches_fault_sweep_exactly() {
+        // with the layer off, reliability_sweep is fault_sweep with a
+        // different schema: the shared physics metrics agree exactly and
+        // every recovery counter is zero
+        let cfg = small(FaultConfig {
+            loss: 0.05,
+            ..FaultConfig::default()
+        });
+        let r = ReliabilitySweepScenario.run(&cfg).unwrap();
+        let f = FaultSweepScenario.run(&cfg).unwrap();
+        assert_eq!(r.get_f64("deliverability"), f.get_f64("deliverability"));
+        assert!(r.get_f64("deliverability").unwrap() < 1.0);
+        assert_eq!(r.get_count("crc_failures"), f.get_count("lost_packets"));
+        assert_eq!(r.get_count("injected_events"), f.get_count("injected_events"));
+        for zero in ["retransmissions", "nacks", "timeouts", "recovered_packets",
+                     "duplicate_packets", "residual_loss_packets"] {
+            assert_eq!(r.get_count(zero), Some(0), "{zero} without the layer");
+        }
+    }
+
+    #[test]
+    fn reliability_link_is_clean_on_a_healthy_fabric() {
+        use crate::extoll::link::Reliability;
+        let mut cfg = small(FaultConfig::default());
+        cfg.system.nic.reliability = Reliability::Link;
+        let r = ReliabilitySweepScenario.run(&cfg).unwrap();
+        assert_eq!(r.get_f64("deliverability"), Some(1.0));
+        assert_eq!(r.get_count("crc_failures"), Some(0));
+        assert_eq!(r.get_count("retransmissions"), Some(0));
+        assert_eq!(r.get_count("timeouts"), Some(0));
+        assert_eq!(r.get_count("residual_loss_events"), Some(0));
+    }
+
+    #[test]
     fn latency_dist_reports_histograms() {
         let cfg = small(FaultConfig::default());
         let r = LatencyDistScenario.run(&cfg).unwrap();
@@ -242,5 +399,14 @@ mod tests {
         assert!(LATENCY_DIST_METRICS
             .iter()
             .any(|d| d.name == "latency_hist" && d.kind == MetricKind::Histogram));
+        assert!(RELIABILITY_SWEEP_METRICS
+            .iter()
+            .any(|d| d.name == "deliverability"));
+        assert!(RELIABILITY_SWEEP_METRICS
+            .iter()
+            .any(|d| d.name == "residual_loss_events"));
+        assert!(RELIABILITY_SWEEP_METRICS
+            .iter()
+            .any(|d| d.name == "recovery_hist" && d.kind == MetricKind::Histogram));
     }
 }

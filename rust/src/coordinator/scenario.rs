@@ -95,7 +95,7 @@ use crate::workload::microcircuit::{Microcircuit, Placement};
 pub use crate::util::report::{MetricDecl, MetricKind};
 
 use super::config::ExperimentConfig;
-use super::faults::{FaultSweepScenario, LatencyDistScenario};
+use super::faults::{FaultSweepScenario, LatencyDistScenario, ReliabilitySweepScenario};
 use super::microcircuit::MicrocircuitScenario;
 use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 
@@ -420,13 +420,14 @@ impl ResourceCache {
 /// borrow from it).
 ///
 /// Adding a scenario = implement [`Scenario`] + add one line here.
-static REGISTRY: [&dyn Scenario; 7] = [
+static REGISTRY: [&dyn Scenario; 8] = [
     &TrafficScenario,
     &MicrocircuitScenario,
     &BurstScenario,
     &HotspotScenario,
     &AnalyzeScenario,
     &FaultSweepScenario,
+    &ReliabilitySweepScenario,
     &LatencyDistScenario,
 ];
 
@@ -589,11 +590,12 @@ mod tests {
             "hotspot",
             "analyze",
             "fault_sweep",
+            "reliability_sweep",
             "latency_dist",
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
-        assert!(names.len() >= 7);
+        assert!(names.len() >= 8);
     }
 
     #[test]

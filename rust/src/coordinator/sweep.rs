@@ -73,13 +73,39 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
             cfg.sync = crate::sim::SyncMode::parse(value)
                 .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{value}' (window|channel)"))?
         }
-        // fault injection: "none", "fail:0.25|loss:0.01", or a JSON object
-        // (the compact form is comma-free so it survives as a sweep-axis
-        // value — axis values split on ',')
+        // fault injection: "none", "fail:0.25|loss:0.01", a JSON object,
+        // or "@path" to load a calibrated preset file (the compact form
+        // is comma-free so it survives as a sweep-axis value — axis
+        // values split on ',')
         "fault" => {
-            cfg.fault = crate::fault::FaultConfig::parse_spec(value)
-                .map_err(|e| anyhow::anyhow!("--fault: {e}"))?
+            cfg.fault = match value.strip_prefix('@') {
+                Some(path) => fault_from_preset(path)?,
+                None => crate::fault::FaultConfig::parse_spec(value)
+                    .map_err(|e| anyhow::anyhow!("--fault: {e}"))?,
+            }
         }
+        // link-level reliability (extoll::link): retransmission on/off
+        // plus its tuning knobs — see docs/TUNING.md
+        "reliability" => {
+            cfg.system.nic.reliability = crate::extoll::link::Reliability::parse(value)
+                .ok_or_else(|| anyhow::anyhow!("unknown reliability mode '{value}' (off|link)"))?
+        }
+        "retx_window" => {
+            let w = int(key, value)?;
+            if w == 0 {
+                bail!("--retx_window: must be >= 1");
+            }
+            cfg.system.nic.retx.window = w as u32;
+        }
+        "retx_timeout_ns" => {
+            let t = int(key, value)?;
+            if t == 0 {
+                bail!("--retx_timeout_ns: must be >= 1");
+            }
+            cfg.system.nic.retx.timeout = Time::from_ns(t);
+        }
+        "retx_max_retries" => cfg.system.nic.retx.max_retries = int(key, value)? as u32,
+        "retx_backoff_cap" => cfg.system.nic.retx.backoff_cap = int(key, value)? as u32,
         // workload
         "rate_hz" => cfg.workload.rate_hz = num(key, value)?,
         "sources_per_fpga" => cfg.workload.sources_per_fpga = int(key, value)? as usize,
@@ -132,14 +158,28 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
             "unknown parameter '{other}' (known: seed, queue, domains, sync, \
-             fault, rate_hz, sources_per_fpga, fan_out, zipf_s, \
-             deadline_offset, duration_s, generator, burst_len, mc_scale, \
-             n_wafers, fpgas_per_wafer, concentrators_per_wafer, torus, \
-             buckets, bucket_capacity, deadline_margin, eviction, steps, \
-             artifact, dt_s, w_exc, w_inh, k_scale — see docs/TUNING.md)"
+             fault, reliability, retx_window, retx_timeout_ns, \
+             retx_max_retries, retx_backoff_cap, rate_hz, sources_per_fpga, \
+             fan_out, zipf_s, deadline_offset, duration_s, generator, \
+             burst_len, mc_scale, n_wafers, fpgas_per_wafer, \
+             concentrators_per_wafer, torus, buckets, bucket_capacity, \
+             deadline_margin, eviction, steps, artifact, dt_s, w_exc, \
+             w_inh, k_scale — see docs/TUNING.md)"
         ),
     }
     Ok(())
+}
+
+/// Load a fault preset file for `--set fault=@path` / a `fault=@path`
+/// sweep-axis value. The file may be a full experiment config (its
+/// `"fault"` block is taken, e.g. `configs/fault_lossy.json`) or a bare
+/// fault object.
+fn fault_from_preset(path: &str) -> Result<crate::fault::FaultConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("fault preset '{path}': {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("fault preset '{path}': {e}"))?;
+    crate::fault::FaultConfig::from_json(j.get("fault").unwrap_or(&j))
+        .map_err(|e| anyhow::anyhow!("fault preset '{path}': {e}"))
 }
 
 /// Parse `"a=1,2;b=x,y"` into sweep axes.
@@ -824,6 +864,65 @@ mod tests {
         assert!(apply_override(&mut cfg, "sync", "global").is_err());
         apply_override(&mut cfg, "sync", "window").unwrap();
         assert_eq!(cfg.sync, crate::sim::SyncMode::Window);
+    }
+
+    #[test]
+    fn reliability_override_parses() {
+        use crate::extoll::link::Reliability;
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Off);
+        apply_override(&mut cfg, "reliability", "link").unwrap();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Link);
+        apply_override(&mut cfg, "reliability", "off").unwrap();
+        assert_eq!(cfg.system.nic.reliability, Reliability::Off);
+        assert!(apply_override(&mut cfg, "reliability", "tcp").is_err());
+        apply_override(&mut cfg, "retx_window", "8").unwrap();
+        apply_override(&mut cfg, "retx_timeout_ns", "750").unwrap();
+        apply_override(&mut cfg, "retx_max_retries", "4").unwrap();
+        apply_override(&mut cfg, "retx_backoff_cap", "2").unwrap();
+        assert_eq!(cfg.system.nic.retx.window, 8);
+        assert_eq!(cfg.system.nic.retx.timeout, Time::from_ns(750));
+        assert_eq!(cfg.system.nic.retx.max_retries, 4);
+        assert_eq!(cfg.system.nic.retx.backoff_cap, 2);
+        assert!(apply_override(&mut cfg, "retx_window", "0").is_err());
+        assert!(apply_override(&mut cfg, "retx_timeout_ns", "0").is_err());
+        assert!(apply_override(&mut cfg, "retx_max_retries", "-1").is_err());
+    }
+
+    #[test]
+    fn fault_preset_files_load_via_at_syntax() {
+        // the shipped calibrated presets are full experiment configs;
+        // `fault=@path` extracts just their fault block
+        let mut cfg = ExperimentConfig::default();
+        apply_override(&mut cfg, "fault", "@configs/fault_lossy.json").unwrap();
+        assert_eq!(cfg.fault.loss, 0.02);
+        assert_eq!(cfg.fault.jitter_ns, 25.0);
+        assert_eq!(cfg.fault.fail, 0.0);
+        apply_override(&mut cfg, "fault", "@configs/fault_degraded.json").unwrap();
+        assert_eq!(cfg.fault.degrade, 0.25);
+        assert_eq!(cfg.fault.degrade_factor, 2.0);
+        assert_eq!(cfg.fault.loss, 0.005);
+        assert_eq!(cfg.fault.jitter_ns, 50.0);
+        let err = apply_override(&mut cfg, "fault", "@configs/no_such_preset.json");
+        assert!(format!("{:#}", err.unwrap_err()).contains("no_such_preset"));
+    }
+
+    #[test]
+    fn reliability_axis_is_transparent_on_a_healthy_fabric() {
+        // at loss=0 the link layer stamps, ACKs and retires but never
+        // retransmits or stalls, so every physics metric matches the
+        // off point exactly
+        let runner = SweepRunner::new(small()).axis("reliability", &["off", "link"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        assert_eq!(result.points.len(), 2);
+        assert_eq!(
+            result.points[0].report.to_flat_json().to_string(),
+            result.points[1].report.to_flat_json().to_string(),
+            "reliability=link must be metric-transparent at loss=0"
+        );
+        // reliability is an execute-time knob: both points share one plan
+        assert_eq!(result.cache.misses, 1);
+        assert_eq!(result.cache.hits, 1);
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Link-level reliability protocol (`reliability=link`, docs/ARCHITECTURE.md §6).
+//!
+//! Extoll's link layer is what makes the fabric *reliable*: every packet
+//! crossing a cable is CRC-protected, and a corrupted packet is replayed
+//! from the sender's retransmission buffer rather than surfacing as loss
+//! (the source paper picks Extoll for exactly this property). PR 6's fault
+//! model turned CRC failure into *silent* receiver-side drops; this module
+//! adds the recovery protocol on top:
+//!
+//! - **Per-link sequence numbers** — the transmitter of each torus port
+//!   stamps outgoing packets with a monotone sequence (`Packet::link_seq`,
+//!   `0` = unstamped); the receiver tracks the next expected sequence per
+//!   upstream `(actor, port)` link.
+//! - **Cumulative ACK / NACK** — an in-order arrival is acknowledged
+//!   cumulatively (`Msg::Ack { ack }` ⇒ everything below `ack` arrived); a
+//!   CRC failure or a sequence gap requests a go-back-N replay
+//!   (`Msg::Nack { expect }`). Control frames are modeled like credit
+//!   flits: they cross the reverse link in exactly
+//!   [`super::nic::NicConfig::credit_return_latency`] and occupy no input
+//!   buffer, so they can neither be lost nor deadlock (§6 in the
+//!   architecture book for the full argument).
+//! - **Bounded retransmission buffer** — at most
+//!   [`LinkReliabilityConfig::window`] unacknowledged packets per link;
+//!   fresh transmissions stall (like a credit stall) while the window is
+//!   full, retransmissions always pass.
+//! - **Timeout + exponential backoff** — a per-port retransmission timer
+//!   (an ordinary intra-node `send_self` event, so it composes with the
+//!   partitioned PDES) replays the buffer when no ACK/NACK shows progress
+//!   for `timeout << backoff`; the backoff shift grows per consecutive
+//!   timeout up to [`LinkReliabilityConfig::backoff_cap`] and resets on any
+//!   progress.
+//! - **Retry budget** — an entry that survives
+//!   [`LinkReliabilityConfig::max_retries`] replay rounds is abandoned:
+//!   accounted as undeliverable + residual loss (never silently dropped),
+//!   and the receiver's expectation is advanced past the abandoned prefix
+//!   via `Msg::SeqSkip` so the link keeps making progress.
+//!
+//! All state transitions are pure functions of the owning NIC's event
+//! order, which the engine keeps partition-independent (merge-key
+//! contract) — so `reliability=link` runs are byte-identical across
+//! `domains`, `sync` modes, queue backends and `--jobs`, and
+//! `reliability=off` instantiates none of this (the NIC holds no
+//! [`LinkLayer`] at all), staying byte-identical to the pre-reliability
+//! fabric. Gated in `rust/tests/determinism_queue.rs`.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::sim::{ActorId, Time};
+
+use super::packet::Packet;
+use super::torus::TORUS_PORTS;
+
+/// The `reliability=` experiment knob: which recovery layer runs on the
+/// torus links.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Reliability {
+    /// No link-layer recovery — CRC failures are silent loss (PR 6
+    /// behavior, byte-identical to the pre-reliability fabric).
+    #[default]
+    Off,
+    /// Per-link ACK/NACK retransmission with timeout + backoff.
+    Link,
+}
+
+impl Reliability {
+    /// Parse the knob value (`off` | `link`).
+    pub fn parse(s: &str) -> Option<Reliability> {
+        match s {
+            "off" => Some(Reliability::Off),
+            "link" => Some(Reliability::Link),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Reliability::Off => "off",
+            Reliability::Link => "link",
+        }
+    }
+}
+
+/// Tuning knobs of the link reliability protocol (`docs/TUNING.md`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkReliabilityConfig {
+    /// Max unacknowledged packets in flight per link; a full window stalls
+    /// fresh transmissions (retransmissions always pass) until an ACK.
+    pub window: u32,
+    /// Base retransmission timeout: a replay fires when no ACK/NACK shows
+    /// progress on a port for this long (well above the ~195 ns healthy
+    /// data+ACK round trip, so NACKs — not timeouts — drive recovery on a
+    /// live link and the timer stays a backstop).
+    pub timeout: Time,
+    /// Replay rounds an entry may survive before it is abandoned
+    /// (undeliverable + residual loss).
+    pub max_retries: u32,
+    /// Cap on the exponential-backoff shift: the timeout grows as
+    /// `timeout << min(consecutive_timeouts, backoff_cap)`.
+    pub backoff_cap: u32,
+}
+
+impl Default for LinkReliabilityConfig {
+    fn default() -> Self {
+        LinkReliabilityConfig {
+            window: 32,
+            timeout: Time::from_us(2),
+            max_retries: 16,
+            backoff_cap: 6,
+        }
+    }
+}
+
+impl LinkReliabilityConfig {
+    /// The retransmission timeout after `backoff` consecutive timeouts
+    /// (exponential, capped; the shift is additionally clamped so the
+    /// arithmetic can never overflow).
+    pub fn timeout_after(&self, backoff: u32) -> Time {
+        let shift = backoff.min(self.backoff_cap).min(20);
+        Time::from_ps(self.timeout.ps().saturating_mul(1u64 << shift))
+    }
+}
+
+/// One transmitted-but-unacknowledged packet in a [`TxLink`] buffer.
+#[derive(Debug)]
+pub(crate) struct InFlight {
+    /// Link sequence stamped at first transmission.
+    pub seq: u64,
+    /// Retransmission copy (`ingress` cleared — the copy never owes an
+    /// upstream credit; `hops` frozen at the first transmission, a replay
+    /// crosses the same cable and adds no topological hop).
+    pub packet: Packet,
+    /// When the first transmission started (recovery-latency accounting).
+    pub first_tx: Time,
+    /// Replay rounds survived so far.
+    pub retries: u32,
+    /// A retransmission copy currently sits in the egress queue, so a
+    /// replay must not enqueue another one.
+    pub queued: bool,
+}
+
+/// An entry retired by a cumulative ACK after at least one retransmission
+/// — the link layer *recovered* it.
+pub(crate) struct Recovered {
+    /// Spike events the packet carried.
+    pub events: u64,
+    /// First-transmission instant (recovery latency = ack time − this).
+    pub first_tx: Time,
+}
+
+/// What a go-back-N replay round decided (the caller turns this into
+/// queue pushes, stats and the `SeqSkip` control frame).
+pub(crate) struct ReplayOutcome {
+    /// Retransmission copies to queue, ascending sequence order.
+    pub clones: Vec<Packet>,
+    /// Packets abandoned this round (retry budget exhausted).
+    pub residual_packets: u64,
+    /// Spike events inside the abandoned packets.
+    pub residual_events: u64,
+    /// When `residual_packets > 0`: the receiver must skip forward to
+    /// expect this sequence (first surviving entry, or one past the last
+    /// stamped sequence when the buffer drained).
+    pub skip_to: u64,
+}
+
+/// Sender-side reliability state of one torus port (one directed link).
+#[derive(Debug, Default)]
+pub(crate) struct TxLink {
+    /// Last stamped sequence (first real sequence is 1; 0 marks an
+    /// unstamped packet).
+    last_seq: u64,
+    /// Unacknowledged packets, ascending sequence.
+    inflight: VecDeque<InFlight>,
+    /// Consecutive timeouts without progress (exponential-backoff shift).
+    pub backoff: u32,
+    /// A retransmission timer event is outstanding for this port.
+    pub timer_outstanding: bool,
+    /// Last instant the link showed life (transmission or control frame)
+    /// — the timer replays only when `timeout_after(backoff)` passes
+    /// without this advancing.
+    pub last_progress: Time,
+    /// NACK base we already replayed for — duplicate NACKs of the same
+    /// loss (one per gap arrival) must not trigger duplicate replays.
+    /// Cleared on progress; a repeat loss of the same retransmission is
+    /// recovered by the timeout backstop.
+    pub replayed_for: Option<u64>,
+}
+
+impl TxLink {
+    /// Stamp the next fresh packet.
+    pub fn stamp(&mut self) -> u64 {
+        self.last_seq += 1;
+        self.last_seq
+    }
+
+    /// Record a freshly transmitted packet in the retransmission buffer.
+    pub fn record(&mut self, seq: u64, packet: Packet, now: Time) {
+        debug_assert!(self.inflight.back().is_none_or(|e| e.seq < seq));
+        self.inflight.push_back(InFlight {
+            seq,
+            packet,
+            first_tx: now,
+            retries: 0,
+            queued: false,
+        });
+    }
+
+    /// A retransmission copy for `seq` left the egress queue.
+    pub fn mark_sent(&mut self, seq: u64) {
+        if let Some(e) = self.inflight.iter_mut().find(|e| e.seq == seq) {
+            e.queued = false;
+        }
+    }
+
+    pub fn window_full(&self, window: u32) -> bool {
+        self.inflight.len() >= window as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inflight.is_empty()
+    }
+
+    /// Cumulative acknowledgement: retire every entry below `upto`,
+    /// appending the ones that needed retransmission to `recovered`.
+    /// Returns whether anything was retired.
+    pub fn ack_advance(&mut self, upto: u64, recovered: &mut Vec<Recovered>) -> bool {
+        let mut progressed = false;
+        while let Some(e) = self.inflight.front() {
+            if e.seq >= upto {
+                break;
+            }
+            let e = self.inflight.pop_front().unwrap();
+            progressed = true;
+            if e.retries > 0 {
+                recovered.push(Recovered {
+                    events: e.packet.n_events() as u64,
+                    first_tx: e.first_tx,
+                });
+            }
+        }
+        progressed
+    }
+
+    /// One go-back-N replay round: every entry ages by one retry; entries
+    /// beyond `max_retries` are abandoned (they form a prefix — entries
+    /// age together, so older ones always have at least as many retries),
+    /// the rest are re-queued unless a copy is already queued.
+    pub fn replay(&mut self, max_retries: u32) -> ReplayOutcome {
+        let mut out = ReplayOutcome {
+            clones: Vec::new(),
+            residual_packets: 0,
+            residual_events: 0,
+            skip_to: 0,
+        };
+        let mut kept = VecDeque::with_capacity(self.inflight.len());
+        while let Some(mut e) = self.inflight.pop_front() {
+            e.retries += 1;
+            if e.retries > max_retries {
+                out.residual_packets += 1;
+                out.residual_events += e.packet.n_events() as u64;
+                continue;
+            }
+            if !e.queued {
+                e.queued = true;
+                out.clones.push(e.packet.clone());
+            }
+            kept.push_back(e);
+        }
+        self.inflight = kept;
+        out.skip_to = match self.inflight.front() {
+            Some(e) => e.seq,
+            None => self.last_seq + 1,
+        };
+        out
+    }
+}
+
+/// The whole per-NIC reliability state: one [`TxLink`] per torus port plus
+/// the receiver's next-expected sequence per upstream link. Instantiated
+/// only under `reliability=link` — an `off` NIC carries `None` and runs
+/// the exact pre-reliability code paths.
+#[derive(Debug)]
+pub struct LinkLayer {
+    pub cfg: LinkReliabilityConfig,
+    pub(crate) tx: [TxLink; TORUS_PORTS as usize],
+    /// Next expected sequence per upstream directed link, keyed by the
+    /// *sender's* `(actor, port)` — unambiguous even on 2-rings where one
+    /// neighbor reaches us over two different cables. `BTreeMap` for
+    /// deterministic state independent of actor-id magnitudes.
+    rx: BTreeMap<(ActorId, u8), u64>,
+}
+
+impl LinkLayer {
+    pub fn new(cfg: LinkReliabilityConfig) -> Self {
+        LinkLayer {
+            cfg,
+            tx: std::array::from_fn(|_| TxLink::default()),
+            rx: BTreeMap::new(),
+        }
+    }
+
+    /// The receiver's next expected sequence from upstream `(actor,
+    /// port)`; sequences start at 1.
+    pub(crate) fn rx_expect(&mut self, from: ActorId, port: u8) -> &mut u64 {
+        self.rx.entry((from, port)).or_insert(1)
+    }
+
+    /// The upstream sender abandoned everything below `expect` — stop
+    /// waiting for it (monotone: a stale skip never rewinds).
+    pub(crate) fn rx_skip(&mut self, from: ActorId, port: u8, expect: u64) {
+        let e = self.rx.entry((from, port)).or_insert(1);
+        *e = (*e).max(expect);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extoll::torus::NodeAddr;
+
+    fn pkt(seq: u64) -> Packet {
+        Packet::raw(NodeAddr(0), NodeAddr(1), 64, Time::ZERO, seq)
+    }
+
+    #[test]
+    fn knob_parses_and_roundtrips() {
+        assert_eq!(Reliability::parse("off"), Some(Reliability::Off));
+        assert_eq!(Reliability::parse("link"), Some(Reliability::Link));
+        assert_eq!(Reliability::parse("tcp"), None);
+        assert_eq!(Reliability::default(), Reliability::Off);
+        for r in [Reliability::Off, Reliability::Link] {
+            assert_eq!(Reliability::parse(r.as_str()), Some(r));
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let cfg = LinkReliabilityConfig::default();
+        assert_eq!(cfg.timeout_after(0), cfg.timeout);
+        assert_eq!(cfg.timeout_after(3), Time::from_ps(cfg.timeout.ps() << 3));
+        assert_eq!(
+            cfg.timeout_after(99),
+            Time::from_ps(cfg.timeout.ps() << cfg.backoff_cap)
+        );
+        // pathological user caps must not overflow the shift
+        let wild = LinkReliabilityConfig {
+            backoff_cap: 4000,
+            ..LinkReliabilityConfig::default()
+        };
+        assert!(wild.timeout_after(5000) > Time::ZERO);
+    }
+
+    #[test]
+    fn stamps_are_monotone_from_one() {
+        let mut tx = TxLink::default();
+        assert_eq!(tx.stamp(), 1);
+        assert_eq!(tx.stamp(), 2);
+        assert_eq!(tx.stamp(), 3);
+    }
+
+    #[test]
+    fn cumulative_ack_retires_prefix_and_reports_recoveries() {
+        let mut tx = TxLink::default();
+        for s in 1..=4u64 {
+            let seq = tx.stamp();
+            assert_eq!(seq, s);
+            tx.record(seq, pkt(seq), Time::from_ns(s * 10));
+        }
+        // age everything once so retirements count as recoveries
+        let out = tx.replay(16);
+        assert_eq!(out.clones.len(), 4);
+        assert_eq!(out.residual_packets, 0);
+        let mut rec = Vec::new();
+        assert!(tx.ack_advance(3, &mut rec));
+        assert_eq!(rec.len(), 2, "seq 1 and 2 retired after a retry");
+        assert_eq!(rec[0].first_tx, Time::from_ns(10));
+        assert!(!tx.ack_advance(3, &mut rec), "no further progress at the same ack");
+        assert!(!tx.is_empty());
+        assert!(tx.ack_advance(5, &mut rec));
+        assert!(tx.is_empty());
+    }
+
+    #[test]
+    fn window_bounds_the_buffer() {
+        let mut tx = TxLink::default();
+        for _ in 0..3 {
+            let seq = tx.stamp();
+            tx.record(seq, pkt(seq), Time::ZERO);
+        }
+        assert!(!tx.window_full(4));
+        assert!(tx.window_full(3));
+    }
+
+    #[test]
+    fn replay_abandons_exactly_the_over_budget_prefix() {
+        let mut tx = TxLink::default();
+        for _ in 0..2 {
+            let seq = tx.stamp();
+            tx.record(seq, pkt(seq), Time::ZERO);
+        }
+        let out = tx.replay(1); // retries: 1,1 — both survive
+        assert_eq!(out.clones.len(), 2);
+        assert_eq!(out.residual_packets, 0);
+        // a younger entry joins before the next round
+        let seq = tx.stamp();
+        tx.record(seq, pkt(seq), Time::ZERO);
+        let out = tx.replay(1); // retries: 2,2,1 — the old pair is abandoned
+        assert_eq!(out.residual_packets, 2);
+        assert_eq!(out.skip_to, 3, "receiver must skip to the first survivor");
+        // the survivor already has a queued copy from its first round
+        assert_eq!(out.clones.len(), 1);
+        let out = tx.replay(1);
+        assert_eq!(out.residual_packets, 1);
+        assert!(tx.is_empty());
+        assert_eq!(out.skip_to, 4, "drained buffer skips past the last stamp");
+    }
+
+    #[test]
+    fn mark_sent_allows_the_next_replay_to_clone_again() {
+        let mut tx = TxLink::default();
+        let seq = tx.stamp();
+        tx.record(seq, pkt(seq), Time::ZERO);
+        assert_eq!(tx.replay(16).clones.len(), 1);
+        assert_eq!(tx.replay(16).clones.len(), 0, "copy still queued");
+        tx.mark_sent(seq);
+        assert_eq!(tx.replay(16).clones.len(), 1);
+    }
+
+    #[test]
+    fn rx_expect_is_per_link_and_skip_is_monotone() {
+        let mut l = LinkLayer::new(LinkReliabilityConfig::default());
+        assert_eq!(*l.rx_expect(7, 0), 1);
+        *l.rx_expect(7, 0) = 5;
+        assert_eq!(*l.rx_expect(7, 1), 1, "ports are independent links");
+        assert_eq!(*l.rx_expect(8, 0), 1, "actors are independent links");
+        l.rx_skip(7, 0, 9);
+        assert_eq!(*l.rx_expect(7, 0), 9);
+        l.rx_skip(7, 0, 2);
+        assert_eq!(*l.rx_expect(7, 0), 9, "skip never rewinds");
+    }
+}

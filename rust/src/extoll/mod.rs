@@ -6,6 +6,7 @@
 
 pub mod analysis;
 pub mod baseline;
+pub mod link;
 pub mod network;
 pub mod nic;
 pub mod packet;
@@ -15,6 +16,7 @@ pub mod torus;
 
 pub use analysis::{Flow, FlowAnalysis};
 pub use baseline::{GbeConfig, GbeLink};
+pub use link::{LinkLayer, LinkReliabilityConfig, Reliability};
 pub use network::{build_torus, build_torus_with, Fabric};
 pub use nic::{Nic, NicConfig, NicStats};
 pub use packet::{Packet, PacketKind, HEADER_BYTES, MAX_EVENTS_PER_PACKET, MAX_PAYLOAD_BYTES};

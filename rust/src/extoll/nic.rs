@@ -24,6 +24,7 @@
 //! [`super::packet::pool`] (packet-object pooling; A/B'd in
 //! `benches/bench_events.rs`).
 
+use std::cmp::Ordering;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
@@ -33,6 +34,7 @@ use crate::sim::{Actor, ActorId, Ctx, Time};
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
+use super::link::{LinkLayer, LinkReliabilityConfig, Recovered, Reliability};
 use super::packet::Packet;
 use super::routing::{next_hop, next_hop_with, Hop};
 use super::torus::{Dir, NodeAddr, TorusSpec, LOCAL_PORT};
@@ -52,6 +54,12 @@ pub struct NicConfig {
     pub credits_per_vc: u32,
     /// Encoding efficiency of the serial lanes (64b/66b ≈ 0.97).
     pub efficiency: f64,
+    /// Link-level reliability protocol (`off` = CRC failures are silent
+    /// loss, byte-identical to the pre-reliability fabric; `link` =
+    /// ACK/NACK retransmission, [`super::link`]).
+    pub reliability: Reliability,
+    /// Retransmission-protocol knobs (only read under `reliability=link`).
+    pub retx: LinkReliabilityConfig,
 }
 
 impl Default for NicConfig {
@@ -63,6 +71,8 @@ impl Default for NicConfig {
             cable_latency: Time::from_ns(5),
             credits_per_vc: 8,
             efficiency: 64.0 / 66.0,
+            reliability: Reliability::Off,
+            retx: LinkReliabilityConfig::default(),
         }
     }
 }
@@ -134,14 +144,24 @@ impl Port {
 
     /// Pick the next VC to serve: round-robin among non-empty queues whose
     /// credits allow transmission. Returns `None` if nothing can go.
-    fn arbitrate(&self, limited: bool) -> Option<u8> {
+    /// `fresh_blocked` is the reliability window stall: a head-of-line
+    /// packet that is *not* a retransmission copy (`link_seq == 0`) is
+    /// ineligible while the link's retransmission buffer is full —
+    /// retransmissions always pass, which is what keeps the window stall
+    /// from composing with credit stalls into a deadlock.
+    fn arbitrate(&self, limited: bool, fresh_blocked: bool) -> Option<u8> {
         for i in 0..2u8 {
             let vc = (self.last_vc + 1 + i) % 2;
-            if !self.queues[vc as usize].is_empty()
-                && (!limited || self.credits[vc as usize] > 0)
-            {
-                return Some(vc);
+            let Some(head) = self.queues[vc as usize].front() else {
+                continue;
+            };
+            if limited && self.credits[vc as usize] == 0 {
+                continue;
             }
+            if fresh_blocked && head.link_seq == 0 {
+                continue;
+            }
+            return Some(vc);
         }
         None
     }
@@ -175,6 +195,27 @@ pub struct NicStats {
     pub undeliverable_events: u64,
     /// Hops taken off the dimension-order path to route around faults.
     pub detour_hops: u64,
+    /// Retransmission copies transmitted (`reliability=link`).
+    pub retransmissions: u64,
+    /// NACKs sent by this NIC's receive side (CRC failure or sequence gap).
+    pub nacks: u64,
+    /// Retransmission-timer expirations that triggered a replay.
+    pub timeouts: u64,
+    /// Packets acknowledged after at least one retransmission — losses the
+    /// link layer recovered.
+    pub recovered_packets: u64,
+    /// Spike events inside recovered packets.
+    pub recovered_events: u64,
+    /// Received packets dropped as already-accepted duplicates.
+    pub duplicate_packets: u64,
+    /// Packets abandoned after the retry budget (also counted in
+    /// `undeliverable_packets` — surfaced, never silently dropped).
+    pub residual_loss_packets: u64,
+    /// Spike events inside abandoned packets.
+    pub residual_loss_events: u64,
+    /// Link-layer recovery latency (first transmission → cumulative ACK)
+    /// of recovered packets, picoseconds.
+    pub recovery_ps: Histogram,
 }
 
 /// Per-NIC fault-injection state: a shared handle on the fabric-wide
@@ -209,11 +250,17 @@ pub struct Nic {
     ports: [Port; 7],
     pub stats: NicStats,
     fault: Option<FaultHandle>,
+    /// Link reliability state — `Some` iff `cfg.reliability == Link`.
+    link: Option<LinkLayer>,
 }
 
 impl Nic {
     pub fn new(addr: NodeAddr, torus: TorusSpec, cfg: NicConfig) -> Self {
         let credits = cfg.credits_per_vc;
+        let link = match cfg.reliability {
+            Reliability::Off => None,
+            Reliability::Link => Some(LinkLayer::new(cfg.retx)),
+        };
         Nic {
             addr,
             torus,
@@ -222,6 +269,7 @@ impl Nic {
             ports: std::array::from_fn(|_| Port::new(credits)),
             stats: NicStats::default(),
             fault: None,
+            link,
         }
     }
 
@@ -354,18 +402,23 @@ impl Nic {
             panic!("nic {} port {port}: no neighbor wired", self.addr);
         };
         let limited = self.cfg.credits_per_vc > 0 && port != LOCAL_PORT;
+        let reliable = port != LOCAL_PORT && self.link.is_some();
+        let window_full = match &self.link {
+            Some(l) if reliable => l.tx[pi].window_full(l.cfg.window),
+            _ => false,
+        };
         let vc = {
             let port_state = &self.ports[pi];
             if port_state.busy {
                 return;
             }
-            match port_state.arbitrate(limited) {
+            match port_state.arbitrate(limited, window_full) {
                 Some(vc) => vc,
                 None => {
                     if port_state.queued() > 0 {
                         self.stats.credit_stalls += 1;
                     }
-                    return; // retried when a Credit message arrives
+                    return; // retried on Credit arrival / ACK progress
                 }
             }
         };
@@ -406,7 +459,15 @@ impl Nic {
             );
         }
 
-        p.hops += 1;
+        // A retransmission copy (stamped before it was queued) crosses the
+        // same cable again: it is a new transmission for the wire stats
+        // above, but not a new topological hop.
+        let is_retx = reliable && p.link_seq != 0;
+        if is_retx {
+            self.stats.retransmissions += 1;
+        } else {
+            p.hops += 1;
+        }
         let mut arrival = ser + self.cfg.cable_latency + self.cfg.hop_latency;
         if port != LOCAL_PORT {
             if let Some(f) = &mut self.fault {
@@ -432,11 +493,270 @@ impl Nic {
             self.stats.transit_ps.record(transit.ps());
             ctx.send(dst_actor, arrival, Msg::Deliver(p));
         } else {
+            if reliable {
+                let now = ctx.now();
+                let link = self.link.as_mut().unwrap();
+                let tx = &mut link.tx[pi];
+                if is_retx {
+                    tx.mark_sent(p.link_seq);
+                } else {
+                    // Stamp and buffer a retransmission copy. The copy's
+                    // `ingress` is cleared: the upstream credit for the
+                    // original was already returned above, and a replayed
+                    // copy must never return it again.
+                    p.link_seq = tx.stamp();
+                    let mut copy = p.clone();
+                    copy.ingress = None;
+                    tx.record(p.link_seq, copy, now);
+                }
+                tx.last_progress = now;
+            }
             self.stats.forwarded += 1;
             p.ingress = Some((ctx.self_id(), port, p.vc));
             ctx.send(dst_actor, arrival, Msg::Packet(p));
+            if reliable {
+                self.arm_timer(port, ctx);
+            }
         }
         ctx.send_self(ser, Msg::TxDone { port });
+    }
+
+    /// Receive-side of the link reliability protocol: CRC check, per-link
+    /// sequence check, cumulative ACK / go-back-N NACK. Control frames are
+    /// modeled like credit flits — they occupy no input buffer, consume no
+    /// credits, and cross the reverse link in exactly
+    /// [`NicConfig::credit_return_latency`] (= the PDES lookahead bound).
+    fn receive_reliable(&mut self, mut p: Packet, crc_failed: bool, ctx: &mut Ctx<'_, Msg>) {
+        let (up_actor, up_port, _) = *p
+            .ingress
+            .as_ref()
+            .expect("reliable packet without ingress bookkeeping");
+        let lat = self.cfg.credit_return_latency();
+        if crc_failed {
+            // The CRC covers the whole packet, so the sequence field of a
+            // corrupted packet cannot be trusted either — NACK the next
+            // expected sequence and go-back-N from there.
+            let expect = {
+                let link = self.link.as_mut().unwrap();
+                *link.rx_expect(up_actor, up_port)
+            };
+            self.stats.lost_packets += 1;
+            self.stats.lost_events += p.n_events() as u64;
+            self.stats.nacks += 1;
+            self.release_ingress(&mut p, ctx);
+            ctx.send(up_actor, lat, Msg::Nack { port: up_port, expect });
+            return;
+        }
+        let seq = p.link_seq;
+        debug_assert_ne!(seq, 0, "unstamped packet on a reliable link");
+        let expect = {
+            let link = self.link.as_mut().unwrap();
+            *link.rx_expect(up_actor, up_port)
+        };
+        match seq.cmp(&expect) {
+            Ordering::Equal => {
+                // In-order: accept, cumulatively acknowledge, and clear
+                // the link stamp — the next hop's transmitter re-stamps
+                // with its own link sequence.
+                *self.link.as_mut().unwrap().rx_expect(up_actor, up_port) = seq + 1;
+                ctx.send(up_actor, lat, Msg::Ack { port: up_port, ack: seq + 1 });
+                p.link_seq = 0;
+                self.enqueue(p, ctx);
+            }
+            Ordering::Less => {
+                // Already accepted (a replayed copy of an acknowledged
+                // packet, or its ACK was lost to the sender's give-up
+                // race): drop it, but re-ACK so the sender retires it.
+                self.stats.duplicate_packets += 1;
+                self.release_ingress(&mut p, ctx);
+                ctx.send(up_actor, lat, Msg::Ack { port: up_port, ack: expect });
+            }
+            Ordering::Greater => {
+                // Gap: an earlier packet was lost on this link (links are
+                // FIFO without jitter, so a gap implies genuine loss; with
+                // jitter a retransmission may be overtaken — the NACK is
+                // then suppressed sender-side and the timeout recovers).
+                self.stats.nacks += 1;
+                self.release_ingress(&mut p, ctx);
+                ctx.send(up_actor, lat, Msg::Nack { port: up_port, expect });
+            }
+        }
+    }
+
+    /// Cumulative-ACK bookkeeping shared by ACK and NACK arrivals.
+    fn account_recovered(&mut self, recovered: Vec<Recovered>, now: Time) {
+        for r in recovered {
+            self.stats.recovered_packets += 1;
+            self.stats.recovered_events += r.events;
+            self.stats.recovery_ps.record(now.saturating_sub(r.first_tx).ps());
+        }
+    }
+
+    /// Drop queued retransmission copies that a cumulative ACK (or a
+    /// give-up) has made obsolete. Copies carry no `ingress`, so removal
+    /// has no credit side effects.
+    fn purge_retx_queue(&mut self, pi: usize, below: u64) {
+        let port_state = &mut self.ports[pi];
+        for q in port_state.queues.iter_mut() {
+            q.retain(|qp| qp.link_seq == 0 || qp.link_seq >= below);
+        }
+    }
+
+    fn handle_ack(&mut self, port: u8, ack: u64, ctx: &mut Ctx<'_, Msg>) {
+        let pi = port as usize;
+        let mut recovered = Vec::new();
+        let progressed = {
+            let link = self
+                .link
+                .as_mut()
+                .expect("nic: Ack without reliability layer");
+            link.tx[pi].ack_advance(ack, &mut recovered)
+        };
+        self.account_recovered(recovered, ctx.now());
+        if progressed {
+            {
+                let link = self.link.as_mut().unwrap();
+                let tx = &mut link.tx[pi];
+                tx.backoff = 0;
+                tx.replayed_for = None;
+                tx.last_progress = ctx.now();
+            }
+            self.purge_retx_queue(pi, ack);
+            // the window may have freed a fresh head-of-line packet
+            self.try_tx(port, ctx);
+        }
+    }
+
+    fn handle_nack(&mut self, port: u8, expect: u64, ctx: &mut Ctx<'_, Msg>) {
+        let pi = port as usize;
+        let mut recovered = Vec::new();
+        let (progressed, do_replay) = {
+            let link = self
+                .link
+                .as_mut()
+                .expect("nic: Nack without reliability layer");
+            let tx = &mut link.tx[pi];
+            // A NACK is also a cumulative ACK for everything below it.
+            let progressed = tx.ack_advance(expect, &mut recovered);
+            if progressed {
+                tx.backoff = 0;
+                tx.last_progress = ctx.now();
+            }
+            // Each packet arriving behind the gap repeats the same NACK —
+            // replay only once per base; the timeout is the backstop if
+            // the replay itself is lost.
+            let do_replay = tx.replayed_for != Some(expect) && !tx.is_empty();
+            tx.replayed_for = Some(expect);
+            (progressed, do_replay)
+        };
+        self.account_recovered(recovered, ctx.now());
+        if progressed {
+            self.purge_retx_queue(pi, expect);
+        }
+        if do_replay {
+            self.replay(port, ctx);
+        } else if progressed {
+            self.try_tx(port, ctx);
+        }
+    }
+
+    /// One go-back-N replay round on `port`: age every in-flight entry,
+    /// abandon the over-budget prefix (surfaced as undeliverable +
+    /// residual loss, receiver advanced via [`Msg::SeqSkip`]), re-queue
+    /// retransmission copies ahead of fresh traffic on their original VCs.
+    fn replay(&mut self, port: u8, ctx: &mut Ctx<'_, Msg>) {
+        let pi = port as usize;
+        let out = {
+            let link = self
+                .link
+                .as_mut()
+                .expect("nic: replay without reliability layer");
+            let max_retries = link.cfg.max_retries;
+            link.tx[pi].replay(max_retries)
+        };
+        if out.residual_packets > 0 {
+            self.stats.undeliverable_packets += out.residual_packets;
+            self.stats.undeliverable_events += out.residual_events;
+            self.stats.residual_loss_packets += out.residual_packets;
+            self.stats.residual_loss_events += out.residual_events;
+            let Some(dst_actor) = self.neighbors[pi] else {
+                panic!("nic {} port {port}: no neighbor wired", self.addr);
+            };
+            // The receiver must stop expecting the abandoned prefix, or
+            // go-back-N would NACK it forever.
+            ctx.send(
+                dst_actor,
+                self.cfg.credit_return_latency(),
+                Msg::SeqSkip {
+                    sender: ctx.self_id(),
+                    port,
+                    expect: out.skip_to,
+                },
+            );
+            self.purge_retx_queue(pi, out.skip_to);
+        }
+        let port_state = &mut self.ports[pi];
+        // ascending sequence → reversed push_front keeps replay order and
+        // puts the copies ahead of fresh packets on each VC
+        for p in out.clones.into_iter().rev() {
+            port_state.queues[p.vc as usize].push_front(p);
+        }
+        port_state.peak_queue = port_state.peak_queue.max(port_state.queued());
+        self.arm_timer(port, ctx);
+        self.try_tx(port, ctx);
+    }
+
+    /// Arm the port's retransmission timer if it has in-flight packets and
+    /// no timer outstanding. One timer event per port at a time — the
+    /// handler checks real progress, so a stale firing re-arms for the
+    /// remainder instead of replaying.
+    fn arm_timer(&mut self, port: u8, ctx: &mut Ctx<'_, Msg>) {
+        let Some(link) = self.link.as_mut() else {
+            return;
+        };
+        let tx = &mut link.tx[port as usize];
+        if tx.timer_outstanding || tx.is_empty() {
+            return;
+        }
+        tx.timer_outstanding = true;
+        let dt = link.cfg.timeout_after(tx.backoff);
+        ctx.send_self(dt, Msg::RetxTimer { port });
+    }
+
+    fn handle_retx_timer(&mut self, port: u8, ctx: &mut Ctx<'_, Msg>) {
+        let pi = port as usize;
+        let now = ctx.now();
+        let deadline = {
+            let link = self
+                .link
+                .as_mut()
+                .expect("nic: RetxTimer without reliability layer");
+            let tx = &mut link.tx[pi];
+            tx.timer_outstanding = false;
+            if tx.is_empty() {
+                return; // fully acknowledged; next transmission re-arms
+            }
+            tx.last_progress + link.cfg.timeout_after(tx.backoff)
+        };
+        if now < deadline {
+            // progress happened since this timer was armed — stale firing
+            let link = self.link.as_mut().unwrap();
+            link.tx[pi].timer_outstanding = true;
+            ctx.send_self(deadline - now, Msg::RetxTimer { port });
+            return;
+        }
+        // Genuine timeout: the link showed no life for a full (backed-off)
+        // timeout. Reached only when both a loss and its NACK-triggered
+        // replay were lost (NACK suppression), or when the peer is silent.
+        self.stats.timeouts += 1;
+        {
+            let link = self.link.as_mut().unwrap();
+            let tx = &mut link.tx[pi];
+            tx.backoff = (tx.backoff + 1).min(link.cfg.backoff_cap);
+            tx.replayed_for = None;
+            tx.last_progress = now;
+        }
+        self.replay(port, ctx);
     }
 }
 
@@ -447,12 +767,16 @@ impl Actor<Msg> for Nic {
                 // Stochastic link loss is modeled at the receiver: the
                 // packet already paid serialization + wire time, and the
                 // upstream credit must still come back (a real lost flit
-                // frees its buffer slot too — credits never leak).
-                let lost = match &mut self.fault {
+                // frees its buffer slot too — credits never leak). Under
+                // `reliability=link` the same draw is a CRC failure that
+                // the protocol detects and recovers instead of dropping.
+                let crc_failed = match &mut self.fault {
                     Some(f) if f.model.loss() > 0.0 => f.rng.chance(f.model.loss()),
                     _ => false,
                 };
-                if lost {
+                if self.link.is_some() {
+                    self.receive_reliable(p, crc_failed, ctx);
+                } else if crc_failed {
                     self.stats.lost_packets += 1;
                     self.stats.lost_events += p.n_events() as u64;
                     self.release_ingress(&mut p, ctx);
@@ -485,6 +809,16 @@ impl Actor<Msg> for Nic {
                 }
                 self.try_tx(port, ctx);
             }
+            Msg::Ack { port, ack } => self.handle_ack(port, ack, ctx),
+            Msg::Nack { port, expect } => self.handle_nack(port, expect, ctx),
+            Msg::SeqSkip { sender, port, expect } => {
+                let link = self
+                    .link
+                    .as_mut()
+                    .expect("nic: SeqSkip without reliability layer");
+                link.rx_skip(sender, port, expect);
+            }
+            Msg::RetxTimer { port } => self.handle_retx_timer(port, ctx),
             other => panic!("nic {}: unexpected message {:?}", self.addr, other),
         }
     }
@@ -876,6 +1210,163 @@ mod tests {
         assert_eq!(sink.received.len(), 1);
         let healthy = (cfg.ser_time(520) + cfg.cable_latency + cfg.hop_latency) * 2;
         assert!(sink.received[0].0 > healthy, "faults must only slow packets down");
+    }
+
+    fn link_cfg(retx: LinkReliabilityConfig) -> NicConfig {
+        NicConfig {
+            reliability: Reliability::Link,
+            retx,
+            ..NicConfig::default()
+        }
+    }
+
+    #[test]
+    fn reliability_zero_loss_is_latency_transparent() {
+        // With no CRC failures the protocol must not perturb the data
+        // path: same arrival instant and hop count as reliability=off,
+        // and no recovery machinery fires.
+        let cfg = link_cfg(LinkReliabilityConfig::default());
+        let (mut sim, _, nics, sinks) = setup((2, 1, 1), cfg);
+        let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, 1);
+        sim.schedule(Time::ZERO, nics[0], Msg::Inject(p));
+        sim.run_to_completion();
+        let sink: &Sink = sim.get(sinks[1]);
+        assert_eq!(sink.received.len(), 1);
+        let (at, p) = &sink.received[0];
+        let ser = cfg.ser_time(520);
+        let expect = (ser + cfg.cable_latency + cfg.hop_latency) * 2;
+        assert_eq!(*at, expect, "reliability=link must not delay clean packets");
+        assert_eq!(p.hops, 2);
+        assert_eq!(p.link_seq, 0, "stamp must be cleared before local delivery");
+        for &n in &nics {
+            let st = &sim.get::<Nic>(n).stats;
+            assert_eq!(st.retransmissions, 0);
+            assert_eq!(st.nacks, 0);
+            assert_eq!(st.timeouts, 0);
+            assert_eq!(st.recovered_packets, 0);
+            assert_eq!(st.residual_loss_packets, 0);
+        }
+    }
+
+    #[test]
+    fn reliability_recovers_every_packet_under_loss() {
+        // CRC failures (the loss draw) trigger NACK + go-back-N replay:
+        // every packet is delivered exactly once, in order, and the
+        // recovery shows up in the stats. Jitter stays off so the links
+        // are FIFO and accounting is exact.
+        let cfg = link_cfg(LinkReliabilityConfig::default());
+        let (mut sim, spec, nics, sinks) = setup((2, 1, 1), cfg);
+        let fcfg = FaultConfig {
+            loss: 0.15,
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 3));
+        install_fault(&mut sim, &nics, &model);
+        let sent = 400u64;
+        for seq in 0..sent {
+            let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, seq);
+            sim.schedule(Time::from_ns(seq * 50), nics[0], Msg::Inject(p));
+        }
+        sim.run_to_completion();
+        let received = &sim.get::<Sink>(sinks[1]).received;
+        assert_eq!(received.len() as u64, sent, "link layer must recover every loss");
+        for w in received.windows(2) {
+            assert!(
+                w[0].1.seq < w[1].1.seq,
+                "go-back-N on a single link must deliver in order"
+            );
+        }
+        let mut crc = 0u64;
+        let mut retx = 0u64;
+        let mut recovered = 0u64;
+        for &n in &nics {
+            let st = &sim.get::<Nic>(n).stats;
+            crc += st.lost_packets;
+            retx += st.retransmissions;
+            recovered += st.recovered_packets;
+            assert_eq!(st.residual_loss_packets, 0, "retry budget must not exhaust");
+            assert_eq!(st.undeliverable_packets, 0);
+        }
+        assert!(crc > 0, "0.15 loss over 400 packets must fail some CRCs");
+        assert!(retx >= crc, "every CRC failure needs at least one retransmission");
+        assert!(recovered > 0);
+    }
+
+    #[test]
+    fn reliability_gives_up_on_silent_peer_and_terminates() {
+        // A peer that never ACKs (nor returns credits): the timeout
+        // backstop must fire with backoff, the retry budget must bound the
+        // timer chain, and the abandoned packets must surface as
+        // undeliverable residual loss — the run terminates.
+        let mut sim = Sim::new();
+        let spec = TorusSpec::new(2, 1, 1);
+        let cfg = link_cfg(LinkReliabilityConfig {
+            timeout: Time::from_ns(500),
+            max_retries: 3,
+            ..LinkReliabilityConfig::default()
+        });
+        let nic = sim.add(Nic::new(NodeAddr(0), spec, cfg));
+        struct Blackhole;
+        impl Actor<Msg> for Blackhole {
+            fn handle(&mut self, _msg: Msg, _ctx: &mut Ctx<'_, Msg>) {}
+        }
+        let hole = sim.add(Blackhole);
+        for d in crate::extoll::torus::DIRS {
+            sim.get_mut::<Nic>(nic).set_neighbor(d, hole);
+        }
+        sim.get_mut::<Nic>(nic).attach_local(hole);
+        let sent = 5u64;
+        for seq in 0..sent {
+            let p = Packet::raw(NodeAddr(0), NodeAddr(1), 64, Time::ZERO, seq);
+            sim.schedule(Time::ZERO, nic, Msg::Inject(p));
+        }
+        sim.run_to_completion();
+        let st = &sim.get::<Nic>(nic).stats;
+        assert_eq!(st.undeliverable_packets, sent);
+        assert_eq!(st.residual_loss_packets, sent);
+        assert_eq!(st.residual_loss_events, 0, "raw packets carry no events");
+        assert!(st.timeouts >= 1, "only the timer can detect a silent peer");
+        assert!(st.retransmissions > 0);
+        assert_eq!(st.recovered_packets, 0);
+    }
+
+    #[test]
+    fn reliability_zero_retries_gives_up_but_accounts_exactly() {
+        // max_retries=0 abandons the whole in-flight window on the first
+        // replay round; SeqSkip must advance the receiver past every
+        // abandoned prefix so later packets still get through, and
+        // delivered + residual must equal sent exactly (jitter-free).
+        let cfg = link_cfg(LinkReliabilityConfig {
+            max_retries: 0,
+            ..LinkReliabilityConfig::default()
+        });
+        let (mut sim, spec, nics, sinks) = setup((2, 1, 1), cfg);
+        let fcfg = FaultConfig {
+            loss: 0.25,
+            ..FaultConfig::default()
+        };
+        let model = Arc::new(FaultModel::build(&fcfg, spec, 9));
+        install_fault(&mut sim, &nics, &model);
+        let sent = 200u64;
+        for seq in 0..sent {
+            let p = Packet::raw(NodeAddr(0), NodeAddr(1), 496, Time::ZERO, seq);
+            sim.schedule(Time::from_ns(seq * 60), nics[0], Msg::Inject(p));
+        }
+        sim.run_to_completion();
+        let received = &sim.get::<Sink>(sinks[1]).received;
+        let mut seqs: Vec<u64> = received.iter().map(|(_, p)| p.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), received.len(), "no duplicate deliveries");
+        let residual: u64 = nics
+            .iter()
+            .map(|&n| sim.get::<Nic>(n).stats.residual_loss_packets)
+            .sum();
+        assert_eq!(received.len() as u64 + residual, sent);
+        assert!(residual > 0, "0.25 loss with a zero retry budget must abandon some");
+        assert!(
+            (received.len() as u64) > 0,
+            "SeqSkip must keep the link making progress after give-ups"
+        );
     }
 
     #[test]

@@ -173,6 +173,12 @@ pub struct Packet {
     /// Fabric-internal: axis of the ring currently being traversed
     /// (3 = none yet / local).
     pub axis: u8,
+    /// Link-layer sequence number of the **current hop** under
+    /// `reliability=link` (`extoll/link.rs`); `0` = unstamped. Stamped by
+    /// the transmitting port, cleared on acceptance so the next hop
+    /// re-stamps; a nonzero value on a queued packet marks it as a
+    /// retransmission copy.
+    pub link_seq: u64,
 }
 
 impl Packet {
@@ -206,6 +212,7 @@ impl Packet {
             ingress: None,
             vc: 0,
             axis: 3,
+            link_seq: 0,
         }
     }
 
@@ -232,6 +239,7 @@ impl Packet {
             ingress: None,
             vc: 0,
             axis: 3,
+            link_seq: 0,
         }
     }
 
@@ -249,6 +257,7 @@ impl Packet {
             ingress: None,
             vc: 0,
             axis: 3,
+            link_seq: 0,
         }
     }
 
@@ -270,6 +279,7 @@ impl Packet {
             ingress: None,
             vc: 0,
             axis: 3,
+            link_seq: 0,
         }
     }
 
@@ -288,6 +298,7 @@ impl Packet {
             ingress: None,
             vc: 0,
             axis: 3,
+            link_seq: 0,
         }
     }
 

@@ -101,7 +101,11 @@ impl FaultConfig {
         frac("fail", self.fail)?;
         frac("degrade", self.degrade)?;
         if !(0.0..1.0).contains(&self.loss) {
-            return Err(format!("fault.loss must be in [0,1), got {}", self.loss));
+            return Err(format!(
+                "fault.loss must be in [0,1), got {} — a link that loses every \
+                 packet is a dead link; model it with fail:1 instead",
+                self.loss
+            ));
         }
         if !(self.degrade_factor >= 1.0) {
             return Err(format!(
@@ -134,7 +138,10 @@ impl FaultConfig {
                 key.as_str(),
                 "fail" | "fail_at_s" | "degrade" | "degrade_factor" | "loss" | "jitter_ns"
             ) {
-                return Err(format!("unknown fault config key '{key}'"));
+                return Err(format!(
+                    "unknown fault config key '{key}' (valid: fail, fail_at_s, \
+                     degrade, degrade_factor, loss, jitter_ns)"
+                ));
             }
         }
         cfg.fail = j.f64_or("fail", cfg.fail);
@@ -163,10 +170,17 @@ impl FaultConfig {
             return FaultConfig::from_json(&j);
         }
         let mut cfg = FaultConfig::default();
+        let mut seen: Vec<&str> = Vec::new();
         for part in s.split('|') {
             let (key, value) = part
                 .split_once(':')
                 .ok_or_else(|| format!("fault spec '{part}': expected key:value"))?;
+            if seen.contains(&key) {
+                return Err(format!(
+                    "duplicate fault spec key '{key}' — each key may appear once"
+                ));
+            }
+            seen.push(key);
             let num = || -> Result<f64, String> {
                 value
                     .parse::<f64>()
@@ -432,6 +446,46 @@ mod tests {
         assert!(FaultConfig::parse_spec("frobnicate:1").is_err());
         assert!(FaultConfig::parse_spec("fail=0.5").is_err());
         assert!(FaultConfig::from_json(&Json::parse(r#"{"frobnicate": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validation_errors_are_actionable_at_the_boundaries() {
+        // loss == 1.0 sits exactly on the open bound: the message must
+        // say what to use instead, not just reject
+        let e = FaultConfig::parse_spec("loss:1.0").unwrap_err();
+        assert!(e.contains("[0,1)"), "{e}");
+        assert!(e.contains("fail:1"), "loss:1 error should point at fail: {e}");
+        // NaN never satisfies a >= comparison, so every NaN knob errors
+        let e = FaultConfig::parse_spec("jitter_ns:NaN").unwrap_err();
+        assert!(e.contains("jitter_ns"), "{e}");
+        assert!(FaultConfig::parse_spec("loss:NaN").is_err());
+        assert!(FaultConfig::parse_spec("fail_at_s:NaN").is_err());
+        assert!(FaultConfig::parse_spec("degrade_factor:NaN").is_err());
+        // the closed bounds stay accepted
+        assert!(FaultConfig::parse_spec("fail:1.0").is_ok());
+        assert!(FaultConfig::parse_spec("degrade:1.0|degrade_factor:1.0").is_ok());
+        assert!(FaultConfig::parse_spec("jitter_ns:0").is_ok());
+    }
+
+    #[test]
+    fn unknown_json_key_error_lists_the_valid_keys() {
+        let e = FaultConfig::from_json(&Json::parse(r#"{"frobnicate": 1}"#).unwrap())
+            .unwrap_err();
+        assert!(e.contains("frobnicate"), "{e}");
+        for key in ["fail", "fail_at_s", "degrade", "degrade_factor", "loss", "jitter_ns"] {
+            assert!(e.contains(key), "error must list valid key '{key}': {e}");
+        }
+    }
+
+    #[test]
+    fn duplicate_spec_keys_rejected() {
+        let e = FaultConfig::parse_spec("loss:0.1|loss:0.2").unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        assert!(e.contains("loss"), "{e}");
+        assert!(FaultConfig::parse_spec("fail:0.1|fail:0.1").is_err());
+        // distinct keys that merely share a prefix are fine
+        assert!(FaultConfig::parse_spec("fail:0.1|fail_at_s:1e-4").is_ok());
+        assert!(FaultConfig::parse_spec("degrade:0.1|degrade_factor:2").is_ok());
     }
 
     #[test]

@@ -34,9 +34,13 @@ Configs are JSON files (--config); individual knobs override with
   bss-extoll run traffic --set \"domains=4\"        # partitioned PDES
   bss-extoll run traffic --set \"domains=4;sync=window\"  # windowed reference
   bss-extoll run fault_sweep --set \"fault=fail:0.1|loss:0.01\"  # degraded fabric
+  bss-extoll run fault_sweep --set \"fault=@configs/fault_lossy.json\"  # calibrated preset
+  bss-extoll run reliability_sweep --set \"fault=loss:0.02;reliability=link\"  # retransmission
   bss-extoll sweep --scenario traffic --grid \"rate_hz=1e6,1e7;n_wafers=2,4\" --csv sweep.csv
   bss-extoll sweep --scenario traffic --grid \"eviction=most_urgent,fullest\" --jobs 4
   bss-extoll sweep --scenario fault_sweep --grid \"fault=none,fail:0.05,fail:0.1\" --csv faults.csv
+  bss-extoll sweep --scenario reliability_sweep --set \"fault=loss:0.02\" \\
+      --grid \"reliability=off,link\" --csv reliability.csv
 
 Sweep grid points are independent simulations: --jobs N runs them on N
 worker threads with results (and artifacts) ordered exactly as --jobs 1.
@@ -47,7 +51,13 @@ clocks by default, the lock-step global-minimum window as reference).
 --set fault=<spec> injects deterministic, seed-derived fabric faults
 (cable failures, bandwidth degradation, packet loss, latency jitter);
 the compact '|'-separated spec form is comma-free so it works as a
-sweep axis. Histogram metrics (latency_dist) render as percentile
+sweep axis, and fault=@path loads a calibrated preset file
+(configs/fault_lossy.json, configs/fault_degraded.json).
+--set reliability=link enables per-link ACK/NACK retransmission with
+timeout + backoff (knobs: retx_window, retx_timeout_ns,
+retx_max_retries, retx_backoff_cap), recovering CRC-dropped packets
+so deliverability returns to 1.0 below the retry limit.
+Histogram metrics (latency_dist, reliability_sweep) render as percentile
 summaries in CSV with full buckets in the JSON artifact.
 Every knob is documented with tuning guidance in docs/TUNING.md.
 ";

@@ -7,6 +7,7 @@
 
 use crate::extoll::packet::Packet;
 use crate::fpga::event::SpikeEvent;
+use crate::sim::ActorId;
 
 /// One message in the system simulation.
 #[derive(Clone, Debug)]
@@ -25,6 +26,23 @@ pub enum Msg {
     /// buffer slot was freed. Also used on the local port to signal the
     /// attached unit that an injection slot is free again.
     Credit { port: u8, vc: u8 },
+    /// Link-reliability cumulative acknowledgement (`reliability=link`):
+    /// the receiver on the far end of `port` has accepted every sequence
+    /// below `ack`. Like [`Msg::Credit`], control frames occupy no input
+    /// buffer and consume no credits.
+    Ack { port: u8, ack: u64 },
+    /// Link-reliability retransmission request: the receiver on the far
+    /// end of `port` detected a CRC failure or sequence gap and expects
+    /// sequence `expect` next (go-back-N from there).
+    Nack { port: u8, expect: u64 },
+    /// Link-reliability give-up notice: `sender` (on our `port`) exhausted
+    /// the retry budget for everything below `expect`; the receiver must
+    /// skip forward instead of NACKing the abandoned prefix forever.
+    SeqSkip { sender: ActorId, port: u8, expect: u64 },
+    /// Self-message: the retransmission timer of `port` may have expired
+    /// (the handler checks actual progress — stale timers re-arm for the
+    /// remainder instead of replaying).
+    RetxTimer { port: u8 },
 
     // ---- FPGA / HICANN ----------------------------------------------------
     /// A spike event arriving from one of the FPGA's 8 HICANN links.

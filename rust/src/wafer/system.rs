@@ -124,6 +124,25 @@ pub struct FaultTotals {
     pub hops: Histogram,
     /// Fault-free shortest-path distances of the same packets.
     pub min_hops: Histogram,
+    /// Link-layer retransmission copies transmitted (`reliability=link`).
+    pub retransmissions: u64,
+    /// NACKs sent (CRC failures + sequence gaps).
+    pub nacks: u64,
+    /// Retransmission-timer expirations that triggered a replay.
+    pub timeouts: u64,
+    /// Packets the link layer recovered (ACKed after ≥1 retransmission).
+    pub recovered_packets: u64,
+    /// Spike events inside recovered packets.
+    pub recovered_events: u64,
+    /// Received packets dropped as already-accepted duplicates.
+    pub duplicate_packets: u64,
+    /// Packets abandoned after the retry budget — the loss the link layer
+    /// could NOT recover (also counted in `undeliverable_packets`).
+    pub residual_loss_packets: u64,
+    /// Spike events inside abandoned packets.
+    pub residual_loss_events: u64,
+    /// Recovery latency (first transmission → cumulative ACK), ps.
+    pub recovery_ps: Histogram,
 }
 
 impl FaultTotals {
@@ -357,6 +376,15 @@ impl System {
             t.detour_hops += st.detour_hops;
             t.hops.merge(&st.hops);
             t.min_hops.merge(&st.min_hops);
+            t.retransmissions += st.retransmissions;
+            t.nacks += st.nacks;
+            t.timeouts += st.timeouts;
+            t.recovered_packets += st.recovered_packets;
+            t.recovered_events += st.recovered_events;
+            t.duplicate_packets += st.duplicate_packets;
+            t.residual_loss_packets += st.residual_loss_packets;
+            t.residual_loss_events += st.residual_loss_events;
+            t.recovery_ps.merge(&st.recovery_ps);
         }
         t
     }

@@ -4,9 +4,11 @@
 //! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
 //! sweep runner (`--jobs N`), the partitioned conservative PDES
 //! (`domains=N`, `sync=window|channel`), the sweep-level resource cache
-//! (PR 4), packet-payload pooling (PR 4) and the fault-injection
-//! subsystem's seed-derived randomness (PR 6) are performance features
-//! (or, for faults, deterministic physics) on top of the reference:
+//! (PR 4), packet-payload pooling (PR 4), the fault-injection
+//! subsystem's seed-derived randomness (PR 6) and the link-level
+//! reliability protocol's retransmission timers (PR 7) are performance
+//! features (or, for faults/reliability, deterministic physics) on top
+//! of the reference:
 //! they must be observationally identical to the reference heap
 //! backend, the serial runner, the single-domain event loop, the
 //! windowed synchronization protocol, a cold per-point prepare and
@@ -517,6 +519,105 @@ fn fault_axis_sweep_identical_across_jobs() {
     assert_eq!(serial.cache.misses, 1, "fault points must share one plan");
     assert_eq!(serial.cache.hits, 2);
     let parallel = SweepRunner::from_grid(small(), grid)
+        .unwrap()
+        .jobs(4)
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.to_csv(), parallel.to_csv());
+    assert_eq!(serial.to_json().pretty(), parallel.to_json().pretty());
+}
+
+// ---- PR 7: link-level reliability ----------------------------------------
+
+/// Run `scenario` with `reliability=link`, a fault spec, an explicit
+/// sync protocol, a domain count and a queue backend; pretty JSON.
+fn report_json_reliable(
+    scenario: &str,
+    spec: &str,
+    sync: SyncMode,
+    domains: usize,
+    kind: QueueKind,
+) -> String {
+    let mut cfg = small();
+    cfg.system.nic.reliability = bss_extoll::extoll::link::Reliability::Link;
+    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec)
+        .unwrap_or_else(|e| panic!("fault spec {spec:?}: {e}"));
+    cfg.sync = sync;
+    cfg.domains = domains;
+    cfg.queue = kind;
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(&cfg)
+        .unwrap_or_else(|e| {
+            panic!(
+                "{scenario} reliability=link fault={spec} sync={} domains={domains} \
+                 queue={kind:?} failed: {e:#}",
+                sync.as_str()
+            )
+        })
+        .to_json()
+        .pretty()
+}
+
+/// The PR 7 acceptance gate: retransmission timers, ACK/NACK control
+/// frames and replay are ordinary intra-node events under the merge-key
+/// contract — with the reliability layer recovering packets on a fabric
+/// exercising every fault mechanism, reports stay byte-identical across
+/// `sync=window/channel × domains=1/2/4 × heap/wheel`.
+#[test]
+fn reliability_report_identical_across_sync_domains_and_backends() {
+    let spec = "fail:0.1|loss:0.02|degrade:0.2|degrade_factor:2.0|jitter_ns:30";
+    let serial =
+        report_json_reliable("reliability_sweep", spec, SyncMode::Channel, 1, QueueKind::Heap);
+    assert!(serial.contains("recovered_events"));
+    assert!(serial.contains("retransmissions"));
+    for sync in [SyncMode::Window, SyncMode::Channel] {
+        for d in [1usize, 2, 4] {
+            for kind in [QueueKind::Heap, QueueKind::Wheel] {
+                assert_eq!(
+                    serial,
+                    report_json_reliable("reliability_sweep", spec, sync, d, kind),
+                    "reliability_sweep sync={} domains={d} queue={kind:?}",
+                    sync.as_str()
+                );
+            }
+        }
+    }
+}
+
+/// The layer is opt-in: with `reliability=off` (the default) the faulted
+/// fabric reproduces today's fault_sweep report byte-identically — the
+/// knob's existence changes nothing.
+#[test]
+fn reliability_off_reproduces_the_fault_sweep_bytes() {
+    let spec = "fail:0.1|loss:0.02|jitter_ns:30";
+    let baseline = report_json_fault("fault_sweep", spec, SyncMode::Channel, 2);
+    let mut cfg = small();
+    cfg.system.nic.reliability = bss_extoll::extoll::link::Reliability::Off;
+    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec).unwrap();
+    cfg.sync = SyncMode::Channel;
+    cfg.domains = 2;
+    let explicit_off = find("fault_sweep").unwrap().run(&cfg).unwrap().to_json().pretty();
+    assert_eq!(baseline, explicit_off);
+}
+
+/// A `reliability=off,link` axis sweeps cleanly: the layer is
+/// execute-time state so all points share one cached plan, and `--jobs 4`
+/// artifacts are byte-identical to serial.
+#[test]
+fn reliability_axis_sweep_identical_across_jobs() {
+    let scenario = find("reliability_sweep").unwrap();
+    let mut base = small();
+    base.fault = bss_extoll::fault::FaultConfig::parse_spec("loss:0.02").unwrap();
+    let grid = "reliability=off,link;retx_timeout_ns=1000,2000";
+    let serial = SweepRunner::from_grid(base.clone(), grid)
+        .unwrap()
+        .run(scenario)
+        .unwrap();
+    assert_eq!(serial.points.len(), 4);
+    assert_eq!(serial.cache.misses, 1, "reliability points must share one plan");
+    assert_eq!(serial.cache.hits, 3);
+    let parallel = SweepRunner::from_grid(base, grid)
         .unwrap()
         .jobs(4)
         .run(scenario)

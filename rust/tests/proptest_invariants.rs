@@ -589,6 +589,91 @@ fn prop_partition_sync_modes_match_serial() {
     }
 }
 
+/// Property (PR 7, link reliability): **with a generous retry budget,
+/// lossy links deliver every spike event exactly once.** Random coherent
+/// system shapes × random loss/degrade/jitter mixes (loss < 1) × random
+/// retransmission knobs — including windows small enough to stall fresh
+/// traffic and timeouts shorter than the link RTT (spurious replays) —
+/// must bring deliverability to exactly 1.0: no residual loss, no
+/// give-ups, and no double delivery (deliverability would exceed 1.0 if
+/// any event arrived twice, since `delivered_events` counts deliveries).
+#[test]
+fn prop_link_reliability_delivers_every_event() {
+    use bss_extoll::coordinator::scenario::find;
+    use bss_extoll::coordinator::ExperimentConfig;
+    use bss_extoll::extoll::link::Reliability;
+    use bss_extoll::fault::FaultConfig;
+    use bss_extoll::sim::QueueKind;
+    use bss_extoll::wafer::system::SystemConfig;
+
+    // coherent shapes: torus nodes == n_wafers × concentrators_per_wafer
+    // and fpgas_per_wafer divisible by concentrators_per_wafer
+    // (n_wafers, torus dims, concentrators_per_wafer, fpgas_per_wafer)
+    const SHAPES: &[(usize, (u16, u16, u16), usize, usize)] = &[
+        (2, (2, 1, 1), 1, 2),
+        (2, (2, 2, 1), 2, 4),
+        (4, (2, 2, 1), 1, 2),
+        (2, (2, 2, 2), 4, 4),
+        (2, (4, 2, 1), 4, 8),
+    ];
+
+    let scenario = find("reliability_sweep").expect("registered");
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0xAC4B + case);
+        let &(w, (x, y, z), c, f) = rng.choose(SHAPES);
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: w,
+            torus: TorusSpec::new(x, y, z),
+            fpgas_per_wafer: f,
+            concentrators_per_wafer: c,
+            ..SystemConfig::default()
+        };
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.sources_per_fpga = 8;
+        cfg.workload.fan_out = rng.range(1, 2) as usize;
+        cfg.workload.duration = Time::from_us(150);
+        cfg.seed = 0xB55 ^ case;
+        cfg.queue = *rng.choose(&[QueueKind::Heap, QueueKind::Wheel]);
+        cfg.domains = rng.range(1, 2) as usize;
+        let degrade = *rng.choose(&[0.0, 0.25]);
+        cfg.fault = FaultConfig {
+            loss: *rng.choose(&[0.05, 0.1, 0.2, 0.35]),
+            degrade,
+            degrade_factor: if degrade > 0.0 { 2.0 } else { 1.0 },
+            jitter_ns: *rng.choose(&[0.0, 20.0]),
+            ..FaultConfig::default()
+        };
+        cfg.system.nic.reliability = Reliability::Link;
+        cfg.system.nic.retx.window = *rng.choose(&[2u32, 8, 32]);
+        cfg.system.nic.retx.timeout = Time::from_ns(*rng.choose(&[500u64, 1000, 2000]));
+        cfg.system.nic.retx.max_retries = 10_000;
+        cfg.system.nic.retx.backoff_cap = rng.below(7) as u32;
+
+        let r = scenario
+            .run(&cfg)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        let injected = r.get_count("injected_events").unwrap();
+        assert!(injected > 0, "case {case}: no traffic generated");
+        assert_eq!(
+            r.get_f64("deliverability"),
+            Some(1.0),
+            "case {case}: loss={} window={} timeout={:?}: not exactly-once",
+            cfg.fault.loss,
+            cfg.system.nic.retx.window,
+            cfg.system.nic.retx.timeout,
+        );
+        assert_eq!(r.get_count("residual_loss_events"), Some(0), "case {case}");
+        assert_eq!(r.get_count("undeliverable_events"), Some(0), "case {case}");
+        // the layer demonstrably worked for its keep on a lossy fabric
+        assert!(
+            r.get_count("retransmissions").unwrap() > 0,
+            "case {case}: loss={} produced no retransmissions",
+            cfg.fault.loss
+        );
+    }
+}
+
 /// Property (PR 4, cache-key discipline): **CacheKey equality implies
 /// Prepared interchangeability.** For random config pairs, whenever a
 /// scenario reports equal cache keys, executing one config against the

@@ -92,13 +92,49 @@ def check_fault_sweep(j):
         prev_cables, prev_deliv = r["failed_cables"], r["deliverability"]
 
 
+def check_reliability_sweep(j):
+    """Shape of the PR 7 link-reliability section: with reliability=link
+    deliverability is exactly 1.0 at every swept loss rate (zero residual
+    loss below the retry limit) and never below the off curve at the same
+    fault spec; with reliability=off no recovery machinery runs; and the
+    cross-domain identity bit must hold with retransmission timers live."""
+    s = j["reliability_sweep"]
+    assert s["deterministic_across_domains"] is True
+    assert s["link_vs_off_at_zero_loss"] > 0, s
+    runs = s["runs"]
+    assert len(runs) >= 4, f"reliability_sweep needs >= 4 points, got {len(runs)}"
+    off = {r["fault"]: r for r in runs if r["reliability"] == "off"}
+    link = {r["fault"]: r for r in runs if r["reliability"] == "link"}
+    assert off and link, f"need both off and link points: {runs}"
+    assert set(off) == set(link), f"off/link fault specs must pair up: {runs}"
+    for spec, r in link.items():
+        assert r["deliverability"] == 1.0, (
+            f"reliability=link must deliver everything at {spec}: {r}"
+        )
+        assert r["residual_loss_events"] == 0, (
+            f"residual loss below the retry limit at {spec}: {r}"
+        )
+        assert r["deliverability"] >= off[spec]["deliverability"], (
+            f"link below the off curve at {spec}"
+        )
+        # a lossy point must show the machinery actually working
+        if r["crc_failures"] > 0:
+            assert r["retransmissions"] > 0, f"CRC failures but no retx at {spec}: {r}"
+    for spec, r in off.items():
+        assert r["retransmissions"] == 0, f"retransmissions with the layer off: {r}"
+    lossy_off = [r for r in off.values() if r["fault"] != "none"]
+    assert any(r["deliverability"] < 1.0 for r in lossy_off), (
+        f"the off curve must show the loss the layer repairs: {runs}"
+    )
+
+
 def check_artifact(path):
-    """Shape checks for a regenerated BENCH_PR6 artifact."""
+    """Shape checks for a regenerated BENCH_PR7 artifact."""
     j = load(path)
     if "pending_regeneration" in j:
         fail(f"{path}: regenerated artifact is still a placeholder")
     assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
-    assert j["artifact"] == "BENCH_PR6", j.get("artifact")
+    assert j["artifact"] == "BENCH_PR7", j.get("artifact")
     assert j["queue_transit"]["results"], "no queue benches recorded"
     assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
     assert j["sweep_scaling"]["deterministic_across_jobs"] is True
@@ -149,6 +185,9 @@ def check_artifact(path):
     check_fault_sweep(j)
     worst_deliv = min(r["deliverability"] for r in j["fault_sweep"]["runs"])
 
+    check_reliability_sweep(j)
+    rel = j["reliability_sweep"]
+
     print(
         f"{path} ok:",
         f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
@@ -157,6 +196,7 @@ def check_artifact(path):
         f"cache(mc)={c['microcircuit']['speedup']:.2f}x",
         f"pool={pp['speedup']:.2f}x",
         f"fault_deliv_min={worst_deliv:.3f}",
+        f"link@loss0={rel['link_vs_off_at_zero_loss']:.2f}x",
     )
 
 
