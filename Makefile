@@ -14,12 +14,13 @@ bench:
 
 # Perf-trajectory artifact: heap-vs-wheel event engine, sweep scaling,
 # PDES domain scaling, PDES sync-protocol scaling (window vs channel
-# clocks), sweep resource cache, packet pooling, the degraded-fabric
-# fault sweep and the link-reliability sweep. Writes BENCH_PR7.json at
-# the repo root (see PERF.md). Honors BSS_BENCH_FAST=1 (CI smoke);
-# override the output with BSS_BENCH_JSON. Committed BENCH_PR*.json
-# placeholders are policed by scripts/validate_bench.py (CI bench-smoke).
-BSS_BENCH_JSON ?= BENCH_PR7.json
+# clocks vs barrier-free), sweep resource cache, packet pooling, the
+# degraded-fabric fault sweep and the link-reliability sweep. Writes
+# BENCH_PR8.json at the repo root (see PERF.md). Honors BSS_BENCH_FAST=1
+# (CI smoke); override the output with BSS_BENCH_JSON. Committed
+# BENCH_PR*.json placeholders are policed by scripts/validate_bench.py
+# (CI bench-smoke).
+BSS_BENCH_JSON ?= BENCH_PR8.json
 bench-json:
 	BSS_BENCH_JSON=$(BSS_BENCH_JSON) cargo bench --bench bench_events
 

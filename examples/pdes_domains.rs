@@ -1,9 +1,10 @@
 //! Partitioned conservative PDES from the library API: run the same
-//! traffic scenario at `domains = 1, 2, 4` under both synchronization
-//! protocols (windowed global minimum and per-neighbor channel clocks),
-//! verify the reports are byte-identical (domain count and sync protocol
-//! are perf knobs, not physics — see docs/ARCHITECTURE.md §2.3), and
-//! print the wall-clock scaling.
+//! traffic scenario at `domains = 1, 2, 4` under all three
+//! synchronization protocols (windowed global minimum, per-neighbor
+//! channel clocks, and barrier-free channel clocks), verify the reports
+//! are byte-identical (domain count and sync protocol are perf knobs,
+//! not physics — see docs/ARCHITECTURE.md §2.3), and print the
+//! wall-clock scaling.
 //!
 //! Run: `cargo run --release --example pdes_domains`
 //!
@@ -57,6 +58,8 @@ fn main() {
         (SyncMode::Window, 4),
         (SyncMode::Channel, 2),
         (SyncMode::Channel, 4),
+        (SyncMode::Free, 2),
+        (SyncMode::Free, 4),
     ] {
         let mut c = cfg.clone();
         c.sync = sync;

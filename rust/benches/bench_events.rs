@@ -1,18 +1,19 @@
 //! Perf-trajectory benchmark (see PERF.md): A/B of the event-queue
 //! backends (binary heap vs calendar wheel), serial-vs-parallel sweep
 //! execution, PDES domain scaling, PDES sync-protocol scaling (windowed
-//! global-minimum vs per-neighbor channel clocks), the sweep-level
-//! resource cache (prepare-once vs per-point cold runs), and
+//! global-minimum vs per-neighbor channel clocks vs barrier-free), the
+//! sweep-level resource cache (prepare-once vs per-point cold runs), and
 //! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR7.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR8.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
 //! and speedup for `sweep --jobs {1,2,4}`, events/s at `domains=1/2/4`
-//! with a report-identity check against the serial run, window-vs-channel
-//! events/s at `domains=2/4/8` on a 16-node torus, cached-sweep speedup +
+//! with a report-identity check against the serial run,
+//! window/channel/free events/s at `domains=2/4/8` on a 16-node torus,
+//! cached-sweep speedup +
 //! hit/miss counters for traffic and microcircuit, pool-on/off events/s
 //! with a byte-identity check, and the degraded-fabric deliverability
 //! curve (`fault_sweep` over rising failed-cable fractions, with a
@@ -265,7 +266,7 @@ fn main() {
     );
     assert!(pdes_deterministic, "PDES report diverged from serial");
 
-    // ---- 4b. PDES sync-protocol scaling: window vs channel clocks ----------
+    // ---- 4b. PDES sync-protocol scaling: window vs channel vs free ---------
     // A larger torus than the domain-scaling section (16 nodes, 8 wafers)
     // so the domain adjacency graph has real diameter at domains >= 4 —
     // that is where channel clocks discount far-apart domains by several
@@ -307,7 +308,7 @@ fn main() {
         );
         (eps, json)
     };
-    for sync in [SyncMode::Window, SyncMode::Channel] {
+    for sync in SyncMode::ALL {
         for domains in [2usize, 4, 8] {
             let mut cfg = sync_cfg.clone();
             cfg.sync = sync;
@@ -346,8 +347,10 @@ fn main() {
             .expect("sync cell recorded")
     };
     let channel_vs_window_4 = cell(SyncMode::Channel, 4) / cell(SyncMode::Window, 4);
+    let free_vs_channel_4 = cell(SyncMode::Free, 4) / cell(SyncMode::Channel, 4);
     sync_table.print();
-    println!("channel vs window at 4 domains: {channel_vs_window_4:.2}x events/s\n");
+    println!("channel vs window at 4 domains: {channel_vs_window_4:.2}x events/s");
+    println!("free vs channel at 4 domains: {free_vs_channel_4:.2}x events/s\n");
     assert!(sync_deterministic, "PDES sync report diverged from serial");
 
     // ---- 5. sweep resource cache: prepare-once vs per-point cold runs ------
@@ -621,7 +624,7 @@ fn main() {
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR7")
+        .set("artifact", "BENCH_PR8")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -653,6 +656,7 @@ fn main() {
             Json::obj()
                 .set("deterministic_across_modes", sync_deterministic)
                 .set("channel_vs_window_at_4_domains", channel_vs_window_4)
+                .set("free_vs_channel_at_4_domains", free_vs_channel_4)
                 .set("runs", sync_runs),
         )
         .set("sweep_cache", cache_section)

@@ -41,8 +41,10 @@ pub struct ExperimentConfig {
     /// PDES synchronization protocol for partitioned runs (`domains > 1`):
     /// `channel` (default) bounds each domain by the per-neighbor CMB
     /// channel clocks of every domain that can reach it (accumulated
-    /// path lookahead); `window` is the lock-step global-minimum
-    /// reference protocol. Byte-identical reports either way
+    /// path lookahead); `free` uses the same bounds with no barriers at
+    /// all (lock-free per-channel queues + published EOT atomics — best
+    /// for sparse traffic); `window` is the lock-step global-minimum
+    /// reference protocol. Byte-identical reports in every mode
     /// (docs/ARCHITECTURE.md §2.3); no effect at `domains = 1`.
     pub sync: SyncMode,
     /// Fault injection: link failure/degradation schedules plus
@@ -158,7 +160,9 @@ impl ExperimentConfig {
             sync: {
                 let name = j.str_or("sync", SyncMode::default().as_str());
                 SyncMode::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{name}' (window|channel)"))?
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown sync mode '{name}' (window|channel|free)")
+                    })?
             },
             ..ExperimentConfig::default()
         };
@@ -326,6 +330,8 @@ mod tests {
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().sync, SyncMode::Window);
         let j = Json::parse(r#"{"sync": "channel"}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().sync, SyncMode::Channel);
+        let j = Json::parse(r#"{"sync": "free"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().sync, SyncMode::Free);
         let j = Json::parse(r#"{"sync": "global"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }

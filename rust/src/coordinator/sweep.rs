@@ -71,7 +71,9 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         }
         "sync" => {
             cfg.sync = crate::sim::SyncMode::parse(value)
-                .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{value}' (window|channel)"))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown sync mode '{value}' (window|channel|free)")
+                })?
         }
         // fault injection: "none", "fail:0.25|loss:0.01", a JSON object,
         // or "@path" to load a calibrated preset file (the compact form
@@ -849,13 +851,13 @@ mod tests {
 
     #[test]
     fn sync_override_sweeps_identically() {
-        // the sync protocol is a perf knob: window × channel × any domain
-        // count must agree on every metric
+        // the sync protocol is a perf knob: window × channel × free ×
+        // any domain count must agree on every metric
         let runner = SweepRunner::new(small())
-            .axis("sync", &["window", "channel"])
+            .axis("sync", &["window", "channel", "free"])
             .axis("domains", &["1", "4"]);
         let result = runner.run(find("traffic").unwrap()).unwrap();
-        assert_eq!(result.points.len(), 4);
+        assert_eq!(result.points.len(), 6);
         let a = result.points[0].report.to_flat_json().to_string();
         for p in &result.points[1..] {
             assert_eq!(a, p.report.to_flat_json().to_string());

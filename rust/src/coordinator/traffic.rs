@@ -325,8 +325,9 @@ fn run_loop_serial(mut sim: Sim<Msg>, sys: &System, cfg: &ExperimentConfig) -> S
 /// phases, identical external-schedule order (so the merge keys match the
 /// serial run), merged back into one `Sim` for collection.
 /// `cfg.sync` picks the synchronization protocol: per-neighbor channel
-/// clocks over the inter-domain edge graph (default), or the windowed
-/// global-minimum reference — byte-identical reports either way.
+/// clocks over the inter-domain edge graph (default), the barrier-free
+/// variant of the same bounds (`free`), or the windowed global-minimum
+/// reference — byte-identical reports in every mode.
 fn run_loop_partitioned(
     sim: Sim<Msg>,
     sys: &System,
@@ -341,20 +342,22 @@ fn run_loop_partitioned(
     // message, so the fault-aware folds exclude them from the channel
     // bounds (`pdes_lookahead_with`).
     let no_links = || anyhow::anyhow!("partition has no inter-domain links");
-    let (lookahead, channels) = match cfg.sync {
-        SyncMode::Channel => {
-            let graph = pdes_channel_graph_with(dm, &cfg.system.nic, fault);
-            let la = graph.min_lookahead().ok_or_else(no_links)?;
-            (la, Some(graph))
-        }
-        SyncMode::Window => (
+    let (lookahead, channels) = if cfg.sync.needs_channel_graph() {
+        let graph = pdes_channel_graph_with(dm, &cfg.system.nic, fault);
+        let la = graph.min_lookahead().ok_or_else(no_links)?;
+        (la, Some(graph))
+    } else {
+        (
             pdes_lookahead_with(dm, &cfg.system.nic, fault).ok_or_else(no_links)?,
             None,
-        ),
+        )
     };
     let mut part = Partition::split(sim, owner, dm.n_domains(), lookahead);
     if let Some(graph) = channels {
         part = part.with_channels(graph);
+    }
+    if cfg.sync == SyncMode::Free {
+        part = part.barrier_free();
     }
     part.run_until(cfg.workload.duration);
     // experiment barrier: same targets, same order as System::flush_all,
@@ -882,12 +885,13 @@ mod tests {
 
     #[test]
     fn sync_mode_does_not_change_physics() {
-        // the PR 5 invariant: window vs channel clocks is a perf knob
-        // only — byte-identical reports at any domain count
+        // the PR 5/PR 8 invariant: the sync protocol is a perf knob
+        // only — byte-identical reports at any domain count, in every
+        // mode (including barrier-free)
         let mut base = small();
         base.workload.fan_out = 2;
         let serial = TrafficScenario.run(&base).unwrap();
-        for sync in [SyncMode::Window, SyncMode::Channel] {
+        for sync in SyncMode::ALL {
             for d in [2usize, 4] {
                 let mut cfg = base.clone();
                 cfg.sync = sync;

@@ -3,7 +3,7 @@
 //!
 //! The calendar-wheel event queue (`QueueKind::Wheel`), the parallel
 //! sweep runner (`--jobs N`), the partitioned conservative PDES
-//! (`domains=N`, `sync=window|channel`), the sweep-level resource cache
+//! (`domains=N`, `sync=window|channel|free`), the sweep-level resource cache
 //! (PR 4), packet-payload pooling (PR 4), the fault-injection
 //! subsystem's seed-derived randomness (PR 6) and the link-level
 //! reliability protocol's retransmission timers (PR 7) are performance
@@ -16,30 +16,24 @@
 //! level — byte-identical report JSON and sweep CSV (the determinism bar
 //! set in PR 2, extended in PR 3/PR 4/PR 5; see docs/ARCHITECTURE.md for
 //! why the merge-key and cache-key designs make this hold).
+//!
+//! Since PR 8 the cross-sync-mode gates are thin callers into the
+//! shared [`support::DiffMatrix`] driver; the full differential matrix
+//! (every mode × domain count × backend × fault × reliability) lives in
+//! `rust/tests/differential_sync.rs`.
+
+#[path = "support/mod.rs"]
+mod support;
 
 use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::sweep::SweepRunner;
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
-use bss_extoll::sim::{QueueKind, SyncMode, Time};
+use bss_extoll::sim::{QueueKind, SyncMode};
 use bss_extoll::util::report::Report;
 use bss_extoll::wafer::system::SystemConfig;
-
-fn small() -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.system = SystemConfig {
-        n_wafers: 2,
-        torus: TorusSpec::new(2, 2, 1),
-        fpgas_per_wafer: 4,
-        concentrators_per_wafer: 2,
-        ..SystemConfig::default()
-    };
-    cfg.workload.rate_hz = 4e6;
-    cfg.workload.sources_per_fpga = 16;
-    cfg.workload.duration = Time::from_us(400);
-    cfg
-}
+use support::{small, DiffMatrix};
 
 /// Run `scenario` on the given backend; returns the pretty report JSON.
 fn report_json(scenario: &str, kind: QueueKind) -> String {
@@ -171,72 +165,32 @@ fn hotspot_report_identical_across_domain_counts() {
     }
 }
 
-/// Run `scenario` partitioned with an explicit sync protocol and queue
-/// backend; pretty JSON.
-fn report_json_full(scenario: &str, sync: SyncMode, domains: usize, kind: QueueKind) -> String {
-    let mut cfg = small();
-    cfg.sync = sync;
-    cfg.domains = domains;
-    cfg.queue = kind;
-    find(scenario)
-        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
-        .run(&cfg)
-        .unwrap_or_else(|e| {
-            panic!("{scenario} sync={} domains={domains} run failed: {e:#}", sync.as_str())
-        })
-        .to_json()
-        .pretty()
-}
-
-/// The PR 5 acceptance gate: reports are byte-identical across
-/// `sync=window/channel × domains=1/2/4` (per-neighbor channel clocks
-/// are a perf knob, not physics).
+/// The PR 5 acceptance gate, now a thin caller into the differential
+/// harness (`rust/tests/differential_sync.rs` runs the wider matrix):
+/// reports byte-identical across every sync mode × domains=1/2/4.
 #[test]
 fn traffic_report_identical_across_sync_modes_and_domain_counts() {
-    let serial = report_json_domains("traffic", 1);
+    let serial = DiffMatrix::new("traffic", small()).assert_identical();
     assert!(serial.contains("rx_events"));
-    for sync in [SyncMode::Window, SyncMode::Channel] {
-        for d in [1usize, 2, 4] {
-            assert_eq!(
-                serial,
-                report_json_full("traffic", sync, d, QueueKind::Wheel),
-                "sync={} domains={d}",
-                sync.as_str()
-            );
-        }
-    }
 }
 
 #[test]
 fn burst_and_hotspot_reports_identical_across_sync_modes() {
     for scenario in ["burst", "hotspot"] {
-        let serial = report_json_domains(scenario, 1);
-        for sync in [SyncMode::Window, SyncMode::Channel] {
-            assert_eq!(
-                serial,
-                report_json_full(scenario, sync, 4, QueueKind::Wheel),
-                "{scenario} sync={}",
-                sync.as_str()
-            );
-        }
+        DiffMatrix::new(scenario, small()).domains(&[1, 4]).assert_identical();
     }
 }
 
-/// Sync protocol and queue backend compose: heap × channel × 4 domains
-/// must equal wheel × window × 2 domains must equal the serial run.
+/// Sync protocol and queue backend compose: every mode on the heap
+/// backend must equal the serial wheel run (thin caller — the serial
+/// reference cell runs on the first configured backend, so pinning
+/// wheel first and sweeping heap crosses the two axes).
 #[test]
 fn sync_modes_and_queue_backends_compose() {
-    let serial = report_json("traffic", QueueKind::Wheel);
-    assert_eq!(
-        serial,
-        report_json_full("traffic", SyncMode::Channel, 4, QueueKind::Heap),
-        "heap × channel × 4"
-    );
-    assert_eq!(
-        serial,
-        report_json_full("traffic", SyncMode::Window, 2, QueueKind::Heap),
-        "heap × window × 2"
-    );
+    DiffMatrix::new("traffic", small())
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .domains(&[2, 4])
+        .assert_identical();
 }
 
 /// Domains and queue backend compose: heap × 4 domains must equal
@@ -464,27 +418,20 @@ fn report_json_fault(scenario: &str, spec: &str, sync: SyncMode, domains: usize)
         .pretty()
 }
 
-/// The PR 6 acceptance gate: a faulted fabric is still deterministic —
-/// reports are byte-identical across `sync=window/channel ×
-/// domains=1/2/4` for a spec exercising every fault mechanism (cable
-/// failures with re-routing, packet loss, serialization degradation and
-/// latency jitter; all randomness is seed-derived per NIC, and the
-/// merge-key contract makes per-NIC draw order partition-independent).
+/// The PR 6 acceptance gate, now a thin caller into the differential
+/// harness: a faulted fabric is still deterministic — reports are
+/// byte-identical across every sync mode × domains=1/2/4 for a spec
+/// exercising every fault mechanism (cable failures with re-routing,
+/// packet loss, serialization degradation and latency jitter; all
+/// randomness is seed-derived per NIC, and the merge-key contract makes
+/// per-NIC draw order partition-independent).
 #[test]
 fn fault_sweep_report_identical_across_sync_modes_and_domain_counts() {
     let spec = "fail:0.1|loss:0.02|degrade:0.2|degrade_factor:2.0|jitter_ns:30";
-    let serial = report_json_fault("fault_sweep", spec, SyncMode::Channel, 1);
+    let mut cfg = small();
+    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec).unwrap();
+    let serial = DiffMatrix::new("fault_sweep", cfg).label("fault ").assert_identical();
     assert!(serial.contains("deliverability"));
-    for sync in [SyncMode::Window, SyncMode::Channel] {
-        for d in [1usize, 2, 4] {
-            assert_eq!(
-                serial,
-                report_json_fault("fault_sweep", spec, sync, d),
-                "fault_sweep sync={} domains={d}",
-                sync.as_str()
-            );
-        }
-    }
 }
 
 /// Histogram metrics survive the partitioning too: `latency_dist` under
@@ -529,60 +476,24 @@ fn fault_axis_sweep_identical_across_jobs() {
 
 // ---- PR 7: link-level reliability ----------------------------------------
 
-/// Run `scenario` with `reliability=link`, a fault spec, an explicit
-/// sync protocol, a domain count and a queue backend; pretty JSON.
-fn report_json_reliable(
-    scenario: &str,
-    spec: &str,
-    sync: SyncMode,
-    domains: usize,
-    kind: QueueKind,
-) -> String {
-    let mut cfg = small();
-    cfg.system.nic.reliability = bss_extoll::extoll::link::Reliability::Link;
-    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec)
-        .unwrap_or_else(|e| panic!("fault spec {spec:?}: {e}"));
-    cfg.sync = sync;
-    cfg.domains = domains;
-    cfg.queue = kind;
-    find(scenario)
-        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
-        .run(&cfg)
-        .unwrap_or_else(|e| {
-            panic!(
-                "{scenario} reliability=link fault={spec} sync={} domains={domains} \
-                 queue={kind:?} failed: {e:#}",
-                sync.as_str()
-            )
-        })
-        .to_json()
-        .pretty()
-}
-
-/// The PR 7 acceptance gate: retransmission timers, ACK/NACK control
-/// frames and replay are ordinary intra-node events under the merge-key
-/// contract — with the reliability layer recovering packets on a fabric
-/// exercising every fault mechanism, reports stay byte-identical across
-/// `sync=window/channel × domains=1/2/4 × heap/wheel`.
+/// The PR 7 acceptance gate, now a thin caller into the differential
+/// harness: retransmission timers, ACK/NACK control frames and replay
+/// are ordinary intra-node events under the merge-key contract — with
+/// the reliability layer recovering packets on a fabric exercising
+/// every fault mechanism, reports stay byte-identical across every
+/// sync mode × domains=1/2/4 × heap/wheel.
 #[test]
 fn reliability_report_identical_across_sync_domains_and_backends() {
     let spec = "fail:0.1|loss:0.02|degrade:0.2|degrade_factor:2.0|jitter_ns:30";
-    let serial =
-        report_json_reliable("reliability_sweep", spec, SyncMode::Channel, 1, QueueKind::Heap);
+    let mut cfg = small();
+    cfg.system.nic.reliability = bss_extoll::extoll::link::Reliability::Link;
+    cfg.fault = bss_extoll::fault::FaultConfig::parse_spec(spec).unwrap();
+    let serial = DiffMatrix::new("reliability_sweep", cfg)
+        .label("reliability=link ")
+        .kinds(&[QueueKind::Heap, QueueKind::Wheel])
+        .assert_identical();
     assert!(serial.contains("recovered_events"));
     assert!(serial.contains("retransmissions"));
-    for sync in [SyncMode::Window, SyncMode::Channel] {
-        for d in [1usize, 2, 4] {
-            for kind in [QueueKind::Heap, QueueKind::Wheel] {
-                assert_eq!(
-                    serial,
-                    report_json_reliable("reliability_sweep", spec, sync, d, kind),
-                    "reliability_sweep sync={} domains={d} queue={kind:?}",
-                    sync.as_str()
-                );
-            }
-        }
-    }
 }
 
 /// The layer is opt-in: with `reliability=off` (the default) the faulted

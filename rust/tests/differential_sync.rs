@@ -1,0 +1,99 @@
+//! The cross-mode differential harness (PR 8): every synchronization
+//! protocol the PDES implements — serial, windowed, channel clocks,
+//! barrier-free — must produce **byte-identical** reports on the same
+//! config, across domain counts, queue backends, fault injection and
+//! the link-reliability layer. One matrix driver
+//! ([`support::DiffMatrix`]) replaces the per-mode gates that used to be
+//! copy-pasted through `determinism_queue.rs`; those gates are now thin
+//! callers into the same driver, so adding a sync mode to
+//! [`SyncMode::ALL`] automatically subjects it to every gate here.
+//!
+//! This file is the PR 8 acceptance gate for `sync=free`: reports
+//! byte-identical to serial across domains=1/2/4 × heap/wheel × fault
+//! on/off × reliability off/link.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use bss_extoll::extoll::link::Reliability;
+use bss_extoll::fault::FaultConfig;
+use bss_extoll::sim::{QueueKind, SyncMode};
+use support::{small, DiffMatrix};
+
+/// Fault spec exercising every mechanism the fault model has: cable
+/// failures (re-routing), packet loss, serialization degradation and
+/// latency jitter — the same spec the PR 6/PR 7 gates pinned.
+const FAULT_SPEC: &str = "fail:0.1|loss:0.02|degrade:0.2|degrade_factor:2.0|jitter_ns:30";
+
+fn faulted(spec: &str) -> bss_extoll::coordinator::ExperimentConfig {
+    let mut cfg = small();
+    cfg.fault = FaultConfig::parse_spec(spec).unwrap_or_else(|e| panic!("fault spec: {e}"));
+    cfg
+}
+
+/// Healthy fabric, both backends, full mode × domain matrix.
+#[test]
+fn traffic_matrix_healthy() {
+    let serial = DiffMatrix::new("traffic", small())
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .assert_identical();
+    assert!(serial.contains("rx_events"));
+}
+
+/// Every fault mechanism live, both backends, full mode × domain matrix.
+#[test]
+fn traffic_matrix_faulted() {
+    let serial = DiffMatrix::new("fault_sweep", faulted(FAULT_SPEC))
+        .label("fault ")
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .assert_identical();
+    assert!(serial.contains("deliverability"));
+}
+
+/// Link-level reliability recovering lost packets (retransmission
+/// timers, ACK/NACK control frames live), both backends, full matrix.
+#[test]
+fn traffic_matrix_reliability_link() {
+    let mut cfg = faulted(FAULT_SPEC);
+    cfg.system.nic.reliability = Reliability::Link;
+    let serial = DiffMatrix::new("reliability_sweep", cfg)
+        .label("reliability=link ")
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .assert_identical();
+    assert!(serial.contains("recovered_events"));
+    assert!(serial.contains("retransmissions"));
+}
+
+/// Faulted fabric with the reliability layer explicitly off — the
+/// fourth corner of the fault × reliability acceptance square.
+#[test]
+fn traffic_matrix_faulted_reliability_off() {
+    let mut cfg = faulted(FAULT_SPEC);
+    cfg.system.nic.reliability = Reliability::Off;
+    DiffMatrix::new("fault_sweep", cfg)
+        .label("reliability=off ")
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .assert_identical();
+}
+
+/// Burst and hotspot traffic shapes through the full mode matrix (wheel
+/// backend, the default) — the workloads whose per-mode gates lived in
+/// `determinism_queue.rs` before the driver existed.
+#[test]
+fn burst_and_hotspot_matrix() {
+    for scenario in ["burst", "hotspot"] {
+        DiffMatrix::new(scenario, small()).assert_identical();
+    }
+}
+
+/// The free mode alone, swept dense (domains up to the 4-node torus's
+/// limit) on both backends — a tighter loop for bisecting a free-mode
+/// regression without running the whole matrix.
+#[test]
+fn free_mode_focused() {
+    DiffMatrix::new("traffic", small())
+        .modes(&[SyncMode::Free])
+        .domains(&[2, 3, 4])
+        .kinds(&[QueueKind::Wheel, QueueKind::Heap])
+        .assert_identical();
+}

@@ -420,17 +420,18 @@ fn prop_domain_partition_invariants() {
     }
 }
 
-/// Property (PR 5, conservative synchronization): **any partitioning
-/// under either sync protocol reproduces the serial trajectory.**
-/// Random rings of relay actors (random size, random per-edge latencies,
-/// random hop budgets, a zero-delay sink per node) are run serially, then
-/// partitioned into random contiguous domain blocks under both the
-/// windowed protocol and per-neighbor channel clocks built from the
-/// actual cross-domain edges — every sink must record the identical
+/// Property (PR 5/PR 8, conservative synchronization): **any
+/// partitioning under any sync protocol reproduces the serial
+/// trajectory.** Random rings of relay actors (random size, random
+/// per-edge latencies, random hop budgets, a zero-delay sink per node)
+/// are run serially, then partitioned into random contiguous domain
+/// blocks under the windowed protocol, per-neighbor channel clocks and
+/// the barrier-free protocol (channels built from the actual
+/// cross-domain edges) — every sink must record the identical
 /// `(time, value)` sequence, and the processed-event counts must match.
 #[test]
 fn prop_partition_sync_modes_match_serial() {
-    use bss_extoll::sim::{Actor, ActorId, ChannelGraph, Ctx, Partition, QueueKind, Sim};
+    use bss_extoll::sim::{Actor, ActorId, ChannelGraph, Ctx, Partition, QueueKind, Sim, SyncMode};
 
     #[derive(Clone, Debug, PartialEq)]
     enum M {
@@ -567,23 +568,131 @@ fn prop_partition_sync_modes_match_serial() {
             }
         }
 
-        for channel in [false, true] {
-            if n_domains == 1 && channel {
+        for mode in SyncMode::ALL {
+            if n_domains == 1 && mode.needs_channel_graph() {
                 continue; // single domain has no channels to attach
             }
             let sim = build(&shape, seed, kind);
             let la = if n_domains == 1 { Time::from_ns(1) } else { lookahead };
             let mut part = Partition::split(sim, owner.clone(), n_domains, la);
-            if channel {
+            if mode.needs_channel_graph() {
                 part = part.with_channels(ChannelGraph::from_edges(n_domains, edges.clone()));
             }
+            if mode == SyncMode::Free {
+                part = part.barrier_free();
+            }
             part.run_until(UNTIL);
-            assert_eq!(part.processed(), want_processed, "case {case} channel={channel}");
+            assert_eq!(
+                part.processed(),
+                want_processed,
+                "case {case} mode={}",
+                mode.as_str()
+            );
             let merged = part.into_sim();
             assert_eq!(
                 sink_trajectories(&merged, shape.n),
                 want,
-                "case {case}: trajectory diverged (D={n_domains}, channel={channel})"
+                "case {case}: trajectory diverged (D={n_domains}, mode={})",
+                mode.as_str()
+            );
+        }
+    }
+}
+
+/// Property (PR 8, barrier-free stress): **seeded scheduling chaos
+/// cannot change a free-mode trajectory.** The free protocol has no
+/// rounds, so the OS scheduler chooses how domain advance loops
+/// interleave; the conservative closure bounds must absorb every such
+/// ordering. Random unidirectional token rings (random size, latencies,
+/// token counts and hop budgets) are partitioned into random contiguous
+/// blocks and run under `sync=free` with seeded `yield_now` injection
+/// (`Partition::with_free_chaos`) perturbing every domain's loop at
+/// pseudo-random points — each run must reproduce the serial trajectory
+/// and processed count byte-for-byte.
+#[test]
+fn prop_free_mode_survives_scheduling_chaos() {
+    use bss_extoll::sim::{Actor, ActorId, ChannelGraph, Ctx, Partition, QueueKind, Sim};
+
+    #[derive(Clone, Debug)]
+    struct Token(u32);
+
+    /// Forwards Token(n-1) to the next ring node; records every visit.
+    struct Hop {
+        next: ActorId,
+        delay: Time,
+        seen: Vec<(Time, u32)>,
+    }
+
+    impl Actor<Token> for Hop {
+        fn handle(&mut self, msg: Token, ctx: &mut Ctx<'_, Token>) {
+            self.seen.push((ctx.now(), msg.0));
+            if msg.0 > 0 {
+                ctx.send(self.next, self.delay, Token(msg.0 - 1));
+            }
+        }
+    }
+
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0xF2EE + case);
+        let n = rng.range(2, 9) as usize;
+        let delays: Vec<Time> =
+            (0..n).map(|_| Time::from_ps(rng.range(1_000, 400_000))).collect();
+        let starts: Vec<(Time, usize, u32)> = (0..rng.range(1, 5) as usize)
+            .map(|_| {
+                (Time::from_ps(rng.below(50_000)), rng.index(n), rng.range(5, 60) as u32)
+            })
+            .collect();
+        let kind = *rng.choose(&[QueueKind::Heap, QueueKind::Wheel]);
+
+        let build = |kind: QueueKind| {
+            let mut sim: Sim<Token> = Sim::with_kind(kind);
+            for i in 0..n {
+                sim.add(Hop { next: (i + 1) % n, delay: delays[i], seen: vec![] });
+            }
+            for &(at, node, hops) in &starts {
+                sim.schedule(at, node, Token(hops));
+            }
+            sim
+        };
+        let until = Time::from_ms(50);
+        let mut serial = build(kind);
+        serial.run_until(until);
+        let want: Vec<Vec<(Time, u32)>> =
+            (0..n).map(|i| serial.get::<Hop>(i).seen.clone()).collect();
+        let want_processed = serial.processed();
+
+        let n_domains = rng.range(2, n as u64) as usize;
+        let dom_of = |i: usize| (i * n_domains / n) as u32;
+        let owner: Vec<u32> = (0..n).map(dom_of).collect();
+        let mut edges: Vec<(u32, u32, Time)> = Vec::new();
+        let mut lookahead = Time::MAX;
+        for i in 0..n {
+            let peer = (i + 1) % n;
+            if dom_of(i) != dom_of(peer) {
+                edges.push((dom_of(i), dom_of(peer), delays[i]));
+                lookahead = lookahead.min(delays[i]);
+            }
+        }
+
+        for _ in 0..3 {
+            let chaos_seed = rng.next_u64();
+            let mut part = Partition::split(build(kind), owner.clone(), n_domains, lookahead)
+                .with_channels(ChannelGraph::from_edges(n_domains, edges.clone()))
+                .barrier_free()
+                .with_free_chaos(chaos_seed);
+            part.run_until(until);
+            assert_eq!(
+                part.processed(),
+                want_processed,
+                "case {case} chaos_seed {chaos_seed:#x}: processed count diverged"
+            );
+            let merged = part.into_sim();
+            let got: Vec<Vec<(Time, u32)>> =
+                (0..n).map(|i| merged.get::<Hop>(i).seen.clone()).collect();
+            assert_eq!(
+                got, want,
+                "case {case} chaos_seed {chaos_seed:#x}: trajectory diverged \
+                 (D={n_domains})"
             );
         }
     }

@@ -1,0 +1,138 @@
+//! Shared support for the integration-test binaries: the small reference
+//! system and the cross-mode differential matrix driver.
+//!
+//! Not a test target itself — `differential_sync.rs` and
+//! `determinism_queue.rs` include it with `#[path] mod support;`, so the
+//! per-mode determinism gates are thin callers into **one** driver
+//! ([`DiffMatrix`]) instead of copy-pasted loops. A new [`SyncMode`] is
+//! picked up by every gate automatically via [`SyncMode::ALL`].
+
+// Each including test binary compiles its own copy and uses a different
+// subset of the driver's surface; what one binary leaves unused is load-
+// bearing in the other.
+#![allow(dead_code)]
+
+use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::sim::{QueueKind, SyncMode, Time};
+use bss_extoll::wafer::system::SystemConfig;
+
+/// The small reference system every determinism gate runs: 2 wafers on a
+/// 2×2×1 torus, 400 µs of traffic — big enough for real cross-domain
+/// load, small enough to run the full differential matrix in CI.
+pub fn small() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.system = SystemConfig {
+        n_wafers: 2,
+        torus: TorusSpec::new(2, 2, 1),
+        fpgas_per_wafer: 4,
+        concentrators_per_wafer: 2,
+        ..SystemConfig::default()
+    };
+    cfg.workload.rate_hz = 4e6;
+    cfg.workload.sources_per_fpga = 16;
+    cfg.workload.duration = Time::from_us(400);
+    cfg
+}
+
+/// A differential determinism matrix: one scenario + base config, run
+/// across sync modes × domain counts × queue backends, every cell
+/// asserted byte-identical to the serial (`domains = 1`) reference
+/// report. The driver behind every cross-mode gate in
+/// `determinism_queue.rs` and `differential_sync.rs`.
+///
+/// Defaults cover the full current protocol matrix: all of
+/// [`SyncMode::ALL`] × `domains = 1/2/4` × the wheel backend. Narrow or
+/// widen any axis with the builder methods; mutate the base config (via
+/// [`DiffMatrix::new`]'s `cfg`) for fault/reliability variants.
+pub struct DiffMatrix<'a> {
+    scenario: &'a str,
+    cfg: ExperimentConfig,
+    label: String,
+    modes: Vec<SyncMode>,
+    domains: Vec<usize>,
+    kinds: Vec<QueueKind>,
+}
+
+impl<'a> DiffMatrix<'a> {
+    pub fn new(scenario: &'a str, cfg: ExperimentConfig) -> DiffMatrix<'a> {
+        DiffMatrix {
+            scenario,
+            cfg,
+            label: String::new(),
+            modes: SyncMode::ALL.to_vec(),
+            domains: vec![1, 2, 4],
+            kinds: vec![QueueKind::Wheel],
+        }
+    }
+
+    /// Extra context prepended to assertion messages (e.g. the fault
+    /// spec or reliability setting of this variant).
+    pub fn label(mut self, label: &str) -> DiffMatrix<'a> {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn modes(mut self, modes: &[SyncMode]) -> DiffMatrix<'a> {
+        self.modes = modes.to_vec();
+        self
+    }
+
+    pub fn domains(mut self, domains: &[usize]) -> DiffMatrix<'a> {
+        self.domains = domains.to_vec();
+        self
+    }
+
+    pub fn kinds(mut self, kinds: &[QueueKind]) -> DiffMatrix<'a> {
+        self.kinds = kinds.to_vec();
+        self
+    }
+
+    /// Run one cell of the matrix; returns the pretty report JSON.
+    fn run_cell(&self, sync: SyncMode, domains: usize, kind: QueueKind) -> String {
+        let mut cfg = self.cfg.clone();
+        cfg.sync = sync;
+        cfg.domains = domains;
+        cfg.queue = kind;
+        find(self.scenario)
+            .unwrap_or_else(|| panic!("scenario {} not registered", self.scenario))
+            .run(&cfg)
+            .unwrap_or_else(|e| {
+                panic!(
+                    "{}{} sync={} domains={domains} queue={kind:?} run failed: {e:#}",
+                    self.label,
+                    self.scenario,
+                    sync.as_str()
+                )
+            })
+            .to_json()
+            .pretty()
+    }
+
+    /// Run the whole matrix and assert every cell's report is
+    /// byte-identical to the serial reference (`domains = 1` on the
+    /// first configured backend — the plain event loop, no partition
+    /// machinery). Returns the reference JSON so callers can make
+    /// content assertions on top.
+    pub fn assert_identical(&self) -> String {
+        let serial = self.run_cell(SyncMode::default(), 1, self.kinds[0]);
+        for &kind in &self.kinds {
+            for &sync in &self.modes {
+                for &domains in &self.domains {
+                    let got = self.run_cell(sync, domains, kind);
+                    assert_eq!(
+                        serial,
+                        got,
+                        "{}{} report diverged from serial at sync={} domains={domains} \
+                         queue={kind:?}",
+                        self.label,
+                        self.scenario,
+                        sync.as_str()
+                    );
+                }
+            }
+        }
+        serial
+    }
+}

@@ -129,12 +129,12 @@ def check_reliability_sweep(j):
 
 
 def check_artifact(path):
-    """Shape checks for a regenerated BENCH_PR7 artifact."""
+    """Shape checks for a regenerated BENCH_PR8 artifact."""
     j = load(path)
     if "pending_regeneration" in j:
         fail(f"{path}: regenerated artifact is still a placeholder")
     assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
-    assert j["artifact"] == "BENCH_PR7", j.get("artifact")
+    assert j["artifact"] == "BENCH_PR8", j.get("artifact")
     assert j["queue_transit"]["results"], "no queue benches recorded"
     assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
     assert j["sweep_scaling"]["deterministic_across_jobs"] is True
@@ -145,14 +145,15 @@ def check_artifact(path):
 
     s = j["pdes_sync_scaling"]
     assert s["deterministic_across_modes"] is True
-    # serial baseline + {window,channel} x {2,4,8}
-    assert len(s["runs"]) == 7, s["runs"]
+    # serial baseline + {window,channel,free} x {2,4,8}
+    assert len(s["runs"]) == 10, s["runs"]
     modes = {(r["sync"], r["domains"]) for r in s["runs"]}
     for domains in (2, 4, 8):
-        assert ("window", domains) in modes, f"missing window run at {domains}"
-        assert ("channel", domains) in modes, f"missing channel run at {domains}"
+        for sync in ("window", "channel", "free"):
+            assert (sync, domains) in modes, f"missing {sync} run at {domains}"
     ratio = s["channel_vs_window_at_4_domains"]
     assert ratio > 0, s
+    assert s["free_vs_channel_at_4_domains"] > 0, s
     # The PR 5 acceptance bar: channel clocks must not lose to the
     # windowed protocol at domains=4. Only enforced for full-mode
     # artifacts — fast-mode CI runners are 2-core and oversubscribed, so
@@ -193,6 +194,7 @@ def check_artifact(path):
         f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
         f"pdes={p['multi_domain_vs_serial_speedup']:.2f}x",
         f"channel_vs_window@4={s['channel_vs_window_at_4_domains']:.2f}x",
+        f"free_vs_channel@4={s['free_vs_channel_at_4_domains']:.2f}x",
         f"cache(mc)={c['microcircuit']['speedup']:.2f}x",
         f"pool={pp['speedup']:.2f}x",
         f"fault_deliv_min={worst_deliv:.3f}",
