@@ -1,4 +1,4 @@
-.PHONY: artifacts test bench bench-json clean
+.PHONY: artifacts test bench bench-json serve-smoke clean
 
 # AOT-lower the JAX/Pallas shard models into artifacts/ (HLO + manifest).
 # The rust runtime consumes the manifests; see rust/src/runtime/client.rs.
@@ -15,14 +15,20 @@ bench:
 # Perf-trajectory artifact: heap-vs-wheel event engine, sweep scaling,
 # PDES domain scaling, PDES sync-protocol scaling (window vs channel
 # clocks vs barrier-free), sweep resource cache, packet pooling, the
-# degraded-fabric fault sweep and the link-reliability sweep. Writes
-# BENCH_PR8.json at the repo root (see PERF.md). Honors BSS_BENCH_FAST=1
-# (CI smoke); override the output with BSS_BENCH_JSON. Committed
-# BENCH_PR*.json placeholders are policed by scripts/validate_bench.py
-# (CI bench-smoke).
-BSS_BENCH_JSON ?= BENCH_PR8.json
+# degraded-fabric fault sweep, the link-reliability sweep and the
+# service-mode serve_throughput round. Writes BENCH_PR9.json at the repo
+# root (see PERF.md). Honors BSS_BENCH_FAST=1 (CI smoke); override the
+# output with BSS_BENCH_JSON. Committed BENCH_PR*.json placeholders are
+# policed by scripts/validate_bench.py (CI bench-smoke).
+BSS_BENCH_JSON ?= BENCH_PR9.json
 bench-json:
 	BSS_BENCH_JSON=$(BSS_BENCH_JSON) cargo bench --bench bench_events
+
+# Service-mode smoke: bind an ephemeral port, run one in-process loadgen
+# round (40 submissions, verified byte-identical to the batch path),
+# assert completion and a clean shutdown. Wired into CI.
+serve-smoke:
+	cargo run --release -- serve --smoke 40
 
 clean:
 	cargo clean

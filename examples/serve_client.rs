@@ -1,0 +1,92 @@
+//! Service-mode client walkthrough: submit experiments to a running
+//! `bss-extoll serve` instance programmatically and consume the
+//! streamed status lifecycle (`queued → preparing → running → done`).
+//!
+//! The example is self-contained: it spins the server up in-process on
+//! an ephemeral port, so there is nothing to start beforehand.
+//!
+//! Run: `cargo run --release --example serve_client`
+//!
+//! Against an external server, the same client code works unchanged —
+//! point `Client::connect` at its address (start one with
+//! `bss-extoll serve --addr 127.0.0.1:7411 --workers 4`). The wire
+//! grammar is documented in docs/ARCHITECTURE.md §7.
+
+use bss_extoll::serve::client::Client;
+use bss_extoll::serve::protocol::{Event, QuotaReq, Request, Submission};
+use bss_extoll::serve::{ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    // 1. an in-process server: 2 workers, 16 MB resource-cache budget
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_bytes: 16 << 20,
+        ..ServeConfig::default()
+    })?;
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn();
+    println!("server on {addr}");
+
+    // 2. submit two experiments down one connection; both share a
+    //    machine shape, so the second reuses the first one's prepared
+    //    route plan (watch the `preparing` cache label)
+    let mut client = Client::connect(&addr)?;
+    let small = "n_wafers=2;torus=2x2x1;fpgas_per_wafer=4;concentrators_per_wafer=2;\
+                 sources_per_fpga=8;duration_s=0.0002";
+    for (tag, set) in [
+        ("poisson", format!("{small};rate_hz=2e6")),
+        ("poisson-hot", format!("{small};rate_hz=8e6")),
+    ] {
+        client.send(&Request::Submit(Submission {
+            scenario: "traffic".to_string(),
+            set,
+            config: None,
+            tag: tag.to_string(),
+            // a generous wall-clock budget, as an example of per-job quotas
+            quota: QuotaReq {
+                max_wall_ms: Some(60_000),
+                max_events: None,
+            },
+        }))?;
+    }
+
+    // 3. consume the streamed lifecycle until both jobs are done
+    let mut done = 0;
+    while done < 2 {
+        match client.next_event()? {
+            Event::Queued { job, tag } => println!("job {job} [{tag}] queued"),
+            Event::Preparing { job, reused } => println!(
+                "job {job} preparing ({})",
+                if reused { "cache reuse" } else { "fresh prepare" }
+            ),
+            Event::Running { job, events_done } => {
+                println!("job {job} running, {events_done} events done")
+            }
+            Event::Done { job, report } => {
+                done += 1;
+                // the report is the same JSON the batch CLI emits
+                let delivered = report
+                    .get("metrics")
+                    .and_then(|m| m.as_arr())
+                    .map(|rows| rows.len())
+                    .unwrap_or(0);
+                println!("job {job} done ({delivered} metrics)");
+            }
+            Event::Rejected { job, reason, .. } => {
+                anyhow::bail!("job {job:?} rejected: {reason}")
+            }
+            other => println!("{other:?}"),
+        }
+    }
+
+    // 4. ask for server-wide counters, then shut it down cleanly
+    client.send(&Request::Stats)?;
+    if let Event::Stats { body } = client.next_event()? {
+        println!("server stats: {}", body.to_string());
+    }
+    client.send(&Request::Shutdown)?;
+    handle.join()?;
+    println!("server shut down cleanly");
+    Ok(())
+}

@@ -6,7 +6,7 @@
 //! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR8.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR9.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
@@ -20,7 +20,12 @@
 //! cross-domain identity check under faults), and the link-reliability
 //! recovery curve (`reliability_sweep` over loss rates × off/link, with
 //! deliverability pinned at exactly 1.0 whenever the layer is on and a
-//! cross-domain identity check with retransmission timers live). The CI
+//! cross-domain identity check with retransmission timers live), and the
+//! service-mode throughput round (`serve_throughput`: an in-process
+//! `serve` instance driven by the `loadgen` client with 100+ concurrent
+//! mixed-scenario submissions — submissions/s, p50/p95 turnaround,
+//! cache prepared-vs-reused counters, and a byte-identity check of
+//! every served report against the batch `run` path). The CI
 //! `bench-smoke` job re-runs
 //! it with `BSS_BENCH_FAST=1`, fails on any `SKIPPED` row, and validates
 //! the artifact shape with `scripts/validate_bench.py`, so this artifact
@@ -33,6 +38,8 @@ use bss_extoll::coordinator::sweep::{apply_override, SweepRunner};
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::packet::pool;
 use bss_extoll::extoll::torus::TorusSpec;
+use bss_extoll::serve::client::{run_loadgen, LoadgenConfig};
+use bss_extoll::serve::{ServeConfig, Server};
 use bss_extoll::sim::{EventQueue, QueueKind, SyncMode, Time};
 use bss_extoll::util::bench::{eng, fast_mode, BenchSuite, Table};
 use bss_extoll::util::json::Json;
@@ -618,13 +625,94 @@ fn main() {
         "reliable reports diverged across PDES domain counts"
     );
 
+    // ---- 9. service mode: job-server throughput -----------------------------
+    // An in-process `serve` instance (4 workers, 1 MiB cache budget)
+    // driven by the `loadgen` client: 120 mixed-scenario submissions
+    // pipelined down 8 connections. `verify` re-runs every unique
+    // submission through the batch `Scenario::run` path and compares
+    // the served report bytes — the acceptance gate tying service mode
+    // to the repo's determinism invariant. The budget is deliberately
+    // generous here (eviction-under-pressure correctness is pinned in
+    // rust/tests/serve_mode.rs): a thrashing cache would break the
+    // prepared < submissions sharing claim this section tracks.
+    let serve_submissions = 120usize;
+    let serve_connections = 8usize;
+    let serve_budget: u64 = 1 << 20;
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        cache_bytes: serve_budget,
+        max_wall_ms: 0,
+        max_events: 0,
+    })
+    .expect("bind serve bench server");
+    let serve_addr = server.local_addr().to_string();
+    let handle = server.spawn();
+    let outcome = run_loadgen(&LoadgenConfig {
+        addr: serve_addr,
+        submissions: serve_submissions,
+        connections: serve_connections,
+        verify: true,
+        shutdown_after: true,
+        ..LoadgenConfig::default()
+    })
+    .expect("serve loadgen round");
+    handle.join().expect("serve server shutdown");
+    assert_eq!(
+        outcome.completed, serve_submissions as u64,
+        "every serve submission must complete"
+    );
+    assert!(
+        outcome.byte_identical(),
+        "{} served reports differ from the batch path",
+        outcome.mismatches
+    );
+    let serve_json = outcome.to_json();
+    let serve_prepared = serve_json.at(&["cache", "prepared"]).and_then(Json::as_u64);
+    let serve_resident = serve_json
+        .at(&["cache", "resident_bytes"])
+        .and_then(Json::as_u64);
+    if let Some(prepared) = serve_prepared {
+        assert!(
+            prepared < serve_submissions as u64,
+            "cross-submission cache never shared ({prepared} prepares)"
+        );
+    }
+    if let Some(resident) = serve_resident {
+        assert!(
+            resident <= serve_budget,
+            "cache resident bytes {resident} exceed the {serve_budget}-byte budget"
+        );
+    }
+    let mut serve_table = Table::new(
+        "serve throughput (4 workers, 8 connections, 1 MiB cache)",
+        &["submissions", "completed", "subs/s", "p50_us", "p95_us", "prepared/reused"],
+    );
+    serve_table.row(vec![
+        outcome.submitted.to_string(),
+        outcome.completed.to_string(),
+        format!("{:.1}", outcome.subs_per_s()),
+        outcome.turnaround_us.p50().to_string(),
+        outcome.turnaround_us.quantile(0.95).to_string(),
+        format!(
+            "{}/{}",
+            serve_prepared.unwrap_or(0),
+            serve_json.at(&["cache", "reused"]).and_then(Json::as_u64).unwrap_or(0)
+        ),
+    ]);
+    serve_table.print();
+    let serve_section = serve_json
+        .set("workers", 4u64)
+        .set("connections", serve_connections)
+        .set("cache_budget_bytes", serve_budget);
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR8")
+        .set("artifact", "BENCH_PR9")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -682,7 +770,8 @@ fn main() {
                 .set("deterministic_across_domains", rel_deterministic)
                 .set("link_vs_off_at_zero_loss", link_vs_off_at_zero_loss)
                 .set("runs", rel_runs),
-        );
+        )
+        .set("serve_throughput", serve_section);
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the
     // committed full-mode trajectory artifact with fast-mode numbers.

@@ -273,6 +273,24 @@ impl ExperimentConfig {
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
         Self::from_json(&j)
     }
+
+    /// Apply a `"key=v;key=v"` override list onto this config — the CLI
+    /// `--set` form and the service-mode submission `set` field share
+    /// this one parser (keys are the sweep-axis keys of
+    /// [`super::sweep::apply_override`]).
+    pub fn apply_set(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("set entry '{part}' is not key=value"))?;
+            super::sweep::apply_override(self, key.trim(), value.trim())?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +404,20 @@ mod tests {
         assert_eq!(cfg.system.nic.retx.backoff_cap, 2);
         let j = Json::parse(r#"{"reliability": "tcp"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn apply_set_parses_override_lists() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_set("rate_hz=5e6; fan_out=2 ;seed=9").unwrap();
+        assert_eq!(cfg.workload.rate_hz, 5e6);
+        assert_eq!(cfg.workload.fan_out, 2);
+        assert_eq!(cfg.seed, 9);
+        // empty entries are tolerated, malformed ones are not
+        cfg.apply_set("").unwrap();
+        cfg.apply_set(";;").unwrap();
+        assert!(cfg.apply_set("rate_hz").is_err());
+        assert!(cfg.apply_set("no_such_knob=1").is_err());
     }
 
     #[test]

@@ -163,6 +163,17 @@ impl Prepared for MicrocircuitPrepared {
     fn as_any(&self) -> &dyn std::any::Any {
         self
     }
+
+    fn resident_bytes(&self) -> u64 {
+        // the weight matrices dominate; the loaded artifact is a small
+        // constant next to them
+        let weights: usize = self
+            .weights
+            .iter()
+            .map(|w| w.len() * std::mem::size_of::<f32>())
+            .sum();
+        (std::mem::size_of::<MicrocircuitPrepared>() + weights) as u64
+    }
 }
 
 /// End-to-end multi-wafer cortical-microcircuit co-simulation (paper §4).
@@ -434,6 +445,9 @@ fn mc_execute(prep: &MicrocircuitPrepared, cfg: &ExperimentConfig) -> Result<Neu
 
         // 3. advance the fabric to the step boundary
         sim.run_until(t1);
+        // service-mode quota/cancellation checkpoint (no-op in batch
+        // runs); once per neural step is the natural granularity here
+        crate::serve::quota::checkpoint(sim.processed())?;
 
         // 4. drain deliveries into next-step inputs
         for (f, &(_, _, actor, _)) in fpgas.iter().enumerate() {

@@ -106,6 +106,16 @@ use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 pub trait Prepared: Send + Sync + 'static {
     /// Concrete-type escape hatch for [`downcast_prepared`].
     fn as_any(&self) -> &dyn Any;
+
+    /// Approximate resident heap footprint of this resource set, in
+    /// bytes. Feeds the byte-accounted LRU in [`ResourceCache`]; the
+    /// estimate only has to be honest about relative magnitude (weight
+    /// matrices ≫ flow tables), not exact. The default is a nominal
+    /// constant so scenarios without a meaningful estimate still
+    /// participate in eviction accounting.
+    fn resident_bytes(&self) -> u64 {
+        1024
+    }
 }
 
 /// Recover the concrete prepared type inside [`Scenario::execute`].
@@ -234,8 +244,8 @@ pub trait Scenario: Send + Sync {
 
 // ---- resource cache ------------------------------------------------------
 
-/// Cache hit/miss counters of a [`ResourceCache`] (or a delta between
-/// two snapshots — see [`CacheStats::since`]).
+/// Cache counters of a [`ResourceCache`] (or a delta between two
+/// snapshots — see [`CacheStats::since`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// `get_or_prepare` calls served from an existing (or in-flight)
@@ -243,14 +253,23 @@ pub struct CacheStats {
     pub hits: u64,
     /// Calls that had to run [`Scenario::prepare`].
     pub misses: u64,
+    /// Entries evicted by the byte-accounted LRU (0 on an unbounded
+    /// cache).
+    pub evictions: u64,
+    /// Bytes currently accounted resident (a snapshot, not a counter).
+    pub resident_bytes: u64,
 }
 
 impl CacheStats {
     /// The counter delta since an `earlier` snapshot of the same cache.
+    /// `resident_bytes` is a point-in-time gauge, so the later
+    /// snapshot's value is kept as-is.
     pub fn since(self, earlier: CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits - earlier.hits,
             misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            resident_bytes: self.resident_bytes,
         }
     }
 }
@@ -301,19 +320,72 @@ impl Slot {
     }
 }
 
+/// One resident cache entry: the shared latch plus the LRU/byte
+/// bookkeeping. `bytes` is 0 while the slot is still `Pending` —
+/// eviction never selects a pending entry, so an in-flight prepare can
+/// never be yanked out from under its waiters.
+struct Entry {
+    slot: Arc<Slot>,
+    last_used: u64,
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    slots: HashMap<CacheKey, Entry>,
+    /// Monotonic access clock for LRU ordering (bumped per lookup).
+    tick: u64,
+    /// Sum of `Entry::bytes` over all resident entries.
+    resident_bytes: u64,
+}
+
 /// Shared cache of prepared scenario resources, keyed by
 /// [`Scenario::cache_key`]. Contention-safe: callers on any number of
 /// threads get one prepare per distinct key (see [`Slot`]).
+///
+/// ## Eviction
+///
+/// With a byte budget ([`ResourceCache::with_budget`]) the cache is a
+/// byte-accounted LRU: each successful prepare charges
+/// [`Prepared::resident_bytes`], and whenever the accounted total
+/// exceeds the budget the least-recently-used *ready* entries are
+/// dropped until it fits (an entry larger than the whole budget is
+/// evicted immediately after insertion, so the accounted total never
+/// stays over budget). Callers holding an `Arc` to an evicted entry
+/// keep using it safely; a later request for the key simply re-runs
+/// prepare. Re-prepare is byte-identical by the cache-key contract —
+/// equal keys promise interchangeable resources — so eviction is
+/// invisible to results, only to timing (gated in
+/// `rust/tests/serve_mode.rs`).
 #[derive(Default)]
 pub struct ResourceCache {
-    slots: Mutex<HashMap<CacheKey, Arc<Slot>>>,
+    inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// LRU byte budget; `None` = unbounded (the batch/sweep default).
+    budget: Option<u64>,
 }
 
 impl ResourceCache {
+    /// An unbounded cache (no eviction) — the batch CLI and sweep
+    /// runner default.
     pub fn new() -> ResourceCache {
         ResourceCache::default()
+    }
+
+    /// A byte-budgeted cache. `budget_bytes == 0` means unbounded
+    /// (mirrors the `--cache-bytes 0` CLI spelling).
+    pub fn with_budget(budget_bytes: u64) -> ResourceCache {
+        ResourceCache {
+            budget: (budget_bytes > 0).then_some(budget_bytes),
+            ..ResourceCache::default()
+        }
+    }
+
+    /// The configured byte budget (`None` = unbounded).
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
     }
 
     /// Prepared resources for `cfg`, building them via
@@ -327,12 +399,24 @@ impl ResourceCache {
     ) -> Result<Arc<dyn Prepared>> {
         let key = scenario.cache_key(cfg);
         let (slot, owner) = {
-            let mut slots = self.slots.lock().expect("cache map poisoned");
-            match slots.get(&key) {
-                Some(slot) => (slot.clone(), false),
+            let mut inner = self.inner.lock().expect("cache map poisoned");
+            inner.tick += 1;
+            let tick = inner.tick;
+            match inner.slots.get_mut(&key) {
+                Some(entry) => {
+                    entry.last_used = tick;
+                    (entry.slot.clone(), false)
+                }
                 None => {
                     let slot = Arc::new(Slot::new());
-                    slots.insert(key.clone(), slot.clone());
+                    inner.slots.insert(
+                        key.clone(),
+                        Entry {
+                            slot: slot.clone(),
+                            last_used: tick,
+                            bytes: 0,
+                        },
+                    );
                     (slot, true)
                 }
             }
@@ -364,8 +448,8 @@ impl ResourceCache {
                     *state = SlotState::Failed("prepare panicked".to_string());
                 }
                 self.slot.ready.notify_all();
-                if let Ok(mut slots) = self.cache.slots.lock() {
-                    slots.remove(self.key);
+                if let Ok(mut inner) = self.cache.inner.lock() {
+                    inner.slots.remove(self.key);
                 }
             }
         }
@@ -382,30 +466,81 @@ impl ResourceCache {
         match prepared {
             Ok(prepared) => {
                 slot.fulfill(SlotState::Ready(prepared.clone()));
+                self.account_and_evict(&key, prepared.resident_bytes().max(1));
                 Ok(prepared)
             }
             Err(e) => {
                 slot.fulfill(SlotState::Failed(format!("{e:#}")));
-                self.slots
+                self.inner
                     .lock()
                     .expect("cache map poisoned")
+                    .slots
                     .remove(&key);
                 Err(e)
             }
         }
     }
 
-    /// Cumulative hit/miss counters (snapshot).
+    /// Charge a freshly readied entry's bytes, then evict
+    /// least-recently-used ready entries while the accounted total
+    /// exceeds the budget. The just-inserted entry is itself a
+    /// candidate (it is the LRU victim when it alone exceeds the
+    /// budget), which keeps `resident_bytes ≤ budget` an invariant.
+    fn account_and_evict(&self, key: &CacheKey, bytes: u64) {
+        let mut inner = self.inner.lock().expect("cache map poisoned");
+        // Still resident (failure is the only other remover, and this
+        // entry succeeded): charge its real footprint.
+        match inner.slots.get_mut(key) {
+            Some(entry) => entry.bytes = bytes,
+            None => return,
+        }
+        inner.resident_bytes += bytes;
+        let Some(budget) = self.budget else { return };
+        while inner.resident_bytes > budget {
+            // LRU among ready entries only (bytes > 0 ⇔ accounted ⇔
+            // the slot was fulfilled Ready).
+            let victim = inner
+                .slots
+                .iter()
+                .filter(|(_, e)| e.bytes > 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            let freed = inner.slots.remove(&victim).expect("victim vanished").bytes;
+            inner.resident_bytes -= freed;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cumulative counters plus the resident-byte gauge (snapshot).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self
+                .inner
+                .lock()
+                .expect("cache map poisoned")
+                .resident_bytes,
         }
     }
 
     /// Number of resident prepared entries.
     pub fn len(&self) -> usize {
-        self.slots.lock().expect("cache map poisoned").len()
+        self.inner.lock().expect("cache map poisoned").slots.len()
+    }
+
+    /// Whether `key` is resident (or being prepared) right now. Only a
+    /// point-in-time answer — another thread may evict or insert the
+    /// key immediately after — so use it for labels/telemetry, never
+    /// for correctness decisions.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.inner
+            .lock()
+            .expect("cache map poisoned")
+            .slots
+            .contains_key(key)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -475,6 +610,11 @@ pub struct AnalyzePrepared {
 impl Prepared for AnalyzePrepared {
     fn as_any(&self) -> &dyn Any {
         self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (std::mem::size_of::<AnalyzePrepared>()
+            + self.flows.len() * std::mem::size_of::<Flow>()) as u64
     }
 }
 
@@ -722,14 +862,17 @@ mod tests {
         let pa = cache.get_or_prepare(s, &a).unwrap();
         let pb = cache.get_or_prepare(s, &b).unwrap();
         assert!(Arc::ptr_eq(&pa, &pb), "same key must share one Prepared");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 1, 0));
+        assert!(st.resident_bytes > 0, "ready entries must be accounted");
         assert_eq!(cache.len(), 1);
 
         let mut c = small();
         c.workload.fan_out = 2; // key changes
         let pc = cache.get_or_prepare(s, &c).unwrap();
         assert!(!Arc::ptr_eq(&pa, &pc));
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 2, 0));
         assert_eq!(cache.len(), 2);
     }
 
@@ -791,6 +934,138 @@ mod tests {
         // or a "shared prepare failed" error (waiters)
         assert!(outcomes.iter().all(|o| o.is_err()));
         assert!(cache.is_empty(), "panicked key must be vacated");
+    }
+
+    /// Fixed-footprint scenario for deterministic eviction tests: every
+    /// prepared entry charges exactly `BYTES`, keyed by `cfg.seed`.
+    struct BytePrepared(u64);
+    impl Prepared for BytePrepared {
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn resident_bytes(&self) -> u64 {
+            BYTE_SCENARIO_BYTES
+        }
+    }
+    const BYTE_SCENARIO_BYTES: u64 = 100;
+    struct ByteScenario;
+    impl Scenario for ByteScenario {
+        fn name(&self) -> &'static str {
+            "byte_test"
+        }
+        fn about(&self) -> &'static str {
+            "eviction test fixture"
+        }
+        fn metrics(&self) -> &'static [MetricDecl] {
+            &[MetricDecl::count("seed", "1")]
+        }
+        fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+            CacheKey::new("byte_test").field("seed", cfg.seed)
+        }
+        fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+            Ok(Arc::new(BytePrepared(cfg.seed)))
+        }
+        fn execute(&self, prepared: &dyn Prepared, _cfg: &ExperimentConfig) -> Result<Report> {
+            let p: &BytePrepared = downcast_prepared(prepared, self.name())?;
+            let mut r = Report::with_schema(self.name(), self.metrics());
+            r.push_unit("seed", p.0, "1");
+            Ok(r)
+        }
+    }
+
+    fn seeded(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn eviction_respects_byte_budget() {
+        // budget fits two 100-byte entries; a third insert evicts the LRU
+        let cache = ResourceCache::with_budget(2 * BYTE_SCENARIO_BYTES + 50);
+        assert_eq!(cache.budget(), Some(250));
+        for seed in 1..=5u64 {
+            cache.get_or_prepare(&ByteScenario, &seeded(seed)).unwrap();
+            assert!(
+                cache.stats().resident_bytes <= 250,
+                "resident bytes exceeded budget"
+            );
+        }
+        let st = cache.stats();
+        assert_eq!((st.misses, st.evictions), (5, 3));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(st.resident_bytes, 2 * BYTE_SCENARIO_BYTES);
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let cache = ResourceCache::with_budget(2 * BYTE_SCENARIO_BYTES);
+        cache.get_or_prepare(&ByteScenario, &seeded(1)).unwrap(); // miss
+        cache.get_or_prepare(&ByteScenario, &seeded(2)).unwrap(); // miss
+        cache.get_or_prepare(&ByteScenario, &seeded(1)).unwrap(); // hit: 1 now MRU
+        cache.get_or_prepare(&ByteScenario, &seeded(3)).unwrap(); // miss: evicts 2
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 3, 1));
+        // 1 survived (hit), 2 was the LRU victim (miss on re-request)
+        cache.get_or_prepare(&ByteScenario, &seeded(1)).unwrap();
+        assert_eq!(cache.stats().hits, 2, "key 1 should have stayed resident");
+        cache.get_or_prepare(&ByteScenario, &seeded(2)).unwrap();
+        assert_eq!(cache.stats().misses, 4, "key 2 should have been evicted");
+    }
+
+    #[test]
+    fn oversized_entry_never_leaves_accounting_over_budget() {
+        // one entry alone exceeds the budget: it is admitted (the caller
+        // holds the Arc) but immediately evicted from the accounting
+        let cache = ResourceCache::with_budget(BYTE_SCENARIO_BYTES / 2);
+        let p = cache.get_or_prepare(&ByteScenario, &seeded(7)).unwrap();
+        let st = cache.stats();
+        assert_eq!((st.misses, st.evictions), (1, 1));
+        assert_eq!(st.resident_bytes, 0);
+        assert!(cache.is_empty());
+        // the caller's Arc stays valid regardless
+        let r = ByteScenario.execute(p.as_ref(), &seeded(7)).unwrap();
+        assert_eq!(r.get_count("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn eviction_then_reprepare_is_byte_identical() {
+        // the CacheKey ⇒ Prepared interchangeability contract in action:
+        // evicting a real fabric plan and re-preparing it must change
+        // nothing about the resulting report bytes
+        let s = find("traffic").unwrap();
+        let cfg = small();
+        let unlimited = ResourceCache::new();
+        let p1 = unlimited.get_or_prepare(s, &cfg).unwrap();
+        let baseline = s.execute(p1.as_ref(), &cfg).unwrap();
+
+        let tiny = ResourceCache::with_budget(1);
+        let p2 = tiny.get_or_prepare(s, &cfg).unwrap();
+        assert!(tiny.is_empty(), "tiny budget must evict immediately");
+        let evicted_run = s.execute(p2.as_ref(), &cfg).unwrap();
+        let p3 = tiny.get_or_prepare(s, &cfg).unwrap();
+        assert!(!Arc::ptr_eq(&p2, &p3), "re-request must re-prepare");
+        let reprepared_run = s.execute(p3.as_ref(), &cfg).unwrap();
+        assert_eq!(tiny.stats().misses, 2);
+
+        let want = baseline.to_json().to_string();
+        assert_eq!(want, evicted_run.to_json().to_string());
+        assert_eq!(want, reprepared_run.to_json().to_string());
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let cache = ResourceCache::new();
+        assert_eq!(cache.budget(), None);
+        for seed in 0..16u64 {
+            cache.get_or_prepare(&ByteScenario, &seeded(seed)).unwrap();
+        }
+        let st = cache.stats();
+        assert_eq!(st.evictions, 0);
+        assert_eq!(cache.len(), 16);
+        assert_eq!(st.resident_bytes, 16 * BYTE_SCENARIO_BYTES);
+        // with_budget(0) is the same spelling of "unbounded"
+        assert_eq!(ResourceCache::with_budget(0).budget(), None);
     }
 
     #[test]

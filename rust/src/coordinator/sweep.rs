@@ -233,7 +233,8 @@ pub struct SweepResult {
 
 impl SweepResult {
     /// Aggregate JSON artifact:
-    /// `{"scenario":.., "n_points":.., "cache":{"hits":..,"misses":..},
+    /// `{"scenario":.., "n_points":..,
+    ///   "cache":{"hits":..,"misses":..,"evictions":..,"resident_bytes":..},
     ///   "points":[{"params":{..},"metrics":{..}},..]}`.
     pub fn to_json(&self) -> Json {
         let mut pts = Json::arr();
@@ -258,7 +259,9 @@ impl SweepResult {
                 "cache",
                 Json::obj()
                     .set("hits", self.cache.hits)
-                    .set("misses", self.cache.misses),
+                    .set("misses", self.cache.misses)
+                    .set("evictions", self.cache.evictions)
+                    .set("resident_bytes", self.cache.resident_bytes),
             )
             .set("points", pts)
     }
@@ -699,6 +702,11 @@ mod tests {
         let j = result.to_json();
         assert_eq!(j.at(&["cache", "misses"]).unwrap().as_u64(), Some(1));
         assert_eq!(j.at(&["cache", "hits"]).unwrap().as_u64(), Some(1));
+        assert_eq!(j.at(&["cache", "evictions"]).unwrap().as_u64(), Some(0));
+        assert!(
+            j.at(&["cache", "resident_bytes"]).unwrap().as_u64().unwrap() > 0,
+            "resident bytes of the shared plan must be surfaced"
+        );
     }
 
     #[test]

@@ -177,6 +177,21 @@ impl Prepared for FabricPlan {
     fn as_any(&self) -> &dyn std::any::Any {
         self
     }
+
+    fn resident_bytes(&self) -> u64 {
+        let per_fpga: usize = self
+            .per_fpga
+            .iter()
+            .map(|fp| {
+                std::mem::size_of::<FpgaPlan>()
+                    + fp.sources.len() * std::mem::size_of::<(u8, u16)>()
+                    + fp.tx.len() * std::mem::size_of::<(u8, u16, TxEntry)>()
+            })
+            .sum();
+        (std::mem::size_of::<FabricPlan>()
+            + per_fpga
+            + self.rx.len() * std::mem::size_of::<(usize, u16, RxEntry)>()) as u64
+    }
 }
 
 /// The planning half of a fabric-driven scenario. Implementors compute
@@ -306,7 +321,7 @@ pub(crate) fn run_fabric_experiment_with(
     let sim = if dm.n_domains() > 1 {
         run_loop_partitioned(sim, &sys, cfg, &dm, fault.as_deref())?
     } else {
-        run_loop_serial(sim, &sys, cfg)
+        run_loop_serial(sim, &sys, cfg)?
     };
 
     let report = collect_traffic(&sim, &sys, cfg);
@@ -314,11 +329,40 @@ pub(crate) fn run_fabric_experiment_with(
 }
 
 /// The classic single-threaded run loop: workload window + drain tail.
-fn run_loop_serial(mut sim: Sim<Msg>, sys: &System, cfg: &ExperimentConfig) -> Sim<Msg> {
-    sim.run_until(cfg.workload.duration);
+///
+/// Under service mode (a [`crate::serve::quota`] job control installed
+/// on this thread) the workload window is sliced into cooperative
+/// checkpoint intervals; with no control installed the loop is the
+/// original two `run_until` calls. Either way the DES event order is
+/// untouched — `run_until(a); run_until(b)` processes exactly the
+/// events of `run_until(b)` — so reports stay byte-identical.
+fn run_loop_serial(
+    mut sim: Sim<Msg>,
+    sys: &System,
+    cfg: &ExperimentConfig,
+) -> Result<Sim<Msg>> {
+    run_windowed(&mut sim, cfg.workload.duration)?;
     sys.flush_all(&mut sim);
     sim.run_until(cfg.workload.duration + Time::from_ms(1));
-    sim
+    crate::serve::quota::checkpoint(sim.processed())?;
+    Ok(sim)
+}
+
+/// Advance `sim` to `end`, stopping at quota checkpoints when a
+/// service-mode job control is active on this thread (no-op slicing
+/// otherwise).
+fn run_windowed(sim: &mut Sim<Msg>, end: Time) -> Result<()> {
+    if !crate::serve::quota::is_active() {
+        sim.run_until(end);
+        return Ok(());
+    }
+    const SLICES: u64 = 64;
+    for i in 1..=SLICES {
+        let t = (end.ps() as u128 * i as u128 / SLICES as u128) as u64;
+        sim.run_until(Time::from_ps(t));
+        crate::serve::quota::checkpoint(sim.processed())?;
+    }
+    Ok(())
 }
 
 /// The same run loop over a torus-partitioned [`Partition`]: identical
@@ -360,12 +404,17 @@ fn run_loop_partitioned(
         part = part.barrier_free();
     }
     part.run_until(cfg.workload.duration);
+    // coarse quota checkpoints only: the partitioned window runs on its
+    // own worker threads, so service mode checks between phases rather
+    // than slicing inside them (cancellation latency = one window)
+    crate::serve::quota::checkpoint(part.processed())?;
     // experiment barrier: same targets, same order as System::flush_all,
     // so the external-schedule merge keys match the serial run's
     for id in sys.flush_targets().collect::<Vec<_>>() {
         part.schedule(cfg.workload.duration, id, Msg::Timer(TIMER_FLUSH_ALL));
     }
     part.run_until(cfg.workload.duration + Time::from_ms(1));
+    crate::serve::quota::checkpoint(part.processed())?;
     Ok(part.into_sim())
 }
 

@@ -43,6 +43,7 @@
 //! | [`runtime`] | artifact loader + shard-step execution backend |
 //! | [`neuro`] | LIF shard state bridging runtime artifacts ⇄ the simulation |
 //! | [`coordinator`] | config, `Scenario` trait + registry, sweep runner, reports |
+//! | [`serve`] | experiment service mode: TCP job server, queue, worker pool, quotas, loadgen |
 
 pub mod coordinator;
 pub mod extoll;
@@ -52,6 +53,7 @@ pub mod fpga;
 pub mod host;
 pub mod neuro;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod wafer;

@@ -8,6 +8,8 @@ use anyhow::Result;
 use bss_extoll::coordinator::scenario;
 use bss_extoll::coordinator::sweep::{apply_override, SweepRunner};
 use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::serve::client::{run_loadgen, LoadgenConfig};
+use bss_extoll::serve::{ServeConfig, Server};
 use bss_extoll::util::args::ArgSpec;
 use bss_extoll::util::bench::Table;
 
@@ -21,6 +23,8 @@ COMMANDS:
   run <scenario>  run a registered experiment scenario
   run --list      list registered scenarios
   sweep           run one scenario over a parameter grid (JSON/CSV out)
+  serve           experiment job server (TCP JSON-lines, shared cache)
+  loadgen         drive a serve instance with concurrent submissions
   info            runtime platform + artifact status
 
 DEPRECATED ALIASES (kept for one release):
@@ -60,6 +64,13 @@ so deliverability returns to 1.0 below the retry limit.
 Histogram metrics (latency_dist, reliability_sweep) render as percentile
 summaries in CSV with full buckets in the JSON artifact.
 Every knob is documented with tuning guidance in docs/TUNING.md.
+
+Service mode (docs/ARCHITECTURE.md §7): `serve` keeps one shared,
+byte-budgeted resource cache across all client submissions and streams
+queued/preparing/running/done status lines back per job, e.g.
+  bss-extoll serve --addr 127.0.0.1:7411 --workers 4 --cache-bytes 64000000
+  bss-extoll loadgen --addr 127.0.0.1:7411 --submissions 200 --verify
+  bss-extoll serve --smoke 40        # self-contained smoke round (CI)
 ";
 
 fn main() {
@@ -83,6 +94,8 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "traffic" => cmd_traffic(rest),
         "microcircuit" => cmd_microcircuit(rest),
         "analyze" => cmd_analyze(rest),
@@ -109,19 +122,10 @@ fn load_config(
     }
 }
 
-/// Apply a `--set "key=v;key=v"` override list onto a config.
+/// Apply a `--set "key=v;key=v"` override list onto a config (the
+/// shared parser also used by service-mode submissions).
 fn apply_set(cfg: &mut ExperimentConfig, spec: &str) -> Result<()> {
-    for part in spec.split(';') {
-        let part = part.trim();
-        if part.is_empty() {
-            continue;
-        }
-        let (key, value) = part
-            .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--set entry '{part}' is not key=value"))?;
-        apply_override(cfg, key.trim(), value.trim())?;
-    }
-    Ok(())
+    cfg.apply_set(spec)
 }
 
 fn list_scenarios() {
@@ -220,8 +224,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         })?
     };
     eprintln!(
-        "sweep cache: {} prepared, {} reused",
-        result.cache.misses, result.cache.hits
+        "sweep cache: {} prepared, {} reused, {} evicted, {} resident bytes",
+        result.cache.misses, result.cache.hits, result.cache.evictions,
+        result.cache.resident_bytes
     );
     if !p.get("out").is_empty() {
         std::fs::write(p.get("out"), result.to_json().pretty())?;
@@ -236,6 +241,123 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     } else {
         result.table().print();
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("serve", "experiment job server (TCP JSON-lines)")
+        .opt("addr", "127.0.0.1:7411", "listen address (port 0 = ephemeral)")
+        .opt("workers", "2", "worker-pool size")
+        .opt(
+            "cache-bytes",
+            "0",
+            "resource-cache byte budget, LRU-evicted (0 = unbounded)",
+        )
+        .opt("max-wall-ms", "0", "per-job wall-clock cap in ms (0 = none)")
+        .opt("max-events", "0", "per-job simulated-event cap (0 = none)")
+        .opt(
+            "smoke",
+            "0",
+            "self-contained smoke mode: bind an ephemeral port, run one \
+             in-process loadgen round of N submissions with verification, \
+             shut down (exit 0 = healthy)",
+        );
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let smoke = p.try_u64("smoke").map_err(|e| anyhow::anyhow!("{}", e.0))? as usize;
+    let cfg = ServeConfig {
+        addr: if smoke > 0 {
+            "127.0.0.1:0".to_string()
+        } else {
+            p.get("addr").to_string()
+        },
+        workers: p.try_u64("workers").map_err(|e| anyhow::anyhow!("{}", e.0))? as usize,
+        cache_bytes: p
+            .try_u64("cache-bytes")
+            .map_err(|e| anyhow::anyhow!("{}", e.0))?,
+        max_wall_ms: p
+            .try_u64("max-wall-ms")
+            .map_err(|e| anyhow::anyhow!("{}", e.0))?,
+        max_events: p
+            .try_u64("max-events")
+            .map_err(|e| anyhow::anyhow!("{}", e.0))?,
+    };
+    let server = Server::bind(cfg)?;
+    eprintln!("serve: listening on {}", server.local_addr());
+    if smoke == 0 {
+        return server.run();
+    }
+    // smoke mode: one verified in-process loadgen round, then shutdown
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn();
+    let outcome = run_loadgen(&LoadgenConfig {
+        addr,
+        submissions: smoke,
+        verify: true,
+        shutdown_after: true,
+        ..LoadgenConfig::default()
+    })?;
+    handle.join()?;
+    println!("{}", outcome.to_json().pretty());
+    anyhow::ensure!(
+        outcome.completed == outcome.submitted,
+        "smoke: {} of {} submissions completed",
+        outcome.completed,
+        outcome.submitted
+    );
+    anyhow::ensure!(
+        outcome.byte_identical(),
+        "smoke: {} served reports differ from the batch path",
+        outcome.mismatches
+    );
+    eprintln!(
+        "serve smoke: {} submissions ok, reports byte-identical, clean shutdown",
+        outcome.completed
+    );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("loadgen", "drive a serve instance with concurrent submissions")
+        .opt("addr", "127.0.0.1:7411", "server address")
+        .opt("submissions", "120", "total submissions")
+        .opt("connections", "8", "concurrent pipelined connections")
+        .opt(
+            "scenarios",
+            "traffic,burst,hotspot",
+            "comma-separated scenario names cycled across submissions",
+        )
+        .opt("seed", "1", "arrival/parameter variation seed")
+        .opt(
+            "base-set",
+            bss_extoll::serve::client::default_base_set(),
+            "overrides applied to every submission",
+        )
+        .flag(
+            "verify",
+            "re-run each unique submission via the batch path and compare bytes",
+        )
+        .flag("shutdown", "send shutdown to the server when done");
+    let p = spec.parse(args).map_err(|e| anyhow::anyhow!("{}", e.0))?;
+    let outcome = run_loadgen(&LoadgenConfig {
+        addr: p.get("addr").to_string(),
+        submissions: p
+            .try_u64("submissions")
+            .map_err(|e| anyhow::anyhow!("{}", e.0))? as usize,
+        connections: p
+            .try_u64("connections")
+            .map_err(|e| anyhow::anyhow!("{}", e.0))? as usize,
+        scenarios: p
+            .get("scenarios")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        seed: p.try_u64("seed").map_err(|e| anyhow::anyhow!("{}", e.0))?,
+        base_set: p.get("base-set").to_string(),
+        verify: p.flag("verify"),
+        shutdown_after: p.flag("shutdown"),
+    })?;
+    println!("{}", outcome.to_json().pretty());
     Ok(())
 }
 

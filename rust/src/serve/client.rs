@@ -1,0 +1,377 @@
+//! Programmatic service client and the `loadgen` throughput driver.
+//!
+//! [`Client`] is the minimal blocking client: connect, send
+//! [`Request`]s, read streamed [`Event`]s one line at a time (see
+//! `examples/serve_client.rs` for end-to-end usage).
+//!
+//! [`run_loadgen`] replays hundreds of concurrent submissions against a
+//! server from multiple pipelined connections with a seeded arrival
+//! process — the load generator behind `bss-extoll loadgen`, the
+//! `serve_throughput` bench section and `serve --smoke`. With
+//! `verify: true` it re-runs every unique submission through the batch
+//! `Scenario::run` path in-process and checks the served reports
+//! byte-identical — the acceptance gate tying service mode to the
+//! repo's determinism invariant.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator;
+use crate::serve::protocol::{Event, QuotaReq, Request, Submission};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// Minimal blocking JSON-lines client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone().context("clone stream")?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Send one request line.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("send request")?;
+        Ok(())
+    }
+
+    /// Block for the next status event (skips blank lines; errors on
+    /// EOF).
+    pub fn next_event(&mut self) -> Result<Event> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line).context("read event")? == 0 {
+                bail!("server closed the connection");
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            return Event::parse(trimmed);
+        }
+    }
+}
+
+/// Load-generator parameters (CLI flags of `bss-extoll loadgen`).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address to drive.
+    pub addr: String,
+    /// Total submissions across all connections.
+    pub submissions: usize,
+    /// Concurrent pipelined connections.
+    pub connections: usize,
+    /// Scenario names cycled across submissions.
+    pub scenarios: Vec<String>,
+    /// Seed of the arrival-jitter / parameter-variation process.
+    pub seed: u64,
+    /// Overrides applied to every submission (shrinks the default
+    /// machine so a single run is a few milliseconds).
+    pub base_set: String,
+    /// Re-run every unique submission via the batch path in-process
+    /// and compare the served reports byte-for-byte.
+    pub verify: bool,
+    /// Send `shutdown` once done (used by `serve --smoke`).
+    pub shutdown_after: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: String::new(),
+            submissions: 120,
+            connections: 8,
+            scenarios: vec!["traffic".into(), "burst".into(), "hotspot".into()],
+            seed: 1,
+            base_set: default_base_set().to_string(),
+            verify: false,
+            shutdown_after: false,
+        }
+    }
+}
+
+/// The default `--base-set`: a 2-wafer machine and a 200 µs window, so
+/// one submission costs milliseconds, not seconds.
+pub fn default_base_set() -> &'static str {
+    "n_wafers=2;torus=2x2x1;fpgas_per_wafer=4;concentrators_per_wafer=2;\
+     sources_per_fpga=8;duration_s=0.0002;rate_hz=2e6"
+}
+
+/// Aggregated result of one loadgen round.
+pub struct LoadgenOutcome {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
+    /// Submit-to-done turnaround per completed job, in µs.
+    pub turnaround_us: Histogram,
+    pub wall: Duration,
+    /// Unique (scenario, set) pairs re-run locally for verification
+    /// (0 when `verify` was off).
+    pub verified: u64,
+    /// Served reports that differed from the batch path (must be 0).
+    pub mismatches: u64,
+    /// Final server cache counters (`stats` event body).
+    pub cache: Option<Json>,
+}
+
+impl LoadgenOutcome {
+    pub fn subs_per_s(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Whether every verified report matched the batch path
+    /// byte-for-byte (vacuously true when `verify` was off).
+    pub fn byte_identical(&self) -> bool {
+        self.mismatches == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("cancelled", self.cancelled)
+            .set("wall_s", self.wall.as_secs_f64())
+            .set("subs_per_s", self.subs_per_s())
+            .set("turnaround_p50_us", self.turnaround_us.p50())
+            .set("turnaround_p95_us", self.turnaround_us.quantile(0.95))
+            .set("verified", self.verified)
+            .set("mismatches", self.mismatches)
+            .set("reports_byte_identical", self.byte_identical());
+        if let Some(cache) = &self.cache {
+            if let Some(c) = cache.get("cache") {
+                j = j.set("cache", c.clone());
+            }
+        }
+        j
+    }
+}
+
+/// What one connection thread brings home.
+struct ConnResult {
+    completed: u64,
+    rejected: u64,
+    cancelled: u64,
+    turnarounds_us: Vec<u64>,
+    /// (scenario, set, served report JSON) per completed job.
+    reports: Vec<(String, String, String)>,
+}
+
+/// One planned submission.
+#[derive(Clone)]
+struct PlannedSub {
+    scenario: String,
+    set: String,
+    /// Pre-send pause in µs (seeded arrival process).
+    gap_us: u64,
+}
+
+/// Drive one loadgen round against a running server.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenOutcome> {
+    if cfg.submissions == 0 || cfg.scenarios.is_empty() {
+        bail!("loadgen needs at least one submission and one scenario");
+    }
+    let connections = cfg.connections.clamp(1, cfg.submissions);
+
+    // Plan all submissions up-front (deterministic given the seed):
+    // scenarios cycle, the seed knob varies over a small pool so
+    // distinct cache keys stay far below the submission count, and
+    // arrivals get a small exponential-ish gap.
+    let mut rng = Rng::new(cfg.seed);
+    let plan: Vec<PlannedSub> = (0..cfg.submissions)
+        .map(|i| {
+            let scenario = cfg.scenarios[i % cfg.scenarios.len()].clone();
+            let seed = 1 + rng.below(3);
+            let rate_scale = 1 + rng.below(2);
+            let set = format!(
+                "{};seed={};rate_hz={}e6",
+                cfg.base_set, seed, rate_scale
+            );
+            PlannedSub {
+                scenario,
+                set,
+                gap_us: rng.below(500),
+            }
+        })
+        .collect();
+
+    let started = Instant::now();
+    let results: Vec<ConnResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                // round-robin striping of the plan over connections
+                let mine: Vec<(usize, PlannedSub)> = plan
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % connections == c)
+                    .map(|(i, p)| (i, p.clone()))
+                    .collect();
+                let addr = cfg.addr.clone();
+                s.spawn(move || drive_connection(&addr, &mine))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen connection thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = started.elapsed();
+
+    let mut outcome = LoadgenOutcome {
+        submitted: cfg.submissions as u64,
+        completed: 0,
+        rejected: 0,
+        cancelled: 0,
+        turnaround_us: Histogram::new(),
+        wall,
+        verified: 0,
+        mismatches: 0,
+        cache: None,
+    };
+    let mut reports = Vec::new();
+    for r in results {
+        outcome.completed += r.completed;
+        outcome.rejected += r.rejected;
+        outcome.cancelled += r.cancelled;
+        for t in r.turnarounds_us {
+            outcome.turnaround_us.record(t);
+        }
+        reports.extend(r.reports);
+    }
+
+    if cfg.verify {
+        let (verified, mismatches) = verify_reports(&reports)?;
+        outcome.verified = verified;
+        outcome.mismatches = mismatches;
+    }
+
+    // Final counters (and optional shutdown) over a fresh connection.
+    let mut client = Client::connect(&cfg.addr)?;
+    client.send(&Request::Stats)?;
+    if let Event::Stats { body } = client.next_event()? {
+        outcome.cache = Some(body);
+    }
+    if cfg.shutdown_after {
+        client.send(&Request::Shutdown)?;
+        loop {
+            match client.next_event() {
+                Ok(Event::Bye) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+    }
+    Ok(outcome)
+}
+
+/// Pipeline `mine` down one connection: send everything up-front (with
+/// the planned gaps), then read events until every submission reached a
+/// terminal status.
+fn drive_connection(addr: &str, mine: &[(usize, PlannedSub)]) -> Result<ConnResult> {
+    let mut client = Client::connect(addr)?;
+    let mut sent_at: HashMap<String, Instant> = HashMap::new();
+    for (idx, sub) in mine {
+        if sub.gap_us > 0 {
+            std::thread::sleep(Duration::from_micros(sub.gap_us));
+        }
+        let tag = format!("lg-{idx}");
+        sent_at.insert(tag.clone(), Instant::now());
+        client.send(&Request::Submit(Submission {
+            scenario: sub.scenario.clone(),
+            set: sub.set.clone(),
+            config: None,
+            tag,
+            quota: QuotaReq::default(),
+        }))?;
+    }
+
+    let by_tag: HashMap<String, &PlannedSub> = mine
+        .iter()
+        .map(|(idx, sub)| (format!("lg-{idx}"), sub))
+        .collect();
+    let mut job_tag: HashMap<u64, String> = HashMap::new();
+    let mut result = ConnResult {
+        completed: 0,
+        rejected: 0,
+        cancelled: 0,
+        turnarounds_us: Vec::new(),
+        reports: Vec::new(),
+    };
+    let mut terminal = 0usize;
+    while terminal < mine.len() {
+        match client.next_event()? {
+            Event::Queued { job, tag } => {
+                job_tag.insert(job, tag);
+            }
+            Event::Preparing { .. } | Event::Running { .. } => {}
+            Event::Done { job, report } => {
+                terminal += 1;
+                result.completed += 1;
+                let Some(tag) = job_tag.get(&job) else {
+                    bail!("done for unknown job {job}");
+                };
+                if let Some(at) = sent_at.get(tag) {
+                    result
+                        .turnarounds_us
+                        .push(at.elapsed().as_micros() as u64);
+                }
+                let sub = by_tag[tag.as_str()];
+                result.reports.push((
+                    sub.scenario.clone(),
+                    sub.set.clone(),
+                    report.to_string(),
+                ));
+            }
+            Event::Rejected { .. } => {
+                terminal += 1;
+                result.rejected += 1;
+            }
+            Event::Cancelled { .. } => {
+                terminal += 1;
+                result.cancelled += 1;
+            }
+            Event::Stats { .. } | Event::Bye => {}
+            Event::Error { reason } => bail!("server error: {reason}"),
+        }
+    }
+    Ok(result)
+}
+
+/// Re-run every unique (scenario, set) through the batch path and count
+/// served reports that differ byte-for-byte.
+fn verify_reports(reports: &[(String, String, String)]) -> Result<(u64, u64)> {
+    let mut expected: HashMap<(String, String), String> = HashMap::new();
+    let mut mismatches = 0u64;
+    for (scenario_name, set, served) in reports {
+        let key = (scenario_name.clone(), set.clone());
+        if !expected.contains_key(&key) {
+            let scenario = coordinator::find(scenario_name)
+                .with_context(|| format!("unknown scenario '{scenario_name}'"))?;
+            let mut cfg = scenario.default_config();
+            cfg.apply_set(set)?;
+            let report = scenario.run(&cfg)?;
+            expected.insert(key.clone(), report.to_json().to_string());
+        }
+        if expected[&key] != *served {
+            mismatches += 1;
+        }
+    }
+    Ok((expected.len() as u64, mismatches))
+}

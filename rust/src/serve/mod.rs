@@ -1,0 +1,363 @@
+//! Experiment service mode: a long-running job server over plain TCP.
+//!
+//! `bss-extoll serve` turns the batch experiment runner into a
+//! service: clients connect, submit experiment configurations as
+//! JSON lines ([`protocol`]), and receive a streamed lifecycle of
+//! status events (`queued → preparing → running{events_done} →
+//! done{report}`, or `cancelled` / `rejected{reason}`). Submissions
+//! from *all* connections land in one FIFO [`queue::JobQueue`] drained
+//! by a bounded [`pool::WorkerPool`], and every job resolves its
+//! prepared resources through one shared
+//! [`ResourceCache`](crate::coordinator::ResourceCache) — the
+//! cross-submission cache that makes N clients running the same
+//! machine shape pay for one prepare. The cache is byte-budgeted
+//! (`--cache-bytes`, LRU eviction); the `CacheKey ⇒ Prepared`
+//! interchangeability contract is what keeps an evict-then-re-prepare
+//! byte-identical to a cache hit.
+//!
+//! Per-job quotas (wall clock, simulated events) and cancellation are
+//! cooperative, enforced at [`quota`] checkpoints inside the execute
+//! loops; the batch CLI paths run with no job control installed, where
+//! the checkpoints are no-ops.
+//!
+//! Everything is built on `std` networking (`TcpListener`/`TcpStream`)
+//! and the repo's hand-rolled JSON — no new dependencies.
+//!
+//! See `docs/ARCHITECTURE.md` §7 for the protocol grammar and the
+//! queue/pool/quota lifecycle, and [`client`] for the programmatic
+//! client plus the `loadgen` throughput driver.
+
+pub mod client;
+pub mod pool;
+pub mod protocol;
+pub mod queue;
+pub mod quota;
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{self, ExperimentConfig, ResourceCache};
+use crate::util::json::Json;
+
+use self::protocol::{
+    ev_bye, ev_cancelled, ev_error, ev_queued, ev_rejected, Request, Submission,
+};
+use self::queue::{CancelOutcome, Job, JobQueue};
+use self::quota::{JobCtl, QuotaSpec};
+
+/// Server configuration (CLI flags of `bss-extoll serve`). The numeric
+/// knobs use `0` = unlimited, mirroring their flag defaults.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7411`; port 0 binds ephemeral.
+    pub addr: String,
+    /// Worker-pool size (`--workers`).
+    pub workers: usize,
+    /// Resource-cache byte budget (`--cache-bytes`, 0 = unbounded).
+    pub cache_bytes: u64,
+    /// Server-wide per-job wall-clock cap in ms (`--max-wall-ms`).
+    pub max_wall_ms: u64,
+    /// Server-wide per-job simulated-event cap (`--max-events`).
+    pub max_events: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_bytes: 0,
+            max_wall_ms: 0,
+            max_events: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn server_quota(&self) -> QuotaSpec {
+        QuotaSpec {
+            max_wall: (self.max_wall_ms > 0)
+                .then(|| Duration::from_millis(self.max_wall_ms)),
+            max_events: (self.max_events > 0).then_some(self.max_events),
+        }
+    }
+}
+
+/// Shared state handed to every connection thread.
+#[derive(Clone)]
+struct ConnCtx {
+    queue: Arc<JobQueue>,
+    cache: Arc<ResourceCache>,
+    stop: Arc<AtomicBool>,
+    server_quota: QuotaSpec,
+}
+
+/// A bound (not yet running) server.
+pub struct Server {
+    cfg: ServeConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
+    queue: Arc<JobQueue>,
+    cache: Arc<ResourceCache>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind the listen socket (port 0 picks an ephemeral port; read it
+    /// back with [`local_addr`](Server::local_addr)).
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let cache = Arc::new(ResourceCache::with_budget(cfg.cache_bytes));
+        Ok(Server {
+            cfg,
+            listener,
+            addr,
+            queue: Arc::new(JobQueue::new()),
+            cache,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until a `shutdown` request (or an external
+    /// [`ServerHandle::stop`]); then stop accepting, drain the queue
+    /// and join the workers. Connection threads exit on their own when
+    /// their client hangs up.
+    pub fn run(self) -> Result<()> {
+        let pool = pool::WorkerPool::spawn(
+            self.cfg.workers,
+            self.queue.clone(),
+            self.cache.clone(),
+        );
+        let ctx = ConnCtx {
+            queue: self.queue.clone(),
+            cache: self.cache.clone(),
+            stop: self.stop.clone(),
+            server_quota: self.cfg.server_quota(),
+        };
+        self.listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let ctx = ctx.clone();
+                    std::thread::Builder::new()
+                        .name("serve-conn".to_string())
+                        .spawn(move || handle_conn(stream, &ctx))
+                        .context("spawn connection thread")?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    // transient accept errors (ECONNABORTED etc.) are
+                    // not worth taking the server down for
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        self.queue.shutdown();
+        pool.join();
+        Ok(())
+    }
+
+    /// Run on a background thread; the returned handle stops and joins
+    /// it. This is what the in-process tests, `serve --smoke` and the
+    /// `serve_throughput` bench use.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let stop = self.stop.clone();
+        let queue = self.queue.clone();
+        let thread = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || self.run())
+            .expect("spawn server thread");
+        ServerHandle {
+            addr,
+            stop,
+            queue,
+            thread,
+        }
+    }
+}
+
+/// Handle to a [`Server::spawn`]ed background server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<JobQueue>,
+    thread: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown (equivalent to a client `shutdown` command):
+    /// stop accepting, drain queued jobs, join workers.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.shutdown();
+    }
+
+    /// Wait for the server to exit (after [`stop`](ServerHandle::stop)
+    /// or a client `shutdown`).
+    pub fn join(self) -> Result<()> {
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("server thread panicked"),
+        }
+    }
+}
+
+/// One client connection: a reader loop on this thread plus a writer
+/// thread draining the status-line channel. Jobs keep clones of the
+/// channel sender, so the writer stays alive until every job of this
+/// connection reached a terminal status — even if the reader saw EOF.
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::Builder::new()
+        .name("serve-conn-writer".to_string())
+        .spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            for line in rx {
+                if w.write_all(line.as_bytes()).is_err()
+                    || w.write_all(b"\n").is_err()
+                    || w.flush().is_err()
+                {
+                    break;
+                }
+            }
+        });
+    let Ok(writer) = writer else { return };
+
+    for line in BufReader::new(stream).lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if !handle_line(&line, &tx, ctx) {
+            break;
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Dispatch one request line. Returns `false` when the connection
+/// should close (after `shutdown`). Malformed lines cost an `error`
+/// event, never the connection — let alone the server.
+fn handle_line(line: &str, tx: &Sender<String>, ctx: &ConnCtx) -> bool {
+    match Request::parse(line) {
+        Err(e) => {
+            let _ = tx.send(ev_error(&e.to_string()));
+            true
+        }
+        Ok(Request::Submit(sub)) => {
+            submit(&sub, tx, ctx);
+            true
+        }
+        Ok(Request::Cancel { job }) => {
+            match ctx.queue.cancel(job) {
+                // never ran: this is the terminal event, sent to the
+                // submitter through the job's own sender
+                CancelOutcome::Dequeued(j) => {
+                    let _ = j.out.send(ev_cancelled(j.id));
+                }
+                // running: the worker emits `cancelled` at the job's
+                // next quota checkpoint
+                CancelOutcome::Signalled => {}
+                CancelOutcome::Unknown => {
+                    let _ = tx.send(ev_error(&format!("no such job {job}")));
+                }
+            }
+            true
+        }
+        Ok(Request::Stats) => {
+            let _ = tx.send(stats_line(ctx));
+            true
+        }
+        Ok(Request::Shutdown) => {
+            let _ = tx.send(ev_bye());
+            ctx.stop.store(true, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+/// Validate and enqueue one submission.
+fn submit(sub: &Submission, tx: &Sender<String>, ctx: &ConnCtx) {
+    let Some(scenario) = coordinator::find(&sub.scenario) else {
+        let _ = tx.send(ev_rejected(
+            None,
+            &sub.tag,
+            &format!("unknown scenario '{}'", sub.scenario),
+        ));
+        return;
+    };
+    let mut cfg = match &sub.config {
+        Some(j) => match ExperimentConfig::from_json(j) {
+            Ok(cfg) => cfg,
+            Err(e) => {
+                let _ = tx.send(ev_rejected(None, &sub.tag, &format!("bad config: {e}")));
+                return;
+            }
+        },
+        None => scenario.default_config(),
+    };
+    if let Err(e) = cfg.apply_set(&sub.set) {
+        let _ = tx.send(ev_rejected(None, &sub.tag, &format!("bad set: {e}")));
+        return;
+    }
+    let id = ctx.queue.next_id();
+    // `queued` goes out before the queue insert so a fast worker's
+    // `preparing` can never beat it onto the wire
+    let _ = tx.send(ev_queued(id, &sub.tag));
+    let accepted = ctx.queue.submit(Job {
+        id,
+        tag: sub.tag.clone(),
+        scenario,
+        cfg,
+        quota: sub.quota.to_spec().capped_by(ctx.server_quota),
+        ctl: Arc::new(JobCtl::new()),
+        out: tx.clone(),
+    });
+    if !accepted {
+        let _ = tx.send(ev_rejected(Some(id), &sub.tag, "server shutting down"));
+    }
+}
+
+fn stats_line(ctx: &ConnCtx) -> String {
+    let st = ctx.cache.stats();
+    Json::obj()
+        .set("event", "stats")
+        .set("queue_depth", ctx.queue.depth() as u64)
+        .set("running", ctx.queue.running() as u64)
+        .set(
+            "cache",
+            Json::obj()
+                .set("prepared", st.misses)
+                .set("reused", st.hits)
+                .set("evicted", st.evictions)
+                .set("resident_bytes", st.resident_bytes),
+        )
+        .to_string()
+}

@@ -1,0 +1,117 @@
+//! Bounded worker pool draining the [`JobQueue`].
+//!
+//! Each worker claims one job at a time, resolves its prepared
+//! resources through the server-wide shared [`ResourceCache`] (this is
+//! what makes the cache *cross-submission*: two clients submitting the
+//! same cache key share one prepare), installs the job's quota control
+//! and runs `Scenario::execute`, streaming status lines back through
+//! the job's connection sender. A panicking execute is contained with
+//! `catch_unwind` — it costs the job, never the worker.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::ResourceCache;
+use crate::serve::protocol::{
+    ev_cancelled, ev_done, ev_preparing, ev_rejected, ev_running,
+};
+use crate::serve::queue::{Job, JobQueue};
+use crate::serve::quota::{self, Interrupt};
+
+/// The running pool; [`join`](WorkerPool::join) after the queue's
+/// shutdown to wait for in-flight jobs.
+pub struct WorkerPool {
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads draining `queue` against the shared
+    /// `cache`.
+    pub fn spawn(workers: usize, queue: Arc<JobQueue>, cache: Arc<ResourceCache>) -> WorkerPool {
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let queue = queue.clone();
+                let cache = cache.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&queue, &cache))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { workers }
+    }
+
+    /// Wait for all workers to exit (they do once the queue is shut
+    /// down and drained).
+    pub fn join(self) {
+        for w in self.workers {
+            // a worker panicking would be a pool bug, not a job error
+            // (job panics are contained inside the loop)
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(queue: &JobQueue, cache: &ResourceCache) {
+    while let Some(job) = queue.pop() {
+        run_job(&job, cache);
+        queue.finish(job.id);
+    }
+}
+
+/// Run one job to a terminal status line. Send failures are ignored
+/// throughout: a vanished client must not take the worker with it.
+fn run_job(job: &Job, cache: &ResourceCache) {
+    if job.ctl.is_cancelled() {
+        // cancelled between claim and start
+        let _ = job.out.send(ev_cancelled(job.id));
+        return;
+    }
+
+    // Label only (racy by nature, see ResourceCache::contains): whether
+    // this key was already resident when we got here.
+    let key = job.scenario.cache_key(&job.cfg);
+    let _ = job
+        .out
+        .send(ev_preparing(job.id, cache.contains(&key)));
+
+    let prepared = match cache.get_or_prepare(job.scenario, &job.cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = job
+                .out
+                .send(ev_rejected(Some(job.id), &job.tag, &format!("prepare failed: {e}")));
+            return;
+        }
+    };
+
+    let _ = job.out.send(ev_running(job.id, 0));
+    let progress_out = job.out.clone();
+    let progress_id = job.id;
+    let guard = quota::activate(
+        job.ctl.clone(),
+        job.quota,
+        Some(Box::new(move |events_done| {
+            let _ = progress_out.send(ev_running(progress_id, events_done));
+        })),
+    );
+
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        job.scenario.execute(prepared.as_ref(), &job.cfg)
+    }));
+    drop(guard);
+
+    let line = match result {
+        Ok(Ok(report)) => ev_done(job.id, report.to_json()),
+        Ok(Err(e)) => match e.downcast_ref::<Interrupt>() {
+            Some(Interrupt::Cancelled) => ev_cancelled(job.id),
+            Some(i @ (Interrupt::WallQuota | Interrupt::EventQuota)) => {
+                ev_rejected(Some(job.id), &job.tag, &format!("quota: {i}"))
+            }
+            None => ev_rejected(Some(job.id), &job.tag, &format!("execute failed: {e}")),
+        },
+        Err(_panic) => ev_rejected(Some(job.id), &job.tag, "execute panicked"),
+    };
+    let _ = job.out.send(line);
+}

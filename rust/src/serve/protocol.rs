@@ -1,0 +1,384 @@
+//! JSON-lines wire protocol of the experiment service.
+//!
+//! Every message is one JSON object per line, newline-terminated, in
+//! both directions. Requests carry a `"cmd"` discriminator, responses
+//! an `"event"` discriminator. The grammar (also documented in
+//! `docs/ARCHITECTURE.md` §7):
+//!
+//! ```text
+//! client → server
+//!   {"cmd":"submit","scenario":S,"set":OVR?,"config":{..}?,"tag":T?,
+//!    "quota":{"max_wall_ms":N?,"max_events":N?}?}
+//!   {"cmd":"cancel","job":ID}
+//!   {"cmd":"stats"}
+//!   {"cmd":"shutdown"}
+//!
+//! server → client
+//!   {"event":"queued","job":ID,"tag":T}
+//!   {"event":"preparing","job":ID,"cache":"prepare"|"reuse"}
+//!   {"event":"running","job":ID,"events_done":N}
+//!   {"event":"done","job":ID,"report":{..}}
+//!   {"event":"cancelled","job":ID}
+//!   {"event":"rejected","job":ID?,"tag":T?,"reason":R}
+//!   {"event":"stats","queue_depth":N,"running":N,
+//!    "cache":{"prepared":N,"reused":N,"evicted":N,"resident_bytes":N}}
+//!   {"event":"error","reason":R}
+//!   {"event":"bye"}
+//! ```
+//!
+//! The parser is deliberately forgiving about unknown keys (forward
+//! compatibility) and strict about the discriminator and types.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::serve::quota::QuotaSpec;
+use crate::util::json::Json;
+
+/// One experiment submission.
+#[derive(Clone, Debug, Default)]
+pub struct Submission {
+    /// Registered scenario name (`traffic`, `microcircuit`, ...).
+    pub scenario: String,
+    /// `key=value;key=value` overrides applied on top of the config
+    /// (same grammar as the CLI `--set` flag).
+    pub set: String,
+    /// Optional full experiment config; defaults to the scenario's
+    /// default config when absent.
+    pub config: Option<Json>,
+    /// Client-chosen label echoed back in `queued` (correlates the
+    /// submission with its job id on pipelined connections).
+    pub tag: String,
+    /// Requested budgets; the server caps them by its own limits.
+    pub quota: QuotaReq,
+}
+
+/// Wire form of a quota request. `None` = "no limit requested".
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuotaReq {
+    pub max_wall_ms: Option<u64>,
+    pub max_events: Option<u64>,
+}
+
+impl QuotaReq {
+    pub fn to_spec(self) -> QuotaSpec {
+        QuotaSpec {
+            max_wall: self.max_wall_ms.map(Duration::from_millis),
+            max_events: self.max_events,
+        }
+    }
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Submit(Submission),
+    Cancel { job: u64 },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+        let cmd = j
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request is missing string key 'cmd'"))?;
+        match cmd {
+            "submit" => {
+                let scenario = j
+                    .get("scenario")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("submit is missing string key 'scenario'"))?
+                    .to_string();
+                let set = j.str_or("set", "").to_string();
+                let config = j.get("config").filter(|c| !matches!(c, Json::Null)).cloned();
+                let tag = j.str_or("tag", "").to_string();
+                let quota = match j.get("quota") {
+                    Some(q) => QuotaReq {
+                        max_wall_ms: q.get("max_wall_ms").and_then(Json::as_u64),
+                        max_events: q.get("max_events").and_then(Json::as_u64),
+                    },
+                    None => QuotaReq::default(),
+                };
+                Ok(Request::Submit(Submission {
+                    scenario,
+                    set,
+                    config,
+                    tag,
+                    quota,
+                }))
+            }
+            "cancel" => {
+                let job = j
+                    .get("job")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("cancel is missing integer key 'job'"))?;
+                Ok(Request::Cancel { job })
+            }
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown cmd '{other}'"),
+        }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit(s) => {
+                let mut j = Json::obj()
+                    .set("cmd", "submit")
+                    .set("scenario", s.scenario.as_str());
+                if !s.set.is_empty() {
+                    j = j.set("set", s.set.as_str());
+                }
+                if let Some(cfg) = &s.config {
+                    j = j.set("config", cfg.clone());
+                }
+                if !s.tag.is_empty() {
+                    j = j.set("tag", s.tag.as_str());
+                }
+                if s.quota.max_wall_ms.is_some() || s.quota.max_events.is_some() {
+                    let mut q = Json::obj();
+                    if let Some(ms) = s.quota.max_wall_ms {
+                        q = q.set("max_wall_ms", ms);
+                    }
+                    if let Some(ev) = s.quota.max_events {
+                        q = q.set("max_events", ev);
+                    }
+                    j = j.set("quota", q);
+                }
+                j
+            }
+            Request::Cancel { job } => Json::obj().set("cmd", "cancel").set("job", *job),
+            Request::Stats => Json::obj().set("cmd", "stats"),
+            Request::Shutdown => Json::obj().set("cmd", "shutdown"),
+        }
+    }
+}
+
+/// A parsed server status event (client side).
+#[derive(Clone, Debug)]
+pub enum Event {
+    Queued { job: u64, tag: String },
+    Preparing { job: u64, reused: bool },
+    Running { job: u64, events_done: u64 },
+    Done { job: u64, report: Json },
+    Cancelled { job: u64 },
+    Rejected { job: Option<u64>, tag: String, reason: String },
+    Stats { body: Json },
+    Error { reason: String },
+    Bye,
+}
+
+impl Event {
+    /// Parse one status line.
+    pub fn parse(line: &str) -> Result<Event> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad event JSON: {e}"))?;
+        let event = j
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("status line is missing string key 'event'"))?;
+        let job = || {
+            j.get("job")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("'{event}' event is missing integer key 'job'"))
+        };
+        match event {
+            "queued" => Ok(Event::Queued {
+                job: job()?,
+                tag: j.str_or("tag", "").to_string(),
+            }),
+            "preparing" => Ok(Event::Preparing {
+                job: job()?,
+                reused: j.str_or("cache", "prepare") == "reuse",
+            }),
+            "running" => Ok(Event::Running {
+                job: job()?,
+                events_done: j.u64_or("events_done", 0),
+            }),
+            "done" => Ok(Event::Done {
+                job: job()?,
+                report: j
+                    .get("report")
+                    .cloned()
+                    .ok_or_else(|| anyhow!("'done' event is missing key 'report'"))?,
+            }),
+            "cancelled" => Ok(Event::Cancelled { job: job()? }),
+            "rejected" => Ok(Event::Rejected {
+                job: j.get("job").and_then(Json::as_u64),
+                tag: j.str_or("tag", "").to_string(),
+                reason: j.str_or("reason", "").to_string(),
+            }),
+            "stats" => Ok(Event::Stats { body: j }),
+            "error" => Ok(Event::Error {
+                reason: j.str_or("reason", "").to_string(),
+            }),
+            "bye" => Ok(Event::Bye),
+            other => bail!("unknown event '{other}'"),
+        }
+    }
+}
+
+// ---- server-side event constructors (single source of wire shapes) ----
+
+pub fn ev_queued(job: u64, tag: &str) -> String {
+    Json::obj()
+        .set("event", "queued")
+        .set("job", job)
+        .set("tag", tag)
+        .to_string()
+}
+
+pub fn ev_preparing(job: u64, reused: bool) -> String {
+    Json::obj()
+        .set("event", "preparing")
+        .set("job", job)
+        .set("cache", if reused { "reuse" } else { "prepare" })
+        .to_string()
+}
+
+pub fn ev_running(job: u64, events_done: u64) -> String {
+    Json::obj()
+        .set("event", "running")
+        .set("job", job)
+        .set("events_done", events_done)
+        .to_string()
+}
+
+pub fn ev_done(job: u64, report: Json) -> String {
+    Json::obj()
+        .set("event", "done")
+        .set("job", job)
+        .set("report", report)
+        .to_string()
+}
+
+pub fn ev_cancelled(job: u64) -> String {
+    Json::obj()
+        .set("event", "cancelled")
+        .set("job", job)
+        .to_string()
+}
+
+pub fn ev_rejected(job: Option<u64>, tag: &str, reason: &str) -> String {
+    let mut j = Json::obj().set("event", "rejected");
+    if let Some(id) = job {
+        j = j.set("job", id);
+    }
+    if !tag.is_empty() {
+        j = j.set("tag", tag);
+    }
+    j.set("reason", reason).to_string()
+}
+
+pub fn ev_error(reason: &str) -> String {
+    Json::obj()
+        .set("event", "error")
+        .set("reason", reason)
+        .to_string()
+}
+
+pub fn ev_bye() -> String {
+    Json::obj().set("event", "bye").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trips() {
+        let sub = Submission {
+            scenario: "traffic".into(),
+            set: "seed=7;rate_hz=1e6".into(),
+            config: None,
+            tag: "t-3".into(),
+            quota: QuotaReq {
+                max_wall_ms: Some(5_000),
+                max_events: None,
+            },
+        };
+        let line = Request::Submit(sub).to_json().to_string();
+        match Request::parse(&line).unwrap() {
+            Request::Submit(s) => {
+                assert_eq!(s.scenario, "traffic");
+                assert_eq!(s.set, "seed=7;rate_hz=1e6");
+                assert_eq!(s.tag, "t-3");
+                assert_eq!(s.quota.max_wall_ms, Some(5_000));
+                assert_eq!(s.quota.max_events, None);
+                assert!(s.config.is_none());
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_stats_shutdown_round_trip() {
+        for (req, want_cmd) in [
+            (Request::Cancel { job: 12 }, "cancel"),
+            (Request::Stats, "stats"),
+            (Request::Shutdown, "shutdown"),
+        ] {
+            let line = req.to_json().to_string();
+            assert!(line.contains(want_cmd));
+            Request::parse(&line).unwrap();
+        }
+        match Request::parse("{\"cmd\":\"cancel\",\"job\":12}").unwrap() {
+            Request::Cancel { job } => assert_eq!(job, 12),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_error_cleanly() {
+        for bad in [
+            "not json at all",
+            "{}",
+            "{\"cmd\":\"frobnicate\"}",
+            "{\"cmd\":\"submit\"}",
+            "{\"cmd\":\"cancel\"}",
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn events_round_trip() {
+        match Event::parse(&ev_queued(4, "a")).unwrap() {
+            Event::Queued { job, tag } => {
+                assert_eq!((job, tag.as_str()), (4, "a"));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        match Event::parse(&ev_preparing(4, true)).unwrap() {
+            Event::Preparing { reused, .. } => assert!(reused),
+            other => panic!("parsed {other:?}"),
+        }
+        match Event::parse(&ev_running(4, 777)).unwrap() {
+            Event::Running { events_done, .. } => assert_eq!(events_done, 777),
+            other => panic!("parsed {other:?}"),
+        }
+        match Event::parse(&ev_done(4, Json::obj().set("x", 1u64))).unwrap() {
+            Event::Done { job, report } => {
+                assert_eq!(job, 4);
+                assert_eq!(report.u64_or("x", 0), 1);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        match Event::parse(&ev_rejected(None, "t", "nope")).unwrap() {
+            Event::Rejected { job, tag, reason } => {
+                assert_eq!(job, None);
+                assert_eq!(tag, "t");
+                assert_eq!(reason, "nope");
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert!(matches!(Event::parse(&ev_cancelled(4)).unwrap(), Event::Cancelled { job: 4 }));
+        assert!(matches!(Event::parse(&ev_error("x")).unwrap(), Event::Error { .. }));
+        assert!(matches!(Event::parse(&ev_bye()).unwrap(), Event::Bye));
+    }
+}

@@ -1,0 +1,224 @@
+//! FIFO job queue shared between connection threads and the worker
+//! pool.
+//!
+//! Connections [`submit`](JobQueue::submit) jobs; workers block in
+//! [`pop`](JobQueue::pop) until one is ready. Cancellation is
+//! two-faced: a job still sitting in the queue is dequeued on the spot
+//! (the connection emits `cancelled` itself), a job already claimed by
+//! a worker only gets its [`JobCtl`] flag flipped and stops at its next
+//! quota checkpoint. [`shutdown`](JobQueue::shutdown) is graceful:
+//! already-queued jobs still drain, workers exit once the queue is
+//! empty.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::{ExperimentConfig, Scenario};
+use crate::serve::quota::{JobCtl, QuotaSpec};
+
+/// One accepted submission, queued for a worker.
+pub struct Job {
+    pub id: u64,
+    pub tag: String,
+    pub scenario: &'static dyn Scenario,
+    pub cfg: ExperimentConfig,
+    pub quota: QuotaSpec,
+    pub ctl: Arc<JobCtl>,
+    /// Status-line sink of the submitting connection; sends fail
+    /// silently once the client hangs up.
+    pub out: Sender<String>,
+}
+
+/// Outcome of a cancel request.
+pub enum CancelOutcome {
+    /// Removed from the queue before any worker saw it; the caller
+    /// emits the terminal `cancelled` event through the returned job's
+    /// own sender (so the submitter is the one notified).
+    Dequeued(Arc<Job>),
+    /// Already running (or claimed); the control flag is set and the
+    /// job stops at its next checkpoint.
+    Signalled,
+    /// No queued or running job with that id.
+    Unknown,
+}
+
+#[derive(Default)]
+struct QueueInner {
+    fifo: VecDeque<Arc<Job>>,
+    /// Every live job (queued or running), for cancel-by-id.
+    jobs: HashMap<u64, Arc<Job>>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// The shared FIFO queue.
+#[derive(Default)]
+pub struct JobQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Reserve the next job id (ids are per-server, monotonically
+    /// increasing from 1).
+    pub fn next_id(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.next_id += 1;
+        inner.next_id
+    }
+
+    /// Enqueue a job. Returns `false` (job dropped) after shutdown.
+    pub fn submit(&self, job: Job) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return false;
+        }
+        let job = Arc::new(job);
+        inner.jobs.insert(job.id, job.clone());
+        inner.fifo.push_back(job);
+        drop(inner);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Block until a job is ready; `None` once the queue is shut down
+    /// AND drained (workers use this as their exit signal).
+    pub fn pop(&self) -> Option<Arc<Job>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.fifo.pop_front() {
+                return Some(job);
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Cancel a job by id (see [`CancelOutcome`]).
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(job) = inner.jobs.remove(&id) else {
+            return CancelOutcome::Unknown;
+        };
+        if let Some(pos) = inner.fifo.iter().position(|j| j.id == id) {
+            inner.fifo.remove(pos);
+            CancelOutcome::Dequeued(job)
+        } else {
+            // claimed by a worker: flag it and let finish() already
+            // having removed it from `jobs` be harmless
+            job.ctl.cancel();
+            inner.jobs.insert(id, job);
+            CancelOutcome::Signalled
+        }
+    }
+
+    /// Remove a finished job from the live set (worker calls this for
+    /// every terminal outcome).
+    pub fn finish(&self, id: u64) {
+        self.inner.lock().unwrap().jobs.remove(&id);
+    }
+
+    /// Jobs waiting in the FIFO (excludes running ones).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().fifo.len()
+    }
+
+    /// Live jobs currently claimed by workers.
+    pub fn running(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.len() - inner.fifo.len()
+    }
+
+    /// Stop accepting new jobs and wake all workers; queued jobs still
+    /// drain before `pop` starts returning `None`.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator;
+    use std::sync::mpsc;
+
+    fn job(q: &JobQueue) -> (Job, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let scenario = coordinator::find("traffic").unwrap();
+        let job = Job {
+            id: q.next_id(),
+            tag: String::new(),
+            scenario,
+            cfg: scenario.default_config(),
+            quota: QuotaSpec::default(),
+            ctl: Arc::new(JobCtl::new()),
+            out: tx,
+        };
+        (job, rx)
+    }
+
+    #[test]
+    fn fifo_order_and_drain_on_shutdown() {
+        let q = JobQueue::new();
+        let (a, _ra) = job(&q);
+        let (b, _rb) = job(&q);
+        let (ida, idb) = (a.id, b.id);
+        assert!(q.submit(a));
+        assert!(q.submit(b));
+        assert_eq!(q.depth(), 2);
+        q.shutdown();
+        // queued jobs still drain in order after shutdown
+        assert_eq!(q.pop().unwrap().id, ida);
+        assert_eq!(q.pop().unwrap().id, idb);
+        assert!(q.pop().is_none());
+        // and new submissions are refused
+        let (c, _rc) = job(&q);
+        assert!(!q.submit(c));
+    }
+
+    #[test]
+    fn cancel_dequeues_or_signals() {
+        let q = JobQueue::new();
+        let (a, _ra) = job(&q);
+        let (b, _rb) = job(&q);
+        let (ida, idb) = (a.id, b.id);
+        q.submit(a);
+        q.submit(b);
+        // cancel while queued: dequeued, never reaches a worker
+        match q.cancel(ida) {
+            CancelOutcome::Dequeued(j) => assert_eq!(j.id, ida),
+            _ => panic!("expected Dequeued"),
+        }
+        assert_eq!(q.depth(), 1);
+        // claim b like a worker would, then cancel: signalled
+        let claimed = q.pop().unwrap();
+        assert_eq!(claimed.id, idb);
+        assert_eq!(q.running(), 1);
+        assert!(matches!(q.cancel(idb), CancelOutcome::Signalled));
+        assert!(claimed.ctl.is_cancelled());
+        q.finish(idb);
+        assert_eq!(q.running(), 0);
+        // unknown id
+        assert!(matches!(q.cancel(9999), CancelOutcome::Unknown));
+    }
+
+    #[test]
+    fn pop_blocks_until_submit() {
+        let q = Arc::new(JobQueue::new());
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || q2.pop().map(|j| j.id));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (a, _ra) = job(&q);
+        let id = a.id;
+        q.submit(a);
+        assert_eq!(popper.join().unwrap(), Some(id));
+    }
+}

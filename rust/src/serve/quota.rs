@@ -1,0 +1,309 @@
+//! Cooperative per-job quotas and cancellation for service mode.
+//!
+//! The execute loops of the batch scenarios were written long before
+//! service mode existed, so quota enforcement is **cooperative**: the
+//! long-running loops (the fabric driver's workload window, the
+//! microcircuit's step loop) call [`checkpoint`] at natural slice
+//! boundaries. With no job control installed on the thread — every
+//! batch CLI / sweep / test path — a checkpoint is a nearly-free no-op
+//! and changes nothing about the run (gated byte-identical in
+//! `rust/tests/serve_mode.rs`). Under a worker-pool job the checkpoint
+//!
+//! 1. publishes the job's simulated-event progress (for `running`
+//!    status events, rate-limited),
+//! 2. stops the run with a typed [`Interrupt`] when the job was
+//!    cancelled or its wall-clock / simulated-event budget is spent.
+//!
+//! The control block is installed per worker thread via [`activate`]
+//! and removed by the returned RAII [`QuotaGuard`] — a panicking
+//! execute can never leak one job's control onto the next job that
+//! runs on the same worker.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Why a [`checkpoint`] stopped the run. Carried as the error type so
+/// the worker pool can map each outcome to its protocol status
+/// (`cancelled` vs `rejected{quota ...}`) via `downcast_ref`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interrupt {
+    /// The client (or server shutdown) cancelled the job.
+    Cancelled,
+    /// The wall-clock budget is spent.
+    WallQuota,
+    /// The simulated-event budget is spent.
+    EventQuota,
+}
+
+impl std::fmt::Display for Interrupt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Interrupt::Cancelled => write!(f, "job cancelled"),
+            Interrupt::WallQuota => write!(f, "wall-clock quota exceeded"),
+            Interrupt::EventQuota => write!(f, "simulated-event quota exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for Interrupt {}
+
+/// Shared control block of one job: the cancellation flag flipped by
+/// the connection thread and the progress gauge read for `stats`.
+#[derive(Default)]
+pub struct JobCtl {
+    cancelled: AtomicBool,
+    events_done: AtomicU64,
+}
+
+impl JobCtl {
+    pub fn new() -> JobCtl {
+        JobCtl::default()
+    }
+
+    /// Request cancellation; takes effect at the job's next checkpoint.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Simulated events processed, as of the last checkpoint.
+    pub fn events_done(&self) -> u64 {
+        self.events_done.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-job budgets. `None` = unlimited.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuotaSpec {
+    pub max_wall: Option<Duration>,
+    pub max_events: Option<u64>,
+}
+
+impl QuotaSpec {
+    /// Tighten this spec by a server-wide cap: a job may ask for less
+    /// than the cap, never more.
+    pub fn capped_by(self, cap: QuotaSpec) -> QuotaSpec {
+        fn min_opt<T: Ord>(a: Option<T>, b: Option<T>) -> Option<T> {
+            match (a, b) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, None) => a,
+                (None, b) => b,
+            }
+        }
+        QuotaSpec {
+            max_wall: min_opt(self.max_wall, cap.max_wall),
+            max_events: min_opt(self.max_events, cap.max_events),
+        }
+    }
+}
+
+/// Rate-limited progress callback (wired to `running{events_done}`
+/// status events by the worker pool).
+type ProgressFn = Box<dyn FnMut(u64)>;
+
+struct ActiveJob {
+    ctl: Arc<JobCtl>,
+    quota: QuotaSpec,
+    started: Instant,
+    progress: Option<ProgressFn>,
+    last_progress: Instant,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<ActiveJob>> = const { RefCell::new(None) };
+}
+
+/// Minimum spacing of progress-callback invocations.
+const PROGRESS_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Install a job control on the current thread for the duration of the
+/// returned guard. Panics if one is already installed (jobs never
+/// nest — one worker runs one execute at a time).
+pub fn activate(
+    ctl: Arc<JobCtl>,
+    quota: QuotaSpec,
+    progress: Option<ProgressFn>,
+) -> QuotaGuard {
+    ACTIVE.with(|a| {
+        let mut slot = a.borrow_mut();
+        assert!(slot.is_none(), "nested quota::activate");
+        let now = Instant::now();
+        *slot = Some(ActiveJob {
+            ctl,
+            quota,
+            started: now,
+            progress,
+            last_progress: now,
+        });
+    });
+    QuotaGuard { _private: () }
+}
+
+/// Whether a job control is installed on this thread (the execute
+/// loops use this to skip checkpoint slicing in batch runs).
+pub fn is_active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// Cooperative quota checkpoint, called from the execute loops with the
+/// current simulated-event count. A no-op returning `Ok` when no job
+/// control is installed; otherwise publishes progress and fails with a
+/// typed [`Interrupt`] on cancellation or an exhausted budget.
+pub fn checkpoint(events_done: u64) -> Result<()> {
+    ACTIVE.with(|a| {
+        let mut slot = a.borrow_mut();
+        let Some(job) = slot.as_mut() else {
+            return Ok(());
+        };
+        job.ctl.events_done.store(events_done, Ordering::Relaxed);
+        if job.ctl.is_cancelled() {
+            return Err(anyhow::Error::new(Interrupt::Cancelled));
+        }
+        if let Some(max) = job.quota.max_events {
+            if events_done > max {
+                return Err(anyhow::Error::new(Interrupt::EventQuota));
+            }
+        }
+        if let Some(max) = job.quota.max_wall {
+            if job.started.elapsed() > max {
+                return Err(anyhow::Error::new(Interrupt::WallQuota));
+            }
+        }
+        if let Some(progress) = job.progress.as_mut() {
+            if job.last_progress.elapsed() >= PROGRESS_INTERVAL {
+                job.last_progress = Instant::now();
+                progress(events_done);
+            }
+        }
+        Ok(())
+    })
+}
+
+/// RAII guard of [`activate`]: clears the thread's job control on drop
+/// (including during unwinding from a panicked execute).
+pub struct QuotaGuard {
+    _private: (),
+}
+
+impl Drop for QuotaGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| {
+            // take() instead of assert: stay panic-tolerant
+            a.borrow_mut().take();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_is_a_noop_without_a_job() {
+        assert!(!is_active());
+        for n in [0, 1, u64::MAX] {
+            assert!(checkpoint(n).is_ok());
+        }
+    }
+
+    #[test]
+    fn guard_installs_and_clears_the_control() {
+        let ctl = Arc::new(JobCtl::new());
+        {
+            let _g = activate(ctl.clone(), QuotaSpec::default(), None);
+            assert!(is_active());
+            checkpoint(42).unwrap();
+            assert_eq!(ctl.events_done(), 42);
+        }
+        assert!(!is_active());
+        // a later checkpoint no longer touches the old control
+        checkpoint(99).unwrap();
+        assert_eq!(ctl.events_done(), 42);
+    }
+
+    #[test]
+    fn cancellation_interrupts_at_the_next_checkpoint() {
+        let ctl = Arc::new(JobCtl::new());
+        let _g = activate(ctl.clone(), QuotaSpec::default(), None);
+        checkpoint(1).unwrap();
+        ctl.cancel();
+        let err = checkpoint(2).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Interrupt>(),
+            Some(&Interrupt::Cancelled)
+        );
+    }
+
+    #[test]
+    fn event_quota_interrupts() {
+        let ctl = Arc::new(JobCtl::new());
+        let quota = QuotaSpec {
+            max_events: Some(100),
+            ..QuotaSpec::default()
+        };
+        let _g = activate(ctl, quota, None);
+        checkpoint(100).unwrap(); // at the budget is still fine
+        let err = checkpoint(101).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Interrupt>(),
+            Some(&Interrupt::EventQuota)
+        );
+    }
+
+    #[test]
+    fn wall_quota_interrupts() {
+        let ctl = Arc::new(JobCtl::new());
+        let quota = QuotaSpec {
+            max_wall: Some(Duration::ZERO),
+            ..QuotaSpec::default()
+        };
+        let _g = activate(ctl, quota, None);
+        std::thread::sleep(Duration::from_millis(2));
+        let err = checkpoint(1).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Interrupt>(),
+            Some(&Interrupt::WallQuota)
+        );
+    }
+
+    #[test]
+    fn progress_is_rate_limited() {
+        let seen = std::rc::Rc::new(RefCell::new(Vec::new()));
+        let sink = seen.clone();
+        let _g = activate(
+            Arc::new(JobCtl::new()),
+            QuotaSpec::default(),
+            Some(Box::new(move |n| sink.borrow_mut().push(n))),
+        );
+        // immediately after activate the interval has not elapsed
+        checkpoint(1).unwrap();
+        checkpoint(2).unwrap();
+        assert!(seen.borrow().is_empty());
+    }
+
+    #[test]
+    fn quota_caps_compose() {
+        let job = QuotaSpec {
+            max_wall: Some(Duration::from_secs(60)),
+            max_events: None,
+        };
+        let server = QuotaSpec {
+            max_wall: Some(Duration::from_secs(10)),
+            max_events: Some(1_000),
+        };
+        let eff = job.capped_by(server);
+        assert_eq!(eff.max_wall, Some(Duration::from_secs(10)));
+        assert_eq!(eff.max_events, Some(1_000));
+        assert_eq!(
+            QuotaSpec::default().capped_by(QuotaSpec::default()),
+            QuotaSpec::default()
+        );
+    }
+}

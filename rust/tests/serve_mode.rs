@@ -1,0 +1,289 @@
+//! Integration tests of the experiment service mode (`bss-extoll
+//! serve`): the TCP JSON-lines protocol, the FIFO worker pool, the
+//! shared byte-budgeted resource cache, per-job quotas and
+//! cancellation — and above all the determinism gate: reports served
+//! by the pool must be byte-identical to the batch `Scenario::run`
+//! path, with or without cache eviction pressure.
+
+use std::collections::BTreeMap;
+
+use bss_extoll::serve::client::{run_loadgen, Client, LoadgenConfig};
+use bss_extoll::serve::protocol::{Event, QuotaReq, Request, Submission};
+use bss_extoll::serve::{ServeConfig, Server};
+
+/// A small machine so one submission costs milliseconds.
+const SMALL: &str = "n_wafers=2;torus=2x2x1;fpgas_per_wafer=4;concentrators_per_wafer=2;\
+                     sources_per_fpga=8;duration_s=0.0002;rate_hz=2e6";
+
+/// Long enough (hundreds of thousands of spikes) that a cancel or a
+/// quota lands mid-run with margin.
+const LONG: &str = "n_wafers=2;torus=2x2x1;fpgas_per_wafer=4;concentrators_per_wafer=2;\
+                    sources_per_fpga=8;duration_s=0.005;rate_hz=2e6";
+
+fn spawn_server(workers: usize, cache_bytes: u64) -> (bss_extoll::serve::ServerHandle, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        cache_bytes,
+        max_wall_ms: 0,
+        max_events: 0,
+    })
+    .expect("bind ephemeral server");
+    let addr = server.local_addr().to_string();
+    (server.spawn(), addr)
+}
+
+fn submit(client: &mut Client, scenario: &str, set: &str, tag: &str, quota: QuotaReq) {
+    client
+        .send(&Request::Submit(Submission {
+            scenario: scenario.to_string(),
+            set: set.to_string(),
+            config: None,
+            tag: tag.to_string(),
+            quota,
+        }))
+        .expect("send submit");
+}
+
+/// Read events until `tag`'s job reaches a terminal status; returns the
+/// terminal event.
+fn wait_terminal(client: &mut Client, tag: &str) -> Event {
+    let mut job_id = None;
+    loop {
+        let ev = client.next_event().expect("next event");
+        match &ev {
+            Event::Queued { job, tag: t } if t == tag => job_id = Some(*job),
+            Event::Done { job, .. } | Event::Cancelled { job } if Some(*job) == job_id => {
+                return ev;
+            }
+            Event::Rejected { job, tag: t, .. }
+                if (job.is_some() && *job == job_id) || t == tag =>
+            {
+                return ev;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn loadgen_round_completes_with_byte_identical_reports() {
+    let (handle, addr) = spawn_server(4, 0);
+    let outcome = run_loadgen(&LoadgenConfig {
+        addr,
+        submissions: 24,
+        connections: 4,
+        verify: true,
+        shutdown_after: true,
+        ..LoadgenConfig::default()
+    })
+    .expect("loadgen round");
+    handle.join().expect("clean shutdown");
+
+    assert_eq!(outcome.completed, 24, "every submission must complete");
+    assert_eq!(outcome.rejected, 0);
+    assert_eq!(outcome.cancelled, 0);
+    assert!(outcome.verified > 0, "verification must actually run");
+    assert!(
+        outcome.byte_identical(),
+        "{} served reports differ from the batch path",
+        outcome.mismatches
+    );
+    // the cross-submission cache must actually share: far fewer
+    // prepares than submissions
+    let cache = outcome.cache.as_ref().expect("stats event captured");
+    let prepared = cache.at(&["cache", "prepared"]).unwrap().as_u64().unwrap();
+    let reused = cache.at(&["cache", "reused"]).unwrap().as_u64().unwrap();
+    assert!(
+        prepared < 24,
+        "cache never shared: {prepared} prepares for 24 submissions"
+    );
+    assert_eq!(prepared + reused, 24);
+}
+
+/// The eviction acceptance gate: a cache squeezed to a 1-byte budget
+/// (every entry oversized, evicted immediately, re-prepared per job)
+/// must serve byte-identical reports to an unbounded cache.
+#[test]
+fn eviction_then_reprepare_serves_identical_reports() {
+    // distinct machine shapes = distinct cache keys, so the tiny
+    // budget actually thrashes
+    let sets: Vec<String> = (0..3)
+        .flat_map(|i| {
+            let shape = format!(
+                "n_wafers=2;torus=2x2x1;fpgas_per_wafer=4;concentrators_per_wafer=2;\
+                 sources_per_fpga={};duration_s=0.0002;rate_hz=2e6",
+                4 << i
+            );
+            // two submissions per shape: the second is a cache hit on
+            // the unbounded server, a re-prepare on the tiny one
+            [shape.clone(), shape]
+        })
+        .collect();
+
+    let run_against = |cache_bytes: u64| -> BTreeMap<String, String> {
+        let (handle, addr) = spawn_server(2, cache_bytes);
+        let mut client = Client::connect(&addr).expect("connect");
+        let mut reports = BTreeMap::new();
+        for (i, set) in sets.iter().enumerate() {
+            let tag = format!("j{i}");
+            submit(&mut client, "traffic", set, &tag, QuotaReq::default());
+            match wait_terminal(&mut client, &tag) {
+                Event::Done { report, .. } => {
+                    reports.insert(tag, report.to_string());
+                }
+                other => panic!("job {tag} ended as {other:?}"),
+            }
+        }
+        handle.stop();
+        handle.join().expect("clean shutdown");
+        reports
+    };
+
+    let unlimited = run_against(0);
+    let tiny = run_against(1);
+    assert_eq!(
+        unlimited, tiny,
+        "eviction-then-re-prepare changed served report bytes"
+    );
+}
+
+#[test]
+fn cancel_mid_run_leaves_pool_healthy() {
+    // one worker: the long job occupies it, the follow-up job proves
+    // the worker survived the cancellation
+    let (handle, addr) = spawn_server(1, 0);
+    let mut client = Client::connect(&addr).expect("connect");
+    submit(&mut client, "traffic", LONG, "victim", QuotaReq::default());
+
+    // wait until the job is actually running, then cancel it
+    let mut job_id = None;
+    loop {
+        match client.next_event().expect("next event") {
+            Event::Queued { job, tag } if tag == "victim" => job_id = Some(job),
+            Event::Running { job, .. } if Some(job) == job_id => break,
+            Event::Done { .. } => panic!("job finished before it could be cancelled"),
+            _ => {}
+        }
+    }
+    let victim = job_id.expect("queued event seen");
+    client.send(&Request::Cancel { job: victim }).expect("send cancel");
+    loop {
+        match client.next_event().expect("next event") {
+            Event::Cancelled { job } if job == victim => break,
+            Event::Done { job, .. } if job == victim => {
+                panic!("cancelled job ran to completion")
+            }
+            _ => {}
+        }
+    }
+
+    // the pool must keep serving
+    submit(&mut client, "traffic", SMALL, "after", QuotaReq::default());
+    match wait_terminal(&mut client, "after") {
+        Event::Done { .. } => {}
+        other => panic!("post-cancel job ended as {other:?}"),
+    }
+    handle.stop();
+    handle.join().expect("clean shutdown");
+}
+
+#[test]
+fn bad_submissions_are_rejected_without_killing_the_server() {
+    let (handle, addr) = spawn_server(2, 0);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    // malformed line: error event, the connection (and server) survive
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(&addr).expect("raw connect");
+        s.write_all(b"this is not json\n").expect("write garbage");
+        s.write_all(b"{\"cmd\":\"stats\"}\n").expect("write stats");
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).expect("read error event");
+        assert!(line.contains("\"event\":\"error\""), "got {line:?}");
+        line.clear();
+        r.read_line(&mut line).expect("read stats event");
+        assert!(line.contains("\"event\":\"stats\""), "got {line:?}");
+    }
+
+    // unknown scenario
+    submit(&mut client, "no_such_scenario", "", "u1", QuotaReq::default());
+    match wait_terminal(&mut client, "u1") {
+        Event::Rejected { reason, .. } => {
+            assert!(reason.contains("unknown scenario"), "reason: {reason}")
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+
+    // unknown config knob
+    submit(&mut client, "traffic", "no_such_knob=1", "u2", QuotaReq::default());
+    match wait_terminal(&mut client, "u2") {
+        Event::Rejected { reason, .. } => {
+            assert!(reason.contains("bad set"), "reason: {reason}")
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+
+    // and the server still completes real work afterwards
+    submit(&mut client, "traffic", SMALL, "ok", QuotaReq::default());
+    match wait_terminal(&mut client, "ok") {
+        Event::Done { .. } => {}
+        other => panic!("valid job after rejections ended as {other:?}"),
+    }
+    handle.stop();
+    handle.join().expect("clean shutdown");
+}
+
+#[test]
+fn quota_exceeded_jobs_surface_clean_rejections() {
+    let (handle, addr) = spawn_server(1, 0);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    // simulated-event budget: 1 event is always exhausted by the first
+    // checkpoint of the long job
+    submit(
+        &mut client,
+        "traffic",
+        LONG,
+        "ev",
+        QuotaReq {
+            max_wall_ms: None,
+            max_events: Some(1),
+        },
+    );
+    match wait_terminal(&mut client, "ev") {
+        Event::Rejected { reason, .. } => {
+            assert!(reason.contains("quota"), "reason: {reason}")
+        }
+        other => panic!("expected quota rejection, got {other:?}"),
+    }
+
+    // wall-clock budget on a job that needs far longer than 1 ms
+    submit(
+        &mut client,
+        "traffic",
+        LONG,
+        "wall",
+        QuotaReq {
+            max_wall_ms: Some(1),
+            max_events: None,
+        },
+    );
+    match wait_terminal(&mut client, "wall") {
+        Event::Rejected { reason, .. } => {
+            assert!(reason.contains("quota"), "reason: {reason}")
+        }
+        other => panic!("expected quota rejection, got {other:?}"),
+    }
+
+    // the worker survives quota kills
+    submit(&mut client, "traffic", SMALL, "ok", QuotaReq::default());
+    match wait_terminal(&mut client, "ok") {
+        Event::Done { .. } => {}
+        other => panic!("post-quota job ended as {other:?}"),
+    }
+    handle.stop();
+    handle.join().expect("clean shutdown");
+}

@@ -128,13 +128,47 @@ def check_reliability_sweep(j):
     )
 
 
+def check_serve_throughput(j):
+    """Shape of the PR 9 service-mode section: every submission of the
+    loadgen round completed, served reports were verified byte-identical
+    to the batch `run` path, the cross-submission cache actually shared
+    (prepared strictly below the submission count), and the LRU byte
+    accounting never exceeded the configured budget. Full-mode artifacts
+    must carry the 100+-submission acceptance round; fast-mode CI rounds
+    may be smaller but never trivial."""
+    s = j["serve_throughput"]
+    floor = 100 if j.get("fast") is False else 20
+    assert s["submitted"] >= floor, (
+        f"serve_throughput needs >= {floor} submissions, got {s['submitted']}"
+    )
+    assert s["completed"] == s["submitted"], (
+        f"{s['submitted'] - s['completed']} submissions did not complete: {s}"
+    )
+    assert s["rejected"] == 0 and s["cancelled"] == 0, s
+    assert s["verified"] > 0, "serve_throughput ran without verification"
+    assert s["mismatches"] == 0, f"served reports diverged from the batch path: {s}"
+    assert s["reports_byte_identical"] is True, s
+    assert s["subs_per_s"] > 0, s
+    assert s["turnaround_p95_us"] >= s["turnaround_p50_us"] > 0, s
+    cache = s["cache"]
+    assert cache["prepared"] + cache["reused"] == s["submitted"], cache
+    assert cache["prepared"] < s["submitted"], (
+        f"cross-submission cache never shared a prepare: {cache}"
+    )
+    budget = s["cache_budget_bytes"]
+    if budget > 0:
+        assert cache["resident_bytes"] <= budget, (
+            f"cache resident bytes exceed the byte budget: {cache} vs {budget}"
+        )
+
+
 def check_artifact(path):
-    """Shape checks for a regenerated BENCH_PR8 artifact."""
+    """Shape checks for a regenerated BENCH_PR9 artifact."""
     j = load(path)
     if "pending_regeneration" in j:
         fail(f"{path}: regenerated artifact is still a placeholder")
     assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
-    assert j["artifact"] == "BENCH_PR8", j.get("artifact")
+    assert j["artifact"] == "BENCH_PR9", j.get("artifact")
     assert j["queue_transit"]["results"], "no queue benches recorded"
     assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
     assert j["sweep_scaling"]["deterministic_across_jobs"] is True
@@ -189,6 +223,9 @@ def check_artifact(path):
     check_reliability_sweep(j)
     rel = j["reliability_sweep"]
 
+    check_serve_throughput(j)
+    serve = j["serve_throughput"]
+
     print(
         f"{path} ok:",
         f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
@@ -199,6 +236,9 @@ def check_artifact(path):
         f"pool={pp['speedup']:.2f}x",
         f"fault_deliv_min={worst_deliv:.3f}",
         f"link@loss0={rel['link_vs_off_at_zero_loss']:.2f}x",
+        f"serve={serve['subs_per_s']:.1f} subs/s "
+        f"(p50={serve['turnaround_p50_us']}us, "
+        f"cache {serve['cache']['prepared']}/{serve['cache']['reused']})",
     )
 
 

@@ -12,7 +12,14 @@
 //!   (and hence `?` on arbitrary error types) to coexist with the identity
 //!   `From<Error>` impl.
 //! - [`Context`] is implemented for both `Result` and `Option`.
+//! - An `Error` built from a typed error value ([`Error::new`] or `?`)
+//!   keeps that value, and [`Error::downcast_ref`] reaches it through
+//!   any number of `context` layers — the mechanism service mode uses
+//!   to tell a quota `Interrupt` apart from a genuine failure. Errors
+//!   built from plain messages carry no payload and downcast to
+//!   nothing.
 
+use std::any::Any;
 use std::fmt;
 
 /// A context-carrying error: an ordered chain of messages, root cause
@@ -20,6 +27,8 @@ use std::fmt;
 pub struct Error {
     /// `frames[0]` is the root cause; later entries wrap earlier ones.
     frames: Vec<String>,
+    /// The typed root cause, when the error was built from one.
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -27,6 +36,27 @@ impl Error {
     pub fn msg<M: fmt::Display>(message: M) -> Error {
         Error {
             frames: vec![message.to_string()],
+            payload: None,
+        }
+    }
+
+    /// Create an error from a typed error value, keeping the value so
+    /// [`downcast_ref`](Error::downcast_ref) can recover it later.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        // Capture the source chain, root cause first.
+        let mut messages = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            messages.push(s.to_string());
+            source = s.source();
+        }
+        messages.reverse();
+        Error {
+            frames: messages,
+            payload: Some(Box::new(error)),
         }
     }
 
@@ -34,6 +64,13 @@ impl Error {
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.frames.push(context.to_string());
         self
+    }
+
+    /// The typed root cause, if this error was built from one
+    /// ([`Error::new`] or the `?` conversion) of that exact type.
+    /// Context layers do not hide it.
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 
     /// Iterate the chain from the outermost context to the root cause.
@@ -86,15 +123,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        // Capture the source chain, root cause first.
-        let mut messages = vec![e.to_string()];
-        let mut source = e.source();
-        while let Some(s) = source {
-            messages.push(s.to_string());
-            source = s.source();
-        }
-        messages.reverse();
-        Error { frames: messages }
+        Error::new(e)
     }
 }
 
@@ -230,6 +259,21 @@ mod tests {
         assert!(f(11).unwrap_err().to_string().contains("11"));
         let e = anyhow!("plain");
         assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn downcast_ref_reaches_the_typed_root_cause() {
+        let e = Error::from(io_err());
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().unwrap().kind(),
+            std::io::ErrorKind::NotFound
+        );
+        // context layers don't hide the payload
+        let e = e.context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<fmt::Error>().is_none());
+        // message-built errors carry no payload
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
