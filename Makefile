@@ -15,12 +15,15 @@ bench:
 # Perf-trajectory artifact: heap-vs-wheel event engine, sweep scaling,
 # PDES domain scaling, PDES sync-protocol scaling (window vs channel
 # clocks vs barrier-free), sweep resource cache, packet pooling, the
-# degraded-fabric fault sweep, the link-reliability sweep and the
-# service-mode serve_throughput round. Writes BENCH_PR9.json at the repo
-# root (see PERF.md). Honors BSS_BENCH_FAST=1 (CI smoke); override the
-# output with BSS_BENCH_JSON. Committed BENCH_PR*.json placeholders are
-# policed by scripts/validate_bench.py (CI bench-smoke).
-BSS_BENCH_JSON ?= BENCH_PR9.json
+# degraded-fabric fault sweep, the link-reliability sweep, the
+# service-mode serve_throughput round and the rack_scaling curve
+# (microcircuit_rack at 4/8/20 wafers: fabric-reuse rewind vs cold
+# rebuild, events/s, resident bytes, bytes/neuron). Writes
+# BENCH_PR10.json at the repo root (see PERF.md). Honors
+# BSS_BENCH_FAST=1 (CI smoke); override the output with BSS_BENCH_JSON.
+# Committed BENCH_PR*.json placeholders are policed by
+# scripts/validate_bench.py (CI bench-smoke).
+BSS_BENCH_JSON ?= BENCH_PR10.json
 bench-json:
 	BSS_BENCH_JSON=$(BSS_BENCH_JSON) cargo bench --bench bench_events
 

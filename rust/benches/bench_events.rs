@@ -6,7 +6,7 @@
 //! packet-payload pooling.
 //!
 //! `make bench-json` runs this and writes the machine-readable artifact
-//! `BENCH_PR9.json` at the repo root (path comes from `BSS_BENCH_JSON`;
+//! `BENCH_PR10.json` at the repo root (path comes from `BSS_BENCH_JSON`;
 //! without it, e.g. under a generic `cargo bench`, nothing is written so
 //! the committed full-mode artifact cannot be clobbered by fast-mode
 //! numbers): per-bench ns/op and events/s for heap vs wheel, wall-clock
@@ -25,7 +25,11 @@
 //! `serve` instance driven by the `loadgen` client with 100+ concurrent
 //! mixed-scenario submissions — submissions/s, p50/p95 turnaround,
 //! cache prepared-vs-reused counters, and a byte-identity check of
-//! every served report against the batch `run` path). The CI
+//! every served report against the batch `run` path), and the rack
+//! scaling curve (`rack_scaling`: the `microcircuit_rack` scenario at
+//! 4/8/20 wafers — events/s, prepared-plan resident bytes and wire
+//! bytes per neuron, with the `reuse=fabric` rewound execute timed
+//! against a cold rebuild and checked byte-identical). The CI
 //! `bench-smoke` job re-runs
 //! it with `BSS_BENCH_FAST=1`, fails on any `SKIPPED` row, and validates
 //! the artifact shape with `scripts/validate_bench.py`, so this artifact
@@ -706,13 +710,88 @@ fn main() {
         .set("connections", serve_connections)
         .set("cache_budget_bytes", serve_budget);
 
+    // ---- 10. rack scaling: fabric reuse at 4/8/20 wafers --------------------
+    // The PR 10 tentpole economics: at rack scale the dominant per-point
+    // cost is building thousands of boxed actors, which `reuse=fabric`
+    // replaces with a `Sim::reset_to_epoch` rewind. Cold (reuse=off)
+    // vs warm (rewound) wall-clock per wafer count, with the reports
+    // checked byte-identical; resident_bytes is the prepared plan's
+    // cache charge, bytes_per_neuron the paper's wire-cost figure.
+    let rack_scn = find("microcircuit_rack").expect("microcircuit_rack registered");
+    let mut rack_runs = Json::arr();
+    let mut rack_table = Table::new(
+        "rack scaling (microcircuit_rack, warm rewind vs cold rebuild)",
+        &["wafers", "fpgas", "des_events", "cold_s", "warm_s", "reuse_speedup", "events/s", "resident_B"],
+    );
+    let mut rack_deterministic = true;
+    for (wafers, torus) in [
+        (4usize, TorusSpec::new(4, 4, 2)),
+        (8, TorusSpec::new(4, 4, 4)),
+        (20, TorusSpec::new(8, 5, 4)),
+    ] {
+        let mut cfg = rack_scn.default_config();
+        cfg.system.n_wafers = wafers;
+        cfg.system.torus = torus;
+        cfg.workload.duration = if fast {
+            Time::from_us(20)
+        } else {
+            Time::from_us(200)
+        };
+        let mut cold_cfg = cfg.clone();
+        apply_override(&mut cold_cfg, "reuse", "off").expect("reuse override");
+        let t0 = Instant::now();
+        let cold_report = rack_scn.run(&cold_cfg).expect("rack cold run failed");
+        let wall_cold = t0.elapsed().as_secs_f64();
+        // park a fabric, then time the rewound execute
+        rack_scn.run(&cfg).expect("rack warm-up run failed");
+        let t0 = Instant::now();
+        let warm_report = rack_scn.run(&cfg).expect("rack warm run failed");
+        let wall_warm = t0.elapsed().as_secs_f64();
+        if cold_report.to_json().pretty() != warm_report.to_json().pretty() {
+            rack_deterministic = false;
+        }
+        let events = warm_report.get_count("des_events").expect("des_events");
+        let eps = events as f64 / wall_warm;
+        let resident = warm_report.get_count("resident_bytes").expect("resident_bytes");
+        let bpn = warm_report.get_f64("bytes_per_neuron").expect("bytes_per_neuron");
+        let n_fpgas = wafers * cfg.system.fpgas_per_wafer;
+        let reuse_speedup = wall_cold / wall_warm;
+        rack_table.row(vec![
+            wafers.to_string(),
+            n_fpgas.to_string(),
+            events.to_string(),
+            format!("{wall_cold:.3}"),
+            format!("{wall_warm:.3}"),
+            format!("{reuse_speedup:.2}"),
+            eng(eps),
+            resident.to_string(),
+        ]);
+        rack_runs.push(
+            Json::obj()
+                .set("wafers", wafers)
+                .set("n_fpgas", n_fpgas)
+                .set("des_events", events)
+                .set("wall_cold_s", wall_cold)
+                .set("wall_warm_s", wall_warm)
+                .set("reuse_speedup", reuse_speedup)
+                .set("events_per_s", eps)
+                .set("resident_bytes", resident)
+                .set("bytes_per_neuron", bpn),
+        );
+    }
+    rack_table.print();
+    assert!(
+        rack_deterministic,
+        "fabric reuse changed the rack report"
+    );
+
     // ---- artifact ----------------------------------------------------------
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let doc = Json::obj()
         .set("schema", "bss-extoll-bench/1")
-        .set("artifact", "BENCH_PR9")
+        .set("artifact", "BENCH_PR10")
         .set("fast", fast)
         .set("threads_available", threads)
         .set("queue_transit", suite.to_json())
@@ -771,7 +850,13 @@ fn main() {
                 .set("link_vs_off_at_zero_loss", link_vs_off_at_zero_loss)
                 .set("runs", rel_runs),
         )
-        .set("serve_throughput", serve_section);
+        .set("serve_throughput", serve_section)
+        .set(
+            "rack_scaling",
+            Json::obj()
+                .set("deterministic_reuse_vs_rebuild", rack_deterministic)
+                .set("runs", rack_runs),
+        );
     // Only write when explicitly asked (make bench-json sets the path):
     // a generic `cargo bench` / `make bench` run must not clobber the
     // committed full-mode trajectory artifact with fast-mode numbers.

@@ -18,6 +18,42 @@ use crate::util::json::Json;
 use crate::wafer::system::SystemConfig;
 use crate::workload::generators::GeneratorKind;
 
+/// Fabric reuse across executes (the `reuse=` knob).
+///
+/// `fabric` (default) parks the built `Sim` + `System` of a finished
+/// fabric execute in a thread-local pool; the next execute with an
+/// identical fabric plan (same machine, fault set, seed, queue) rewinds
+/// it with [`crate::sim::Sim::reset_to_epoch`] instead of re-allocating
+/// and re-wiring every actor. `off` cold-builds every time. Reports are
+/// byte-identical in both modes — reset restores the exact post-build
+/// state, and the reset-vs-rebuild axis is swept by the differential
+/// harness (`rust/tests/differential_sync.rs`). See docs/TUNING.md.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReuseMode {
+    /// Cold-build the fabric for every execute.
+    Off,
+    /// Reset-and-reuse the previous execute's fabric when the plan matches.
+    #[default]
+    Fabric,
+}
+
+impl ReuseMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReuseMode::Off => "off",
+            ReuseMode::Fabric => "fabric",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReuseMode> {
+        match s {
+            "off" => Some(ReuseMode::Off),
+            "fabric" => Some(ReuseMode::Fabric),
+            _ => None,
+        }
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -53,6 +89,9 @@ pub struct ExperimentConfig {
     /// config `"fault"` object or the `--set fault=` spec string
     /// (`docs/TUNING.md`).
     pub fault: FaultConfig,
+    /// Fabric reuse across executes (`fabric` default, `off` to force
+    /// cold rebuilds) — see [`ReuseMode`].
+    pub reuse: ReuseMode,
 }
 
 /// Spike-traffic workload knobs.
@@ -138,6 +177,7 @@ impl Default for ExperimentConfig {
             domains: 1,
             sync: SyncMode::default(),
             fault: FaultConfig::default(),
+            reuse: ReuseMode::default(),
         }
     }
 }
@@ -163,6 +203,11 @@ impl ExperimentConfig {
                     .ok_or_else(|| {
                         anyhow::anyhow!("unknown sync mode '{name}' (window|channel|free)")
                     })?
+            },
+            reuse: {
+                let name = j.str_or("reuse", ReuseMode::default().as_str());
+                ReuseMode::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown reuse mode '{name}' (off|fabric)"))?
             },
             ..ExperimentConfig::default()
         };
@@ -355,6 +400,21 @@ mod tests {
     }
 
     #[test]
+    fn reuse_knob_parses() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.reuse, ReuseMode::Fabric, "reuse defaults on");
+        let j = Json::parse(r#"{"reuse": "off"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().reuse, ReuseMode::Off);
+        let j = Json::parse(r#"{"reuse": "fabric"}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&j).unwrap().reuse,
+            ReuseMode::Fabric
+        );
+        let j = Json::parse(r#"{"reuse": "always"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn queue_kind_parses() {
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(cfg.queue, QueueKind::Wheel);
@@ -454,6 +514,7 @@ mod config_file_tests {
         for name in [
             "configs/traffic_2wafer.json",
             "configs/microcircuit_4shard.json",
+            "configs/microcircuit_rack.json",
             "configs/eviction_ablation.json",
             "configs/fault_lossy.json",
             "configs/fault_degraded.json",

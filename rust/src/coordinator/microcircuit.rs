@@ -12,9 +12,9 @@
 //!   The result depends only on `(artifact, seed, w_exc, w_inh,
 //!   k_scale)`, which is exactly its cache key, so a sweep over e.g.
 //!   `steps` or `dt_s` loads the artifact a single time.
-//! - **execute** instantiates per-run [`ShardSim`] state from the shared
-//!   weights (memcpy, not regeneration), builds the fabric, programs
-//!   routes and runs the co-simulation loop.
+//! - **execute** instantiates per-run [`ShardArena`] state over the
+//!   shared weight arena (zero-copy borrow, not regeneration), builds the
+//!   fabric, programs routes and runs the co-simulation loop.
 //!
 //! Co-simulation scheme (one neural timestep = `dt` of hardware time):
 //!
@@ -37,10 +37,10 @@ use crate::fpga::event::{systime_of, SpikeEvent, TS_MASK};
 use crate::fpga::fpga::Fpga;
 use crate::fpga::lookup::{RxEntry, TxEntry};
 use crate::msg::Msg;
-use crate::neuro::shard::{pulse_of_neuron, ShardSim};
-use crate::neuro::weights::build_weights;
+use crate::neuro::shard::{pulse_of_neuron, ShardArena};
+use crate::neuro::weights::{fill_weights, weights_shape};
 use crate::runtime::{Runtime, ShardModel};
-use crate::sim::{EventQueue, Sim, Time};
+use crate::sim::{EventQueue, F32Arena, F32Handle, Sim, Time};
 use crate::util::json::Json;
 use crate::util::report::{MetricDecl, Report};
 use crate::util::rng::Rng;
@@ -146,17 +146,21 @@ impl NeuroReport {
     }
 }
 
-/// Prepared resources of the microcircuit scenario: the loaded shard
-/// artifact and every shard's synaptic weight matrix. Immutable and
-/// shared across sweep points; per-run neuron state is built from it in
-/// execute.
+/// Prepared resources of the microcircuit scenarios: the loaded shard
+/// artifact and every shard's synaptic weight matrix, packed into one
+/// flat [`F32Arena`] (row per shard). Immutable and shared across sweep
+/// points; executes read their weight rows straight out of the shared
+/// arena — no per-execute copy, which is what lets a 20-wafer rack's
+/// ~10⁸-synapse weight set exist exactly once per cache entry.
 pub struct MicrocircuitPrepared {
-    model: ShardModel,
-    /// Row-major `[n_local, n_global]` weights, one matrix per shard.
-    weights: Vec<Vec<f32>>,
-    n_shards: usize,
-    n_local: usize,
-    n_global: usize,
+    pub(crate) model: ShardModel,
+    /// All shards' row-major `[n_local, n_global]` weights, contiguous.
+    pub(crate) weights: Arc<F32Arena>,
+    /// Per-shard rows inside `weights`.
+    pub(crate) weight_rows: Vec<F32Handle>,
+    pub(crate) n_shards: usize,
+    pub(crate) n_local: usize,
+    pub(crate) n_global: usize,
 }
 
 impl Prepared for MicrocircuitPrepared {
@@ -165,14 +169,9 @@ impl Prepared for MicrocircuitPrepared {
     }
 
     fn resident_bytes(&self) -> u64 {
-        // the weight matrices dominate; the loaded artifact is a small
-        // constant next to them
-        let weights: usize = self
-            .weights
-            .iter()
-            .map(|w| w.len() * std::mem::size_of::<f32>())
-            .sum();
-        (std::mem::size_of::<MicrocircuitPrepared>() + weights) as u64
+        // the weight arena dominates; the loaded artifact is a small
+        // constant next to it
+        (std::mem::size_of::<MicrocircuitPrepared>() + self.weights.resident_bytes()) as u64
     }
 }
 
@@ -284,24 +283,31 @@ fn mc_prepare(cfg: &ExperimentConfig) -> Result<MicrocircuitPrepared> {
         (n_shards as u32 * n_local as u32) as f64 / FULL_SCALE_NEURONS as f64,
     );
     // each shard's weights come from an independent, seed-derived RNG
-    // stream (see build_weights), so the matrices are position-independent
-    // of whatever the run RNG does at execute time
-    let weights = (0..n_shards)
+    // stream (see fill_weights), so the matrices are position-independent
+    // of whatever the run RNG does at execute time; all shards share one
+    // contiguous arena (bit-identical to the former per-shard Vecs)
+    let mut arena = F32Arena::with_capacity(n_shards * n_local * n_global);
+    let weight_rows = (0..n_shards)
         .map(|f| {
-            build_weights(
-                &mc,
-                &slices,
-                f,
-                cfg.neuro.w_exc,
-                cfg.neuro.w_inh,
-                cfg.neuro.k_scale,
-                cfg.seed,
-            )
+            let (nl, ng) = weights_shape(&slices, f);
+            arena.alloc_with(nl * ng, |w| {
+                fill_weights(
+                    &mc,
+                    &slices,
+                    f,
+                    cfg.neuro.w_exc,
+                    cfg.neuro.w_inh,
+                    cfg.neuro.k_scale,
+                    cfg.seed,
+                    w,
+                );
+            })
         })
         .collect();
     Ok(MicrocircuitPrepared {
         model,
-        weights,
+        weights: Arc::new(arena),
+        weight_rows,
         n_shards,
         n_local,
         n_global,
@@ -326,18 +332,16 @@ fn mc_execute(prep: &MicrocircuitPrepared, cfg: &ExperimentConfig) -> Result<Neu
     let sys = System::build(&mut sim, sys_cfg);
     let fpgas: Vec<_> = sys.fpgas().collect();
 
-    // --- neural substrate: per-run state over the shared weights ----------
+    // --- neural substrate: per-run SoA state over the shared weights ------
+    // membrane/trace state lives in one flat shard-major buffer; weights
+    // are borrowed from the prepared arena, never copied per execute
     let mut rng = Rng::new(cfg.seed);
-    let mut shards: Vec<ShardSim> = Vec::with_capacity(n_shards);
-    for f in 0..n_shards {
-        let mut shard = ShardSim::new(
-            prep.model.clone(),
-            prep.weights[f].clone(),
-            (f * n_local) as u32,
-        );
-        shard.randomize_v(&mut rng, cfg.neuro.v_init.0, cfg.neuro.v_init.1);
-        shards.push(shard);
-    }
+    let mut shards = ShardArena::new(
+        prep.model.clone(),
+        Arc::clone(&prep.weights),
+        prep.weight_rows.clone(),
+    );
+    shards.randomize_v(&mut rng, cfg.neuro.v_init.0, cfg.neuro.v_init.1);
 
     // --- route programming --------------------------------------------------
     // every neuron may project anywhere: program full fan-out from every
@@ -404,8 +408,8 @@ fn mc_execute(prep: &MicrocircuitPrepared, cfg: &ExperimentConfig) -> Result<Neu
         // 1. neuron dynamics
         let pjrt_t = std::time::Instant::now();
         let mut step_spikes = 0u32;
-        for (f, shard) in shards.iter_mut().enumerate() {
-            let spiked = shard.step(&spikes_in[f])?;
+        for f in 0..n_shards {
+            let spiked = shards.step_shard(f, &spikes_in[f])?;
             step_spikes += spiked.len() as u32;
         }
         report.pjrt_seconds += pjrt_t.elapsed().as_secs_f64();
@@ -426,7 +430,7 @@ fn mc_execute(prep: &MicrocircuitPrepared, cfg: &ExperimentConfig) -> Result<Neu
         for f in 0..n_shards {
             // pace injections within the first 60% of the window across
             // the 8 HICANN links
-            let spikes = shards[f].last_spikes.clone();
+            let spikes = shards.last_spikes(f);
             let window = dt * 3 / 5;
             let n_spikes = spikes.len().max(1) as u64;
             for (si, &local) in spikes.iter().enumerate() {

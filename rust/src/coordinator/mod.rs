@@ -41,8 +41,9 @@
 //! **Registry.** [`scenario::registry`] is one static table
 //! (`&'static [&'static dyn Scenario]`); adding a scenario is a single
 //! type implementing the trait plus one registry line. Registered
-//! today: `traffic`, `microcircuit`, `burst`, `hotspot`, `analyze`,
-//! `fault_sweep`, `latency_dist`.
+//! today: `traffic`, `microcircuit`, `microcircuit_rack`, `burst`,
+//! `hotspot`, `analyze`, `fault_sweep`, `reliability_sweep`,
+//! `latency_dist`.
 //!
 //! **Sweeps.** [`sweep::SweepRunner`] runs one scenario over a cartesian
 //! grid of config overrides (`rate_hz=1e6,5e6 × n_wafers=2,4 × ...`) and
@@ -59,6 +60,7 @@
 pub mod config;
 pub mod faults;
 pub mod microcircuit;
+pub mod rack;
 pub mod scenario;
 pub mod sweep;
 pub mod traffic;
@@ -71,6 +73,7 @@ pub use microcircuit::{
     shard_slices, MicrocircuitPrepared, MicrocircuitScenario, NeuroReport,
     MICROCIRCUIT_METRICS,
 };
+pub use rack::{MicrocircuitRackScenario, RACK_METRICS};
 pub use scenario::{
     downcast_prepared, find, machine_shape_fields, names, registry, AnalyzeScenario,
     CacheKey, CacheStats, Prepared, ResourceCache, Scenario,

@@ -1,0 +1,318 @@
+//! The `microcircuit_rack` scenario: cortical-microcircuit-patterned
+//! spike load at rack scale.
+//!
+//! The paper's target deployment is a rack of 20 wafer modules bridged
+//! by the Extoll torus; the natural workload at that scale is many
+//! copies of the 77k-neuron cortical microcircuit whose connectivity is
+//! dominated by *local* projections, with a long-range tail. This
+//! scenario models that shape on the packet-level fabric: every FPGA
+//! hosts `sources_per_fpga` neurons, and each neuron fans out to
+//! `fan_out` destination FPGAs drawn Zipf(`zipf_s`) over the *distance
+//! rank* of the other FPGAs (rank 0 = nearest by endpoint index, i.e.
+//! same wafer first) — high skew concentrates traffic on wafer-local
+//! links exactly like the microcircuit's connection-probability
+//! falloff, while `zipf_s = 0` degrades to uniform all-to-all.
+//!
+//! On top of the standard fabric metrics the report carries the
+//! rack-scale memory/communication figures of merit: the neuron count,
+//! total wire bytes injected, wire **bytes per neuron**, and the
+//! resident bytes of the prepared plan (the quantity the byte-accounted
+//! [`super::scenario::ResourceCache`] charges). As a
+//! [`FabricScenario`] it inherits the shared driver end to end — plan
+//! caching, PDES partitioning, and the `reuse=fabric` rewind pool — so
+//! the rack runs byte-identically at any `domains`/`sync`/`reuse`
+//! combination (gated by `rust/tests/differential_sync.rs`).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::extoll::torus::TorusSpec;
+use crate::fpga::fpga::Fpga;
+use crate::fpga::lookup::{RxEntry, TxEntry};
+use crate::msg::Msg;
+use crate::sim::{Sim, Time};
+use crate::util::report::{MetricDecl, Report};
+use crate::util::rng::{Rng, Zipf};
+use crate::wafer::system::System;
+
+use super::config::ExperimentConfig;
+use super::scenario::{downcast_prepared, CacheKey, Prepared, Scenario};
+use super::traffic::{
+    execute_fabric_plan, fabric_key_base, fabric_schema, plan_fabric, FabricPlan,
+    FabricScenario, FpgaPlan,
+};
+
+/// Declared metric schema of [`MicrocircuitRackScenario`].
+pub const RACK_METRICS: &[MetricDecl] = fabric_schema![
+    MetricDecl::count("wire_bytes_out", "B"),
+    MetricDecl::count("n_neurons", "neurons"),
+    MetricDecl::real("bytes_per_neuron", "B/neuron"),
+    MetricDecl::count("resident_bytes", "B"),
+];
+
+/// Map a Zipf-sampled distance rank to an FPGA index near `fi`:
+/// rank 0 → `fi + 1`, rank 1 → `fi - 1`, rank 2 → `fi + 2`, ... with
+/// wrap-around. FPGAs are enumerated wafer-major, so small ranks stay
+/// on the same wafer — the locality knob of the scenario.
+fn neighbor_by_rank(fi: usize, rank: usize, n: usize) -> usize {
+    let offset = rank / 2 + 1;
+    if rank % 2 == 0 {
+        (fi + offset) % n
+    } else {
+        (fi + n - offset) % n
+    }
+}
+
+/// Rack-scale microcircuit load (see the module docs).
+pub struct MicrocircuitRackScenario;
+
+impl FabricScenario for MicrocircuitRackScenario {
+    fn plan(
+        &self,
+        sys: &System,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<FabricPlan> {
+        let fpgas: Vec<_> = sys.fpgas().collect(); // (wafer, slot, actor, endpoint)
+        let n = fpgas.len();
+        anyhow::ensure!(n >= 2, "microcircuit_rack needs at least 2 FPGAs");
+        anyhow::ensure!(
+            cfg.workload.sources_per_fpga * cfg.workload.fan_out <= 1 << 15,
+            "rack GUID space exceeded: {} neurons × fan_out {}",
+            cfg.workload.sources_per_fpga,
+            cfg.workload.fan_out
+        );
+        let zipf = Zipf::new(n - 1, cfg.workload.zipf_s);
+
+        let mut guid_next = vec![0u16; n]; // per-destination GUID allocator
+        let mut per_fpga = Vec::with_capacity(n);
+        let mut rx = Vec::new();
+        for fi in 0..n {
+            let mut sources = Vec::new();
+            let mut tx = Vec::new();
+            for s in 0..cfg.workload.sources_per_fpga {
+                let hicann = (s % 8) as u8;
+                let pulse = (s / 8) as u16;
+                sources.push((hicann, pulse));
+                // locality-biased fan-out: Zipf over the distance rank
+                let mut picked = BTreeSet::new();
+                while picked.len() < cfg.workload.fan_out.min(n - 1) {
+                    let d = neighbor_by_rank(fi, zipf.sample(rng), n);
+                    picked.insert(d);
+                }
+                for d in picked {
+                    let dest = fpgas[d].3;
+                    let guid = guid_next[d];
+                    guid_next[d] = guid_next[d].wrapping_add(1) & 0x7FFF;
+                    tx.push((hicann, pulse, TxEntry { dest, guid }));
+                    rx.push((
+                        d,
+                        guid,
+                        RxEntry {
+                            hicann_mask: 0xFF,
+                            pulse_addr: pulse,
+                        },
+                    ));
+                }
+            }
+            per_fpga.push(FpgaPlan {
+                sources,
+                gen_seed: Some(rng.next_u64()),
+                tx,
+            });
+        }
+        Ok(FabricPlan { per_fpga, rx })
+    }
+
+    fn collect(&self, sim: &Sim<Msg>, sys: &System, report: &mut Report) {
+        let mut wire_bytes = 0u64;
+        for (_, _, id, _) in sys.fpgas() {
+            wire_bytes += sim.get::<Fpga>(id).stats.tx_wire_bytes;
+        }
+        report.push_unit("wire_bytes_out", wire_bytes, "B");
+    }
+}
+
+impl Scenario for MicrocircuitRackScenario {
+    fn name(&self) -> &'static str {
+        "microcircuit_rack"
+    }
+
+    fn about(&self) -> &'static str {
+        "rack-scale (20-wafer) microcircuit load with locality-biased fan-out"
+    }
+
+    /// The paper's rack: 20 wafer modules on an 8×5×4 torus (160 nodes
+    /// = 20 wafers × 8 concentrators), 48 FPGAs each, 80 neurons per
+    /// FPGA ≈ the 77k-neuron cortical microcircuit spread over the
+    /// machine. Rate and duration are scaled down so the default run
+    /// stays a smoke test; sweeps raise them.
+    fn default_config(&self) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system.n_wafers = 20;
+        cfg.system.torus = TorusSpec::new(8, 5, 4);
+        cfg.system.fpgas_per_wafer = 48;
+        cfg.system.concentrators_per_wafer = 8;
+        cfg.workload.sources_per_fpga = 80;
+        cfg.workload.fan_out = 2;
+        cfg.workload.zipf_s = 1.3;
+        cfg.workload.rate_hz = 1e6;
+        cfg.workload.duration = Time::from_us(100);
+        cfg
+    }
+
+    fn metrics(&self) -> &'static [MetricDecl] {
+        RACK_METRICS
+    }
+
+    fn cache_key(&self, cfg: &ExperimentConfig) -> CacheKey {
+        fabric_key_base("rack_plan", cfg)
+            .field("fan_out", cfg.workload.fan_out)
+            .field("zipf_s", cfg.workload.zipf_s)
+    }
+
+    fn prepare(&self, cfg: &ExperimentConfig) -> Result<Arc<dyn Prepared>> {
+        Ok(Arc::new(plan_fabric(self, cfg)?))
+    }
+
+    fn execute(&self, prepared: &dyn Prepared, cfg: &ExperimentConfig) -> Result<Report> {
+        let plan: &FabricPlan = downcast_prepared(prepared, Scenario::name(self))?;
+        let mut report =
+            execute_fabric_plan(self, Scenario::name(self), RACK_METRICS, plan, cfg)?;
+        let n_neurons: u64 = plan.per_fpga.iter().map(|fp| fp.sources.len() as u64).sum();
+        let wire = report.get_count("wire_bytes_out").unwrap_or(0);
+        report.push_unit("n_neurons", n_neurons, "neurons");
+        report.push_unit(
+            "bytes_per_neuron",
+            if n_neurons == 0 {
+                f64::NAN
+            } else {
+                wire as f64 / n_neurons as f64
+            },
+            "B/neuron",
+        );
+        // what the byte-accounted ResourceCache charges for this point's
+        // prepared plan — surfaced so sweeps can plot memory vs. wafers
+        report.push_unit("resident_bytes", prepared.resident_bytes(), "B");
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::QueueKind;
+    use crate::wafer::system::SystemConfig;
+
+    /// A rack in miniature: same scenario, toy machine.
+    fn small() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = SystemConfig {
+            n_wafers: 2,
+            torus: TorusSpec::new(2, 2, 1),
+            fpgas_per_wafer: 4,
+            concentrators_per_wafer: 2,
+            ..SystemConfig::default()
+        };
+        cfg.workload.sources_per_fpga = 8;
+        cfg.workload.fan_out = 2;
+        cfg.workload.zipf_s = 1.3;
+        cfg.workload.rate_hz = 2e6;
+        cfg.workload.duration = Time::from_us(500);
+        cfg
+    }
+
+    #[test]
+    fn rack_run_emits_neuron_metrics() {
+        let s = MicrocircuitRackScenario;
+        let r = Scenario::run(&s, &small()).unwrap();
+        assert_eq!(r.get_count("n_neurons"), Some(8 * 8));
+        let wire = r.get_count("wire_bytes_out").unwrap();
+        assert!(wire > 0, "no wire bytes recorded");
+        let bpn = r.get_f64("bytes_per_neuron").unwrap();
+        assert!((bpn - wire as f64 / 64.0).abs() < 1e-9);
+        assert!(r.get_count("resident_bytes").unwrap() > 0);
+        // every generated event is delivered fan_out times
+        let generated = r.get_count("events_generated").unwrap();
+        assert_eq!(r.get_count("rx_events"), Some(2 * generated));
+    }
+
+    #[test]
+    fn rack_is_deterministic_and_reuse_safe() {
+        let s = MicrocircuitRackScenario;
+        let warm_cfg = small();
+        assert_eq!(warm_cfg.reuse, super::super::config::ReuseMode::Fabric);
+        let first = Scenario::run(&s, &warm_cfg).unwrap().to_json().to_string();
+        // second run acquires the parked fabric (warm path)
+        let second = Scenario::run(&s, &warm_cfg).unwrap().to_json().to_string();
+        // cold rebuild for reference
+        let mut cold_cfg = small();
+        cold_cfg.reuse = super::super::config::ReuseMode::Off;
+        let cold = Scenario::run(&s, &cold_cfg).unwrap().to_json().to_string();
+        assert_eq!(first, second, "warm rerun diverged");
+        assert_eq!(first, cold, "fabric reuse diverged from cold rebuild");
+    }
+
+    #[test]
+    fn locality_bias_prefers_near_fpgas() {
+        let cfg = small();
+        // the same throwaway system plan_fabric builds, to map endpoints
+        // back to FPGA indices
+        let mut sim: Sim<Msg> = Sim::new();
+        let sys = System::build(&mut sim, cfg.system);
+        let index_of: std::collections::BTreeMap<_, _> = sys
+            .fpgas()
+            .enumerate()
+            .map(|(i, (_, _, _, ep))| (ep, i))
+            .collect();
+        let plan = plan_fabric(&MicrocircuitRackScenario, &cfg).unwrap();
+        let n = plan.per_fpga.len();
+        let (mut near, mut far) = (0u64, 0u64);
+        for (fi, fp) in plan.per_fpga.iter().enumerate() {
+            for &(_, _, entry) in &fp.tx {
+                let d = index_of[&entry.dest];
+                let dist = (d as i64 - fi as i64).rem_euclid(n as i64);
+                let dist = dist.min(n as i64 - dist);
+                if dist <= 1 {
+                    near += 1;
+                } else {
+                    far += 1;
+                }
+            }
+        }
+        assert!(
+            near > far,
+            "Zipf(1.3) rank bias should favor adjacent FPGAs: near={near} far={far}"
+        );
+    }
+
+    #[test]
+    fn rack_works_on_both_queue_kinds() {
+        let s = MicrocircuitRackScenario;
+        let mut cfg = small();
+        cfg.queue = QueueKind::Heap;
+        let heap = Scenario::run(&s, &cfg).unwrap();
+        cfg.queue = QueueKind::Wheel;
+        let wheel = Scenario::run(&s, &cfg).unwrap();
+        // physics (not DES bookkeeping) must match across backends
+        for key in ["rx_events", "wire_bytes_out", "packets_out"] {
+            assert_eq!(heap.get_count(key), wheel.get_count(key), "{key} diverged");
+        }
+    }
+
+    #[test]
+    fn default_config_is_the_paper_rack() {
+        let cfg = MicrocircuitRackScenario.default_config();
+        assert_eq!(cfg.system.n_wafers, 20);
+        assert!(
+            cfg.system.torus.n_nodes()
+                >= cfg.system.n_wafers * cfg.system.concentrators_per_wafer
+        );
+        assert_eq!(
+            cfg.system.n_wafers * cfg.system.fpgas_per_wafer * cfg.workload.sources_per_fpga,
+            76_800 // ≈ the 77k-neuron cortical microcircuit
+        );
+    }
+}

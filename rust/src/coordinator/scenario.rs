@@ -97,6 +97,7 @@ pub use crate::util::report::{MetricDecl, MetricKind};
 use super::config::ExperimentConfig;
 use super::faults::{FaultSweepScenario, LatencyDistScenario, ReliabilitySweepScenario};
 use super::microcircuit::MicrocircuitScenario;
+use super::rack::MicrocircuitRackScenario;
 use super::traffic::{BurstScenario, HotspotScenario, TrafficScenario};
 
 /// Immutable resources produced by [`Scenario::prepare`] and shared
@@ -555,9 +556,10 @@ impl ResourceCache {
 /// borrow from it).
 ///
 /// Adding a scenario = implement [`Scenario`] + add one line here.
-static REGISTRY: [&dyn Scenario; 8] = [
+static REGISTRY: [&dyn Scenario; 9] = [
     &TrafficScenario,
     &MicrocircuitScenario,
+    &MicrocircuitRackScenario,
     &BurstScenario,
     &HotspotScenario,
     &AnalyzeScenario,
@@ -726,6 +728,7 @@ mod tests {
         for required in [
             "traffic",
             "microcircuit",
+            "microcircuit_rack",
             "burst",
             "hotspot",
             "analyze",
@@ -735,7 +738,7 @@ mod tests {
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
-        assert!(names.len() >= 8);
+        assert!(names.len() >= 9);
     }
 
     #[test]

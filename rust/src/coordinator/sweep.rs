@@ -75,6 +75,12 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
                     anyhow::anyhow!("unknown sync mode '{value}' (window|channel|free)")
                 })?
         }
+        // fabric reuse across executes: rewind-and-reuse (`fabric`,
+        // default) vs cold rebuilds (`off`) — byte-identical either way
+        "reuse" => {
+            cfg.reuse = super::config::ReuseMode::parse(value)
+                .ok_or_else(|| anyhow::anyhow!("unknown reuse mode '{value}' (off|fabric)"))?
+        }
         // fault injection: "none", "fail:0.25|loss:0.01", a JSON object,
         // or "@path" to load a calibrated preset file (the compact form
         // is comma-free so it survives as a sweep-axis value — axis
@@ -160,7 +166,7 @@ pub fn apply_override(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Res
         "k_scale" => cfg.neuro.k_scale = num(key, value)?,
         other => bail!(
             "unknown parameter '{other}' (known: seed, queue, domains, sync, \
-             fault, reliability, retx_window, retx_timeout_ns, \
+             reuse, fault, reliability, retx_window, retx_timeout_ns, \
              retx_max_retries, retx_backoff_cap, rate_hz, sources_per_fpga, \
              fan_out, zipf_s, deadline_offset, duration_s, generator, \
              burst_len, mc_scale, n_wafers, fpgas_per_wafer, \
@@ -874,6 +880,31 @@ mod tests {
         assert!(apply_override(&mut cfg, "sync", "global").is_err());
         apply_override(&mut cfg, "sync", "window").unwrap();
         assert_eq!(cfg.sync, crate::sim::SyncMode::Window);
+    }
+
+    #[test]
+    fn reuse_override_sweeps_identically() {
+        // fabric reuse is a perf knob: a sweep across off/fabric (the
+        // second and later `fabric` points recycle pooled fabrics) must
+        // agree on every metric
+        let runner = SweepRunner::new(small())
+            .axis("reuse", &["off", "fabric"])
+            .axis("rate_hz", &["1e6", "4e6"]);
+        let result = runner.run(find("traffic").unwrap()).unwrap();
+        assert_eq!(result.points.len(), 4);
+        // points pair up by rate (last axis fastest): off/1e6 vs
+        // fabric/1e6, off/4e6 vs fabric/4e6
+        for (off, fab) in [(0usize, 2usize), (1, 3)] {
+            assert_eq!(
+                result.points[off].report.to_flat_json().to_string(),
+                result.points[fab].report.to_flat_json().to_string(),
+                "reuse diverged from cold rebuild"
+            );
+        }
+        let mut cfg = small();
+        assert!(apply_override(&mut cfg, "reuse", "always").is_err());
+        apply_override(&mut cfg, "reuse", "off").unwrap();
+        assert_eq!(cfg.reuse, super::super::config::ReuseMode::Off);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //!   traffic plan's cache family on purpose).
 //! - [`HotspotScenario`] — every FPGA fires at one hot FPGA.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -49,7 +50,7 @@ use crate::workload::generators::{
     spawn_generator, total_generated, BurstGen, GenConfig, GeneratorKind,
 };
 
-use super::config::ExperimentConfig;
+use super::config::{ExperimentConfig, ReuseMode};
 use super::scenario::{
     downcast_prepared, machine_shape_fields, CacheKey, Prepared, Scenario,
 };
@@ -227,6 +228,73 @@ fn expected_pending_events(cfg: &ExperimentConfig) -> usize {
     (n_fpgas * (8 + 4 * cfg.workload.sources_per_fpga)).min(1 << 20)
 }
 
+// ---- fabric reuse pool ---------------------------------------------------
+
+/// One parked fabric: a finished execute's `Sim` + `System`, kept so the
+/// next execute with identical build inputs can rewind it with
+/// [`Sim::reset_to_epoch`] instead of re-allocating and re-wiring every
+/// actor (at rack scale, thousands of boxed actors per point).
+struct PooledFabric {
+    key: String,
+    sim: Sim<Msg>,
+    sys: System,
+}
+
+thread_local! {
+    /// One-entry fabric pool per thread (`reuse=fabric`, the default).
+    /// Thread-local because sweep workers execute points concurrently;
+    /// each worker recycles its own fabric with zero synchronization.
+    static FABRIC_POOL: RefCell<Option<PooledFabric>> = const { RefCell::new(None) };
+}
+
+/// Everything that shapes the build: the machine, the fault config and
+/// seed (the fault model is sampled from them), the queue backend and
+/// the slab pre-size. Two configs with equal keys build byte-identical
+/// fabrics, so a rewound fabric stands in for a cold one exactly.
+fn fabric_pool_key(cfg: &ExperimentConfig) -> String {
+    format!(
+        "{:?}|{:?}|{}|{:?}|{}",
+        cfg.system,
+        cfg.fault,
+        cfg.seed,
+        cfg.queue,
+        expected_pending_events(cfg)
+    )
+}
+
+/// Take the parked fabric if its build inputs match and it rewinds
+/// cleanly; `None` (pool empty, key mismatch, or a non-resettable actor)
+/// sends the caller down the cold-build path. A failed reset discards
+/// the parked fabric — it is never left half-rewound.
+fn acquire_fabric(cfg: &ExperimentConfig) -> Option<(Sim<Msg>, System)> {
+    if cfg.reuse != ReuseMode::Fabric {
+        return None;
+    }
+    let mut parked = FABRIC_POOL.with(|p| p.borrow_mut().take())?;
+    if parked.key != fabric_pool_key(cfg) {
+        return None;
+    }
+    if parked.sim.reset_to_epoch(&parked.sys.epoch) {
+        Some((parked.sim, parked.sys))
+    } else {
+        None
+    }
+}
+
+/// Park a finished fabric for the next execute on this thread.
+fn release_fabric(cfg: &ExperimentConfig, sim: Sim<Msg>, sys: System) {
+    if cfg.reuse != ReuseMode::Fabric {
+        return;
+    }
+    FABRIC_POOL.with(|p| {
+        *p.borrow_mut() = Some(PooledFabric {
+            key: fabric_pool_key(cfg),
+            sim,
+            sys,
+        });
+    });
+}
+
 /// Phase 1 for fabric scenarios: build a throwaway system (only its
 /// endpoint layout is read) and let the scenario plan against it.
 pub fn plan_fabric(scn: &dyn FabricScenario, cfg: &ExperimentConfig) -> Result<FabricPlan> {
@@ -303,18 +371,31 @@ pub(crate) fn run_fabric_experiment_with(
     plan: &FabricPlan,
     cfg: &ExperimentConfig,
 ) -> Result<(Sim<Msg>, System, TrafficReport)> {
-    let mut sim: Sim<Msg> = Sim::with_queue(EventQueue::with_capacity(
-        cfg.queue,
-        expected_pending_events(cfg),
-    ));
-    // The fault model is an execute-time resource, built here (never in
-    // prepare) from the experiment seed: plans stay fault-agnostic, so a
-    // fault sweep shares one cached plan across every point. The default
-    // (fault-free) config builds no model at all — byte-identical to the
-    // pre-fault simulator.
-    let fault = (!cfg.fault.is_default())
-        .then(|| Arc::new(crate::fault::FaultModel::build(&cfg.fault, cfg.system.torus, cfg.seed)));
-    let sys = System::build_with(&mut sim, cfg.system, fault.as_ref());
+    // `reuse=fabric` (the default): rewind this thread's parked fabric
+    // back to its post-build epoch when the build inputs match —
+    // identical actor ids, wiring and queue shape, so the run that
+    // follows is byte-identical to a cold build (gated below and by the
+    // reset axis of `rust/tests/differential_sync.rs`).
+    let (mut sim, sys) = match acquire_fabric(cfg) {
+        Some(reused) => reused,
+        None => {
+            let mut sim: Sim<Msg> = Sim::with_queue(EventQueue::with_capacity(
+                cfg.queue,
+                expected_pending_events(cfg),
+            ));
+            // The fault model is an execute-time resource, built here
+            // (never in prepare) from the experiment seed: plans stay
+            // fault-agnostic, so a fault sweep shares one cached plan
+            // across every point. The default (fault-free) config builds
+            // no model at all — byte-identical to the pre-fault simulator.
+            let fault = (!cfg.fault.is_default()).then(|| {
+                Arc::new(crate::fault::FaultModel::build(&cfg.fault, cfg.system.torus, cfg.seed))
+            });
+            let sys = System::build_with(&mut sim, cfg.system, fault.as_ref());
+            (sim, sys)
+        }
+    };
+    let fault = sys.fault.clone();
     apply_plan(&mut sim, &sys, plan, scn.generator(cfg), cfg)?;
 
     let dm = DomainMap::new(cfg.system.torus, cfg.domains);
@@ -470,6 +551,9 @@ pub fn execute_fabric_plan(
     // total simulator events dispatched while producing this report.
     report.push_unit("des_events", sim.processed(), "events");
     scn.collect(&sim, &sys, &mut report);
+    // collection done — park the fabric for the next execute instead of
+    // dropping thousands of boxed actors just to re-allocate them
+    release_fabric(cfg, sim, sys);
     Ok(report)
 }
 
@@ -516,7 +600,7 @@ fn gen_config(cfg: &ExperimentConfig, sources: Vec<(u8, u16)>) -> GenConfig {
 /// Machine-shape + seed fields shared by every fabric plan key (the
 /// shape rendering itself is the cross-scenario
 /// [`machine_shape_fields`] helper).
-fn fabric_key_base(family: &'static str, cfg: &ExperimentConfig) -> CacheKey {
+pub(crate) fn fabric_key_base(family: &'static str, cfg: &ExperimentConfig) -> CacheKey {
     machine_shape_fields(CacheKey::new(family), cfg)
         .field("seed", cfg.seed)
         .field("sources_per_fpga", cfg.workload.sources_per_fpga)
@@ -1005,6 +1089,75 @@ mod tests {
             via_traffic_plan.to_json().to_string(),
             direct.to_json().to_string()
         );
+    }
+
+    fn exec(cfg: &ExperimentConfig, plan: &FabricPlan) -> String {
+        execute_fabric_plan(&TrafficScenario, "traffic", TRAFFIC_METRICS, plan, cfg)
+            .unwrap()
+            .to_json()
+            .to_string()
+    }
+
+    #[test]
+    fn fabric_reuse_is_byte_identical_to_cold_rebuild() {
+        // the tentpole gate: executes recycling a pooled fabric
+        // (reuse=fabric, the default) must report byte-identically to
+        // cold rebuilds (reuse=off)
+        let cfg = small();
+        assert_eq!(cfg.reuse, ReuseMode::Fabric, "reuse defaults on");
+        let mut cold_cfg = small();
+        cold_cfg.reuse = ReuseMode::Off;
+        let plan = plan_fabric(&TrafficScenario, &cfg).unwrap();
+        // back-to-back on one thread: the second execute takes the pool
+        let first = exec(&cfg, &plan);
+        let second = exec(&cfg, &plan);
+        let cold = exec(&cold_cfg, &plan);
+        assert_eq!(first, cold, "cold-pool execute diverged");
+        assert_eq!(second, cold, "reused-fabric execute diverged");
+    }
+
+    #[test]
+    fn fabric_reuse_covers_partitioned_runs() {
+        // merged partitioned sims are resettable too (Partition::into_sim
+        // clears the domain context), so warm PDES executes must match
+        let mut cfg = small();
+        cfg.workload.fan_out = 2;
+        cfg.domains = 2;
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.reuse = ReuseMode::Off;
+        let plan = plan_fabric(&TrafficScenario, &cfg).unwrap();
+        let first = exec(&cfg, &plan);
+        let second = exec(&cfg, &plan);
+        let cold = exec(&cold_cfg, &plan);
+        assert_eq!(first, cold);
+        assert_eq!(second, cold, "reused partitioned execute diverged");
+    }
+
+    #[test]
+    fn pool_key_tracks_build_inputs() {
+        // a parked fabric must never serve a config with different build
+        // inputs: change the seed (fault sampling + plan RNG) and the
+        // warm path has to cold-build — identical to reuse=off
+        let cfg = small();
+        let plan = plan_fabric(&TrafficScenario, &cfg).unwrap();
+        let _ = exec(&cfg, &plan); // park a fabric for cfg's key
+        let mut other = small();
+        other.seed ^= 0xDEAD;
+        let plan2 = plan_fabric(&TrafficScenario, &other).unwrap();
+        let warm = exec(&other, &plan2);
+        let mut other_cold = other.clone();
+        other_cold.reuse = ReuseMode::Off;
+        let cold = exec(&other_cold, &plan2);
+        assert_eq!(warm, cold, "stale fabric leaked across pool keys");
+        // and the fault axis is part of the key as well
+        let mut faulty = small();
+        faulty.fault.loss = 0.01;
+        let plan3 = plan_fabric(&TrafficScenario, &faulty).unwrap();
+        let warm = exec(&faulty, &plan3);
+        let mut faulty_cold = faulty.clone();
+        faulty_cold.reuse = ReuseMode::Off;
+        let cold = exec(&faulty_cold, &plan3);
+        assert_eq!(warm, cold, "fault config not part of the pool key");
     }
 
     #[test]

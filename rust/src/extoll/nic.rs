@@ -830,6 +830,22 @@ impl Actor<Msg> for Nic {
     fn placement(&self) -> crate::sim::Placement {
         crate::sim::Placement::Site(self.addr.0 as u32)
     }
+
+    /// Reconstruct from config, keeping the neighbor/local wiring and
+    /// re-installing the fault model. `Nic::new` is a pure function of
+    /// `(addr, torus, cfg)`, and `set_fault_model` re-derives the packet
+    /// RNG from the model and address alone, so the reset NIC is
+    /// byte-identical to a freshly built one.
+    fn reset(&mut self) -> bool {
+        let neighbors = self.neighbors;
+        let fault = self.fault.take();
+        *self = Nic::new(self.addr, self.torus, self.cfg);
+        self.neighbors = neighbors;
+        if let Some(f) = fault {
+            self.set_fault_model(f.model);
+        }
+        true
+    }
 }
 
 #[cfg(test)]

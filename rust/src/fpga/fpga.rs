@@ -72,6 +72,9 @@ pub struct FpgaStats {
     pub tx_unrouted: u64,
     pub events_out: u64,
     pub packets_out: u64,
+    /// Wire bytes (header + cell-padded payload) of transmitted packets —
+    /// the per-neuron communication cost metric of the rack scenario.
+    pub tx_wire_bytes: u64,
     pub stalled_events: u64,
     pub dropped_events: u64,
     /// Events per transmitted packet (aggregation efficiency).
@@ -194,6 +197,7 @@ impl Fpga {
         // mark ourselves as the ingress so the concentrator (or uplink
         // stub) can return the injection credit when it takes the packet
         packet.ingress = Some((ctx.self_id(), crate::extoll::torus::LOCAL_PORT, 0));
+        self.stats.tx_wire_bytes += packet.wire_bytes() as u64;
         let ser = self.egress_time(&packet);
         self.stats.egress_busy += ser;
         self.egress_busy = true;
@@ -408,6 +412,17 @@ impl Actor<Msg> for Fpga {
     /// one PDES domain.
     fn placement(&self) -> crate::sim::Placement {
         crate::sim::Placement::Site(self.cfg.endpoint.node.0 as u32)
+    }
+
+    /// Reconstruct from config, keeping the uplink wiring. `Fpga::new` is
+    /// a pure function of `cfg` (including the endpoint-seeded packet
+    /// sequence counter), and route tables are re-programmed per execute
+    /// by `apply_plan`, so this is byte-identical to a cold build.
+    fn reset(&mut self) -> bool {
+        let uplink = self.uplink;
+        *self = Fpga::new(self.cfg);
+        self.uplink = uplink;
+        true
     }
 }
 

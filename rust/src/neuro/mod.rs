@@ -6,5 +6,5 @@
 pub mod shard;
 pub mod weights;
 
-pub use shard::{neuron_of_pulse, pulse_of_neuron, ShardSim};
-pub use weights::build_weights;
+pub use shard::{neuron_of_pulse, pulse_of_neuron, ShardArena, ShardSim};
+pub use weights::{build_weights, fill_weights, weights_shape};

@@ -7,9 +7,12 @@
 //! Extoll fabric delivered, and receives the local spike indices to feed
 //! back into the fabric.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::runtime::{ShardModel, WeightBuffer};
+use crate::sim::{F32Arena, F32Handle};
 
 /// Mapping local neuron index → (HICANN link, pulse address). The 8
 /// HICANNs of an FPGA interleave across the shard.
@@ -116,6 +119,146 @@ impl ShardSim {
     }
 }
 
+/// All shards of one rack-scale run in structure-of-arrays layout: one
+/// contiguous membrane-state block for every shard, weight matrices read
+/// straight out of the shared prepared [`F32Arena`] (no per-execute
+/// copy), and per-shard spike bookkeeping in flat vectors.
+///
+/// This replaces a `Vec<ShardSim>` on the microcircuit path. Per-shard
+/// heap boxes made a 20-wafer rack (~10⁵ neurons, ~10⁸ synapses) both
+/// oversized — `ShardSim::new` duplicated each weight matrix into the
+/// runtime — and cache-hostile. Physics are bit-identical to `ShardSim`:
+/// the same [`ShardModel`] step executes against the same weight bytes,
+/// only their storage differs.
+pub struct ShardArena {
+    model: ShardModel,
+    /// Shared immutable weights (owned by the scenario's `Prepared`).
+    weights: Arc<F32Arena>,
+    /// Per-shard weight rows inside `weights`.
+    weight_rows: Vec<F32Handle>,
+    /// Packed membrane state: shard `f` owns
+    /// `state[f * 3 * n_local .. (f + 1) * 3 * n_local]`.
+    state: Vec<f32>,
+    /// Spikes emitted by each shard in its most recent step.
+    last_spikes: Vec<Vec<u32>>,
+    /// Total spikes per shard.
+    total_spikes: Vec<u64>,
+    /// Steps advanced per shard.
+    steps: Vec<u64>,
+}
+
+impl ShardArena {
+    /// `weight_rows[f]` must be an `[n_local, n_global]` matrix for every
+    /// shard `f`.
+    pub fn new(model: ShardModel, weights: Arc<F32Arena>, weight_rows: Vec<F32Handle>) -> Self {
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        for row in &weight_rows {
+            assert_eq!(row.len(), n_local * n_global, "weight row shape");
+        }
+        let n_shards = weight_rows.len();
+        ShardArena {
+            model,
+            weights,
+            weight_rows,
+            state: vec![0.0; n_shards * 3 * n_local],
+            last_spikes: vec![Vec::new(); n_shards],
+            total_spikes: vec![0; n_shards],
+            steps: vec![0; n_shards],
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.weight_rows.len()
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.model.n_local()
+    }
+
+    pub fn n_global(&self) -> usize {
+        self.model.n_global()
+    }
+
+    fn state_range(&self, f: usize) -> std::ops::Range<usize> {
+        let block = 3 * self.model.n_local();
+        f * block..(f + 1) * block
+    }
+
+    /// Randomize initial membrane potentials of every shard in `[lo, hi)`,
+    /// shard-major — the identical draw order to looping
+    /// [`ShardSim::randomize_v`] over shards with one RNG.
+    pub fn randomize_v(&mut self, rng: &mut crate::util::rng::Rng, lo: f32, hi: f32) {
+        let n = self.model.n_local();
+        for f in 0..self.n_shards() {
+            let r = self.state_range(f);
+            for v in &mut self.state[r][..n] {
+                *v = lo + (hi - lo) * rng.f64() as f32;
+            }
+        }
+    }
+
+    /// Advance shard `f` one timestep given the global spike-count vector;
+    /// records and returns the local indices that spiked.
+    pub fn step_shard(&mut self, f: usize, spikes_global: &[f32]) -> Result<&[u32]> {
+        let w = self.weights.row(self.weight_rows[f]);
+        let r = self.state_range(f);
+        let out = self.model.step(&self.state[r.clone()], spikes_global, w)?;
+        self.state[r.clone()].copy_from_slice(&out);
+        let n = self.model.n_local();
+        let spikes = ShardModel::spikes_of(&self.state[r], n);
+        self.last_spikes[f].clear();
+        for (i, &s) in spikes.iter().enumerate() {
+            if s > 0.0 {
+                self.last_spikes[f].push(i as u32);
+            }
+        }
+        self.total_spikes[f] += self.last_spikes[f].len() as u64;
+        self.steps[f] += 1;
+        Ok(&self.last_spikes[f])
+    }
+
+    /// Spikes shard `f` emitted in its most recent step.
+    pub fn last_spikes(&self, f: usize) -> &[u32] {
+        &self.last_spikes[f]
+    }
+
+    /// Total spikes across all shards.
+    pub fn total_spikes(&self) -> u64 {
+        self.total_spikes.iter().sum()
+    }
+
+    /// Membrane potential of neuron `i` of shard `f` (diagnostics).
+    pub fn v(&self, f: usize, i: usize) -> f32 {
+        self.state[self.state_range(f)][i]
+    }
+
+    /// Restore the arena to its just-constructed state (the neuron-layer
+    /// analogue of `Sim::reset_to_epoch`): zero state and counters, keep
+    /// the shared weights and every handle valid.
+    pub fn reset_state(&mut self) {
+        self.state.fill(0.0);
+        for s in &mut self.last_spikes {
+            s.clear();
+        }
+        self.total_spikes.fill(0);
+        self.steps.fill(0);
+    }
+
+    /// Heap bytes of the per-run state (the shared weight arena is
+    /// accounted by its owner, the scenario's `Prepared`).
+    pub fn resident_bytes(&self) -> usize {
+        self.state.capacity() * std::mem::size_of::<f32>()
+            + self
+                .last_spikes
+                .iter()
+                .map(|s| s.capacity() * std::mem::size_of::<u32>())
+                .sum::<usize>()
+            + self.total_spikes.capacity() * 8
+            + self.steps.capacity() * 8
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +313,69 @@ mod tests {
             "v={} expect={expect}",
             shard.v(0)
         );
+    }
+
+    #[test]
+    fn arena_matches_shardsim_bit_for_bit() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let model = rt
+            .load_shard_model(&artifacts_dir(), "shard_256x1024")
+            .unwrap();
+        let n_local = model.n_local();
+        let n_global = model.n_global();
+        let n_shards = n_global / n_local;
+        // deterministic sparse weights, one matrix per shard
+        let mut arena = F32Arena::new();
+        let mut rows = Vec::new();
+        let mut boxed = Vec::new();
+        for f in 0..n_shards {
+            let mut w = vec![0.0f32; n_local * n_global];
+            for i in (f..w.len()).step_by(97) {
+                w[i] = if i % 2 == 0 { 40.0 } else { -40.0 };
+            }
+            rows.push(arena.alloc_with(w.len(), |row| row.copy_from_slice(&w)));
+            boxed.push(ShardSim::new(model.clone(), w, (f * n_local) as u32));
+        }
+        let mut soa = ShardArena::new(model, Arc::new(arena), rows);
+        assert_eq!(soa.n_shards(), n_shards);
+        // identical init draws
+        let mut r1 = crate::util::rng::Rng::new(0xB55);
+        let mut r2 = crate::util::rng::Rng::new(0xB55);
+        for s in &mut boxed {
+            s.randomize_v(&mut r1, -0.5, 0.9);
+        }
+        soa.randomize_v(&mut r2, -0.5, 0.9);
+        // drive both with the same inputs for a few steps
+        let mut spikes_in = vec![0.0f32; n_global];
+        for k in 0..20 {
+            spikes_in.iter_mut().for_each(|x| *x = 0.0);
+            spikes_in[(k * 13) % n_global] = 1.0;
+            for (f, s) in boxed.iter_mut().enumerate() {
+                let a = s.step(&spikes_in).unwrap().to_vec();
+                let b = soa.step_shard(f, &spikes_in).unwrap();
+                assert_eq!(a.as_slice(), b, "step {k} shard {f}");
+            }
+        }
+        assert_eq!(
+            soa.total_spikes(),
+            boxed.iter().map(|s| s.total_spikes).sum::<u64>()
+        );
+        for (f, s) in boxed.iter().enumerate() {
+            for i in [0usize, 1, n_local - 1] {
+                assert_eq!(soa.v(f, i), s.v(i), "membrane shard {f} neuron {i}");
+            }
+        }
+        assert!(soa.resident_bytes() >= n_shards * 3 * n_local * 4);
+        // reset restores the just-constructed state; handles stay valid
+        soa.reset_state();
+        assert_eq!(soa.total_spikes(), 0);
+        assert_eq!(soa.v(0, 0), 0.0);
+        let fresh = soa.step_shard(0, &vec![0.0f32; n_global]).unwrap();
+        assert!(fresh.is_empty());
     }
 
     #[test]

@@ -40,10 +40,38 @@ pub fn build_weights(
     k_scale: f64,
     seed: u64,
 ) -> Vec<f32> {
-    let _ = mc;
+    let (n_local, n_global) = weights_shape(slices, shard);
+    let mut w = vec![0.0f32; n_local * n_global];
+    fill_weights(mc, slices, shard, w_exc, w_inh, k_scale, seed, &mut w);
+    w
+}
+
+/// `(n_local, n_global)` — the shape of shard `shard`'s weight matrix.
+pub fn weights_shape(slices: &[[u32; 8]], shard: usize) -> (usize, usize) {
     let n_local: u32 = slices[shard].iter().sum();
     let n_global: u32 = slices.iter().map(|s| s.iter().sum::<u32>()).sum();
-    let mut w = vec![0.0f32; n_local as usize * n_global as usize];
+    (n_local as usize, n_global as usize)
+}
+
+/// Core generator: fill a zeroed `f32[n_local, n_global]` slice in place.
+/// Shared by [`build_weights`] (own `Vec`) and the arena path
+/// ([`crate::sim::F32Arena::alloc_with`]) — both produce bit-identical
+/// matrices because the RNG draw order depends only on `(slices, shard,
+/// seed)`, never on where the output lives.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_weights(
+    mc: &Microcircuit,
+    slices: &[[u32; 8]],
+    shard: usize,
+    w_exc: f32,
+    w_inh: f32,
+    k_scale: f64,
+    seed: u64,
+    w: &mut [f32],
+) {
+    let _ = mc;
+    let (n_local, n_global) = weights_shape(slices, shard);
+    assert_eq!(w.len(), n_local * n_global, "weight buffer shape mismatch");
     let mut rng = Rng::new(seed ^ ((shard as u64) << 32));
     let mut col_base = 0u32;
     for src_slice in slices {
@@ -51,18 +79,17 @@ pub fn build_weights(
         for sl in 0..src_n {
             let sp = population_of(sl, src_slice);
             let col = (col_base + sl) as usize;
-            for tl in 0..n_local {
+            for tl in 0..n_local as u32 {
                 let tp = population_of(tl, &slices[shard]);
                 let p = CONN_PROB[tp][sp] * k_scale;
                 if p > 0.0 && rng.chance(p.min(1.0)) {
                     let weight = if sp % 2 == 0 { w_exc } else { w_inh };
-                    w[tl as usize * n_global as usize + col] = weight;
+                    w[tl as usize * n_global + col] = weight;
                 }
             }
         }
         col_base += src_n;
     }
-    w
 }
 
 #[cfg(test)]
@@ -119,6 +146,19 @@ mod tests {
             }
         }
         assert!(pos > 0 && neg > 0, "need both E and I synapses");
+    }
+
+    #[test]
+    fn arena_fill_matches_vec_build_exactly() {
+        let mc = Microcircuit::new(0.001);
+        let slices = slices_2();
+        let via_vec = build_weights(&mc, &slices, 1, 0.5, -2.0, 30.0, 42);
+        let mut arena = crate::sim::F32Arena::new();
+        let (n_local, n_global) = weights_shape(&slices, 1);
+        let row = arena.alloc_with(n_local * n_global, |w| {
+            fill_weights(&mc, &slices, 1, 0.5, -2.0, 30.0, 42, w);
+        });
+        assert_eq!(arena.row(row), via_vec.as_slice());
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Flat structure-of-arrays arenas with index-typed handles.
+//!
+//! Rack-scale configurations (20+ wafers, ~10⁵ neurons, ~10⁸ synapses)
+//! do not fit — and do not iterate cache-friendly — when every actor's
+//! hot state lives in its own `Box` and every shard's weight matrix is a
+//! separately allocated `Vec<Vec<f32>>`. These arenas pack homogeneous
+//! state contiguously and hand out small `Copy` handles instead of
+//! pointers:
+//!
+//! - [`Arena<T>`] — a typed slab of `T` rows addressed by [`Handle<T>`];
+//!   used for per-FPGA/NIC counter snapshots and other fixed-shape rows.
+//! - [`F32Arena`] — a single flat `f32` buffer with a row table; one
+//!   allocation holds every shard's weight matrix (or membrane-state
+//!   block), addressed by [`F32Handle`] rows.
+//!
+//! Both report [`resident_bytes`](Arena::resident_bytes), which feeds the
+//! byte-accounted `ResourceCache` LRU (`docs/ARCHITECTURE.md` §7/§8): a
+//! cached `Prepared` that owns arenas accounts for their real footprint,
+//! so eviction pressure reflects the rack-scale weight storage rather
+//! than the default per-entry estimate.
+//!
+//! Handles are indices, not references: they stay valid across
+//! `Sim::reset_to_epoch` (which never moves prepared storage) and across
+//! threads (`F32Arena` is shared read-only via `Arc` by executes).
+
+use std::marker::PhantomData;
+
+/// Index-typed handle into an [`Arena<T>`]. `Copy`, 4 bytes, and typed:
+/// a `Handle<FpgaCounters>` cannot address a `Handle<NicCounters>` arena.
+pub struct Handle<T> {
+    idx: u32,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T> Handle<T> {
+    fn new(idx: u32) -> Self {
+        Handle {
+            idx,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Raw row index (stable for the arena's lifetime).
+    pub fn index(self) -> usize {
+        self.idx as usize
+    }
+}
+
+// Manual impls: derive would bound them on `T: Clone`/`T: Copy` etc.,
+// but a handle is always a plain index regardless of `T`.
+impl<T> Clone for Handle<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Handle<T> {}
+impl<T> PartialEq for Handle<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.idx == other.idx
+    }
+}
+impl<T> Eq for Handle<T> {}
+impl<T> std::fmt::Debug for Handle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Handle({})", self.idx)
+    }
+}
+
+/// Contiguous typed slab: rows of `T` addressed by [`Handle<T>`].
+#[derive(Clone, Debug, Default)]
+pub struct Arena<T> {
+    rows: Vec<T>,
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Arena { rows: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Arena {
+            rows: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append a row; the returned handle is stable for the arena's life.
+    pub fn push(&mut self, row: T) -> Handle<T> {
+        assert!(self.rows.len() < u32::MAX as usize, "arena overflow");
+        self.rows.push(row);
+        Handle::new((self.rows.len() - 1) as u32)
+    }
+
+    pub fn get(&self, h: Handle<T>) -> &T {
+        &self.rows[h.index()]
+    }
+
+    pub fn get_mut(&mut self, h: Handle<T>) -> &mut T {
+        &mut self.rows[h.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// All rows, contiguous, in handle order (SoA sweep path).
+    pub fn rows(&self) -> &[T] {
+        &self.rows
+    }
+
+    pub fn rows_mut(&mut self) -> &mut [T] {
+        &mut self.rows
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.rows.iter()
+    }
+
+    /// Drop all rows, keeping the allocation (refill-per-execute path).
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+
+    /// Heap footprint in bytes (capacity, not length — what the process
+    /// actually holds resident).
+    pub fn resident_bytes(&self) -> usize {
+        self.rows.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+/// Row handle into an [`F32Arena`]: a `(offset, len)` view descriptor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct F32Handle {
+    offset: u32,
+    len: u32,
+}
+
+impl F32Handle {
+    pub fn len(self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len == 0
+    }
+}
+
+/// One flat `f32` buffer holding many variable-length rows (weight
+/// matrices, membrane-state blocks). Rows are allocated append-only and
+/// never move, so an [`F32Handle`] stays valid for the arena's lifetime —
+/// including across `Sim::reset_to_epoch`, which does not touch prepared
+/// storage.
+#[derive(Clone, Debug, Default)]
+pub struct F32Arena {
+    data: Vec<f32>,
+}
+
+impl F32Arena {
+    pub fn new() -> Self {
+        F32Arena { data: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        F32Arena {
+            data: Vec::with_capacity(n),
+        }
+    }
+
+    /// Allocate a zeroed row of `len` floats.
+    pub fn alloc(&mut self, len: usize) -> F32Handle {
+        let offset = self.data.len();
+        assert!(offset + len <= u32::MAX as usize, "f32 arena overflow");
+        self.data.resize(offset + len, 0.0);
+        F32Handle {
+            offset: offset as u32,
+            len: len as u32,
+        }
+    }
+
+    /// Allocate a row and fill it via `fill` (e.g. the deterministic
+    /// weight generator writing in place — no intermediate `Vec`).
+    pub fn alloc_with(&mut self, len: usize, fill: impl FnOnce(&mut [f32])) -> F32Handle {
+        let h = self.alloc(len);
+        fill(self.row_mut(h));
+        h
+    }
+
+    pub fn row(&self, h: F32Handle) -> &[f32] {
+        &self.data[h.offset as usize..(h.offset + h.len) as usize]
+    }
+
+    pub fn row_mut(&mut self, h: F32Handle) -> &mut [f32] {
+        &mut self.data[h.offset as usize..(h.offset + h.len) as usize]
+    }
+
+    /// Total floats stored across all rows.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Heap footprint in bytes (capacity, not length).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_arena_pushes_and_indexes() {
+        let mut a: Arena<u64> = Arena::with_capacity(4);
+        let h0 = a.push(10);
+        let h1 = a.push(20);
+        assert_eq!(*a.get(h0), 10);
+        assert_eq!(*a.get(h1), 20);
+        *a.get_mut(h0) += 1;
+        assert_eq!(a.rows(), &[11, 20]);
+        assert_eq!(a.len(), 2);
+        assert!(a.resident_bytes() >= 2 * 8);
+        assert_eq!(h0.index(), 0);
+        assert_ne!(h0, h1);
+        a.clear();
+        assert!(a.is_empty());
+        assert!(a.resident_bytes() >= 2 * 8, "clear keeps the allocation");
+    }
+
+    #[test]
+    fn handle_is_copy_and_comparable() {
+        let mut a: Arena<String> = Arena::new();
+        let h = a.push("x".to_string());
+        let h2 = h; // Copy despite String not being Copy
+        assert_eq!(h, h2);
+        assert_eq!(format!("{h:?}"), "Handle(0)");
+    }
+
+    #[test]
+    fn f32_arena_rows_are_contiguous_and_stable() {
+        let mut a = F32Arena::new();
+        let r0 = a.alloc(3);
+        let r1 = a.alloc_with(4, |row| {
+            for (i, w) in row.iter_mut().enumerate() {
+                *w = i as f32;
+            }
+        });
+        a.row_mut(r0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        // a later allocation must not move earlier rows' contents
+        let _r2 = a.alloc(1000);
+        assert_eq!(a.row(r0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(r1), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(r0.len(), 3);
+        assert_eq!(a.len(), 3 + 4 + 1000);
+        assert!(a.resident_bytes() >= a.len() * 4);
+    }
+
+    #[test]
+    fn f32_rows_start_zeroed() {
+        let mut a = F32Arena::with_capacity(8);
+        let r = a.alloc(8);
+        assert!(a.row(r).iter().all(|&w| w == 0.0));
+        assert!(!a.is_empty());
+        assert!(!r.is_empty());
+    }
+}

@@ -524,6 +524,35 @@ pub trait Actor<M>: Any + Send {
     fn placement(&self) -> Placement {
         Placement::Free
     }
+
+    /// Restore this actor to its just-constructed state, keeping wiring
+    /// (neighbor/uplink actor ids) intact, so a built simulation can be
+    /// reused across executes via [`Sim::reset_to_epoch`] instead of being
+    /// rebuilt. Returns `false` (the default) for actors that do not
+    /// support reuse — one such actor makes the whole reset bail, and the
+    /// caller falls back to a cold rebuild. An implementation returning
+    /// `true` must leave the actor byte-identical to a fresh construction
+    /// plus wiring: the reuse determinism gates
+    /// (`rust/tests/reset_reuse.rs`, the `DiffMatrix` reuse axis) compare
+    /// whole reports for equality.
+    fn reset(&mut self) -> bool {
+        false
+    }
+}
+
+/// Snapshot of the [`Sim`] shape taken right after construction
+/// ([`Sim::mark_epoch`]), sufficient for [`Sim::reset_to_epoch`] to
+/// restore the simulation to its pre-run state without dropping actors.
+#[derive(Clone, Copy, Debug)]
+pub struct SimEpoch {
+    /// Actor count at the epoch; actors added later (e.g. per-execute
+    /// traffic generators) are dropped by the reset.
+    pub n_actors: usize,
+    /// Queue backend to restore.
+    pub kind: QueueKind,
+    /// Payload-slab capacity to restore (a merged post-PDES queue may
+    /// have lost its pre-sizing; the epoch remembers it).
+    pub capacity: usize,
 }
 
 /// The moveable state of a [`Sim`], used by [`super::pdes::Partition`] to
@@ -748,6 +777,61 @@ impl<M: 'static> Sim<M> {
     /// actor lives in another PDES domain).
     pub fn try_get<T: Actor<M>>(&self, id: ActorId) -> Option<&T> {
         (self.actors[id].as_ref()?.as_ref() as &dyn Any).downcast_ref::<T>()
+    }
+
+    // ---- epoch reset (System reuse across executes) ----------------------
+
+    /// Capture the current shape as an epoch for [`Sim::reset_to_epoch`].
+    /// Call right after construction/wiring, before any per-run actors
+    /// (generators) are added or events scheduled.
+    pub fn mark_epoch(&self) -> SimEpoch {
+        SimEpoch {
+            n_actors: self.actors.len(),
+            kind: self.queue.kind(),
+            capacity: self.queue.capacity(),
+        }
+    }
+
+    /// Restore this simulation to the state captured by `epoch`: clock to
+    /// zero, queue emptied (rebuilt on the epoch's backend and capacity),
+    /// processed/send counters zeroed, actors added after the epoch
+    /// dropped, and every surviving actor reset via [`Actor::reset`].
+    ///
+    /// Returns `false` — leaving the simulation in an unusable half-reset
+    /// state the caller must discard — when reuse is not possible: a
+    /// domain context or tracer is installed, an epoch actor is missing
+    /// (still split across PDES domains), or any actor declines to reset.
+    /// On `true`, re-running the identical workload from here produces a
+    /// byte-identical trajectory to a cold rebuild: actor ids (and hence
+    /// merge keys) are reassigned identically because per-run actors are
+    /// re-added in the same order on a truncated actor table.
+    pub fn reset_to_epoch(&mut self, epoch: &SimEpoch) -> bool {
+        if self.domain.is_some() || self.tracer.is_some() {
+            return false;
+        }
+        if self.actors.len() < epoch.n_actors {
+            return false;
+        }
+        self.actors.truncate(epoch.n_actors);
+        for slot in &mut self.actors {
+            match slot {
+                Some(a) => {
+                    if !a.reset() {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+        self.send_seq.truncate(epoch.n_actors);
+        for s in &mut self.send_seq {
+            *s = 0;
+        }
+        self.ext_seq = 0;
+        self.now = Time::ZERO;
+        self.processed = 0;
+        self.queue = EventQueue::with_capacity(epoch.kind, epoch.capacity);
+        true
     }
 
     // ---- partitioning plumbing (see sim/pdes.rs) -------------------------
@@ -976,6 +1060,76 @@ mod tests {
         let rec = sim.add(Recorder { seen: vec![] });
         assert!(sim.try_get::<Forwarder>(rec).is_none());
         assert!(sim.try_get::<Recorder>(rec).is_some());
+    }
+
+    // ---- epoch reset ------------------------------------------------------
+
+    /// A counter actor that opts into reuse: reset restores the count.
+    struct Counter {
+        count: u32,
+    }
+
+    impl Actor<TestMsg> for Counter {
+        fn handle(&mut self, _m: TestMsg, _ctx: &mut Ctx<'_, TestMsg>) {
+            self.count += 1;
+        }
+
+        fn reset(&mut self) -> bool {
+            self.count = 0;
+            true
+        }
+    }
+
+    #[test]
+    fn reset_bails_on_non_resettable_actor() {
+        // Recorder keeps the default reset() → the whole sim declines.
+        let mut sim = Sim::new();
+        sim.add(Recorder { seen: vec![] });
+        let epoch = sim.mark_epoch();
+        assert!(!sim.reset_to_epoch(&epoch));
+    }
+
+    #[test]
+    fn reset_restores_clock_queue_and_counters() {
+        let mut sim = Sim::with_queue(EventQueue::with_capacity(QueueKind::Heap, 64));
+        let c = sim.add(Counter { count: 0 });
+        let epoch = sim.mark_epoch();
+        let run = |sim: &mut Sim<TestMsg>| {
+            for i in 0..10u64 {
+                sim.schedule(Time::from_ns(i * 7), c, TestMsg::Tick);
+            }
+            sim.run_to_completion();
+            (sim.now, sim.processed(), sim.get::<Counter>(c).count)
+        };
+        let cold = run(&mut sim);
+        assert_eq!(cold.2, 10);
+        assert!(sim.reset_to_epoch(&epoch));
+        assert_eq!(sim.now, Time::ZERO);
+        assert_eq!(sim.processed(), 0);
+        assert_eq!(sim.pending(), 0);
+        assert_eq!(sim.queue_kind(), QueueKind::Heap);
+        assert!(sim.queue.capacity() >= 64, "epoch capacity restored");
+        assert_eq!(sim.get::<Counter>(c).count, 0);
+        // the re-run trajectory is identical to the cold run
+        assert_eq!(run(&mut sim), cold);
+    }
+
+    #[test]
+    fn reset_drops_post_epoch_actors_and_reuses_their_ids() {
+        let mut sim: Sim<TestMsg> = Sim::new();
+        let a = sim.add(Counter { count: 0 });
+        let epoch = sim.mark_epoch();
+        // a per-run actor added after the epoch...
+        let g1 = sim.add(Counter { count: 0 });
+        sim.schedule(Time::ZERO, g1, TestMsg::Tick);
+        sim.run_to_completion();
+        assert_eq!(sim.n_actors(), 2);
+        assert!(sim.reset_to_epoch(&epoch));
+        // ...is dropped, and the next add reclaims the same id → the
+        // merge-key space of the re-run matches the first run exactly
+        assert_eq!(sim.n_actors(), 1);
+        let g2 = sim.add(Counter { count: 0 });
+        assert_eq!(g2, g1);
     }
 
     // ---- queue backends ---------------------------------------------------

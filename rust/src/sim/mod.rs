@@ -14,10 +14,12 @@
 //! contract — ordering, determinism, the PDES lookahead invariant — is
 //! documented in `docs/ARCHITECTURE.md`.
 
+pub mod arena;
 pub mod engine;
 pub mod pdes;
 pub mod time;
 
-pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Placement, QueueKind, Sim};
+pub use arena::{Arena, F32Arena, F32Handle, Handle};
+pub use engine::{Actor, ActorId, Ctx, Event, EventQueue, Placement, QueueKind, Sim, SimEpoch};
 pub use pdes::{ChannelGraph, Partition, SyncMode};
 pub use time::{ps_for_bits, Time, FPGA_CLK_HZ};

@@ -142,6 +142,13 @@ impl Actor<Msg> for Concentrator {
             None => crate::sim::Placement::Free,
         }
     }
+
+    /// The concentrator is stateless apart from its stats — wiring and
+    /// config survive, stats restart from zero.
+    fn reset(&mut self) -> bool {
+        self.stats = ConcentratorStats::default();
+        true
+    }
 }
 
 #[cfg(test)]

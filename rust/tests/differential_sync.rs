@@ -97,3 +97,20 @@ fn free_mode_focused() {
         .kinds(&[QueueKind::Wheel, QueueKind::Heap])
         .assert_identical();
 }
+
+/// PR 10 acceptance gate: the rack-scale `microcircuit_rack` scenario
+/// (the full 20-wafer, 960-FPGA machine) is byte-identical across
+/// domains = 1/2/4 × every sync mode × reset-reuse vs. cold rebuild.
+/// The workload window is cut to 20 µs so the ~19-cell matrix over a
+/// 960-FPGA fabric stays CI-sized; the machine shape is NOT scaled
+/// down — that is the point of the gate.
+#[test]
+fn rack_matrix_full_scale() {
+    let rack = bss_extoll::coordinator::scenario::find("microcircuit_rack").unwrap();
+    let mut cfg = rack.default_config();
+    assert!(cfg.system.n_wafers >= 20, "rack gate must run at rack scale");
+    cfg.workload.duration = bss_extoll::sim::Time::from_us(20);
+    let serial = DiffMatrix::new("microcircuit_rack", cfg).assert_identical();
+    assert!(serial.contains("bytes_per_neuron"));
+    assert!(serial.contains("resident_bytes"));
+}

@@ -1,0 +1,144 @@
+//! PR 10 gates for the rack-scale memory refactor: `Sim::reset_to_epoch`
+//! fabric rewind (`reuse=fabric`) must be observationally invisible —
+//! every fabric scenario, on both queue backends, produces byte-identical
+//! reports whether the fabric is rewound from the pool or cold-rebuilt —
+//! and the SoA arenas must keep handles stable (rows never move) so
+//! prepared resources survive any number of executes.
+//!
+//! The cross-mode (sync × domains) face of the same cube lives in
+//! `rust/tests/differential_sync.rs` (the `reuse` axis of
+//! [`support::DiffMatrix`]); these tests pin the reuse contract itself,
+//! including hand-rolled property sweeps over random machine shapes.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use bss_extoll::coordinator::config::ReuseMode;
+use bss_extoll::coordinator::scenario::find;
+use bss_extoll::coordinator::ExperimentConfig;
+use bss_extoll::sim::{Arena, F32Arena, QueueKind, Time};
+use bss_extoll::util::rng::Rng;
+use support::small;
+
+/// Run `scenario` under `cfg`; returns the pretty report JSON.
+fn run_json(scenario: &str, cfg: &ExperimentConfig) -> String {
+    find(scenario)
+        .unwrap_or_else(|| panic!("scenario {scenario} not registered"))
+        .run(cfg)
+        .unwrap_or_else(|e| panic!("{scenario} run failed: {e:#}"))
+        .to_json()
+        .pretty()
+}
+
+/// Warm reruns (first run parks the fabric, later runs rewind it) match
+/// a cold rebuild byte-for-byte — for every fabric scenario, on both
+/// queue backends.
+#[test]
+fn reset_equals_rebuild_per_scenario() {
+    for scenario in ["traffic", "burst", "hotspot", "microcircuit_rack"] {
+        for kind in [QueueKind::Wheel, QueueKind::Heap] {
+            let mut warm = small();
+            warm.queue = kind;
+            assert_eq!(warm.reuse, ReuseMode::Fabric, "fabric reuse must be the default");
+            let first = run_json(scenario, &warm); // cold: pool is empty or key-mismatched
+            let second = run_json(scenario, &warm); // rewinds the fabric parked by `first`
+            let third = run_json(scenario, &warm);
+            let mut cold = warm.clone();
+            cold.reuse = ReuseMode::Off;
+            let rebuilt = run_json(scenario, &cold);
+            assert_eq!(first, second, "{scenario}/{kind:?}: first warm rerun diverged");
+            assert_eq!(first, third, "{scenario}/{kind:?}: second warm rerun diverged");
+            assert_eq!(first, rebuilt, "{scenario}/{kind:?}: reuse diverged from rebuild");
+        }
+    }
+}
+
+/// Property sweep: random machine shapes, seeds and workloads — the
+/// rewound fabric must restore clock, queue, per-actor stats and
+/// sequence counters exactly, or these byte-level comparisons fail.
+#[test]
+fn prop_reset_restores_fabric_exactly() {
+    let mut rng = Rng::new(0x5EED_10);
+    for case in 0..12u64 {
+        let mut cfg = small();
+        cfg.seed = rng.next_u64();
+        cfg.system.fpgas_per_wafer = *rng.choose(&[2usize, 4]);
+        cfg.workload.sources_per_fpga = *rng.choose(&[8usize, 16, 24]);
+        cfg.workload.rate_hz = *rng.choose(&[1e6, 4e6, 8e6]);
+        cfg.workload.fan_out = *rng.choose(&[1usize, 2]);
+        cfg.workload.zipf_s = *rng.choose(&[0.0, 0.9]);
+        cfg.workload.duration = Time::from_us(200);
+        let warm_a = run_json("traffic", &cfg);
+        let warm_b = run_json("traffic", &cfg);
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.reuse = ReuseMode::Off;
+        let cold = run_json("traffic", &cold_cfg);
+        assert_eq!(warm_a, warm_b, "case {case}: warm rerun diverged");
+        assert_eq!(warm_a, cold, "case {case}: reuse diverged from cold rebuild");
+    }
+}
+
+/// Arena handles are positional and rows never move: every handle reads
+/// back exactly the bytes last written through it, no matter how many
+/// later allocations (or reads through other handles) happen.
+#[test]
+fn prop_arena_handles_are_stable() {
+    let mut rng = Rng::new(0xA7E9A);
+    for _case in 0..40u64 {
+        let mut f32s = F32Arena::new();
+        let mut u64s: Arena<u64> = Arena::new();
+        let mut f32_expect: Vec<(bss_extoll::sim::F32Handle, Vec<f32>)> = Vec::new();
+        let mut u64_expect: Vec<(bss_extoll::sim::Handle<u64>, u64)> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    // fresh f32 row, filled through alloc_with
+                    let len = rng.range(1, 64) as usize;
+                    let seed = rng.next_u64();
+                    let h = f32s.alloc_with(len, |row| {
+                        let mut r = Rng::new(seed);
+                        for v in row.iter_mut() {
+                            *v = r.f64() as f32;
+                        }
+                    });
+                    f32_expect.push((h, f32s.row(h).to_vec()));
+                }
+                1 => {
+                    // overwrite an existing row through its handle
+                    if let Some(i) = pick(&mut rng, f32_expect.len()) {
+                        let (h, expect) = &mut f32_expect[i];
+                        for (j, v) in f32s.row_mut(*h).iter_mut().enumerate() {
+                            *v += j as f32;
+                            expect[j] = *v;
+                        }
+                    }
+                }
+                2 => {
+                    let val = rng.next_u64();
+                    let h = u64s.push(val);
+                    u64_expect.push((h, val));
+                }
+                _ => {
+                    if let Some(i) = pick(&mut rng, u64_expect.len()) {
+                        let (h, expect) = &mut u64_expect[i];
+                        *u64s.get_mut(*h) += 1;
+                        *expect += 1;
+                    }
+                }
+            }
+        }
+        for (h, expect) in &f32_expect {
+            assert_eq!(f32s.row(*h), &expect[..], "f32 row moved or was clobbered");
+        }
+        for (h, expect) in &u64_expect {
+            assert_eq!(u64s.get(*h), expect, "u64 row moved or was clobbered");
+        }
+        // byte accounting covers at least the live payload
+        assert!(f32s.resident_bytes() >= (f32s.len() * std::mem::size_of::<f32>()) as u64);
+        assert!(u64s.resident_bytes() >= (u64s.len() * std::mem::size_of::<u64>()) as u64);
+    }
+}
+
+fn pick(rng: &mut Rng, len: usize) -> Option<usize> {
+    (len > 0).then(|| rng.below(len as u64) as usize)
+}

@@ -12,6 +12,7 @@
 // bearing in the other.
 #![allow(dead_code)]
 
+use bss_extoll::coordinator::config::ReuseMode;
 use bss_extoll::coordinator::scenario::find;
 use bss_extoll::coordinator::ExperimentConfig;
 use bss_extoll::extoll::torus::TorusSpec;
@@ -43,9 +44,12 @@ pub fn small() -> ExperimentConfig {
 /// `determinism_queue.rs` and `differential_sync.rs`.
 ///
 /// Defaults cover the full current protocol matrix: all of
-/// [`SyncMode::ALL`] × `domains = 1/2/4` × the wheel backend. Narrow or
-/// widen any axis with the builder methods; mutate the base config (via
-/// [`DiffMatrix::new`]'s `cfg`) for fault/reliability variants.
+/// [`SyncMode::ALL`] × `domains = 1/2/4` × the wheel backend ×
+/// `reuse = off/fabric` (PR 10: fabric rewind vs. cold rebuild — cells
+/// alternate reuse modes, so warm cells also cross domain counts and
+/// sync modes against the parked fabric of the previous cell). Narrow
+/// or widen any axis with the builder methods; mutate the base config
+/// (via [`DiffMatrix::new`]'s `cfg`) for fault/reliability variants.
 pub struct DiffMatrix<'a> {
     scenario: &'a str,
     cfg: ExperimentConfig,
@@ -53,6 +57,7 @@ pub struct DiffMatrix<'a> {
     modes: Vec<SyncMode>,
     domains: Vec<usize>,
     kinds: Vec<QueueKind>,
+    reuses: Vec<ReuseMode>,
 }
 
 impl<'a> DiffMatrix<'a> {
@@ -64,6 +69,7 @@ impl<'a> DiffMatrix<'a> {
             modes: SyncMode::ALL.to_vec(),
             domains: vec![1, 2, 4],
             kinds: vec![QueueKind::Wheel],
+            reuses: vec![ReuseMode::Off, ReuseMode::Fabric],
         }
     }
 
@@ -89,21 +95,28 @@ impl<'a> DiffMatrix<'a> {
         self
     }
 
+    pub fn reuses(mut self, reuses: &[ReuseMode]) -> DiffMatrix<'a> {
+        self.reuses = reuses.to_vec();
+        self
+    }
+
     /// Run one cell of the matrix; returns the pretty report JSON.
-    fn run_cell(&self, sync: SyncMode, domains: usize, kind: QueueKind) -> String {
+    fn run_cell(&self, sync: SyncMode, domains: usize, kind: QueueKind, reuse: ReuseMode) -> String {
         let mut cfg = self.cfg.clone();
         cfg.sync = sync;
         cfg.domains = domains;
         cfg.queue = kind;
+        cfg.reuse = reuse;
         find(self.scenario)
             .unwrap_or_else(|| panic!("scenario {} not registered", self.scenario))
             .run(&cfg)
             .unwrap_or_else(|e| {
                 panic!(
-                    "{}{} sync={} domains={domains} queue={kind:?} run failed: {e:#}",
+                    "{}{} sync={} domains={domains} queue={kind:?} reuse={} run failed: {e:#}",
                     self.label,
                     self.scenario,
-                    sync.as_str()
+                    sync.as_str(),
+                    reuse.as_str()
                 )
             })
             .to_json()
@@ -112,24 +125,27 @@ impl<'a> DiffMatrix<'a> {
 
     /// Run the whole matrix and assert every cell's report is
     /// byte-identical to the serial reference (`domains = 1` on the
-    /// first configured backend — the plain event loop, no partition
-    /// machinery). Returns the reference JSON so callers can make
-    /// content assertions on top.
+    /// first configured backend, cold-built — the plain event loop, no
+    /// partition machinery, no fabric rewind). Returns the reference
+    /// JSON so callers can make content assertions on top.
     pub fn assert_identical(&self) -> String {
-        let serial = self.run_cell(SyncMode::default(), 1, self.kinds[0]);
+        let serial = self.run_cell(SyncMode::default(), 1, self.kinds[0], ReuseMode::Off);
         for &kind in &self.kinds {
             for &sync in &self.modes {
                 for &domains in &self.domains {
-                    let got = self.run_cell(sync, domains, kind);
-                    assert_eq!(
-                        serial,
-                        got,
-                        "{}{} report diverged from serial at sync={} domains={domains} \
-                         queue={kind:?}",
-                        self.label,
-                        self.scenario,
-                        sync.as_str()
-                    );
+                    for &reuse in &self.reuses {
+                        let got = self.run_cell(sync, domains, kind, reuse);
+                        assert_eq!(
+                            serial,
+                            got,
+                            "{}{} report diverged from serial at sync={} domains={domains} \
+                             queue={kind:?} reuse={}",
+                            self.label,
+                            self.scenario,
+                            sync.as_str(),
+                            reuse.as_str()
+                        );
+                    }
                 }
             }
         }

@@ -162,13 +162,40 @@ def check_serve_throughput(j):
         )
 
 
+def check_rack_scaling(j):
+    """Shape of the PR 10 rack-scaling section: the `microcircuit_rack`
+    scenario at growing wafer counts (4/8/20 — at least three points up
+    to the paper's 20-wafer rack), each with positive throughput and
+    resident-byte accounting, monotone resident bytes in the machine
+    size, and the fabric-rewind-vs-cold-rebuild byte-identity bit set.
+    Checked unconditionally (fast and full mode)."""
+    r = j["rack_scaling"]
+    assert r["deterministic_reuse_vs_rebuild"] is True
+    runs = r["runs"]
+    assert len(runs) >= 3, f"rack_scaling needs >= 3 wafer counts, got {len(runs)}"
+    prev_wafers, prev_resident = 0, 0
+    for run in runs:
+        assert run["wafers"] > prev_wafers, f"wafer counts must grow: {runs}"
+        assert run["n_fpgas"] >= run["wafers"], run
+        assert run["events_per_s"] > 0, run
+        assert run["resident_bytes"] >= prev_resident, (
+            f"prepared-plan resident bytes must grow with the machine: {runs}"
+        )
+        assert run["bytes_per_neuron"] > 0, run
+        assert run["reuse_speedup"] > 0, run
+        prev_wafers, prev_resident = run["wafers"], run["resident_bytes"]
+    assert runs[-1]["wafers"] >= 20, (
+        f"rack_scaling must reach the 20-wafer rack: {runs[-1]}"
+    )
+
+
 def check_artifact(path):
-    """Shape checks for a regenerated BENCH_PR9 artifact."""
+    """Shape checks for a regenerated BENCH_PR10 artifact."""
     j = load(path)
     if "pending_regeneration" in j:
         fail(f"{path}: regenerated artifact is still a placeholder")
     assert j["schema"] == "bss-extoll-bench/1", j.get("schema")
-    assert j["artifact"] == "BENCH_PR9", j.get("artifact")
+    assert j["artifact"] == "BENCH_PR10", j.get("artifact")
     assert j["queue_transit"]["results"], "no queue benches recorded"
     assert not j["queue_transit"]["skipped"], j["queue_transit"]["skipped"]
     assert j["sweep_scaling"]["deterministic_across_jobs"] is True
@@ -226,6 +253,9 @@ def check_artifact(path):
     check_serve_throughput(j)
     serve = j["serve_throughput"]
 
+    check_rack_scaling(j)
+    rack = j["rack_scaling"]["runs"][-1]
+
     print(
         f"{path} ok:",
         f"wheel_vs_heap={j['traffic_event_loop']['wheel_vs_heap_speedup']:.2f}x",
@@ -239,6 +269,9 @@ def check_artifact(path):
         f"serve={serve['subs_per_s']:.1f} subs/s "
         f"(p50={serve['turnaround_p50_us']}us, "
         f"cache {serve['cache']['prepared']}/{serve['cache']['reused']})",
+        f"rack@{rack['wafers']}w={rack['events_per_s']:.3g} ev/s "
+        f"({rack['bytes_per_neuron']:.1f} B/neuron, "
+        f"reuse {rack['reuse_speedup']:.2f}x)",
     )
 
 
